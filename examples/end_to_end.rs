@@ -1,0 +1,165 @@
+//! END-TO-END DRIVER — proves all layers compose (the validation run
+//! recorded in EXPERIMENTS.md):
+//!
+//!   L1/L2 (build time): `make artifacts` lowered the Pallas brick kernel +
+//!     JAX model to HLO text.
+//!   Runtime: the Rust PJRT executor loads and runs those artifacts.
+//!   L3: the coordinator serves batched SpMM traffic over both engines.
+//!
+//! The driver loads a small real workload (cora-scale GCN adjacency +
+//! pubmed), serves batched requests through BOTH the native engine and the
+//! PJRT artifact, cross-checks the numerics between them and against the
+//! dense oracle, and reports latency/throughput for each path.
+//!
+//! ```
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use cutespmm::coordinator::{BatchPolicy, Config, Coordinator, EnginePolicy};
+use cutespmm::formats::{Coo, Dense};
+use cutespmm::gen::named;
+use cutespmm::runtime;
+use cutespmm::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct PathReport {
+    engine: &'static str,
+    requests: usize,
+    wall_s: f64,
+    p50_us: u64,
+    p95_us: u64,
+    served_gflop: f64,
+}
+
+fn drive(engine_policy: EnginePolicy, pjrt: Option<cutespmm::runtime::PjrtHandle>,
+         matrices: &[(String, Coo)], requests_per_matrix: usize) -> (PathReport, Vec<Dense>) {
+    let coord = Arc::new(Coordinator::start(
+        Config {
+            workers: 4,
+            queue_capacity: 4096,
+            batch: BatchPolicy {
+                max_batch_cols: 128,
+                max_batch_reqs: 8,
+                max_delay: Duration::from_millis(1),
+            },
+            engine: engine_policy,
+        },
+        pjrt,
+    ));
+    let ids: Vec<_> = matrices.iter().map(|(n, c)| coord.register(n, c)).collect();
+
+    // deterministic request stream so both paths compute identical answers
+    let t0 = std::time::Instant::now();
+    let mut outputs = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (mi, (_, coo)) in matrices.iter().enumerate() {
+            let coord = coord.clone();
+            let id = ids[mi];
+            let cols = coo.cols;
+            handles.push(s.spawn(move || {
+                let mut outs = Vec::new();
+                let mut rxs = Vec::new();
+                for i in 0..requests_per_matrix {
+                    let mut rng = Rng::new((mi * 1000 + i) as u64);
+                    let b = Dense::random(cols, 32, &mut rng);
+                    rxs.push(coord.submit(id, b));
+                }
+                for rx in rxs {
+                    let resp = rx.recv().unwrap().expect("request failed");
+                    outs.push(resp.c);
+                }
+                outs
+            }));
+        }
+        for h in handles {
+            outputs.extend(h.join().unwrap());
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let m = coord.metrics();
+    let report = PathReport {
+        engine: match engine_policy {
+            EnginePolicy::Native => "native",
+            EnginePolicy::PreferPjrt => "pjrt",
+        },
+        requests: matrices.len() * requests_per_matrix,
+        wall_s,
+        p50_us: m.request_latency.percentile_us(50.0),
+        p95_us: m.request_latency.percentile_us(95.0),
+        served_gflop: *m.flops.lock().unwrap() / 1e9,
+    };
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+    (report, outputs)
+}
+
+fn main() {
+    // small real workloads: cora + pubmed citation graphs, scaled so the
+    // AOT shape bucket stays in the (nb=1024, k=2048) class — the CPU
+    // PJRT plugin interprets the Pallas kernel, so the largest bucket is
+    // minutes-per-compile; the native engine serves full-size matrices.
+    let matrices: Vec<(String, Coo)> = [("cora", 2usize), ("pubmed", 10)]
+        .iter()
+        .map(|&(n, scale)| {
+            let spec = named::scaled(n, scale).unwrap();
+            (spec.name.clone(), spec.generate())
+        })
+        .collect();
+    for (n, c) in &matrices {
+        println!("workload {n}: {}x{} nnz={}", c.rows, c.cols, c.nnz());
+    }
+    let reqs = 40;
+
+    // path 1: native engine
+    let (native, out_native) = drive(EnginePolicy::Native, None, &matrices, reqs);
+
+    // path 2: PJRT artifacts (the full three-layer stack)
+    let pjrt_available = runtime::artifacts_available();
+    let (pjrt_report, out_pjrt) = if pjrt_available {
+        let svc = runtime::PjrtService::start(runtime::default_artifacts_dir()).expect("pjrt");
+        println!("PJRT platform: {}", svc.handle().platform().unwrap());
+        let (r, o) = drive(EnginePolicy::PreferPjrt, Some(svc.handle()), &matrices, reqs);
+        (Some(r), Some(o))
+    } else {
+        println!("! artifacts not built; run `make artifacts` for the PJRT path");
+        (None, None)
+    };
+
+    // cross-check the two paths bit-for-shape
+    if let Some(out_pjrt) = &out_pjrt {
+        let mut max_err = 0.0f64;
+        for (a, b) in out_native.iter().zip(out_pjrt) {
+            max_err = max_err.max(a.rel_fro_error(b));
+        }
+        println!("native vs PJRT cross-check: max rel fro error = {max_err:.2e}");
+        assert!(max_err < 1e-4, "engines disagree");
+    }
+
+    // oracle check on a sample
+    {
+        let (name, coo) = &matrices[0];
+        let mut rng = Rng::new(0);
+        let b = Dense::random(coo.cols, 32, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        assert!(out_native[0].rows == coo.rows, "{name} shape");
+        let engine = cutespmm::spmm::Algo::Hrpb.prepare(coo);
+        assert!(engine.spmm(&b).rel_fro_error(&want) < 1e-5);
+    }
+
+    println!("\n== end-to-end report ==");
+    println!(
+        "{:<8} {:>9} {:>10} {:>10} {:>10} {:>12}",
+        "engine", "requests", "wall(s)", "p50(µs)", "p95(µs)", "GFLOP served"
+    );
+    for r in std::iter::once(&native).chain(pjrt_report.as_ref()) {
+        println!(
+            "{:<8} {:>9} {:>10.3} {:>10} {:>10} {:>12.2}",
+            r.engine, r.requests, r.wall_s, r.p50_us, r.p95_us, r.served_gflop
+        );
+    }
+    println!("end_to_end OK");
+}

@@ -1,0 +1,64 @@
+//! Synergy explorer: classify a generated corpus slice into the paper's
+//! Table 1 classes, print Table 2-style counts, and show the Fig. 7
+//! OI ↔ modeled-throughput correlation.
+//!
+//! ```
+//! cargo run --release --example synergy_explorer [-- full]
+//! ```
+
+use cutespmm::bench::corpus_run;
+use cutespmm::bench::render;
+use cutespmm::gen::corpus::{specs, CorpusScale};
+use cutespmm::spmm::Algo;
+use cutespmm::util::stats;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "full");
+    let scale = if full { CorpusScale::Full } else { CorpusScale::Quick };
+    let all = specs(scale, 42);
+    // explorer default: a fast slice of the quick corpus
+    // stratified slice so every family/synergy regime is sampled
+    let step = (all.len() / 40).max(1);
+    let strided: Vec<_> = all.iter().cloned().step_by(step).collect();
+    let slice: &[cutespmm::gen::MatrixSpec] = if full { &all } else { &strided };
+    eprintln!("profiling {} matrices ...", slice.len());
+    let records = corpus_run::run_specs(slice, &[128]);
+
+    // Table 2-style counts
+    let counts = corpus_run::synergy_counts(&records);
+    let rows: Vec<Vec<String>> = counts
+        .iter()
+        .map(|&(s, c)| vec![s.name().to_string(), c.to_string()])
+        .collect();
+    println!("{}", render::table(&["Synergy", "# matrices"], &rows));
+
+    // per-family alpha summary
+    let mut fams: Vec<&str> = records.iter().map(|r| r.family).collect();
+    fams.sort_unstable();
+    fams.dedup();
+    let mut frows = Vec::new();
+    for fam in fams {
+        let alphas: Vec<f64> =
+            records.iter().filter(|r| r.family == fam).map(|r| r.alpha).collect();
+        let bs = stats::box_stats(&alphas);
+        frows.push(vec![
+            fam.to_string(),
+            alphas.len().to_string(),
+            format!("{:.3}", bs.median),
+            format!("{:.3}", bs.min),
+            format!("{:.3}", bs.max),
+        ]);
+    }
+    println!("{}", render::table(&["family", "count", "alpha p50", "min", "max"], &frows));
+
+    // Fig. 7 correlation on this slice
+    let (ois, gfs): (Vec<f64>, Vec<f64>) = records
+        .iter()
+        .filter_map(|r| r.get("A100", 128, Algo::Hrpb).map(|c| (512.0 * r.alpha, c.gflops)))
+        .unzip();
+    println!(
+        "OI_shmem vs modeled cuTeSpMM GFLOPs (A100, N=128): pearson={:.3} spearman={:.3}",
+        stats::pearson(&ois, &gfs),
+        stats::spearman(&ois, &gfs)
+    );
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package runs on the request path; `aot.py` is invoked once by
+`make artifacts` and emits HLO text artifacts that the Rust runtime loads via
+PJRT.
+"""

@@ -1,0 +1,169 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Run from python/:  python -m compile.aot --out-dir ../artifacts
+
+Shape buckets here MUST agree with rust/src/runtime/bucket.rs. Each artifact
+is named  <model>__nb<NB>_mp<MP>_k<K>_n<N>.hlo.txt  and listed in
+manifest.json together with its argument shapes so the Rust registry can
+validate feeds without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import dense_mm, gcn_layer, hrpb_spmm
+
+TM = 16
+TK = 16
+
+# (NB, MP, K, N) buckets for hrpb_spmm. Chosen to cover the example workloads
+# (quickstart / gnn_layer / end_to_end) with modest CPU compile time; larger
+# corpora use the native Rust engine instead of PJRT.
+SPMM_BUCKETS = [
+    (256, 32, 512, 32),
+    (256, 32, 512, 128),
+    (1024, 128, 2048, 32),
+    (1024, 128, 2048, 128),
+    (4096, 192, 4096, 32),
+    (4096, 192, 4096, 128),
+]
+
+# (NB, MP, K, F, N) buckets for gcn_layer (K = #nodes, F = in features,
+# N = out features). cora-scale: 2708 nodes -> MP=170 panels, F 1433 -> 1440.
+GCN_BUCKETS = [
+    (2048, 176, 2816, 1440, 32),
+    (2048, 176, 2816, 64, 32),
+]
+
+# (M, K, N) buckets for the dense reference matmul.
+DENSE_BUCKETS = [
+    (256, 256, 128),
+    (2816, 1440, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_hrpb_spmm(nb, mp, k, n):
+    fn = partial(hrpb_spmm, num_panels=mp, interpret=True)
+    args = (
+        _spec((nb, TM, TK), jnp.float32),
+        _spec((nb, TK), jnp.int32),
+        _spec((nb,), jnp.int32),
+        _spec((k, n), jnp.float32),
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def lower_gcn_layer(nb, mp, k, f, n):
+    fn = partial(gcn_layer, num_panels=mp, interpret=True)
+    args = (
+        _spec((nb, TM, TK), jnp.float32),
+        _spec((nb, TK), jnp.int32),
+        _spec((nb,), jnp.int32),
+        _spec((k, f), jnp.float32),
+        _spec((f, n), jnp.float32),
+    )
+    return jax.jit(fn).lower(*args), args
+
+
+def lower_dense_mm(m, k, n):
+    args = (_spec((m, k), jnp.float32), _spec((k, n), jnp.float32))
+    return jax.jit(dense_mm).lower(*args), args
+
+
+def _arg_manifest(args):
+    return [{"shape": list(a.shape), "dtype": a.dtype.name} for a in args]
+
+
+def build_all(out_dir: str, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    spmm_buckets = SPMM_BUCKETS[:2] if quick else SPMM_BUCKETS
+    gcn_buckets = [] if quick else GCN_BUCKETS
+    dense_buckets = DENSE_BUCKETS[:1] if quick else DENSE_BUCKETS
+
+    for nb, mp, k, n in spmm_buckets:
+        name = f"hrpb_spmm__nb{nb}_mp{mp}_k{k}_n{n}"
+        lowered, args = lower_hrpb_spmm(nb, mp, k, n)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entries.append({
+            "name": name, "model": "hrpb_spmm", "file": name + ".hlo.txt",
+            "nb": nb, "mp": mp, "k": k, "n": n, "tm": TM, "tk": TK,
+            "args": _arg_manifest(args),
+            "out_shape": [mp * TM, n],
+        })
+        print(f"  wrote {name}")
+
+    for nb, mp, k, f, n in gcn_buckets:
+        name = f"gcn_layer__nb{nb}_mp{mp}_k{k}_f{f}_n{n}"
+        lowered, args = lower_gcn_layer(nb, mp, k, f, n)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entries.append({
+            "name": name, "model": "gcn_layer", "file": name + ".hlo.txt",
+            "nb": nb, "mp": mp, "k": k, "f": f, "n": n, "tm": TM, "tk": TK,
+            "args": _arg_manifest(args),
+            "out_shape": [mp * TM, n],
+        })
+        print(f"  wrote {name}")
+
+    for m, k, n in dense_buckets:
+        name = f"dense_mm__m{m}_k{k}_n{n}"
+        lowered, args = lower_dense_mm(m, k, n)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entries.append({
+            "name": name, "model": "dense_mm", "file": name + ".hlo.txt",
+            "m": m, "k": k, "n": n,
+            "args": _arg_manifest(args),
+            "out_shape": [m, n],
+        })
+        print(f"  wrote {name}")
+
+    manifest = {"tm": TM, "tk": TK, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"manifest: {len(entries)} artifacts -> {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small bucket subset (CI / tests)")
+    args = ap.parse_args()
+    build_all(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

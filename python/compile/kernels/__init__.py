@@ -1,0 +1,4 @@
+"""L1: Pallas kernels for the SpMM hot spot + pure-jnp oracles."""
+
+from .hrpb_spmm import brick_mma, brick_mma_jnp  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the cuTeSpMM brick-MMA hot spot, adapted GPU -> TPU.
+
+The paper's Algorithm 1 (per thread block): stage one packed HRPB block of the
+sparse A and the gathered rows of dense B in shared memory, then loop over the
+TK/brick_k brick columns issuing 16x4 @ 4x8 tensor-core MMAs, accumulating C
+in registers.
+
+TPU adaptation (DESIGN.md section "Hardware-Adaptation"): the per-lane
+pattern-popcount decode has no MXU equivalent, so decode happens at pack time
+(see compile/pack.py) and the kernel consumes zero-filled [TM, TK] blocks.
+The HBM<->shared-memory schedule becomes a BlockSpec HBM<->VMEM schedule: the
+grid iterates over packed blocks; each program stages one A block and its
+gathered [TK, N] B panel in VMEM and walks brick columns feeding MXU-shaped
+dots, with the C tile VMEM-resident — a faithful mirror of Algorithm 1's
+loop structure (lines 14-41).
+
+interpret=True is mandatory on this CPU-only image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BRICK_M = 16
+BRICK_K = 4
+BRICK_N = 8
+
+
+def _brick_mma_kernel(a_ref, b_ref, o_ref, *, brick_k: int):
+    """One grid step == one packed HRPB block (paper: one thread-block step).
+
+    a_ref: [TM, TK] zero-filled sparse block (VMEM; paper's SM_A)
+    b_ref: [TK, N] gathered dense rows      (VMEM; paper's SM_B)
+    o_ref: [TM, N] output tile              (VMEM; paper's c_frag)
+    """
+    tm, tk = a_ref.shape
+    n = b_ref.shape[1]
+    acc = jnp.zeros((tm, n), dtype=jnp.float32)
+    # Paper Algorithm 1 line 25: loop over the TK/brick_k brick columns. Each
+    # iteration is one MXU-shaped contraction ([TM, brick_k] @ [brick_k, N]),
+    # the TPU image of the WMMA 16x4x8 issue. The loop is fully unrolled at
+    # trace time exactly as the CUDA kernel unrolls it (TK, brick_k static).
+    for i in range(tk // brick_k):
+        a_brick = a_ref[:, i * brick_k : (i + 1) * brick_k]
+        b_brick = b_ref[i * brick_k : (i + 1) * brick_k, :]
+        acc += jnp.dot(a_brick, b_brick, preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+def brick_mma(blocks: jax.Array, bsub: jax.Array, *, brick_k: int = BRICK_K,
+              interpret: bool = True) -> jax.Array:
+    """Batched brick MMA over all packed blocks.
+
+    blocks: f32[NB, TM, TK]   bsub: f32[NB, TK, N]  ->  f32[NB, TM, N]
+
+    Grid = (NB,): program b stages block b + its B panel in VMEM. VMEM
+    footprint per program (TM=16, TK=16, N=128): 1 KiB + 8 KiB + 8 KiB, far
+    below TPU VMEM, leaving headroom for the pipeline's double buffering.
+    """
+    nb, tm, tk = blocks.shape
+    _, tk2, n = bsub.shape
+    assert tk == tk2, f"block TK {tk} != B panel TK {tk2}"
+    assert tk % brick_k == 0, f"TK {tk} not a multiple of brick_k {brick_k}"
+    kernel = functools.partial(_brick_mma_kernel, brick_k=brick_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((None, tm, tk), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, tk, n), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tm, n), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, tm, n), jnp.float32),
+        interpret=interpret,
+    )(blocks, bsub)
+
+
+def brick_mma_jnp(blocks: jax.Array, bsub: jax.Array) -> jax.Array:
+    """Pure-jnp equivalent of `brick_mma` (einsum over the batch); used as the
+    in-graph fallback and by the test oracle."""
+    return jnp.einsum(
+        "bmk,bkn->bmn", blocks, bsub, preferred_element_type=jnp.float32
+    )
+
+
+def tf32_round(x: jax.Array) -> jax.Array:
+    """Round f32 to TF32 precision (10-bit mantissa, round-to-nearest-even on
+    the 13 dropped bits) — the input rounding the A100 tensor core applies.
+    Used by tests to bound the numeric gap the paper's TF32 path would add."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    # round-half-to-even at bit 13
+    lsb = (bits >> 13) & 1
+    rounded = bits + 0xFFF + lsb
+    masked = rounded & jnp.uint32(0xFFFFE000)
+    return jax.lax.bitcast_convert_type(masked, jnp.float32)

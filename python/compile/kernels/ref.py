@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the L1 kernel and L2 model.
+
+Everything here is deliberately naive and obviously-correct; pytest compares
+the Pallas kernel and the exported models against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_dense(a_dense: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with A materialized dense — the ground truth."""
+    return jnp.dot(a_dense, b, preferred_element_type=jnp.float32)
+
+
+def spmm_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+             m: int, b: np.ndarray) -> np.ndarray:
+    """COO SpMM in numpy (no jax): independent second opinion for tests."""
+    c = np.zeros((m, b.shape[1]), dtype=np.float64)
+    for r, k, v in zip(rows, cols, vals):
+        c[r] += v * b[k].astype(np.float64)
+    return c.astype(np.float32)
+
+
+def hrpb_spmm_ref(blocks, active_cols, panel_ids, b, num_panels: int):
+    """Reference HRPB SpMM: gather + einsum + segment-sum, no Pallas.
+
+    Shapes per the pack contract in compile/pack.py. Returns f32[num_panels*TM, N].
+    """
+    tm = blocks.shape[1]
+    n = b.shape[1]
+    bsub = b[active_cols]  # [NB, TK, N] gather
+    parts = jnp.einsum("bmk,bkn->bmn", blocks, bsub,
+                       preferred_element_type=jnp.float32)
+    c = jax.ops.segment_sum(parts, panel_ids, num_segments=num_panels)
+    return c.reshape(num_panels * tm, n)
+
+
+def gcn_layer_ref(a_dense, x, w):
+    """One GCN propagation layer: relu(A @ (X @ W)) with dense A."""
+    return jax.nn.relu(jnp.dot(a_dense, jnp.dot(x, w)))

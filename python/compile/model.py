@@ -1,0 +1,69 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Each model is a pure function over fixed-shape arrays (one HLO artifact per
+shape bucket — see aot.py and rust/src/runtime/bucket.rs, which must agree on
+the bucket list and the argument order below).
+
+Artifact ABI (all models):
+  hrpb_spmm   (blocks f32[NB,TM,TK], active_cols i32[NB,TK],
+               panel_ids i32[NB], B f32[K,N]) -> (C f32[MP*TM, N],)
+  gcn_layer   (blocks, active_cols, panel_ids, X f32[K,F], W f32[F,N])
+              -> (H f32[MP*TM, N],)
+  dense_mm    (A f32[M,K], B f32[K,N]) -> (C f32[M,N],)
+
+Outputs are 1-tuples because aot.py lowers with return_tuple=True (the xla
+crate unwraps with to_tuple1 — see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hrpb_spmm import brick_mma
+
+
+def hrpb_spmm(blocks, active_cols, panel_ids, b, *, num_panels: int,
+              interpret: bool = True):
+    """HRPB SpMM: gather B rows per block, Pallas brick MMA, segment-sum
+    partials into row panels. C is produced panel-major and reshaped.
+
+    Padding blocks (all-zero, panel 0) contribute exact zeros, so a bucketed
+    artifact computes the same C as an exact-shape one.
+    """
+    tm = blocks.shape[1]
+    n = b.shape[1]
+    bsub = b[active_cols]  # XLA gather: [NB, TK, N]
+    parts = brick_mma(blocks, bsub, interpret=interpret)  # [NB, TM, N]
+    c = jax.ops.segment_sum(parts, panel_ids, num_segments=num_panels)
+    return (c.reshape(num_panels * tm, n),)
+
+
+def gcn_layer(blocks, active_cols, panel_ids, x, w, *, num_panels: int,
+              interpret: bool = True):
+    """One GCN layer: H = relu(A_hat @ (X @ W)) with A_hat in HRPB form.
+
+    The dense feature transform X@W stays in the same artifact so XLA fuses
+    the whole layer; the sparse propagation reuses the hrpb_spmm path.
+    """
+    xw = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    (c,) = hrpb_spmm(blocks, active_cols, panel_ids, xw,
+                     num_panels=num_panels, interpret=interpret)
+    return (jax.nn.relu(c),)
+
+
+def dense_mm(a, b):
+    """Dense matmul artifact — used by the runtime self-check and as the
+    dense baseline the examples validate against."""
+    return (jnp.dot(a, b, preferred_element_type=jnp.float32),)
+
+
+def model_fns():
+    """Name -> (fn, needs_num_panels) registry used by aot.py."""
+    return {
+        "hrpb_spmm": (hrpb_spmm, True),
+        "gcn_layer": (gcn_layer, True),
+        "dense_mm": (dense_mm, False),
+    }

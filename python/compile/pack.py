@@ -1,0 +1,123 @@
+"""HRPB dense-brick packing (host side, numpy).
+
+This is the *PJRT feeding* form of the paper's HRPB structure: the paper's GPU
+kernel decodes 64-bit brick patterns into registers on the fly (Algorithm 1,
+lines 33-38); a TPU/MXU has no per-lane ballot/popcount, so the decode happens
+at pack time and the kernel consumes zero-filled dense blocks. The compaction
+step — only columns with at least one nonzero inside a row panel occupy block
+slots — is identical to the paper's, so the operation count fed to the MMA
+unit matches the paper's active-brick count.
+
+Pack layout (the contract shared with `rust/src/hrpb/decode.rs`):
+
+  blocks      f32[NB, TM, TK]  zero-filled values, block b holds rows of row
+                               panel `panel_ids[b]` restricted to the block's
+                               active columns
+  active_cols i32[NB, TK]      original column ids of each block slot
+                               (padding slots -> 0 with zero values)
+  panel_ids   i32[NB]          owning row panel of each block
+  B           f32[K, N]        dense operand
+
+  C[p*TM + r, :] = sum over blocks b with panel_ids[b] == p of
+                     blocks[b] @ B[active_cols[b], :]
+
+Padding blocks (to reach a shape bucket's NB) are all-zero with
+panel_ids = 0, so they contribute nothing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TM = 16
+TK = 16
+BRICK_M = 16
+BRICK_K = 4
+BRICK_N = 8
+
+
+def pack_hrpb(a_dense: np.ndarray, tm: int = TM, tk: int = TK):
+    """Pack a dense 2-D array into HRPB dense-brick form.
+
+    Returns (blocks, active_cols, panel_ids, num_panels). Rows are padded to a
+    multiple of `tm`; empty panels produce no blocks.
+    """
+    m, k = a_dense.shape
+    num_panels = (m + tm - 1) // tm
+    blocks = []
+    cols_out = []
+    pids = []
+    for p in range(num_panels):
+        r0, r1 = p * tm, min((p + 1) * tm, m)
+        panel = np.zeros((tm, k), dtype=np.float32)
+        panel[: r1 - r0] = a_dense[r0:r1]
+        active = np.nonzero(np.any(panel != 0.0, axis=0))[0]
+        if active.size == 0:
+            continue
+        nblk = (active.size + tk - 1) // tk
+        for b in range(nblk):
+            sl = active[b * tk : (b + 1) * tk]
+            blk = np.zeros((tm, tk), dtype=np.float32)
+            cols = np.zeros((tk,), dtype=np.int32)
+            blk[:, : sl.size] = panel[:, sl]
+            cols[: sl.size] = sl
+            blocks.append(blk)
+            cols_out.append(cols)
+            pids.append(p)
+    if not blocks:  # fully-zero matrix: one padding block keeps shapes valid
+        blocks = [np.zeros((tm, tk), dtype=np.float32)]
+        cols_out = [np.zeros((tk,), dtype=np.int32)]
+        pids = [0]
+    return (
+        np.stack(blocks).astype(np.float32),
+        np.stack(cols_out).astype(np.int32),
+        np.asarray(pids, dtype=np.int32),
+        num_panels,
+    )
+
+
+def pad_to_bucket(blocks, active_cols, panel_ids, nb: int):
+    """Pad the packed arrays out to a shape bucket's NB with inert blocks."""
+    cur = blocks.shape[0]
+    if cur > nb:
+        raise ValueError(f"packed NB={cur} exceeds bucket NB={nb}")
+    if cur == nb:
+        return blocks, active_cols, panel_ids
+    pad = nb - cur
+    blocks = np.concatenate([blocks, np.zeros((pad,) + blocks.shape[1:], np.float32)])
+    active_cols = np.concatenate(
+        [active_cols, np.zeros((pad, active_cols.shape[1]), np.int32)]
+    )
+    panel_ids = np.concatenate([panel_ids, np.zeros((pad,), np.int32)])
+    return blocks, active_cols, panel_ids
+
+
+def brick_patterns(blocks: np.ndarray) -> np.ndarray:
+    """64-bit nonzero patterns of each (BRICK_M, BRICK_K) brick, row-major bit
+    order — the paper's Figure 3(b) encoding. Used by tests to cross-check the
+    Rust packer's pattern arithmetic."""
+    nb, tm, tk = blocks.shape
+    rows = tm // BRICK_M
+    cols = tk // BRICK_K
+    out = np.zeros((nb, rows, cols), dtype=np.uint64)
+    for b in range(nb):
+        for i in range(rows):
+            for j in range(cols):
+                brick = blocks[b, i * BRICK_M : (i + 1) * BRICK_M, j * BRICK_K : (j + 1) * BRICK_K]
+                bits = np.uint64(0)
+                for r in range(BRICK_M):
+                    for c in range(BRICK_K):
+                        if brick[r, c] != 0.0:
+                            bits |= np.uint64(1) << np.uint64(r * BRICK_K + c)
+                out[b, i, j] = bits
+    return out
+
+
+def alpha_density(blocks: np.ndarray) -> float:
+    """Average nonzero density of *active* bricks (the paper's alpha)."""
+    pats = brick_patterns(blocks)
+    counts = np.array([bin(int(p)).count("1") for p in pats.flatten()])
+    active = counts[counts > 0]
+    if active.size == 0:
+        return 0.0
+    return float(active.mean()) / (BRICK_M * BRICK_K)

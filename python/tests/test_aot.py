@@ -1,0 +1,65 @@
+"""AOT path tests: lowering produces loadable HLO text + accurate manifest.
+
+Keeps shapes tiny — full-size artifacts are built by `make artifacts`, and the
+Rust runtime integration test executes them for numeric agreement.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.kernels import ref
+from compile.pack import pack_hrpb, pad_to_bucket
+
+
+def test_to_hlo_text_contains_entry():
+    lowered, _ = aot.lower_dense_mm(8, 8, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+
+
+def test_hrpb_lowering_embeds_gather_and_dots():
+    lowered, args = aot.lower_hrpb_spmm(nb=8, mp=2, k=64, n=16)
+    text = aot.to_hlo_text(lowered)
+    assert "gather" in text        # B-row gather survived lowering
+    assert "dot" in text           # brick MMAs
+    assert "scatter" in text or "reduce" in text or "add" in text
+
+
+def test_manifest_matches_written_files(tmp_path):
+    out = str(tmp_path / "arts")
+    man = aot.build_all(out, quick=True)
+    with open(os.path.join(out, "manifest.json")) as fh:
+        disk = json.load(fh)
+    assert disk == man
+    for e in man["artifacts"]:
+        p = os.path.join(out, e["file"])
+        assert os.path.exists(p) and os.path.getsize(p) > 0
+        for a in e["args"]:
+            assert a["dtype"] in ("float32", "int32")
+
+
+def test_lowered_hrpb_executes_correctly():
+    """Round-trip inside python: compile the lowered module and compare to the
+    dense oracle — the same check the Rust side repeats through PJRT."""
+    nb, mp, k, n = 16, 3, 96, 8
+    m = mp * 16
+    rng = np.random.default_rng(2)
+    a = np.where(rng.random((m, k)) < 0.1,
+                 rng.standard_normal((m, k)), 0.0).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    blocks, cols, pids, mp_got = pack_hrpb(a)
+    assert mp_got == mp
+    blocks, cols, pids = pad_to_bucket(blocks, cols, pids, nb)
+
+    lowered, _ = aot.lower_hrpb_spmm(nb, mp, k, n)
+    compiled = lowered.compile()
+    (got,) = compiled(jnp.asarray(blocks), jnp.asarray(cols),
+                      jnp.asarray(pids), jnp.asarray(b))
+    want = ref.spmm_dense(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

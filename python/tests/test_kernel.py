@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas brick-MMA kernel vs pure-jnp oracle.
+
+hypothesis sweeps block counts, tile shapes, widths, densities and value
+regimes; every property asserts allclose against einsum ground truth.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hrpb_spmm import (
+    BRICK_K,
+    brick_mma,
+    brick_mma_jnp,
+    tf32_round,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, rng, density=1.0, scale=1.0):
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    if density < 1.0:
+        mask = rng.random(shape) < density
+        x = np.where(mask, x, 0.0).astype(np.float32)
+    return x
+
+
+@pytest.mark.parametrize("nb", [1, 3, 8])
+@pytest.mark.parametrize("n", [8, 32, 128])
+def test_brick_mma_matches_einsum_basic(nb, n):
+    rng = np.random.default_rng(7 * nb + n)
+    blocks = _rand((nb, 16, 16), rng)
+    bsub = _rand((nb, 16, n), rng)
+    got = brick_mma(jnp.asarray(blocks), jnp.asarray(bsub))
+    want = brick_mma_jnp(jnp.asarray(blocks), jnp.asarray(bsub))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nb=st.integers(1, 6),
+    tk_bricks=st.integers(1, 8),
+    n=st.sampled_from([8, 16, 32, 64]),
+    density=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_brick_mma_property_shapes_density(nb, tk_bricks, n, density, seed):
+    """Kernel == oracle over random shapes (TK any brick multiple), sparse
+    blocks, arbitrary widths — the hypothesis sweep required by the spec."""
+    tk = tk_bricks * BRICK_K
+    rng = np.random.default_rng(seed)
+    blocks = _rand((nb, 16, tk), rng, density=density)
+    bsub = _rand((nb, tk, n), rng)
+    got = brick_mma(jnp.asarray(blocks), jnp.asarray(bsub))
+    want = brick_mma_jnp(jnp.asarray(blocks), jnp.asarray(bsub))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scale=st.sampled_from([1e-20, 1e-6, 1.0, 1e6, 1e18]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_brick_mma_value_regimes(scale, seed):
+    """Extreme magnitudes must not diverge from the oracle (no fast-math
+    reassociation surprises in interpret mode)."""
+    rng = np.random.default_rng(seed)
+    blocks = _rand((2, 16, 16), rng, scale=scale)
+    bsub = _rand((2, 16, 32), rng, scale=scale)
+    got = np.asarray(brick_mma(jnp.asarray(blocks), jnp.asarray(bsub)))
+    want = np.asarray(brick_mma_jnp(jnp.asarray(blocks), jnp.asarray(bsub)))
+    # products are O(scale^2); allow rounding noise at that magnitude for
+    # near-cancelling sums where relative error is meaningless
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-4 * float(scale) ** 2 * 16)
+
+
+def test_brick_mma_zero_blocks_give_zero():
+    blocks = jnp.zeros((4, 16, 16), jnp.float32)
+    bsub = jnp.ones((4, 16, 32), jnp.float32)
+    out = brick_mma(blocks, bsub)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_brick_mma_identity_blocks_copy_b():
+    eye = jnp.tile(jnp.eye(16, dtype=jnp.float32)[None], (3, 1, 1))
+    rng = np.random.default_rng(0)
+    bsub = jnp.asarray(_rand((3, 16, 24), rng))
+    out = brick_mma(eye, bsub)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(bsub), rtol=1e-6)
+
+
+def test_brick_mma_rejects_mismatched_tk():
+    blocks = jnp.zeros((1, 16, 16), jnp.float32)
+    bsub = jnp.zeros((1, 12, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        brick_mma(blocks, bsub)
+
+
+class TestTf32Round:
+    def test_exact_small_ints_preserved(self):
+        x = jnp.asarray([0.0, 1.0, -2.0, 1024.0], jnp.float32)
+        np.testing.assert_array_equal(np.asarray(tf32_round(x)), np.asarray(x))
+
+    def test_mantissa_truncated_to_10_bits(self):
+        x = jnp.asarray([1.0 + 2.0**-12], jnp.float32)  # below TF32 ulp
+        assert float(tf32_round(x)[0]) == 1.0
+
+    def test_relative_error_bound(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal(1024).astype(np.float32))
+        r = np.asarray(tf32_round(x))
+        rel = np.abs(r - np.asarray(x)) / np.maximum(np.abs(np.asarray(x)), 1e-30)
+        assert rel.max() <= 2.0**-10  # half-ulp of a 10-bit mantissa
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_idempotent(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(128).astype(np.float32) * 100)
+        once = tf32_round(x)
+        twice = tf32_round(once)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))

@@ -1,0 +1,117 @@
+"""Packing contract tests: compile/pack.py (the host-side HRPB dense-brick
+packer feeding PJRT) — round-trip, compaction, pattern encoding, alpha."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.pack import (
+    BRICK_K,
+    BRICK_M,
+    TK,
+    TM,
+    alpha_density,
+    brick_patterns,
+    pack_hrpb,
+    pad_to_bucket,
+)
+
+
+def _rand_sparse(m, k, density, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    mask = rng.random((m, k)) < density
+    return np.where(mask, a, 0.0).astype(np.float32)
+
+
+def _unpack(blocks, active_cols, panel_ids, m, k):
+    """Reverse the packer: scatter block values back to a dense matrix."""
+    out = np.zeros(((m + TM - 1) // TM * TM, k), dtype=np.float32)
+    for blk, cols, pid in zip(blocks, active_cols, panel_ids):
+        for j, c in enumerate(cols):
+            col_vals = blk[:, j]
+            if np.any(col_vals != 0.0):
+                out[pid * TM : (pid + 1) * TM, c] += col_vals
+    return out[:m]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 200),
+    density=st.floats(0.0, 0.4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(m, k, density, seed):
+    a = _rand_sparse(m, k, density, seed)
+    blocks, cols, pids, np_ = pack_hrpb(a)
+    assert np_ == (m + TM - 1) // TM
+    got = _unpack(blocks, cols, pids, m, k)
+    np.testing.assert_array_equal(got, a)
+
+
+def test_compaction_only_active_columns_occupy_slots():
+    a = np.zeros((16, 64), np.float32)
+    a[3, 10] = 1.0
+    a[5, 50] = 2.0
+    blocks, cols, pids, _ = pack_hrpb(a)
+    assert blocks.shape[0] == 1  # 2 active cols -> one block
+    assert set(cols[0][:2].tolist()) == {10, 50}
+    # slots beyond the active columns are zero-padded
+    assert np.all(blocks[0][:, 2:] == 0.0)
+
+
+def test_empty_panel_produces_no_block():
+    a = np.zeros((48, 32), np.float32)
+    a[0, 0] = 1.0  # only panel 0 active
+    blocks, cols, pids, np_ = pack_hrpb(a)
+    assert np_ == 3
+    assert set(pids.tolist()) == {0}
+
+
+def test_all_zero_matrix_yields_single_inert_block():
+    a = np.zeros((16, 16), np.float32)
+    blocks, cols, pids, np_ = pack_hrpb(a)
+    assert blocks.shape[0] == 1 and np.all(blocks == 0)
+
+
+def test_pad_to_bucket_appends_inert_blocks():
+    a = _rand_sparse(32, 64, 0.1, 1)
+    blocks, cols, pids, _ = pack_hrpb(a)
+    nb0 = blocks.shape[0]
+    b2, c2, p2 = pad_to_bucket(blocks, cols, pids, nb0 + 5)
+    assert b2.shape[0] == nb0 + 5
+    assert np.all(b2[nb0:] == 0.0) and np.all(p2[nb0:] == 0)
+    with pytest.raises(ValueError):
+        pad_to_bucket(blocks, cols, pids, nb0 - 1)
+
+
+def test_brick_pattern_bit_positions():
+    blk = np.zeros((1, TM, TK), np.float32)
+    blk[0, 0, 0] = 1.0        # brick (0,0), bit 0
+    blk[0, 1, 2] = 1.0        # brick (0,0), bit 1*4+2 = 6
+    blk[0, 0, 5] = 1.0        # brick (0,1), bit 0*4+(5-4) = 1
+    pats = brick_patterns(blk)
+    assert pats[0, 0, 0] == (1 << 0) | (1 << 6)
+    assert pats[0, 0, 1] == (1 << 1)
+    assert pats[0, 0, 2] == 0
+
+
+def test_alpha_density_full_and_single():
+    full = np.ones((1, TM, TK), np.float32)
+    assert alpha_density(full) == 1.0
+    one = np.zeros((1, TM, TK), np.float32)
+    one[0, 0, 0] = 1.0
+    assert alpha_density(one) == pytest.approx(1.0 / (BRICK_M * BRICK_K))
+
+
+@settings(max_examples=20, deadline=None)
+@given(density=st.floats(0.02, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_alpha_at_least_column_floor(density, seed):
+    """Every active brick column has >= 1 nonzero, so alpha >= 1/16 on any
+    packed matrix (the paper's section 6.4 lower bound)."""
+    a = _rand_sparse(64, 128, density, seed)
+    if not np.any(a):
+        return
+    blocks, _, _, _ = pack_hrpb(a)
+    assert alpha_density(blocks) >= 1.0 / BRICK_M - 1e-9

@@ -1,0 +1,9 @@
+//! Ablations: the §4 tile-size sweep (TM/TK/TN via the OI model) and the §5
+//! load-balancing scheme comparison (measured on the native engine).
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    println!("{}", experiments::ablation_tiles());
+    println!("{}", experiments::ablation_loadbalance());
+}

@@ -1,0 +1,12 @@
+//! Regenerates the paper's Fig. 10 speedup heatmaps (cuTeSpMM and TC-GNN
+//! over Best-SC, binned by row count × synergy class).
+//!
+//! `CUTESPMM_FULL=1 cargo bench --bench bench_fig10` for the full corpus.
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    let quick = std::env::var_os("CUTESPMM_FULL").is_none();
+    let records = experiments::corpus_records(quick);
+    println!("{}", experiments::fig10(&records));
+}

@@ -1,0 +1,13 @@
+//! Regenerates the paper's Fig. 2: TC-GNN vs Best-SC scatter at N=128 on
+//! both modeled GPUs, over the synthetic corpus.
+//!
+//! `cargo bench --bench bench_fig2` (quick 1/10 corpus by default;
+//! set `CUTESPMM_FULL=1` for the full ~1100-matrix run).
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    let quick = std::env::var_os("CUTESPMM_FULL").is_none();
+    let records = experiments::corpus_records(quick);
+    println!("{}", experiments::fig2(&records));
+}

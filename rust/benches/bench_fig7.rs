@@ -1,0 +1,12 @@
+//! Regenerates the paper's Fig. 7: modeled OI_shmem (512α) vs cuTeSpMM
+//! throughput at N ∈ {32, 128, 512} on both modeled GPUs.
+//!
+//! `CUTESPMM_FULL=1 cargo bench --bench bench_fig7` for the full corpus.
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    let quick = std::env::var_os("CUTESPMM_FULL").is_none();
+    let records = experiments::corpus_records(quick);
+    println!("{}", experiments::fig7(&records));
+}

@@ -1,0 +1,13 @@
+//! Regenerates the paper's Fig. 9 box plots (throughput by synergy group ×
+//! dense width × algorithm) and Table 2 (corpus synergy counts).
+//!
+//! `CUTESPMM_FULL=1 cargo bench --bench bench_fig9` for the full corpus.
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    let quick = std::env::var_os("CUTESPMM_FULL").is_none();
+    let records = experiments::corpus_records(quick);
+    println!("{}", experiments::table2(&records));
+    println!("{}", experiments::fig9(&records));
+}

@@ -1,0 +1,79 @@
+//! Measured CPU benchmark of the executable engines (this testbed's real
+//! numbers, feeding EXPERIMENTS.md §Perf): the native HRPB hot path vs the
+//! scalar baselines and the TC-GNN emulation, across structure regimes and
+//! dense widths.
+
+use cutespmm::formats::Dense;
+use cutespmm::gen::{Family, MatrixSpec};
+use cutespmm::spmm::Algo;
+use cutespmm::util::timer::measure;
+
+fn main() {
+    let cases = vec![
+        (
+            "fem-like (high synergy)",
+            MatrixSpec {
+                name: "fem".into(),
+                rows: 60_000,
+                family: Family::Banded { bandwidth: 24, band_fill: 0.65, noise: 0.01 },
+                seed: 1,
+            },
+        ),
+        (
+            "mesh2d (medium synergy)",
+            MatrixSpec { name: "mesh".into(), rows: 60_000, family: Family::Mesh { dims: 2 }, seed: 2 },
+        ),
+        (
+            "rmat (low synergy)",
+            MatrixSpec {
+                name: "rmat".into(),
+                rows: 60_000,
+                family: Family::Rmat { edge_factor: 8, skew: 0.57 },
+                seed: 3,
+            },
+        ),
+        (
+            "chem blockdiag (high synergy)",
+            MatrixSpec {
+                name: "chem".into(),
+                rows: 60_000,
+                family: Family::BlockDiag { unit: 24, unit_density: 0.25 },
+                seed: 4,
+            },
+        ),
+    ];
+    let algos = [Algo::Hrpb, Algo::Csr, Algo::Sputnik, Algo::GeSpmm, Algo::Coo, Algo::TcGnn];
+
+    println!("== native engine benchmark (measured on this CPU) ==");
+    println!(
+        "{:<30} {:>8} {:>6} {:>10} {:>12} {:>10}",
+        "matrix", "algo", "N", "time(ms)", "GFLOP/s", "vs cute"
+    );
+    for (label, spec) in cases {
+        let coo = spec.generate();
+        for n in [32usize, 128] {
+            let b = Dense::from_vec(coo.cols, n, vec![0.5; coo.cols * n]);
+            let mut cute_time = None;
+            for algo in algos {
+                let engine = algo.prepare(&coo);
+                let m = measure(1, 3, || {
+                    let _ = engine.spmm(&b);
+                });
+                if algo == Algo::Hrpb {
+                    cute_time = Some(m.median_s);
+                }
+                let rel = cute_time.map(|c| m.median_s / c).unwrap_or(1.0);
+                println!(
+                    "{:<30} {:>8} {:>6} {:>10.3} {:>12.2} {:>9.2}x",
+                    label,
+                    algo.name(),
+                    n,
+                    m.median_s * 1e3,
+                    engine.flops(n) / m.median_s / 1e9,
+                    rel,
+                );
+            }
+        }
+    }
+    println!("\n(cute = the native HRPB engine; 'vs cute' > 1 means slower than cuTeSpMM)");
+}

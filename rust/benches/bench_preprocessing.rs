@@ -1,0 +1,8 @@
+//! Regenerates §6.3: measured preprocessing overhead vs one SpMM (N=128)
+//! vs MatrixMarket read time, on this CPU.
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    println!("{}", experiments::preprocessing());
+}

@@ -1,0 +1,9 @@
+//! Regenerates the paper's Table 3: the 14 TC-GNN-paper matrices on the
+//! modeled RTX 4090 at n ∈ {32, 64, 128} (GFLOPs for cuTeSpMM / TC-GNN /
+//! Best-SC).
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    println!("{}", experiments::table34(3));
+}

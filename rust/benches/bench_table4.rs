@@ -1,0 +1,8 @@
+//! Regenerates the paper's Table 4: the 13 TC-GNN-paper matrices on the
+//! modeled A100 at n ∈ {32, 128, 512}.
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    println!("{}", experiments::table34(4));
+}

@@ -1,0 +1,170 @@
+//! Corpus runner: generate → profile → predict for every matrix, in
+//! parallel, producing the record set every figure/table experiment consumes.
+
+use crate::gen::corpus::{specs, CorpusScale};
+use crate::gen::MatrixSpec;
+use crate::gpumodel::{algos, Machine, MatrixProfile};
+use crate::spmm::Algo;
+use crate::synergy::Synergy;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One prediction cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub machine: &'static str,
+    pub n: usize,
+    pub algo: Algo,
+    pub gflops: f64,
+    pub time_s: f64,
+}
+
+/// One corpus matrix with its structural profile and model predictions.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub name: String,
+    pub family: &'static str,
+    pub rows: usize,
+    pub nnz: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub synergy: Synergy,
+    pub cells: Vec<Cell>,
+}
+
+impl Record {
+    /// Look one cell up.
+    pub fn get(&self, machine: &str, n: usize, algo: Algo) -> Option<Cell> {
+        self.cells
+            .iter()
+            .find(|c| c.machine == machine && c.n == n && c.algo == algo)
+            .copied()
+    }
+
+    /// Best scalar-core GFLOPs at (machine, n) — the paper's Best-SC.
+    pub fn best_sc(&self, machine: &str, n: usize) -> Option<Cell> {
+        self.cells
+            .iter()
+            .filter(|c| c.machine == machine && c.n == n && Algo::scalar_core().contains(&c.algo))
+            .max_by(|a, b| a.gflops.partial_cmp(&b.gflops).unwrap())
+            .copied()
+    }
+}
+
+/// Algorithms every corpus experiment evaluates (the Fig 2/9/10 set).
+pub fn eval_algos() -> Vec<Algo> {
+    vec![Algo::Hrpb, Algo::TcGnn, Algo::Csr, Algo::Coo, Algo::Sputnik, Algo::GeSpmm]
+}
+
+/// Run the corpus through the analytical models.
+///
+/// `ns` are the dense widths; both paper machines are always evaluated.
+/// Work is spread over all cores; output order matches spec order.
+pub fn run(scale: CorpusScale, seed: u64, ns: &[usize]) -> Vec<Record> {
+    run_specs(&specs(scale, seed), ns)
+}
+
+/// Same, over explicit specs (named matrices, tests).
+pub fn run_specs(specs: &[MatrixSpec], ns: &[usize]) -> Vec<Record> {
+    let machines = [Machine::a100(), Machine::rtx4090()];
+    let algos_v = eval_algos();
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, Record)>> = Mutex::new(Vec::with_capacity(specs.len()));
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(specs.len().max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let spec = &specs[i];
+                let coo = spec.generate();
+                let profile = MatrixProfile::compute(&coo);
+                let mut cells = Vec::with_capacity(machines.len() * ns.len() * algos_v.len());
+                for m in &machines {
+                    for &n in ns {
+                        for &algo in &algos_v {
+                            let pred = algos::predict(algo, &profile, n, m);
+                            cells.push(Cell {
+                                machine: m.name,
+                                n,
+                                algo,
+                                gflops: pred.gflops,
+                                time_s: pred.time_s,
+                            });
+                        }
+                    }
+                }
+                let rec = Record {
+                    name: spec.name.clone(),
+                    family: spec.family_name(),
+                    rows: coo.rows,
+                    nnz: coo.nnz(),
+                    alpha: profile.hrpb.alpha,
+                    beta: profile.hrpb.beta,
+                    synergy: profile.synergy(),
+                    cells,
+                };
+                results.lock().unwrap().push((i, rec));
+            });
+        }
+    });
+
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Table 2: synergy class counts.
+pub fn synergy_counts(records: &[Record]) -> [(Synergy, usize); 3] {
+    let mut counts = [(Synergy::Low, 0), (Synergy::Medium, 0), (Synergy::High, 0)];
+    for r in records {
+        for c in counts.iter_mut() {
+            if c.0 == r.synergy {
+                c.1 += 1;
+            }
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_corpus_runs_end_to_end() {
+        // tiny slice of the corpus for speed
+        let all = specs(CorpusScale::Quick, 42);
+        let slice = &all[..6.min(all.len())];
+        let recs = run_specs(slice, &[32, 128]);
+        assert_eq!(recs.len(), slice.len());
+        for r in &recs {
+            assert_eq!(r.cells.len(), 2 * 2 * 6); // machines x ns x algos
+            assert!(r.get("A100", 128, Algo::Hrpb).unwrap().gflops > 0.0);
+            assert!(r.best_sc("A100", 128).is_some());
+        }
+    }
+
+    #[test]
+    fn order_matches_specs() {
+        let all = specs(CorpusScale::Quick, 42);
+        let slice = &all[..4.min(all.len())];
+        let recs = run_specs(slice, &[32]);
+        for (s, r) in slice.iter().zip(&recs) {
+            assert_eq!(s.name, r.name);
+        }
+    }
+
+    #[test]
+    fn synergy_counts_sum() {
+        let all = specs(CorpusScale::Quick, 42);
+        let slice = &all[..5.min(all.len())];
+        let recs = run_specs(slice, &[32]);
+        let counts = synergy_counts(&recs);
+        let total: usize = counts.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, recs.len());
+    }
+}

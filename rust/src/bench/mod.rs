@@ -1,0 +1,10 @@
+//! Experiment harness — shared by `benches/*.rs` and the CLI's `experiment`
+//! subcommand. `corpus_run` produces the per-matrix prediction records;
+//! `experiments` renders each paper table/figure; `render` provides the
+//! ASCII tables/box plots/heatmaps and CSV output.
+
+pub mod corpus_run;
+pub mod experiments;
+pub mod render;
+
+pub use corpus_run::{Cell, Record};

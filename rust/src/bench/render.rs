@@ -1,0 +1,245 @@
+//! ASCII rendering for experiment output: tables, box plots, scatter plots,
+//! heatmaps. The paper's figures are regenerated as text so the bench
+//! harness works on a terminal and diffs cleanly in EXPERIMENTS.md.
+
+use crate::util::stats::{box_stats, BoxStats};
+
+/// Render an aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push_str("  ");
+            }
+            line.push_str(&format!("{:>w$}", cell, w = widths[i]));
+        }
+        line
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// One labelled box in a box-plot group.
+pub struct BoxEntry {
+    pub label: String,
+    pub stats: BoxStats,
+}
+
+/// Render horizontal ASCII box plots on a shared log10 axis.
+///
+/// ```text
+/// label      |----[=====|=====]------|        p50=...
+/// ```
+pub fn boxplot(entries: &[BoxEntry], axis_label: &str) -> String {
+    let finite: Vec<f64> = entries
+        .iter()
+        .flat_map(|e| [e.stats.min, e.stats.max])
+        .filter(|v| v.is_finite() && *v > 0.0)
+        .collect();
+    if finite.is_empty() {
+        return "(no data)\n".into();
+    }
+    let lo = finite.iter().cloned().fold(f64::INFINITY, f64::min).log10();
+    let hi = finite.iter().cloned().fold(0.0f64, f64::max).log10();
+    let span = (hi - lo).max(1e-9);
+    const W: usize = 56;
+    let pos = |v: f64| -> usize {
+        if v <= 0.0 {
+            return 0;
+        }
+        (((v.log10() - lo) / span) * (W - 1) as f64).round().clamp(0.0, (W - 1) as f64) as usize
+    };
+    let label_w = entries.iter().map(|e| e.label.len()).max().unwrap_or(8).max(8);
+    let mut out = String::new();
+    for e in entries {
+        let s = &e.stats;
+        if !s.median.is_finite() {
+            out.push_str(&format!("{:<label_w$} (no samples)\n", e.label));
+            continue;
+        }
+        let mut line = vec![' '; W];
+        let (pmin, p25, p50, p75, pmax) = (pos(s.min), pos(s.q25), pos(s.median), pos(s.q75), pos(s.max));
+        for c in line.iter_mut().take(pmax + 1).skip(pmin) {
+            *c = '-';
+        }
+        for c in line.iter_mut().take(p75 + 1).skip(p25) {
+            *c = '=';
+        }
+        line[pmin] = '|';
+        line[pmax] = '|';
+        line[p50] = '#';
+        out.push_str(&format!(
+            "{:<label_w$} {}  p50={:.1} [q25={:.1} q75={:.1}]\n",
+            e.label,
+            line.iter().collect::<String>(),
+            s.median,
+            s.q25,
+            s.q75,
+        ));
+    }
+    out.push_str(&format!(
+        "{:<label_w$} {}\n",
+        "",
+        format!("log10 axis: {:.1} .. {:.1} ({axis_label})", lo, hi)
+    ));
+    out
+}
+
+/// Build a `BoxEntry` from raw samples (empty → NaN stats, rendered blank).
+pub fn box_entry(label: impl Into<String>, samples: &[f64]) -> BoxEntry {
+    let stats = if samples.is_empty() {
+        BoxStats {
+            min: f64::NAN,
+            q25: f64::NAN,
+            median: f64::NAN,
+            q75: f64::NAN,
+            max: f64::NAN,
+            mean: f64::NAN,
+            count: 0,
+        }
+    } else {
+        box_stats(samples)
+    };
+    BoxEntry { label: label.into(), stats }
+}
+
+/// Render a dot-density scatter plot of (x, y) points on log-log axes.
+pub fn scatter(points: &[(f64, f64)], w: usize, h: usize, xlabel: &str, ylabel: &str) -> String {
+    let ok: Vec<(f64, f64)> =
+        points.iter().copied().filter(|&(x, y)| x > 0.0 && y > 0.0).collect();
+    if ok.is_empty() {
+        return "(no data)\n".into();
+    }
+    let (x0, x1) = ok.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &(x, _)| {
+        (a.min(x.log10()), b.max(x.log10()))
+    });
+    let (y0, y1) = ok.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &(_, y)| {
+        (a.min(y.log10()), b.max(y.log10()))
+    });
+    let (xs, ys) = ((x1 - x0).max(1e-9), (y1 - y0).max(1e-9));
+    let mut grid = vec![vec![0u32; w]; h];
+    for (x, y) in ok {
+        let cx = (((x.log10() - x0) / xs) * (w - 1) as f64) as usize;
+        let cy = (((y.log10() - y0) / ys) * (h - 1) as f64) as usize;
+        grid[h - 1 - cy][cx] += 1;
+    }
+    let glyph = |c: u32| match c {
+        0 => ' ',
+        1 => '.',
+        2..=4 => 'o',
+        5..=15 => 'O',
+        _ => '@',
+    };
+    let mut out = String::new();
+    out.push_str(&format!("{ylabel} (log10 {y0:.1}..{y1:.1})\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row.into_iter().map(glyph));
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out.push_str(&format!(" {xlabel} (log10 {x0:.1}..{x1:.1})\n"));
+    out
+}
+
+/// Render a heatmap of `values[r][c]` with row/col labels; cell text is the
+/// numeric value (e.g. speedup).
+pub fn heatmap(row_labels: &[String], col_labels: &[String], values: &[Vec<f64>]) -> String {
+    let mut rows = Vec::new();
+    for (rl, vals) in row_labels.iter().zip(values) {
+        let mut row = vec![rl.clone()];
+        for &v in vals {
+            row.push(if v.is_finite() { format!("{v:.2}") } else { "-".into() });
+        }
+        rows.push(row);
+    }
+    let mut headers: Vec<&str> = vec![""];
+    headers.extend(col_labels.iter().map(|s| s.as_str()));
+    table(&headers, &rows)
+}
+
+/// CSV emission helper.
+pub fn write_csv(path: &std::path::Path, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let out = table(
+            &["name", "gflops"],
+            &[vec!["a".into(), "1.5".into()], vec!["longer".into(), "20".into()]],
+        );
+        assert!(out.contains("name"));
+        assert!(out.lines().count() == 4);
+    }
+
+    #[test]
+    fn boxplot_renders_medians() {
+        let e = vec![
+            box_entry("cute", &[100.0, 200.0, 400.0, 800.0]),
+            box_entry("tcgnn", &[10.0, 20.0, 40.0]),
+        ];
+        let out = boxplot(&e, "GFLOPs");
+        assert!(out.contains('#'));
+        assert!(out.contains("cute"));
+    }
+
+    #[test]
+    fn scatter_renders() {
+        let pts: Vec<(f64, f64)> = (1..100).map(|i| (i as f64, (i * i) as f64)).collect();
+        let out = scatter(&pts, 40, 10, "x", "y");
+        assert!(out.contains('.') || out.contains('o'));
+    }
+
+    #[test]
+    fn heatmap_marks_missing() {
+        let out = heatmap(
+            &["r0".into()],
+            &["c0".into(), "c1".into()],
+            &[vec![1.25, f64::NAN]],
+        );
+        assert!(out.contains("1.25"));
+        assert!(out.contains('-'));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join("cutespmm_test.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,238 @@
+//! Dynamic batching policy (pure logic, thread-free, unit-testable).
+//!
+//! SpMM requests against the *same matrix* compose: their B operands
+//! concatenate along the feature dimension, one kernel launch serves the
+//! whole group, and the C result slices back apart. This is the serving-side
+//! analogue of the paper's observation that wider N amortizes the A-side
+//! decode (Tables 3/4 trend) — the batcher manufactures wider N from
+//! concurrent traffic.
+//!
+//! Policy: accumulate per-matrix groups; flush a group when its total
+//! feature width reaches `max_batch_cols`, when it holds `max_batch_reqs`
+//! requests, or when its oldest request has waited `max_delay`.
+
+use crate::coordinator::registry::MatrixId;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush when a group's concatenated width reaches this many columns.
+    pub max_batch_cols: usize,
+    /// Flush when a group holds this many requests.
+    pub max_batch_reqs: usize,
+    /// Flush when the oldest request in a group is this old.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch_cols: 128, // one PJRT bucket width / the paper's N=128
+            max_batch_reqs: 32,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// An item awaiting batching: request `token` wants `cols` feature columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pending {
+    pub token: u64,
+    pub matrix: MatrixId,
+    pub cols: usize,
+}
+
+/// A flushed batch: requests to fuse into one kernel launch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Batch {
+    pub matrix: MatrixId,
+    pub tokens: Vec<u64>,
+    pub total_cols: usize,
+}
+
+struct Group {
+    items: Vec<Pending>,
+    cols: usize,
+    oldest: Instant,
+}
+
+/// The batcher state machine.
+pub struct Batcher {
+    policy: BatchPolicy,
+    groups: Vec<(MatrixId, Group)>, // small N of matrices: linear scan
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, groups: Vec::new() }
+    }
+
+    /// Number of requests currently held.
+    pub fn pending(&self) -> usize {
+        self.groups.iter().map(|(_, g)| g.items.len()).sum()
+    }
+
+    /// Add a request; returns a batch if this addition triggered a flush.
+    pub fn push(&mut self, item: Pending, now: Instant) -> Option<Batch> {
+        // oversized single request: flush it alone immediately
+        if item.cols >= self.policy.max_batch_cols {
+            return Some(Batch {
+                matrix: item.matrix,
+                tokens: vec![item.token],
+                total_cols: item.cols,
+            });
+        }
+        let idx = match self.groups.iter().position(|(m, _)| *m == item.matrix) {
+            Some(i) => i,
+            None => {
+                self.groups.push((
+                    item.matrix,
+                    Group { items: Vec::new(), cols: 0, oldest: now },
+                ));
+                self.groups.len() - 1
+            }
+        };
+        let g = &mut self.groups[idx].1;
+        if g.items.is_empty() {
+            g.oldest = now;
+        }
+        g.items.push(item);
+        g.cols += item.cols;
+        if g.cols >= self.policy.max_batch_cols || g.items.len() >= self.policy.max_batch_reqs {
+            return Some(self.flush_index(idx));
+        }
+        None
+    }
+
+    /// Flush any group whose oldest member exceeded the delay budget.
+    pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.groups.len() {
+            if !self.groups[i].1.items.is_empty()
+                && now.duration_since(self.groups[i].1.oldest) >= self.policy.max_delay
+            {
+                out.push(self.flush_index(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while let Some(i) = self.groups.iter().position(|(_, g)| !g.items.is_empty()) {
+            out.push(self.flush_index(i));
+        }
+        self.groups.clear();
+        out
+    }
+
+    /// Deadline of the earliest pending group (when `poll` next matters).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups
+            .iter()
+            .filter(|(_, g)| !g.items.is_empty())
+            .map(|(_, g)| g.oldest + self.policy.max_delay)
+            .min()
+    }
+
+    fn flush_index(&mut self, idx: usize) -> Batch {
+        let (matrix, g) = self.groups.swap_remove(idx);
+        Batch {
+            matrix,
+            tokens: g.items.iter().map(|p| p.token).collect(),
+            total_cols: g.cols,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(token: u64, matrix: u64, cols: usize) -> Pending {
+        Pending { token, matrix: MatrixId(matrix), cols }
+    }
+
+    #[test]
+    fn width_trigger_flushes() {
+        let mut b = Batcher::new(BatchPolicy { max_batch_cols: 64, ..Default::default() });
+        let now = Instant::now();
+        assert!(b.push(pend(1, 0, 32), now).is_none());
+        let batch = b.push(pend(2, 0, 32), now).unwrap();
+        assert_eq!(batch.tokens, vec![1, 2]);
+        assert_eq!(batch.total_cols, 64);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn groups_keyed_by_matrix() {
+        let mut b = Batcher::new(BatchPolicy { max_batch_cols: 64, ..Default::default() });
+        let now = Instant::now();
+        assert!(b.push(pend(1, 0, 32), now).is_none());
+        assert!(b.push(pend(2, 1, 32), now).is_none());
+        assert_eq!(b.pending(), 2);
+        let batch = b.push(pend(3, 0, 32), now).unwrap();
+        assert_eq!(batch.matrix, MatrixId(0));
+        assert_eq!(b.pending(), 1, "matrix 1's request still waits");
+    }
+
+    #[test]
+    fn count_trigger_flushes() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch_cols: 10_000,
+            max_batch_reqs: 3,
+            ..Default::default()
+        });
+        let now = Instant::now();
+        assert!(b.push(pend(1, 0, 8), now).is_none());
+        assert!(b.push(pend(2, 0, 8), now).is_none());
+        let batch = b.push(pend(3, 0, 8), now).unwrap();
+        assert_eq!(batch.tokens.len(), 3);
+    }
+
+    #[test]
+    fn deadline_trigger_flushes() {
+        let policy = BatchPolicy { max_delay: Duration::from_millis(5), ..Default::default() };
+        let mut b = Batcher::new(policy);
+        let t0 = Instant::now();
+        assert!(b.push(pend(1, 0, 8), t0).is_none());
+        assert!(b.poll(t0 + Duration::from_millis(1)).is_empty());
+        let flushed = b.poll(t0 + Duration::from_millis(6));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].tokens, vec![1]);
+    }
+
+    #[test]
+    fn oversized_request_flushes_alone() {
+        let mut b = Batcher::new(BatchPolicy { max_batch_cols: 64, ..Default::default() });
+        let batch = b.push(pend(1, 0, 128), Instant::now()).unwrap();
+        assert_eq!(batch.total_cols, 128);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let now = Instant::now();
+        b.push(pend(1, 0, 8), now);
+        b.push(pend(2, 1, 8), now);
+        let drained = b.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let policy = BatchPolicy { max_delay: Duration::from_millis(5), ..Default::default() };
+        let mut b = Batcher::new(policy);
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(pend(1, 0, 8), t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    }
+}

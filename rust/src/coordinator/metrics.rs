@@ -1,0 +1,172 @@
+//! Serving metrics: latency histograms, throughput counters, queue gauges.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-2 bucketed latency histogram, microsecond resolution, thread-safe.
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i, 2^{i+1}) µs; 32 buckets = up to ~1h
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile from the log-2 buckets (upper bound of the
+    /// bucket containing the p-quantile).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let want = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= want {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+
+    /// (bucket upper bound µs, count) pairs for display.
+    pub fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (1u64 << (i + 1), b.load(Ordering::Relaxed)))
+            .filter(|&(_, c)| c > 0)
+            .collect()
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    /// End-to-end request latency (submit → response).
+    pub request_latency: LatencyHistogram,
+    /// Kernel execution latency per batch.
+    pub exec_latency: LatencyHistogram,
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub failures: AtomicU64,
+    pub batches: AtomicU64,
+    /// Requests folded together across all batches (batching efficiency =
+    /// batched / batches).
+    pub batched_requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub queue_depth: AtomicUsize,
+    /// FLOPs served (useful, 2·nnz·n per request).
+    pub flops: Mutex<f64>,
+}
+
+impl Metrics {
+    pub fn add_flops(&self, f: f64) {
+        *self.flops.lock().unwrap() += f;
+    }
+
+    pub fn report(&self) -> String {
+        let lat = &self.request_latency;
+        format!(
+            "requests={} responses={} failures={} rejected={} batches={} \
+             avg_batch={:.2} latency(mean/p50/p95/p99/max µs)={:.0}/{}/{}/{}/{} \
+             served_gflop={:.3}",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.failures.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.batched_requests.load(Ordering::Relaxed) as f64
+                / self.batches.load(Ordering::Relaxed).max(1) as f64,
+            lat.mean_us(),
+            lat.percentile_us(50.0),
+            lat.percentile_us(95.0),
+            lat.percentile_us(99.0),
+            lat.max_us(),
+            *self.flops.lock().unwrap() / 1e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1000, 5000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
+        assert!(h.percentile_us(95.0) <= h.percentile_us(99.9).max(h.max_us()));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_only_nonempty() {
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(100));
+        let snap = h.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1, 2);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.add_flops(1e9);
+        let r = m.report();
+        assert!(r.contains("requests=3"));
+        assert!(r.contains("served_gflop=1.000"));
+    }
+}

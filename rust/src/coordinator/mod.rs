@@ -1,0 +1,554 @@
+//! The L3 serving coordinator: matrix registry → router → dynamic batcher →
+//! worker pool, with bounded-queue backpressure and serving metrics.
+//!
+//! Request lifecycle:
+//!
+//! ```text
+//! client ──submit──► ingress (bounded) ──► router thread
+//!                                           │  groups by matrix, flushes on
+//!                                           │  width / count / deadline
+//!                                           ▼
+//!                                      exec queue ──► worker pool
+//!                                                      │ fuse B columns,
+//!                                                      │ one SpMM per batch
+//!                                                      ▼
+//!                                              reply channels (per request)
+//! ```
+//!
+//! Engines: the native HRPB hot path (always available) and the AOT PJRT
+//! artifact via [`crate::runtime::PjrtHandle`] (when artifacts are built and
+//! the padded shape fits a bucket). Python never runs here.
+
+pub mod batcher;
+pub mod metrics;
+pub mod registry;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use registry::{Entry, MatrixId, Registry};
+
+use crate::formats::Dense;
+use crate::runtime::PjrtHandle;
+use crate::spmm::SpmmEngine;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which engine executes batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnginePolicy {
+    /// Always the native Rust HRPB engine.
+    Native,
+    /// Prefer the AOT PJRT artifact, fall back to native when no shape
+    /// bucket fits or execution fails.
+    PreferPjrt,
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct Config {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+    pub engine: EnginePolicy,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: std::thread::available_parallelism().map(|p| p.get().min(4)).unwrap_or(2),
+            queue_capacity: 1024,
+            batch: BatchPolicy::default(),
+            engine: EnginePolicy::Native,
+        }
+    }
+}
+
+/// A served response.
+#[derive(Debug)]
+pub struct Response {
+    pub c: Dense,
+    /// Engine that produced it ("cutespmm-native" / "pjrt").
+    pub engine: &'static str,
+    /// Submit → response latency.
+    pub latency: Duration,
+    /// Requests fused into the batch that served this response.
+    pub batch_size: usize,
+}
+
+struct Request {
+    token: u64,
+    matrix: MatrixId,
+    b: Dense,
+    submitted: Instant,
+    reply: Sender<Result<Response, String>>,
+}
+
+struct Job {
+    matrix: MatrixId,
+    reqs: Vec<Request>,
+}
+
+enum Ingress {
+    Req(Request),
+    Shutdown,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    ingress: SyncSender<Ingress>,
+    next_token: AtomicU64,
+    router: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start router + workers. `pjrt` supplies the AOT engine when the
+    /// policy prefers it.
+    pub fn start(config: Config, pjrt: Option<PjrtHandle>) -> Coordinator {
+        let registry = Arc::new(Registry::new());
+        let metrics = Arc::new(Metrics::default());
+        let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(config.queue_capacity);
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        // worker pool
+        let mut workers = Vec::new();
+        for w in 0..config.workers.max(1) {
+            let job_rx = job_rx.clone();
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let pjrt = pjrt.clone();
+            let engine = config.engine;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("cutespmm-worker-{w}"))
+                    .spawn(move || worker_loop(job_rx, registry, metrics, engine, pjrt))
+                    .expect("spawn worker"),
+            );
+        }
+
+        // router thread
+        let router = {
+            let metrics = metrics.clone();
+            let policy = config.batch;
+            std::thread::Builder::new()
+                .name("cutespmm-router".into())
+                .spawn(move || router_loop(ingress_rx, job_tx, policy, metrics))
+                .expect("spawn router")
+        };
+
+        Coordinator {
+            registry,
+            metrics,
+            ingress: ingress_tx,
+            next_token: AtomicU64::new(0),
+            router: Some(router),
+            workers,
+        }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Register a matrix (preprocess-once; see [`Registry`]).
+    pub fn register(&self, name: &str, coo: &crate::formats::Coo) -> MatrixId {
+        self.registry.register(name, coo)
+    }
+
+    /// Submit a request; blocks only if the bounded ingress queue is full
+    /// (backpressure). Returns the reply channel.
+    pub fn submit(&self, matrix: MatrixId, b: Dense) -> Receiver<Result<Response, String>> {
+        let (reply, rx) = channel();
+        let req = Request {
+            token: self.next_token.fetch_add(1, Ordering::Relaxed),
+            matrix,
+            b,
+            submitted: Instant::now(),
+            reply,
+        };
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        if self.ingress.send(Ingress::Req(req)).is_err() {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        rx
+    }
+
+    /// Non-blocking submit: `Err` when the ingress queue is full.
+    pub fn try_submit(
+        &self,
+        matrix: MatrixId,
+        b: Dense,
+    ) -> Result<Receiver<Result<Response, String>>, Dense> {
+        let (reply, rx) = channel();
+        let req = Request {
+            token: self.next_token.fetch_add(1, Ordering::Relaxed),
+            matrix,
+            b,
+            submitted: Instant::now(),
+            reply,
+        };
+        match self.ingress.try_send(Ingress::Req(req)) {
+            Ok(()) => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(std::sync::mpsc::TrySendError::Full(Ingress::Req(r))) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(r.b)
+            }
+            Err(_) => panic!("coordinator stopped"),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, matrix: MatrixId, b: Dense) -> Result<Response, String> {
+        self.submit(matrix, b)
+            .recv()
+            .map_err(|_| "coordinator dropped request".to_string())?
+    }
+
+    /// Graceful shutdown: drain in-flight work, join threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.ingress.send(Ingress::Shutdown);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if self.router.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn router_loop(
+    ingress: Receiver<Ingress>,
+    job_tx: Sender<Job>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = Batcher::new(policy);
+    let mut held: HashMap<u64, Request> = HashMap::new();
+
+    let flush = |batch: batcher::Batch, held: &mut HashMap<u64, Request>, job_tx: &Sender<Job>| {
+        let reqs: Vec<Request> =
+            batch.tokens.iter().filter_map(|t| held.remove(t)).collect();
+        if reqs.is_empty() {
+            return;
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let _ = job_tx.send(Job { matrix: batch.matrix, reqs });
+    };
+
+    loop {
+        // wait bounded by the next batching deadline
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match ingress.recv_timeout(timeout) {
+            Ok(Ingress::Req(req)) => {
+                let now = Instant::now();
+                let pending = batcher::Pending {
+                    token: req.token,
+                    matrix: req.matrix,
+                    cols: req.b.cols,
+                };
+                held.insert(req.token, req);
+                if let Some(batch) = batcher.push(pending, now) {
+                    flush(batch, &mut held, &job_tx);
+                }
+                for batch in batcher.poll(now) {
+                    flush(batch, &mut held, &job_tx);
+                }
+            }
+            Ok(Ingress::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                for batch in batcher.poll(Instant::now()) {
+                    flush(batch, &mut held, &job_tx);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    for batch in batcher.drain() {
+        flush(batch, &mut held, &job_tx);
+    }
+    // job_tx drops here; workers exit on channel close
+}
+
+fn worker_loop(
+    jobs: Arc<Mutex<Receiver<Job>>>,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    engine: EnginePolicy,
+    pjrt: Option<PjrtHandle>,
+) {
+    loop {
+        let job = {
+            let guard = jobs.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(job) = job else { break };
+        execute_job(job, &registry, &metrics, engine, pjrt.as_ref());
+    }
+}
+
+fn execute_job(
+    job: Job,
+    registry: &Registry,
+    metrics: &Metrics,
+    engine: EnginePolicy,
+    pjrt: Option<&PjrtHandle>,
+) {
+    let batch_size = job.reqs.len();
+    let Some(entry) = registry.get(job.matrix) else {
+        for req in job.reqs {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            let _ = req.reply.send(Err(format!("unknown matrix {:?}", job.matrix)));
+        }
+        return;
+    };
+
+    // shape check before fusing
+    let bad: Vec<bool> = job.reqs.iter().map(|r| r.b.rows != entry.cols).collect();
+    let good_cols: usize =
+        job.reqs.iter().zip(&bad).filter(|(_, &b)| !b).map(|(r, _)| r.b.cols).sum();
+
+    // fuse B operands column-wise
+    let mut fused = Dense::zeros(entry.cols, good_cols.max(1));
+    let mut col = 0usize;
+    for (req, &is_bad) in job.reqs.iter().zip(&bad) {
+        if is_bad {
+            continue;
+        }
+        for r in 0..entry.cols {
+            fused.data[r * fused.cols + col..r * fused.cols + col + req.b.cols]
+                .copy_from_slice(&req.b.row(r)[..req.b.cols]);
+        }
+        col += req.b.cols;
+    }
+
+    // execute (one launch per batch)
+    let t0 = Instant::now();
+    let (c, engine_name): (Dense, &'static str) = if good_cols == 0 {
+        (Dense::zeros(entry.rows, 0), "none")
+    } else {
+        match engine {
+            EnginePolicy::PreferPjrt => {
+                let via_pjrt = pjrt.and_then(|h| h.spmm(entry.hrpb.clone(), fused.clone()).ok());
+                match via_pjrt {
+                    Some(c) => (c, "pjrt"),
+                    None => (entry.engine.spmm(&fused), "cutespmm-native"),
+                }
+            }
+            EnginePolicy::Native => (entry.engine.spmm(&fused), "cutespmm-native"),
+        }
+    };
+    metrics.exec_latency.record(t0.elapsed());
+
+    // split C back per request and reply
+    let mut col = 0usize;
+    for (req, is_bad) in job.reqs.into_iter().zip(bad) {
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        if is_bad {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            let _ = req.reply.send(Err(format!(
+                "B rows {} != matrix cols {}",
+                req.b.rows, entry.cols
+            )));
+            continue;
+        }
+        let mut out = Dense::zeros(entry.rows, req.b.cols);
+        for r in 0..entry.rows {
+            out.row_mut(r)
+                .copy_from_slice(&c.row(r)[col..col + req.b.cols]);
+        }
+        col += req.b.cols;
+        let latency = req.submitted.elapsed();
+        metrics.request_latency.record(latency);
+        metrics.responses.fetch_add(1, Ordering::Relaxed);
+        metrics.add_flops(2.0 * entry.nnz as f64 * req.b.cols as f64);
+        let _ = req.reply.send(Ok(Response {
+            c: out,
+            engine: engine_name,
+            latency,
+            batch_size,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::util::rng::Rng;
+
+    fn small_coordinator(engine: EnginePolicy) -> (Coordinator, MatrixId, Coo) {
+        let coord = Coordinator::start(
+            Config { workers: 2, engine, ..Default::default() },
+            None,
+        );
+        let coo = Coo::random(96, 128, 0.05, &mut Rng::new(400));
+        let id = coord.register("test", &coo);
+        (coord, id, coo)
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let (coord, id, coo) = small_coordinator(EnginePolicy::Native);
+        let mut rng = Rng::new(401);
+        let b = Dense::random(128, 16, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        let resp = coord.call(id, b).unwrap();
+        assert!(resp.c.rel_fro_error(&want) < 1e-5);
+        assert_eq!(resp.engine, "cutespmm-native");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let coord = Coordinator::start(
+            Config {
+                workers: 1,
+                batch: BatchPolicy {
+                    max_batch_cols: 64,
+                    max_batch_reqs: 64,
+                    max_delay: Duration::from_millis(20),
+                },
+                ..Default::default()
+            },
+            None,
+        );
+        let coo = Coo::random(64, 64, 0.1, &mut Rng::new(402));
+        let id = coord.register("m", &coo);
+        let dense = coo.to_dense();
+
+        // 4 × 16-wide requests fill the 64-col batch
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..4 {
+            let b = Dense::random(64, 16, &mut Rng::new(500 + i));
+            wants.push(dense.matmul(&b));
+            rxs.push(coord.submit(id, b));
+        }
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert!(resp.c.rel_fro_error(&want) < 1e-5);
+            assert!(resp.batch_size >= 1);
+        }
+        let batches = coord.metrics().batches.load(Ordering::Relaxed);
+        let fused = coord.metrics().batched_requests.load(Ordering::Relaxed);
+        assert_eq!(fused, 4);
+        assert!(batches <= 2, "4x16 wide requests should fuse (got {batches} batches)");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn wrong_shape_is_rejected_not_crashed() {
+        let (coord, id, _) = small_coordinator(EnginePolicy::Native);
+        let b = Dense::zeros(127, 8); // matrix has 128 cols
+        let err = coord.call(id, b);
+        assert!(err.is_err());
+        // a good request still works afterwards
+        let b = Dense::random(128, 8, &mut Rng::new(403));
+        assert!(coord.call(id, b).is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_matrix_fails_cleanly() {
+        let (coord, _, _) = small_coordinator(EnginePolicy::Native);
+        let err = coord.call(MatrixId(999), Dense::zeros(8, 8));
+        assert!(err.is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_serves_lone_requests() {
+        let coord = Coordinator::start(
+            Config {
+                workers: 1,
+                batch: BatchPolicy {
+                    max_batch_cols: 4096,
+                    max_batch_reqs: 1000,
+                    max_delay: Duration::from_millis(1),
+                },
+                ..Default::default()
+            },
+            None,
+        );
+        let coo = Coo::random(32, 32, 0.2, &mut Rng::new(404));
+        let id = coord.register("m", &coo);
+        let b = Dense::random(32, 8, &mut Rng::new(405));
+        let want = coo.to_dense().matmul(&b);
+        let resp = coord.call(id, b).unwrap();
+        assert!(resp.c.rel_fro_error(&want) < 1e-5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (coord, id, _) = small_coordinator(EnginePolicy::Native);
+        for i in 0..8 {
+            let b = Dense::random(128, 8, &mut Rng::new(600 + i));
+            coord.call(id, b).unwrap();
+        }
+        let m = coord.metrics();
+        assert_eq!(m.responses.load(Ordering::Relaxed), 8);
+        assert_eq!(m.failures.load(Ordering::Relaxed), 0);
+        assert!(m.request_latency.count() == 8);
+        assert!(m.report().contains("responses=8"));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_threads_hammering() {
+        let coord = Arc::new(Coordinator::start(
+            Config { workers: 4, ..Default::default() },
+            None,
+        ));
+        let coo = Coo::random(128, 160, 0.04, &mut Rng::new(406));
+        let id = coord.register("m", &coo);
+        let dense = Arc::new(coo.to_dense());
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let coord = coord.clone();
+                let dense = dense.clone();
+                s.spawn(move || {
+                    for i in 0..5 {
+                        let b = Dense::random(160, 8, &mut Rng::new(t * 100 + i));
+                        let want = dense.matmul(&b);
+                        let resp = coord.call(id, b).unwrap();
+                        assert!(resp.c.rel_fro_error(&want) < 1e-5);
+                    }
+                });
+            }
+        });
+        assert_eq!(coord.metrics().responses.load(Ordering::Relaxed), 40);
+    }
+}

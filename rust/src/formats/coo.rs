@@ -1,0 +1,231 @@
+//! Coordinate (triplet) sparse format — the interchange representation every
+//! generator emits and every converter consumes.
+
+use crate::formats::dense::Dense;
+use crate::util::rng::Rng;
+
+/// COO sparse matrix. Invariant after `normalize`: entries sorted
+/// row-major, no duplicates, all indices in range, no explicit zeros.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, row_idx: Vec::new(), col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.row_idx.push(r as u32);
+        self.col_idx.push(c as u32);
+        self.values.push(v);
+    }
+
+    /// From `(row, col, value)` triplets.
+    pub fn from_triplets(rows: usize, cols: usize, t: &[(usize, usize, f32)]) -> Self {
+        let mut coo = Coo::new(rows, cols);
+        for &(r, c, v) in t {
+            coo.push(r, c, v);
+        }
+        coo.normalize();
+        coo
+    }
+
+    /// Sort row-major, sum duplicates, drop explicit zeros.
+    pub fn normalize(&mut self) {
+        let n = self.nnz();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by_key(|&i| (self.row_idx[i], self.col_idx[i]));
+        let mut row = Vec::with_capacity(n);
+        let mut col = Vec::with_capacity(n);
+        let mut val: Vec<f32> = Vec::with_capacity(n);
+        for &i in &order {
+            let (r, c, v) = (self.row_idx[i], self.col_idx[i], self.values[i]);
+            if let (Some(&lr), Some(&lc)) = (row.last(), col.last()) {
+                if lr == r && lc == c {
+                    *val.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            row.push(r);
+            col.push(c);
+            val.push(v);
+        }
+        // drop zeros created by cancellation or pushed explicitly
+        let mut keep_row = Vec::with_capacity(val.len());
+        let mut keep_col = Vec::with_capacity(val.len());
+        let mut keep_val = Vec::with_capacity(val.len());
+        for i in 0..val.len() {
+            if val[i] != 0.0 {
+                keep_row.push(row[i]);
+                keep_col.push(col[i]);
+                keep_val.push(val[i]);
+            }
+        }
+        self.row_idx = keep_row;
+        self.col_idx = keep_col;
+        self.values = keep_val;
+    }
+
+    /// Is the triplet list sorted row-major with no duplicates?
+    pub fn is_normalized(&self) -> bool {
+        (1..self.nnz()).all(|i| {
+            (self.row_idx[i - 1], self.col_idx[i - 1]) < (self.row_idx[i], self.col_idx[i])
+        })
+    }
+
+    /// Uniform random sparse matrix with ~`density` fill.
+    pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Self {
+        let mut coo = Coo::new(rows, cols);
+        let target = ((rows * cols) as f64 * density).round() as usize;
+        let mut seen = std::collections::HashSet::with_capacity(target * 2);
+        while coo.nnz() < target {
+            let r = rng.below(rows);
+            let c = rng.below(cols);
+            if seen.insert((r, c)) {
+                coo.push(r, c, rng.nz_value());
+            }
+        }
+        coo.normalize();
+        coo
+    }
+
+    /// Materialize dense (oracle use only; asserts a sane size).
+    pub fn to_dense(&self) -> Dense {
+        assert!(self.rows * self.cols <= 64 << 20, "to_dense on a huge matrix");
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for i in 0..self.nnz() {
+            d[(self.row_idx[i] as usize, self.col_idx[i] as usize)] += self.values[i];
+        }
+        d
+    }
+
+    /// Build from a dense matrix (tests).
+    pub fn from_dense(d: &Dense) -> Self {
+        let mut coo = Coo::new(d.rows, d.cols);
+        for r in 0..d.rows {
+            for c in 0..d.cols {
+                let v = d[(r, c)];
+                if v != 0.0 {
+                    coo.push(r, c, v);
+                }
+            }
+        }
+        coo
+    }
+
+    /// Number of nonzeros per row.
+    pub fn row_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.rows];
+        for &r in &self.row_idx {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Check all internal invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_idx.len() != self.values.len() || self.col_idx.len() != self.values.len() {
+            return Err("array length mismatch".into());
+        }
+        for i in 0..self.nnz() {
+            if self.row_idx[i] as usize >= self.rows {
+                return Err(format!("row index {} out of range", self.row_idx[i]));
+            }
+            if self.col_idx[i] as usize >= self.cols {
+                return Err(format!("col index {} out of range", self.col_idx[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, SparseGen};
+
+    #[test]
+    fn normalize_sorts_and_merges() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(2, 1, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(2, 1, 3.0); // duplicate -> summed
+        coo.push(1, 1, -1.0);
+        coo.normalize();
+        assert!(coo.is_normalized());
+        assert_eq!(coo.nnz(), 3);
+        let d = coo.to_dense();
+        assert_eq!(d[(2, 1)], 4.0);
+        assert_eq!(d[(0, 3)], 2.0);
+    }
+
+    #[test]
+    fn normalize_drops_cancelled_zeros() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, -1.0);
+        coo.normalize();
+        assert_eq!(coo.nnz(), 0);
+    }
+
+    #[test]
+    fn random_density_close() {
+        let mut rng = Rng::new(4);
+        let coo = Coo::random(100, 200, 0.05, &mut rng);
+        let want = (100.0 * 200.0 * 0.05) as usize;
+        assert_eq!(coo.nnz(), want);
+        coo.validate().unwrap();
+        assert!(coo.is_normalized());
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let mut rng = Rng::new(5);
+        let coo = Coo::random(30, 17, 0.2, &mut rng);
+        let back = Coo::from_dense(&coo.to_dense());
+        assert_eq!(back.nnz(), coo.nnz());
+        assert_eq!(back.to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn prop_from_triplets_matches_dense_scatter() {
+        let g = SparseGen { max_m: 32, max_k: 32, max_density: 0.4 };
+        check("coo triplets == dense scatter", 60, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            if coo.validate().is_err() || !coo.is_normalized() {
+                return false;
+            }
+            // scatter triplets into dense independently (duplicates summed)
+            let mut d = Dense::zeros(case.m, case.k);
+            for &(r, c, v) in &case.triplets {
+                d[(r, c)] += v;
+            }
+            coo.to_dense().max_abs_diff(&d) < 1e-5
+        });
+    }
+
+    #[test]
+    fn row_counts_sum_to_nnz() {
+        let mut rng = Rng::new(6);
+        let coo = Coo::random(50, 50, 0.1, &mut rng);
+        assert_eq!(coo.row_counts().iter().sum::<u32>() as usize, coo.nnz());
+    }
+}

@@ -1,0 +1,134 @@
+//! Compressed Sparse Column — used by the cuSparse-COO/CSC-style baseline and
+//! by the HRPB builder's per-panel active-column scan.
+
+use crate::formats::coo::Coo;
+use crate::formats::dense::Dense;
+
+/// CSC sparse matrix. `col_ptr.len() == cols + 1`; row indices within each
+/// column sorted ascending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    pub col_ptr: Vec<u32>,
+    pub row_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csc {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Build from normalized COO.
+    pub fn from_coo(coo: &Coo) -> Self {
+        debug_assert!(coo.is_normalized());
+        let nnz = coo.nnz();
+        let mut col_ptr = vec![0u32; coo.cols + 1];
+        for &c in &coo.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for i in 0..coo.cols {
+            col_ptr[i + 1] += col_ptr[i];
+        }
+        let mut next = col_ptr.clone();
+        let mut row_idx = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        // COO is row-major sorted, so writing in order keeps rows sorted
+        // within each column.
+        for i in 0..nnz {
+            let c = coo.col_idx[i] as usize;
+            let dst = next[c] as usize;
+            row_idx[dst] = coo.row_idx[i];
+            values[dst] = coo.values[i];
+            next[c] += 1;
+        }
+        Csc { rows: coo.rows, cols: coo.cols, col_ptr, row_idx, values }
+    }
+
+    #[inline]
+    pub fn col_range(&self, c: usize) -> std::ops::Range<usize> {
+        self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize
+    }
+
+    pub fn col_nnz(&self, c: usize) -> usize {
+        (self.col_ptr[c + 1] - self.col_ptr[c]) as usize
+    }
+
+    /// Entries `(row, value)` of column `c`.
+    pub fn col_entries(&self, c: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.col_range(c).map(move |i| (self.row_idx[i], self.values[i]))
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for c in 0..self.cols {
+            for i in self.col_range(c) {
+                coo.push(self.row_idx[i] as usize, c, self.values[i]);
+            }
+        }
+        coo.normalize();
+        coo
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        self.to_coo().to_dense()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.col_ptr.len() != self.cols + 1 {
+            return Err("col_ptr length".into());
+        }
+        if self.col_ptr[0] != 0 || *self.col_ptr.last().unwrap() as usize != self.nnz() {
+            return Err("col_ptr endpoints".into());
+        }
+        for c in 0..self.cols {
+            let rng = self.col_range(c);
+            for i in rng.clone() {
+                if self.row_idx[i] as usize >= self.rows {
+                    return Err(format!("row index out of range in col {c}"));
+                }
+                if i > rng.start && self.row_idx[i - 1] >= self.row_idx[i] {
+                    return Err(format!("rows not sorted in col {c}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_random() {
+        let mut rng = Rng::new(8);
+        let coo = Coo::random(33, 21, 0.2, &mut rng);
+        let csc = Csc::from_coo(&coo);
+        csc.validate().unwrap();
+        assert_eq!(csc.to_coo(), coo);
+    }
+
+    #[test]
+    fn col_access() {
+        let coo = Coo::from_triplets(5, 3, &[(1, 0, 1.0), (4, 0, 2.0), (0, 2, 3.0)]);
+        let csc = Csc::from_coo(&coo);
+        assert_eq!(csc.col_nnz(0), 2);
+        assert_eq!(csc.col_nnz(1), 0);
+        let col0: Vec<_> = csc.col_entries(0).collect();
+        assert_eq!(col0, vec![(1, 1.0), (4, 2.0)]);
+    }
+
+    #[test]
+    fn prop_round_trip() {
+        let g = SparseGen { max_m: 40, max_k: 40, max_density: 0.3 };
+        check("csc<->coo round trip", 60, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let csc = Csc::from_coo(&coo);
+            csc.validate().is_ok() && csc.to_coo() == coo
+        });
+    }
+}

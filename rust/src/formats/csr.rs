@@ -1,0 +1,142 @@
+//! Compressed Sparse Row — the native format of the scalar-core baselines
+//! (cuSparse-CSR-like, GE-SpMM-like, Sputnik-like engines).
+
+use crate::formats::coo::Coo;
+use crate::formats::dense::Dense;
+
+/// CSR sparse matrix. `row_ptr.len() == rows + 1`; column indices within each
+/// row are sorted ascending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Build from normalized COO (sorted, deduplicated).
+    pub fn from_coo(coo: &Coo) -> Self {
+        debug_assert!(coo.is_normalized(), "from_coo requires normalized COO");
+        let mut row_ptr = vec![0u32; coo.rows + 1];
+        for &r in &coo.row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            rows: coo.rows,
+            cols: coo.cols,
+            row_ptr,
+            col_idx: coo.col_idx.clone(),
+            values: coo.values.clone(),
+        }
+    }
+
+    /// Back to COO (normalized by construction).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_range(r) {
+                coo.push(r, self.col_idx[i] as usize, self.values[i]);
+            }
+        }
+        coo
+    }
+
+    /// Index range of row `r`'s entries.
+    #[inline]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize
+    }
+
+    /// Entries `(col, value)` of row `r`.
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.row_range(r).map(move |i| (self.col_idx[i], self.values[i]))
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        self.to_coo().to_dense()
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.nnz() {
+            return Err("row_ptr endpoints".into());
+        }
+        for r in 0..self.rows {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(format!("row_ptr not monotone at {r}"));
+            }
+            let rng = self.row_range(r);
+            for i in rng.clone() {
+                if self.col_idx[i] as usize >= self.cols {
+                    return Err(format!("col index out of range in row {r}"));
+                }
+                if i > rng.start && self.col_idx[i - 1] >= self.col_idx[i] {
+                    return Err(format!("cols not sorted in row {r}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_coo_round_trip() {
+        let mut rng = Rng::new(7);
+        let coo = Coo::random(40, 25, 0.15, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        csr.validate().unwrap();
+        assert_eq!(csr.to_coo(), coo);
+    }
+
+    #[test]
+    fn row_access() {
+        let coo = Coo::from_triplets(3, 5, &[(0, 1, 1.0), (0, 4, 2.0), (2, 0, 3.0)]);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.row_nnz(0), 2);
+        assert_eq!(csr.row_nnz(1), 0);
+        assert_eq!(csr.row_nnz(2), 1);
+        let row0: Vec<_> = csr.row_entries(0).collect();
+        assert_eq!(row0, vec![(1, 1.0), (4, 2.0)]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::new(4, 4);
+        let csr = Csr::from_coo(&coo);
+        csr.validate().unwrap();
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn prop_csr_coo_round_trip() {
+        let g = SparseGen { max_m: 48, max_k: 48, max_density: 0.3 };
+        check("csr<->coo round trip", 60, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let csr = Csr::from_coo(&coo);
+            csr.validate().is_ok() && csr.to_coo() == coo
+        });
+    }
+}

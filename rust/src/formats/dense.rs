@@ -1,0 +1,176 @@
+//! Row-major dense matrix. Backs the B and C operands of SpMM, the
+//! correctness oracles, and the dense feature matrices of the GNN examples.
+
+use crate::util::rng::Rng;
+
+/// Row-major `rows x cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Dense { rows, cols, data }
+    }
+
+    /// Identity-like (1s on the main diagonal).
+    pub fn eye(n: usize) -> Self {
+        let mut d = Dense::zeros(n, n);
+        for i in 0..n {
+            d[(i, i)] = 1.0;
+        }
+        d
+    }
+
+    /// Uniform random values in [-1, 1).
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        Dense { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Dense matmul (blocked; oracle for examples — not a hot path).
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows, "inner dims");
+        let mut out = Dense::zeros(self.rows, other.cols);
+        const BK: usize = 64;
+        for k0 in (0..self.cols).step_by(BK) {
+            let k1 = (k0 + BK).min(self.cols);
+            for i in 0..self.rows {
+                let arow = self.row(i);
+                for k in k0..k1 {
+                    let a = arow[k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = other.row(k);
+                    let crow = out.row_mut(i);
+                    for (c, b) in crow.iter_mut().zip(brow) {
+                        *c += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Max absolute difference against another matrix of the same shape.
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius-norm error ||self - other|| / ||other||.
+    pub fn rel_fro_error(&self, other: &Dense) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        (num / den).sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Dense {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Dense {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_round_trip() {
+        let mut d = Dense::zeros(3, 4);
+        d[(2, 3)] = 7.5;
+        assert_eq!(d[(2, 3)], 7.5);
+        assert_eq!(d.row(2)[3], 7.5);
+    }
+
+    #[test]
+    fn eye_matmul_is_identity() {
+        let mut rng = Rng::new(1);
+        let a = Dense::random(5, 5, &mut rng);
+        let c = Dense::eye(5).matmul(&a);
+        assert!(c.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Dense::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = Rng::new(2);
+        let a = Dense::random(17, 33, &mut rng);
+        let b = Dense::random(33, 9, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..17 {
+            for j in 0..9 {
+                let mut s = 0.0f32;
+                for k in 0..33 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn rel_fro_error_zero_for_equal() {
+        let mut rng = Rng::new(3);
+        let a = Dense::random(4, 4, &mut rng);
+        assert_eq!(a.rel_fro_error(&a), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Dense::zeros(2, 3);
+        let b = Dense::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,16 @@
+//! Sparse and dense matrix formats + MatrixMarket IO.
+//!
+//! `Coo` is the interchange format every generator produces; `Csr`/`Csc` are
+//! the baselines' native formats; `Dense` backs correctness oracles and the
+//! B/C operands of SpMM.
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod mtx;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dense::Dense;

@@ -1,0 +1,227 @@
+//! MatrixMarket (`.mtx`) IO — the on-disk format of the SuiteSparse
+//! collection the paper's corpus comes from. Supports the `matrix coordinate
+//! {real,integer,pattern} {general,symmetric,skew-symmetric}` subset that
+//! covers SuiteSparse SpMM use, plus writing for corpus export.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::coo::Coo;
+
+/// Symmetry classes we understand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a MatrixMarket coordinate file into (normalized) COO, expanding
+/// symmetric storage.
+pub fn read_mtx(path: &Path) -> Result<Coo> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_mtx_from(std::io::BufReader::new(file))
+}
+
+/// Read from any buffered reader (tests use in-memory strings).
+pub fn read_mtx_from<R: BufRead>(reader: R) -> Result<Coo> {
+    let mut lines = reader.lines();
+
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty mtx file"),
+        }
+    };
+    let head: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    if head.len() < 4 || head[0] != "%%matrixmarket" || head[1] != "matrix" {
+        bail!("not a MatrixMarket matrix header: {header}");
+    }
+    if head[2] != "coordinate" {
+        bail!("only coordinate (sparse) mtx supported, got {}", head[2]);
+    }
+    let field = head[3].as_str();
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field type {field}");
+    }
+    let symmetry = match head.get(4).map(|s| s.as_str()).unwrap_or("general") {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => bail!("unsupported symmetry {other}"),
+    };
+
+    // size line (skip comments)
+    let size_line = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if t.is_empty() || t.starts_with('%') {
+                    continue;
+                }
+                break l;
+            }
+            None => bail!("missing size line"),
+        }
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad size line: {size_line}"))?;
+    if dims.len() != 3 {
+        bail!("size line needs 'rows cols nnz', got: {size_line}");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(rows, cols);
+    let mut read = 0usize;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("missing row")?.parse()?;
+        let c: usize = it.next().context("missing col")?.parse()?;
+        let v: f32 = match field {
+            "pattern" => 1.0,
+            _ => it.next().context("missing value")?.parse()?,
+        };
+        if r == 0 || c == 0 || r > rows || c > cols {
+            bail!("index ({r},{c}) out of 1-based range {rows}x{cols}");
+        }
+        let (r, c) = (r - 1, c - 1);
+        if v != 0.0 {
+            coo.push(r, c, v);
+            match symmetry {
+                Symmetry::General => {}
+                Symmetry::Symmetric if r != c => coo.push(c, r, v),
+                Symmetry::SkewSymmetric if r != c => coo.push(c, r, -v),
+                _ => {}
+            }
+        }
+        read += 1;
+    }
+    if read != nnz {
+        bail!("expected {nnz} entries, found {read}");
+    }
+    coo.normalize();
+    Ok(coo)
+}
+
+/// Write COO as a `general real` coordinate file.
+pub fn write_mtx(path: &Path, coo: &Coo, comment: Option<&str>) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    if let Some(c) = comment {
+        for line in c.lines() {
+            writeln!(w, "% {line}")?;
+        }
+    }
+    writeln!(w, "{} {} {}", coo.rows, coo.cols, coo.nnz())?;
+    for i in 0..coo.nnz() {
+        writeln!(w, "{} {} {}", coo.row_idx[i] + 1, coo.col_idx[i] + 1, coo.values[i])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    fn parse(s: &str) -> Result<Coo> {
+        read_mtx_from(Cursor::new(s.as_bytes()))
+    }
+
+    #[test]
+    fn general_real() {
+        let coo = parse(
+            "%%MatrixMarket matrix coordinate real general\n\
+             % a comment\n\
+             3 4 2\n\
+             1 2 1.5\n\
+             3 4 -2\n",
+        )
+        .unwrap();
+        assert_eq!((coo.rows, coo.cols, coo.nnz()), (3, 4, 2));
+        assert_eq!(coo.to_dense()[(0, 1)], 1.5);
+        assert_eq!(coo.to_dense()[(2, 3)], -2.0);
+    }
+
+    #[test]
+    fn symmetric_expansion() {
+        let coo = parse(
+            "%%MatrixMarket matrix coordinate real symmetric\n\
+             3 3 2\n\
+             2 1 5\n\
+             3 3 7\n",
+        )
+        .unwrap();
+        assert_eq!(coo.nnz(), 3); // (1,0), (0,1), (2,2)
+        let d = coo.to_dense();
+        assert_eq!(d[(1, 0)], 5.0);
+        assert_eq!(d[(0, 1)], 5.0);
+        assert_eq!(d[(2, 2)], 7.0);
+    }
+
+    #[test]
+    fn skew_symmetric() {
+        let coo = parse(
+            "%%MatrixMarket matrix coordinate real skew-symmetric\n\
+             2 2 1\n\
+             2 1 3\n",
+        )
+        .unwrap();
+        let d = coo.to_dense();
+        assert_eq!(d[(1, 0)], 3.0);
+        assert_eq!(d[(0, 1)], -3.0);
+    }
+
+    #[test]
+    fn pattern_field() {
+        let coo = parse(
+            "%%MatrixMarket matrix coordinate pattern general\n\
+             2 2 2\n\
+             1 1\n\
+             2 2\n",
+        )
+        .unwrap();
+        assert_eq!(coo.to_dense()[(0, 0)], 1.0);
+        assert_eq!(coo.to_dense()[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_counts() {
+        assert!(parse("%%MatrixMarket matrix array real general\n2 2\n").is_err());
+        assert!(parse("garbage\n1 1 0\n").is_err());
+        assert!(parse("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1\n").is_err());
+        assert!(parse("%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n").is_err());
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let mut rng = Rng::new(9);
+        let coo = Coo::random(25, 18, 0.1, &mut rng);
+        let dir = std::env::temp_dir().join("cutespmm_mtx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.mtx");
+        write_mtx(&path, &coo, Some("round trip\ntwo lines")).unwrap();
+        let back = read_mtx(&path).unwrap();
+        assert_eq!(back.rows, coo.rows);
+        assert_eq!(back.nnz(), coo.nnz());
+        assert!(back.to_dense().max_abs_diff(&coo.to_dense()) < 1e-6);
+    }
+}

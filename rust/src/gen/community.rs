@@ -1,0 +1,75 @@
+//! Block-community graphs (stochastic block model): dense intra-community
+//! clusters + sparse inter-community edges. After HRPB compaction the
+//! clusters produce moderately dense bricks — the medium-synergy regime.
+
+use crate::formats::Coo;
+use crate::util::rng::Rng;
+
+/// `n`-node graph split into `communities` equal groups; each node gets
+/// ~`intra_degree` edges inside its group, and a fraction `inter_frac` of
+/// edges rewired to random other groups.
+pub fn generate(
+    n: usize,
+    communities: usize,
+    intra_degree: usize,
+    inter_frac: f64,
+    rng: &mut Rng,
+) -> Coo {
+    assert!(communities >= 1 && n >= communities);
+    let gsize = n / communities;
+    assert!(gsize >= 2, "community size too small");
+    let mut coo = Coo::new(n, n);
+    for v in 0..n {
+        let g = (v / gsize).min(communities - 1);
+        let glo = g * gsize;
+        let ghi = if g == communities - 1 { n } else { glo + gsize };
+        for _ in 0..intra_degree {
+            if rng.chance(inter_frac) {
+                coo.push(v, rng.below(n), rng.nz_value());
+            } else {
+                coo.push(v, rng.range(glo, ghi), rng.nz_value());
+            }
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_edges_dominate() {
+        let mut rng = Rng::new(1);
+        let n = 4000;
+        let comm = 10;
+        let coo = generate(n, comm, 12, 0.05, &mut rng);
+        let gsize = n / comm;
+        let intra = (0..coo.nnz())
+            .filter(|&i| coo.row_idx[i] as usize / gsize == coo.col_idx[i] as usize / gsize)
+            .count();
+        assert!(intra as f64 > coo.nnz() as f64 * 0.85);
+    }
+
+    #[test]
+    fn inter_frac_one_is_uniform() {
+        let mut rng = Rng::new(2);
+        let coo = generate(2000, 4, 8, 1.0, &mut rng);
+        let gsize = 500;
+        let intra = (0..coo.nnz())
+            .filter(|&i| coo.row_idx[i] as usize / gsize == coo.col_idx[i] as usize / gsize)
+            .count();
+        // uniform target hits own community ~1/4 of the time
+        let frac = intra as f64 / coo.nnz() as f64;
+        assert!(frac < 0.4, "frac={frac}");
+    }
+
+    #[test]
+    fn all_rows_have_edges() {
+        let mut rng = Rng::new(3);
+        let coo = generate(1000, 5, 6, 0.1, &mut rng);
+        let counts = coo.row_counts();
+        assert!(counts.iter().all(|&c| c >= 1));
+    }
+}

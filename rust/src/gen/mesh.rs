@@ -1,0 +1,108 @@
+//! Finite-difference mesh Laplacians (2-D 5-point, 3-D 7-point) — the
+//! scientific-computing mid-ground: strong diagonal locality but only ~5-7
+//! nonzeros per row, giving medium brick density after compaction.
+
+use crate::formats::Coo;
+
+/// Laplacian of a `side^dims` grid, truncated/padded so the matrix has
+/// (close to) `target_rows` rows. Deterministic (no RNG needed).
+pub fn generate(target_rows: usize, dims: usize) -> Coo {
+    assert!(dims == 2 || dims == 3, "dims must be 2 or 3");
+    let side = (target_rows as f64).powf(1.0 / dims as f64).round().max(2.0) as usize;
+    let n = side.pow(dims as u32);
+    let mut coo = Coo::new(n, n);
+    let idx2 = |x: usize, y: usize| x * side + y;
+    let idx3 = |x: usize, y: usize, z: usize| (x * side + y) * side + z;
+    if dims == 2 {
+        for x in 0..side {
+            for y in 0..side {
+                let i = idx2(x, y);
+                coo.push(i, i, 4.0);
+                if x > 0 {
+                    coo.push(i, idx2(x - 1, y), -1.0);
+                }
+                if x + 1 < side {
+                    coo.push(i, idx2(x + 1, y), -1.0);
+                }
+                if y > 0 {
+                    coo.push(i, idx2(x, y - 1), -1.0);
+                }
+                if y + 1 < side {
+                    coo.push(i, idx2(x, y + 1), -1.0);
+                }
+            }
+        }
+    } else {
+        for x in 0..side {
+            for y in 0..side {
+                for z in 0..side {
+                    let i = idx3(x, y, z);
+                    coo.push(i, i, 6.0);
+                    if x > 0 {
+                        coo.push(i, idx3(x - 1, y, z), -1.0);
+                    }
+                    if x + 1 < side {
+                        coo.push(i, idx3(x + 1, y, z), -1.0);
+                    }
+                    if y > 0 {
+                        coo.push(i, idx3(x, y - 1, z), -1.0);
+                    }
+                    if y + 1 < side {
+                        coo.push(i, idx3(x, y + 1, z), -1.0);
+                    }
+                    if z > 0 {
+                        coo.push(i, idx3(x, y, z - 1), -1.0);
+                    }
+                    if z + 1 < side {
+                        coo.push(i, idx3(x, y, z + 1), -1.0);
+                    }
+                }
+            }
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_point_stencil_interior_row() {
+        let coo = generate(100, 2); // side 10
+        let d = coo.to_dense();
+        // interior node (5,5) -> index 55: diagonal 4, four -1 neighbours
+        assert_eq!(d[(55, 55)], 4.0);
+        assert_eq!(d[(55, 45)], -1.0);
+        assert_eq!(d[(55, 65)], -1.0);
+        assert_eq!(d[(55, 54)], -1.0);
+        assert_eq!(d[(55, 56)], -1.0);
+    }
+
+    #[test]
+    fn seven_point_row_counts() {
+        let coo = generate(512, 3); // side 8
+        let counts = coo.row_counts();
+        assert!(counts.iter().all(|&c| (4..=7).contains(&c)));
+        // interior nodes have exactly 7
+        assert!(counts.iter().any(|&c| c == 7));
+    }
+
+    #[test]
+    fn symmetric_structure() {
+        let coo = generate(225, 2);
+        let d = coo.to_dense();
+        for i in 0..coo.rows {
+            for j in 0..coo.cols {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn size_close_to_target() {
+        let coo = generate(10_000, 2);
+        assert!((coo.rows as f64 - 10_000.0).abs() / 10_000.0 < 0.05);
+    }
+}

@@ -1,0 +1,47 @@
+//! Uniformly scattered sparse matrices — no clustering at all, the
+//! worst case for brick compaction (synergy floor: α -> 1/16).
+
+use crate::formats::Coo;
+use crate::util::rng::Rng;
+
+/// `n x n` matrix with `avg_degree` uniformly-placed nonzeros per row.
+pub fn generate(n: usize, avg_degree: usize, rng: &mut Rng) -> Coo {
+    assert!(n > 0 && avg_degree >= 1);
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        for _ in 0..avg_degree {
+            coo.push(r, rng.below(n), rng.nz_value());
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_close_to_target() {
+        let mut rng = Rng::new(1);
+        let coo = generate(5000, 8, &mut rng);
+        let mean = coo.nnz() as f64 / 5000.0;
+        assert!((mean - 8.0).abs() < 0.5, "mean degree {mean}");
+    }
+
+    #[test]
+    fn columns_spread_out() {
+        let mut rng = Rng::new(2);
+        let coo = generate(4000, 6, &mut rng);
+        // count column-index mass in each quarter of the index space
+        let mut quarters = [0usize; 4];
+        for &c in &coo.col_idx {
+            quarters[(c as usize * 4 / coo.cols).min(3)] += 1;
+        }
+        let total = coo.nnz() as f64;
+        for q in quarters {
+            let frac = q as f64 / total;
+            assert!((frac - 0.25).abs() < 0.05, "uniformity violated: {frac}");
+        }
+    }
+}

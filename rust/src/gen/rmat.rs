@@ -1,0 +1,88 @@
+//! RMAT (recursive matrix) power-law graphs — the NotreDame_www regime:
+//! nonzeros scattered across the index space with hub concentration, the
+//! low-synergy end of the corpus.
+
+use crate::formats::Coo;
+use crate::util::rng::Rng;
+
+/// RMAT graph over `n` (rounded up to a power of two) nodes with
+/// `edge_factor` edges per node. `skew` is the probability of the top-left
+/// quadrant (`a`); the remaining mass splits as b = c = (1-a)/3 and
+/// d = (1-a)/3, the common social-graph parameterization.
+pub fn generate(n: usize, edge_factor: usize, skew: f64, rng: &mut Rng) -> Coo {
+    assert!(n >= 2 && edge_factor >= 1);
+    assert!((0.25..1.0).contains(&skew), "skew must be in [0.25, 1)");
+    let levels = (n as f64).log2().ceil() as u32;
+    let size = 1usize << levels;
+    let a = skew;
+    let rest = (1.0 - a) / 3.0;
+    let (b, c) = (rest, rest);
+    let edges = n * edge_factor;
+    let mut coo = Coo::new(size, size);
+    for _ in 0..edges {
+        let (mut r, mut c_) = (0usize, 0usize);
+        for l in (0..levels).rev() {
+            let half = 1usize << l;
+            let u = rng.f64();
+            if u < a {
+                // top-left
+            } else if u < a + b {
+                c_ += half;
+            } else if u < a + b + c {
+                r += half;
+            } else {
+                r += half;
+                c_ += half;
+            }
+        }
+        coo.push(r, c_, rng.nz_value());
+    }
+    coo.normalize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_is_power_of_two_at_least_n() {
+        let mut rng = Rng::new(1);
+        let coo = generate(1000, 4, 0.57, &mut rng);
+        assert_eq!(coo.rows, 1024);
+    }
+
+    #[test]
+    fn edge_count_near_target() {
+        let mut rng = Rng::new(2);
+        let coo = generate(4096, 8, 0.57, &mut rng);
+        let target = 4096 * 8;
+        // duplicates collapse, so nnz <= target but should retain most edges
+        assert!(coo.nnz() <= target);
+        assert!(coo.nnz() > target / 2, "nnz {} vs target {target}", coo.nnz());
+    }
+
+    #[test]
+    fn skew_concentrates_in_low_indices() {
+        let mut rng = Rng::new(3);
+        let coo = generate(4096, 8, 0.7, &mut rng);
+        let low = (0..coo.nnz())
+            .filter(|&i| (coo.row_idx[i] as usize) < coo.rows / 2)
+            .count();
+        assert!(
+            low as f64 > coo.nnz() as f64 * 0.6,
+            "top half should dominate with skew 0.7: {low}/{}",
+            coo.nnz()
+        );
+    }
+
+    #[test]
+    fn degree_distribution_is_heavy_tailed() {
+        let mut rng = Rng::new(4);
+        let coo = generate(8192, 8, 0.6, &mut rng);
+        let counts = coo.row_counts();
+        let max_deg = *counts.iter().max().unwrap() as f64;
+        let mean_deg = coo.nnz() as f64 / coo.rows as f64;
+        assert!(max_deg > mean_deg * 8.0, "expected hubs: max {max_deg}, mean {mean_deg}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Machine descriptions for the paper's two testbeds and the occupancy /
+//! wave calculators the §5 scheme depends on.
+//!
+//! All peak numbers are the ones the paper itself quotes (§1: A100 FP32
+//! 19.2 TF, TF32 TCU 156 TF; RTX 4090 82.6 TF for both) plus public
+//! datasheet memory figures. The *model* never fits to measured data — who
+//! wins and by what factor must fall out of the structure (DESIGN.md §2).
+
+/// A GPU machine description.
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    pub num_sms: usize,
+    /// Boost clock the throughput numbers are quoted at (GHz).
+    pub clock_ghz: f64,
+    /// Peak scalar FP32 throughput (TFLOP/s).
+    pub fp32_tflops: f64,
+    /// Peak tensor-core TF32 throughput (TFLOP/s).
+    pub tcu_tf32_tflops: f64,
+    /// DRAM bandwidth (GB/s).
+    pub dram_gbps: f64,
+    /// Shared-memory capacity per SM (bytes) usable by one kernel.
+    pub shmem_per_sm: usize,
+    /// Shared-memory bytes per clock per SM (128 = 32 banks × 4 B).
+    pub shmem_bytes_per_clk_sm: f64,
+    /// Hardware cap on resident thread blocks per SM.
+    pub max_blocks_per_sm: usize,
+    /// L2 capacity (bytes) — drives the B-matrix reuse model of the scalar
+    /// engines.
+    pub l2_bytes: usize,
+    /// Fixed kernel-launch + tail latency charged once per kernel (µs);
+    /// dominates the small GNN matrices of Tables 3/4.
+    pub launch_overhead_us: f64,
+}
+
+impl Machine {
+    /// Nvidia Ampere A100-80GB (§6.1: 108 SMs, the paper's main testbed).
+    pub fn a100() -> Machine {
+        Machine {
+            name: "A100",
+            num_sms: 108,
+            clock_ghz: 1.41,
+            fp32_tflops: 19.2,
+            tcu_tf32_tflops: 156.0,
+            dram_gbps: 1935.0,
+            shmem_per_sm: 164 * 1024,
+            shmem_bytes_per_clk_sm: 128.0,
+            max_blocks_per_sm: 32,
+            l2_bytes: 40 * 1024 * 1024,
+            launch_overhead_us: 4.0,
+        }
+    }
+
+    /// Nvidia Ada RTX 4090 (§6.1: 128 SMs, 2.2 GHz base).
+    pub fn rtx4090() -> Machine {
+        Machine {
+            name: "RTX-4090",
+            num_sms: 128,
+            clock_ghz: 2.2,
+            fp32_tflops: 82.6,
+            tcu_tf32_tflops: 82.6,
+            dram_gbps: 1008.0,
+            shmem_per_sm: 100 * 1024,
+            shmem_bytes_per_clk_sm: 128.0,
+            max_blocks_per_sm: 24,
+            l2_bytes: 72 * 1024 * 1024,
+            launch_overhead_us: 3.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Machine> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(Machine::a100()),
+            "4090" | "rtx4090" | "rtx-4090" => Some(Machine::rtx4090()),
+            _ => None,
+        }
+    }
+
+    /// Aggregate shared-memory bandwidth (bytes/s).
+    pub fn shmem_bw(&self) -> f64 {
+        self.shmem_bytes_per_clk_sm * self.clock_ghz * 1e9 * self.num_sms as f64
+    }
+
+    /// Resident thread blocks per SM given a kernel's shared-memory usage
+    /// (register pressure folded into `max_blocks_per_sm`).
+    pub fn blocks_per_sm(&self, shmem_per_block: usize) -> usize {
+        if shmem_per_block == 0 {
+            return self.max_blocks_per_sm;
+        }
+        (self.shmem_per_sm / shmem_per_block).clamp(1, self.max_blocks_per_sm)
+    }
+
+    /// §5 wave count for a grid of `total_blocks` with the given per-block
+    /// shared-memory footprint.
+    pub fn num_waves(&self, total_blocks: usize, shmem_per_block: usize) -> usize {
+        let concurrent = self.num_sms * self.blocks_per_sm(shmem_per_block);
+        total_blocks.div_ceil(concurrent.max(1)).max(1)
+    }
+
+    /// Fraction of SMs actually busy in the last (partial) wave — the
+    /// tail-utilization factor of small grids.
+    pub fn grid_utilization(&self, total_blocks: usize, shmem_per_block: usize) -> f64 {
+        if total_blocks == 0 {
+            return 0.0;
+        }
+        let concurrent = (self.num_sms * self.blocks_per_sm(shmem_per_block)).max(1);
+        let waves = total_blocks.div_ceil(concurrent);
+        total_blocks as f64 / (waves * concurrent) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_numbers() {
+        let a = Machine::a100();
+        assert_eq!(a.fp32_tflops, 19.2);
+        assert_eq!(a.tcu_tf32_tflops, 156.0);
+        assert!((a.tcu_tf32_tflops / a.fp32_tflops - 8.125).abs() < 0.01, "the 8x of §1");
+        let r = Machine::rtx4090();
+        assert_eq!(r.fp32_tflops, r.tcu_tf32_tflops, "4090: TCU peak == SC peak (§1)");
+    }
+
+    #[test]
+    fn occupancy_clamps() {
+        let a = Machine::a100();
+        assert_eq!(a.blocks_per_sm(0), a.max_blocks_per_sm);
+        assert_eq!(a.blocks_per_sm(200 * 1024), 1); // oversubscribed
+        assert_eq!(a.blocks_per_sm(10 * 1024), 16);
+    }
+
+    #[test]
+    fn wave_math_matches_section5_example() {
+        // §5's worked example: 991 blocks, 100 SMs x 1 block -> 10 waves
+        let m = Machine {
+            name: "toy",
+            num_sms: 100,
+            clock_ghz: 1.0,
+            fp32_tflops: 1.0,
+            tcu_tf32_tflops: 1.0,
+            dram_gbps: 1.0,
+            shmem_per_sm: 1024,
+            shmem_bytes_per_clk_sm: 128.0,
+            max_blocks_per_sm: 1,
+            l2_bytes: 1,
+            launch_overhead_us: 0.0,
+        };
+        assert_eq!(m.num_waves(991, 1024), 10);
+    }
+
+    #[test]
+    fn tail_utilization() {
+        let a = Machine::a100();
+        // one block on the whole machine: terrible utilization
+        assert!(a.grid_utilization(1, 0) < 0.001);
+        // exactly one full wave: perfect
+        let full = a.num_sms * a.max_blocks_per_sm;
+        assert_eq!(a.grid_utilization(full, 0), 1.0);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(Machine::by_name("a100").unwrap().name, "A100");
+        assert_eq!(Machine::by_name("RTX4090").unwrap().name, "RTX-4090");
+        assert!(Machine::by_name("h100").is_none());
+    }
+}

@@ -1,0 +1,42 @@
+//! Analytical GPU cost models — the testbed substitution for the paper's
+//! A100 / RTX-4090 measurements (DESIGN.md §2).
+//!
+//! The paper's own §4 analysis is a transaction-count model; this module
+//! implements that model (Eqs 1-5) plus roofline limits (TCU/scalar compute,
+//! shared-memory bandwidth, DRAM with an L2 estimate), wave-quantized grid
+//! utilization and the §5 imbalance treatment, for all six algorithms of the
+//! evaluation. The figures/tables benches drive these models over the
+//! synthetic corpus.
+
+pub mod algos;
+pub mod machine;
+pub mod profile;
+
+pub use algos::{predict, predict_best_sc, Bound, Prediction};
+pub use machine::Machine;
+pub use profile::MatrixProfile;
+
+use crate::formats::Coo;
+use crate::spmm::Algo;
+
+/// Convenience: profile + predict over a set of algorithms in one pass.
+pub fn predict_all(coo: &Coo, n: usize, m: &Machine, algos: &[Algo]) -> Vec<(Algo, Prediction)> {
+    let p = MatrixProfile::compute(coo);
+    algos.iter().map(|&a| (a, predict(a, &p, n, m))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn predict_all_covers_requested_algos() {
+        let coo = Coo::random(512, 512, 0.02, &mut Rng::new(1));
+        let out = predict_all(&coo, 128, &Machine::a100(), &Algo::all());
+        assert_eq!(out.len(), 7);
+        for (a, pr) in out {
+            assert!(pr.gflops > 0.0, "{}", a.name());
+        }
+    }
+}

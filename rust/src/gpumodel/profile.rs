@@ -1,0 +1,157 @@
+//! Matrix profile — every structural quantity the cost models consume,
+//! computed once per matrix (mirrors the preprocessing the real kernels do).
+
+use crate::formats::Coo;
+use crate::hrpb::{self, HrpbStats};
+use crate::loadbalance;
+use crate::params::{TK, TM};
+use crate::spmm::tcgnn::TcGnnEngine;
+use crate::synergy::Synergy;
+
+/// Structural profile of one sparse matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixProfile {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// HRPB stats at the paper's TM=16, TK=16.
+    pub hrpb: HrpbStats,
+    /// TC-GNN SGT 16×8 block count (its zero-fill denominator).
+    pub tcgnn_blocks: usize,
+    /// Row-length distribution: mean, coefficient of variation, max.
+    pub row_mean: f64,
+    pub row_cv: f64,
+    pub row_max: usize,
+    /// Per-panel block-count imbalance: max panel load over mean (drives the
+    /// §5 load-balance factor).
+    pub panel_imbalance: f64,
+    /// Number of HRPB row panels with at least one block.
+    pub active_panels: usize,
+}
+
+impl MatrixProfile {
+    pub fn compute(coo: &Coo) -> MatrixProfile {
+        let hrpb_mat = hrpb::build_from_coo(coo);
+        let stats = hrpb::stats::compute(&hrpb_mat);
+        let loads = loadbalance::panel_loads(&hrpb_mat);
+        let active: Vec<usize> = loads.iter().copied().filter(|&l| l > 0).collect();
+        let mean_load = if active.is_empty() {
+            0.0
+        } else {
+            active.iter().sum::<usize>() as f64 / active.len() as f64
+        };
+        let max_load = active.iter().copied().max().unwrap_or(0);
+        let panel_imbalance = if mean_load > 0.0 { max_load as f64 / mean_load } else { 1.0 };
+
+        let counts = coo.row_counts();
+        let nz_rows: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        let (row_mean, row_std) = crate::util::stats::mean_std(&nz_rows);
+        let row_cv = if row_mean > 0.0 { row_std / row_mean } else { 0.0 };
+        let row_max = counts.iter().copied().max().unwrap_or(0) as usize;
+
+        let tcgnn_blocks = TcGnnEngine::prepare(coo).num_tc_blocks();
+
+        MatrixProfile {
+            rows: coo.rows,
+            cols: coo.cols,
+            nnz: coo.nnz(),
+            hrpb: stats,
+            tcgnn_blocks,
+            row_mean,
+            row_cv,
+            row_max,
+            panel_imbalance,
+            active_panels: stats.active_panels,
+        }
+    }
+
+    /// Synergy class (Table 1) of the HRPB α.
+    pub fn synergy(&self) -> Synergy {
+        Synergy::from_alpha(self.hrpb.alpha)
+    }
+
+    /// Useful FLOPs at width `n`.
+    pub fn flops(&self, n: usize) -> f64 {
+        2.0 * self.nnz as f64 * n as f64
+    }
+
+    /// HRPB grid size at width `n` (kernel §3.3: (M/TM) × (N/128) blocks).
+    pub fn hrpb_grid(&self, n: usize) -> usize {
+        self.active_panels.max(1) * n.div_ceil(128).max(1)
+    }
+
+    /// TC-GNN grid size: one thread block per row window.
+    pub fn tcgnn_grid(&self) -> usize {
+        self.rows.div_ceil(TM).max(1)
+    }
+
+    /// Bytes of the packed HRPB stream (A-traffic from DRAM).
+    pub fn hrpb_a_bytes(&self) -> f64 {
+        (self.hrpb.packed_bytes + self.hrpb.meta_bytes) as f64
+    }
+
+    /// CSR byte footprint (scalar engines' A-traffic).
+    pub fn csr_bytes(&self) -> f64 {
+        (self.nnz * 8 + (self.rows + 1) * 4) as f64
+    }
+
+    /// Shared memory per HRPB thread block at width `n` (Algorithm 1 line 3:
+    /// `TM*TK` A values + metadata + `TK × min(n,128)` B panel, f32).
+    pub fn hrpb_shmem_per_block(&self, n: usize) -> usize {
+        let a = TM * TK * 4 + 512; // values + metadata upper bound
+        let b = TK * n.min(128) * 4;
+        a + b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn profile_of_random_matrix() {
+        let mut rng = Rng::new(100);
+        let coo = Coo::random(256, 512, 0.02, &mut rng);
+        let p = MatrixProfile::compute(&coo);
+        assert_eq!(p.nnz, coo.nnz());
+        assert!(p.hrpb.alpha > 0.0 && p.hrpb.alpha <= 1.0);
+        assert!(p.tcgnn_blocks > 0);
+        assert!(p.row_mean > 0.0);
+        assert!(p.panel_imbalance >= 1.0);
+    }
+
+    #[test]
+    fn banded_profile_has_higher_alpha_than_random() {
+        // clustered nonzeros (Emilia-like) vs scattered (NotreDame-like)
+        let mut rng = Rng::new(101);
+        let mut t = Vec::new();
+        for r in 0..512usize {
+            for d in 0..8usize {
+                let c = (r + d).min(511);
+                t.push((r, c, 1.0f32));
+            }
+        }
+        let banded = Coo::from_triplets(512, 512, &t);
+        let random = Coo::random(512, 512, banded.nnz() as f64 / (512.0 * 512.0), &mut rng);
+        let pb = MatrixProfile::compute(&banded);
+        let pr = MatrixProfile::compute(&random);
+        assert!(pb.hrpb.alpha > pr.hrpb.alpha);
+    }
+
+    #[test]
+    fn grid_scales_with_n() {
+        let coo = Coo::random(512, 512, 0.01, &mut Rng::new(102));
+        let p = MatrixProfile::compute(&coo);
+        assert!(p.hrpb_grid(512) >= p.hrpb_grid(128));
+        assert_eq!(p.hrpb_grid(128), p.hrpb_grid(32)); // both one N-slab
+    }
+
+    #[test]
+    fn shmem_grows_with_n_until_128() {
+        let coo = Coo::random(64, 64, 0.1, &mut Rng::new(103));
+        let p = MatrixProfile::compute(&coo);
+        assert!(p.hrpb_shmem_per_block(128) > p.hrpb_shmem_per_block(32));
+        assert_eq!(p.hrpb_shmem_per_block(128), p.hrpb_shmem_per_block(512));
+    }
+}

@@ -1,0 +1,292 @@
+//! HRPB construction — the paper's Fig. 3 pipeline: row-panel split, active
+//! column compaction ("collect all active columns and place them together
+//! towards the left"), block formation, brick pattern encoding, BlkCSC value
+//! packing.
+//!
+//! This is the preprocessing whose overhead §6.3 measures; it runs once per
+//! matrix on the host and is amortized over hundreds-to-thousands of SpMM
+//! invocations (GNN epochs, LOBPCG iterations).
+
+use crate::formats::{Coo, Csr};
+use crate::hrpb::{pack, Block, Hrpb};
+use crate::params::{BRICK_K, BRICK_M, TK, TM};
+use crate::util::bits::{ceil_div, pattern_set};
+
+/// Build with the paper's default tile sizes (TM=16, TK=16).
+pub fn build(csr: &Csr) -> Hrpb {
+    build_with(csr, TM, TK)
+}
+
+/// Build from COO (convenience).
+pub fn build_from_coo(coo: &Coo) -> Hrpb {
+    build(&Csr::from_coo(coo))
+}
+
+/// Build with explicit tile sizes (`tm`, `tk` must be brick multiples).
+/// Used by the §4 TM/TK ablation.
+pub fn build_with(csr: &Csr, tm: usize, tk: usize) -> Hrpb {
+    assert!(tm % BRICK_M == 0 && tm > 0, "TM must be a positive multiple of {BRICK_M}");
+    assert!(tk % BRICK_K == 0 && tk > 0, "TK must be a positive multiple of {BRICK_K}");
+    let num_panels = ceil_div(csr.rows.max(1), tm);
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut blocked_row_ptr: Vec<u32> = Vec::with_capacity(num_panels + 1);
+    blocked_row_ptr.push(0);
+
+    // scratch reused across panels to avoid per-panel allocation
+    let mut entries: Vec<(u32, u8, f32)> = Vec::new(); // (col, row-in-panel, val)
+
+    for p in 0..num_panels {
+        let r0 = p * tm;
+        let r1 = ((p + 1) * tm).min(csr.rows);
+
+        // gather the panel's entries sorted by (col, row): per-row CSR slices
+        // are already col-sorted, so a single sort by col with stable row
+        // order suffices.
+        entries.clear();
+        for r in r0..r1 {
+            for (c, v) in csr.row_entries(r) {
+                entries.push((c, (r - r0) as u8, v));
+            }
+        }
+        entries.sort_unstable_by_key(|&(c, r, _)| (c, r));
+
+        // walk active columns in compacted order, emitting a block every
+        // `tk` distinct columns
+        let mut i = 0usize;
+        while i < entries.len() {
+            // collect the next <= tk active columns into one block
+            let mut active_cols: Vec<u32> = Vec::with_capacity(tk);
+            let block_start = i;
+            let mut j = i;
+            while j < entries.len() {
+                let col = entries[j].0;
+                if active_cols.last() != Some(&col) {
+                    if active_cols.len() == tk {
+                        break;
+                    }
+                    active_cols.push(col);
+                }
+                j += 1;
+            }
+            let block_entries = &entries[block_start..j];
+            i = j;
+
+            blocks.push(build_block(block_entries, &active_cols, tm, tk));
+        }
+        blocked_row_ptr.push(blocks.len() as u32);
+    }
+
+    let nnz = csr.nnz();
+    let mut hrpb = Hrpb {
+        rows: csr.rows,
+        cols: csr.cols,
+        tm,
+        tk,
+        nnz,
+        blocks,
+        blocked_row_ptr,
+        packed: Vec::new(),
+        size_ptr: Vec::new(),
+        active_cols: Vec::new(),
+    };
+    pack::pack(&mut hrpb);
+    hrpb
+}
+
+/// Build one structured block from its (col, row, val) entries (col-major
+/// sorted) and the compacted active-column list.
+fn build_block(entries: &[(u32, u8, f32)], active_cols: &[u32], tm: usize, tk: usize) -> Block {
+    let brick_cols = tk / BRICK_K;
+    let bricks_per_col = tm / BRICK_M;
+
+    // dense per-block brick grid of patterns; small (brick_cols x
+    // bricks_per_col <= 8x2 for the evaluated sizes)
+    let mut patterns = vec![0u64; brick_cols * bricks_per_col];
+    // compacted column index of each original column
+    // (active_cols is sorted, binary search)
+    let col_slot = |c: u32| active_cols.binary_search(&c).expect("column must be active") as usize;
+
+    for &(c, r, _) in entries {
+        let slot = col_slot(c);
+        let bc = slot / BRICK_K;
+        let br = r as usize / BRICK_M;
+        patterns[bc * bricks_per_col + br] = pattern_set(
+            patterns[bc * bricks_per_col + br],
+            r as usize % BRICK_M,
+            slot % BRICK_K,
+        );
+    }
+
+    // emit active bricks in CSC order and fill values row-major per brick
+    let mut col_ptr: Vec<u16> = Vec::with_capacity(brick_cols + 1);
+    col_ptr.push(0);
+    let mut rows: Vec<u8> = Vec::new();
+    let mut out_patterns: Vec<u64> = Vec::new();
+    let mut brick_value_base: Vec<usize> = Vec::new(); // parallel to out_patterns
+    let mut total_nnz = 0usize;
+    for bc in 0..brick_cols {
+        for br in 0..bricks_per_col {
+            let p = patterns[bc * bricks_per_col + br];
+            if p != 0 {
+                rows.push(br as u8);
+                out_patterns.push(p);
+                brick_value_base.push(total_nnz);
+                total_nnz += p.count_ones() as usize;
+            }
+        }
+        col_ptr.push(rows.len() as u16);
+    }
+
+    // place values: for entry at (row r, slot) inside brick (br, bc), its
+    // value index is base(brick) + prefix_count(pattern, bit)
+    let mut values = vec![0f32; total_nnz];
+    // map (bc, br) -> active-brick index for value placement
+    let mut brick_index = vec![usize::MAX; brick_cols * bricks_per_col];
+    {
+        let mut k = 0usize;
+        for bc in 0..brick_cols {
+            let (s, e) = (col_ptr[bc] as usize, col_ptr[bc + 1] as usize);
+            for j in s..e {
+                brick_index[bc * bricks_per_col + rows[j] as usize] = k;
+                k += 1;
+            }
+        }
+    }
+    for &(c, r, v) in entries {
+        let slot = col_slot(c);
+        let bc = slot / BRICK_K;
+        let br = r as usize / BRICK_M;
+        let bi = brick_index[bc * bricks_per_col + br];
+        let bit = crate::util::bits::brick_bit(r as usize % BRICK_M, slot % BRICK_K);
+        let idx = brick_value_base[bi] + crate::util::bits::prefix_count(out_patterns[bi], bit);
+        values[idx] = v;
+    }
+
+    Block { active_cols: active_cols.to_vec(), col_ptr, rows, patterns: out_patterns, values }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Dense;
+    use crate::hrpb::decode;
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    fn roundtrip(coo: &Coo) -> bool {
+        let hrpb = build_from_coo(coo);
+        hrpb.validate().unwrap();
+        decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()) == 0.0
+    }
+
+    #[test]
+    fn tiny_known_matrix() {
+        // one panel, columns {3, 40} active -> compacted into one block
+        let coo = Coo::from_triplets(16, 64, &[(0, 3, 1.0), (5, 40, 2.0), (15, 3, 3.0)]);
+        let hrpb = build_from_coo(&coo);
+        assert_eq!(hrpb.num_panels(), 1);
+        assert_eq!(hrpb.num_blocks(), 1);
+        let blk = &hrpb.blocks[0];
+        assert_eq!(blk.active_cols, vec![3, 40]);
+        // both active columns land in brick column 0 (slots 0 and 1)
+        assert_eq!(blk.num_bricks(), 1);
+        assert_eq!(blk.nnz(), 3);
+        assert!(roundtrip(&coo));
+    }
+
+    #[test]
+    fn multiple_blocks_when_many_active_cols() {
+        // 20 active columns in one panel -> 2 blocks (16 + 4)
+        let t: Vec<(usize, usize, f32)> = (0..20).map(|c| (c % 16, c * 3, 1.0 + c as f32)).collect();
+        let coo = Coo::from_triplets(16, 64, &t);
+        let hrpb = build_from_coo(&coo);
+        assert_eq!(hrpb.num_blocks(), 2);
+        assert_eq!(hrpb.blocks[0].active_cols.len(), 16);
+        assert_eq!(hrpb.blocks[1].active_cols.len(), 4);
+        assert!(roundtrip(&coo));
+    }
+
+    #[test]
+    fn empty_panels_have_no_blocks() {
+        let coo = Coo::from_triplets(64, 32, &[(0, 0, 1.0), (63, 31, 2.0)]);
+        let hrpb = build_from_coo(&coo);
+        assert_eq!(hrpb.num_panels(), 4);
+        assert_eq!(hrpb.panel_blocks(0).len(), 1);
+        assert_eq!(hrpb.panel_blocks(1).len(), 0);
+        assert_eq!(hrpb.panel_blocks(2).len(), 0);
+        assert_eq!(hrpb.panel_blocks(3).len(), 1);
+    }
+
+    #[test]
+    fn compaction_reduces_blocks_vs_no_compaction() {
+        // nonzeros in columns 0, 100, 200, ... 1500: compacted they fit one
+        // block; un-compacted tiling would need 100 blocks' worth of span
+        let t: Vec<(usize, usize, f32)> = (0..16).map(|i| (i, i * 100, 1.0)).collect();
+        let coo = Coo::from_triplets(16, 1600, &t);
+        let hrpb = build_from_coo(&coo);
+        assert_eq!(hrpb.num_blocks(), 1);
+    }
+
+    #[test]
+    fn csc_brick_order_within_block() {
+        // entries in brick columns 0 and 2 (slots 0-3 and 8-11)
+        let coo = Coo::from_triplets(
+            16,
+            32,
+            &[(0, 0, 1.0), (1, 1, 2.0), (0, 8, 3.0), (2, 9, 4.0), (3, 2, 5.0)],
+        );
+        let hrpb = build_from_coo(&coo);
+        let blk = &hrpb.blocks[0];
+        // 5 active columns -> slots {0:c0, 1:c1, 2:c2, 3:c8, 4:c9};
+        // brick col 0 holds c0,c1,c2,c8 and brick col 1 holds c9
+        assert_eq!(blk.active_cols, vec![0, 1, 2, 8, 9]);
+        assert_eq!(blk.col_ptr[0], 0);
+        assert!(blk.num_bricks() >= 1);
+        assert!(roundtrip(&coo));
+    }
+
+    #[test]
+    fn tm32_builds_and_roundtrips() {
+        let mut rng = Rng::new(20);
+        let coo = Coo::random(96, 128, 0.08, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let hrpb = build_with(&csr, 32, 16);
+        hrpb.validate().unwrap();
+        assert_eq!(hrpb.num_panels(), 3);
+        assert_eq!(decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()), 0.0);
+    }
+
+    #[test]
+    fn tk32_builds_and_roundtrips() {
+        let mut rng = Rng::new(21);
+        let coo = Coo::random(64, 200, 0.1, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let hrpb = build_with(&csr, 16, 32);
+        hrpb.validate().unwrap();
+        assert_eq!(decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()), 0.0);
+    }
+
+    #[test]
+    fn prop_build_roundtrip_random_sparse() {
+        let g = SparseGen { max_m: 70, max_k: 90, max_density: 0.25 };
+        check("hrpb build/decode roundtrip", 50, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            if coo.nnz() == 0 {
+                return true; // builder on empty matrix: no blocks
+            }
+            let hrpb = build_from_coo(&coo);
+            hrpb.validate().is_ok()
+                && decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()) == 0.0
+        });
+    }
+
+    #[test]
+    fn dense_matrix_has_alpha_one() {
+        let d = Dense::from_vec(16, 16, vec![1.0; 256]);
+        let coo = Coo::from_dense(&d);
+        let hrpb = build_from_coo(&coo);
+        let stats = crate::hrpb::stats::compute(&hrpb);
+        assert_eq!(stats.alpha, 1.0);
+        assert_eq!(hrpb.num_blocks(), 1);
+    }
+}

@@ -1,0 +1,190 @@
+//! HRPB decompression — reconstruct dense / COO forms and the zero-filled
+//! dense-brick arrays fed to the PJRT artifacts.
+//!
+//! The GPU kernel performs this decode per-brick in registers (Algorithm 1
+//! lines 30-38); here it is used for verification and to produce the
+//! TPU-adapted feed (DESIGN.md §Hardware-Adaptation: pattern decode moves to
+//! pack/feed time because the MXU has no per-lane popcount).
+
+use crate::formats::{Coo, Dense};
+use crate::hrpb::Hrpb;
+use crate::params::{BRICK_K, BRICK_M};
+use crate::util::bits::pattern_iter;
+
+/// Reconstruct the dense matrix (oracle use; asserts a sane size).
+pub fn to_dense(hrpb: &Hrpb) -> Dense {
+    let coo = to_coo(hrpb);
+    coo.to_dense()
+}
+
+/// Reconstruct COO triplets from the structured blocks.
+pub fn to_coo(hrpb: &Hrpb) -> Coo {
+    let mut coo = Coo::new(hrpb.rows, hrpb.cols);
+    for p in 0..hrpb.num_panels() {
+        let r0 = p * hrpb.tm;
+        for block in hrpb.panel_blocks(p) {
+            let brick_cols = hrpb.tk / BRICK_K;
+            let mut vi = 0usize;
+            for bc in 0..brick_cols {
+                let (s, e) = (block.col_ptr[bc] as usize, block.col_ptr[bc + 1] as usize);
+                for j in s..e {
+                    let br = block.rows[j] as usize;
+                    for (r, c, idx) in pattern_iter(block.patterns[j]) {
+                        let row = r0 + br * BRICK_M + r;
+                        let slot = bc * BRICK_K + c;
+                        let col = block.active_cols[slot] as usize;
+                        coo.push(row, col, block.values[vi + idx]);
+                    }
+                    vi += block.patterns[j].count_ones() as usize;
+                }
+            }
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+/// The zero-filled dense-brick feed for the PJRT `hrpb_spmm` artifact
+/// (contract shared with `python/compile/pack.py`):
+///
+/// * `blocks`      — f32, `num_blocks * TM * TK`, block-major
+/// * `active_cols` — i32, `num_blocks * TK` (padding repeats a real column)
+/// * `panel_ids`   — i32, `num_blocks`
+#[derive(Clone, Debug)]
+pub struct DenseBrickFeed {
+    pub num_blocks: usize,
+    pub tm: usize,
+    pub tk: usize,
+    pub blocks: Vec<f32>,
+    pub active_cols: Vec<i32>,
+    pub panel_ids: Vec<i32>,
+}
+
+/// Decode to the dense-brick feed form.
+pub fn to_feed(hrpb: &Hrpb) -> DenseBrickFeed {
+    let (tm, tk) = (hrpb.tm, hrpb.tk);
+    let nb = hrpb.num_blocks();
+    let mut blocks = vec![0f32; nb * tm * tk];
+    let mut panel_ids = vec![0i32; nb];
+    let active_cols: Vec<i32> = hrpb.active_cols.iter().map(|&c| c as i32).collect();
+
+    for p in 0..hrpb.num_panels() {
+        let (bs, be) =
+            (hrpb.blocked_row_ptr[p] as usize, hrpb.blocked_row_ptr[p + 1] as usize);
+        for b in bs..be {
+            panel_ids[b] = p as i32;
+            let block = &hrpb.blocks[b];
+            let out = &mut blocks[b * tm * tk..(b + 1) * tm * tk];
+            let brick_cols = tk / BRICK_K;
+            let mut vi = 0usize;
+            for bc in 0..brick_cols {
+                let (s, e) = (block.col_ptr[bc] as usize, block.col_ptr[bc + 1] as usize);
+                for j in s..e {
+                    let br = block.rows[j] as usize;
+                    for (r, c, idx) in pattern_iter(block.patterns[j]) {
+                        let row = br * BRICK_M + r;
+                        let slot = bc * BRICK_K + c;
+                        out[row * tk + slot] = block.values[vi + idx];
+                    }
+                    vi += block.patterns[j].count_ones() as usize;
+                }
+            }
+        }
+    }
+    DenseBrickFeed { num_blocks: nb, tm, tk, blocks, active_cols, panel_ids }
+}
+
+impl DenseBrickFeed {
+    /// Reference SpMM over the feed (mirrors the contract comment in
+    /// `python/compile/pack.py`) — used to cross-check the PJRT path.
+    pub fn spmm_ref(&self, num_panels: usize, b: &Dense) -> Dense {
+        let mut c = Dense::zeros(num_panels * self.tm, b.cols);
+        for blk in 0..self.num_blocks {
+            let p = self.panel_ids[blk] as usize;
+            let a = &self.blocks[blk * self.tm * self.tk..(blk + 1) * self.tm * self.tk];
+            let cols = &self.active_cols[blk * self.tk..(blk + 1) * self.tk];
+            for r in 0..self.tm {
+                for (s, &col) in cols.iter().enumerate() {
+                    let av = a[r * self.tk + s];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(col as usize);
+                    let crow = c.row_mut(p * self.tm + r);
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Pad out to a shape bucket's NB with inert all-zero blocks
+    /// (mirrors `pad_to_bucket` in python).
+    pub fn pad_to(&mut self, nb: usize) {
+        assert!(self.num_blocks <= nb, "feed NB {} exceeds bucket {}", self.num_blocks, nb);
+        self.blocks.resize(nb * self.tm * self.tk, 0.0);
+        self.active_cols.resize(nb * self.tk, 0);
+        self.panel_ids.resize(nb, 0);
+        self.num_blocks = nb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+    use crate::hrpb::{build, build_from_coo};
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn coo_roundtrip_preserves_everything() {
+        let mut rng = Rng::new(11);
+        let coo = Coo::random(80, 120, 0.07, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        let back = to_coo(&hrpb);
+        assert_eq!(back.to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn feed_matches_dense_spmm() {
+        let mut rng = Rng::new(12);
+        let coo = Coo::random(60, 90, 0.1, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        let feed = to_feed(&hrpb);
+        let b = Dense::random(90, 32, &mut rng);
+        let got = feed.spmm_ref(hrpb.num_panels(), &b);
+        let want = coo.to_dense().matmul(&b);
+        // got has TM-padded rows
+        for r in 0..60 {
+            for c in 0..32 {
+                assert!((got[(r, c)] - want[(r, c)]).abs() < 1e-3, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn feed_padding_is_inert() {
+        let mut rng = Rng::new(13);
+        let coo = Coo::random(32, 64, 0.1, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        let mut feed = to_feed(&hrpb);
+        let b = Dense::random(64, 16, &mut rng);
+        let before = feed.spmm_ref(hrpb.num_panels(), &b);
+        feed.pad_to(feed.num_blocks + 17);
+        let after = feed.spmm_ref(hrpb.num_panels(), &b);
+        assert_eq!(before.max_abs_diff(&after), 0.0);
+    }
+
+    #[test]
+    fn prop_decode_inverts_build() {
+        let g = SparseGen { max_m: 64, max_k: 64, max_density: 0.3 };
+        check("decode inverts build", 40, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let hrpb = build(&Csr::from_coo(&coo));
+            to_dense(&hrpb).max_abs_diff(&coo.to_dense()) == 0.0
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! HRPB — the paper's Hierarchical Row-Panel-Blocking sparse representation
+//! (§3.2, Figs 3-5).
+//!
+//! A matrix is cut into row panels of height `TM`. Inside each panel, the
+//! *active* columns (those with at least one nonzero) are compacted to the
+//! left and grouped into `(TM, TK)` blocks; each block subdivides into
+//! `(BRICK_M, BRICK_K)` bricks whose nonzero layout is a 64-bit pattern.
+//! Nonzero values are stored per block in brick-CSC order (brick columns
+//! left-to-right, bricks top-to-bottom within a column, values row-major
+//! within a brick).
+//!
+//! Two forms coexist:
+//! * [`Block`] / panel views — structured, used by the builder and tests;
+//! * the packed byte stream ([`Hrpb::packed`], mirroring the paper's
+//!   `packedBlocks` + `sizePtr` + `blockedRowPtr` + `activeCols`) — what the
+//!   native engine actually reads on the hot path, exactly as the GPU kernel
+//!   streams `packedBlocks` from DRAM through shared memory.
+
+pub mod builder;
+pub mod decode;
+pub mod pack;
+pub mod stats;
+
+pub use builder::{build, build_from_coo};
+pub use stats::HrpbStats;
+
+use crate::params::{BRICK_K, BRICK_M};
+
+/// One `(TM, TK)` block in structured form (paper Fig. 4).
+///
+/// Active bricks are kept in brick-CSC order. `col_ptr[c]..col_ptr[c+1]`
+/// indexes the active bricks of brick-column `c`; `rows[j]` is the brick-row
+/// of active brick `j`; `patterns[j]` its 64-bit nonzero mask; `values`
+/// concatenates every active brick's nonzeros (row-major within a brick).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    /// Original column ids of this block's slots (compaction map); length
+    /// `<= TK`, unpadded.
+    pub active_cols: Vec<u32>,
+    /// `TK/BRICK_K + 1` entries.
+    pub col_ptr: Vec<u16>,
+    /// Brick-row index of each active brick (`< TM/BRICK_M`).
+    pub rows: Vec<u8>,
+    /// 64-bit nonzero pattern of each active brick.
+    pub patterns: Vec<u64>,
+    /// Nonzero values in brick-CSC, row-major-within-brick order.
+    pub values: Vec<f32>,
+}
+
+impl Block {
+    /// Number of active bricks.
+    pub fn num_bricks(&self) -> usize {
+        self.patterns.len()
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Check structural invariants (property tests).
+    pub fn validate(&self, tm: usize, tk: usize) -> Result<(), String> {
+        let bricks_per_col = tm / BRICK_M;
+        let brick_cols = tk / BRICK_K;
+        if self.col_ptr.len() != brick_cols + 1 {
+            return Err("col_ptr length".into());
+        }
+        if self.col_ptr[0] != 0 || *self.col_ptr.last().unwrap() as usize != self.num_bricks() {
+            return Err("col_ptr endpoints".into());
+        }
+        if self.rows.len() != self.num_bricks() {
+            return Err("rows length".into());
+        }
+        if self.active_cols.is_empty() || self.active_cols.len() > tk {
+            return Err(format!("active_cols length {}", self.active_cols.len()));
+        }
+        let mut nnz = 0usize;
+        for c in 0..brick_cols {
+            let (s, e) = (self.col_ptr[c] as usize, self.col_ptr[c + 1] as usize);
+            if s > e {
+                return Err("col_ptr not monotone".into());
+            }
+            for j in s..e {
+                if self.rows[j] as usize >= bricks_per_col {
+                    return Err("brick row out of range".into());
+                }
+                if j > s && self.rows[j - 1] >= self.rows[j] {
+                    return Err("bricks not sorted within column".into());
+                }
+                if self.patterns[j] == 0 {
+                    return Err("active brick with empty pattern".into());
+                }
+                nnz += self.patterns[j].count_ones() as usize;
+            }
+        }
+        if nnz != self.values.len() {
+            return Err(format!("pattern nnz {nnz} != values {}", self.values.len()));
+        }
+        Ok(())
+    }
+}
+
+/// The matrix-level HRPB container (paper Fig. 5).
+#[derive(Clone, Debug)]
+pub struct Hrpb {
+    /// Original matrix shape.
+    pub rows: usize,
+    pub cols: usize,
+    /// Tile parameters this instance was built with.
+    pub tm: usize,
+    pub tk: usize,
+    /// Total stored nonzeros.
+    pub nnz: usize,
+    /// Structured blocks, panel-major (kept for verification & decoding).
+    pub blocks: Vec<Block>,
+    /// `blocks` index range of each row panel: `blocked_row_ptr[p] ..
+    /// blocked_row_ptr[p+1]` (paper's `blockedRowPtr`, length M/TM + 1).
+    pub blocked_row_ptr: Vec<u32>,
+    /// Byte stream of all packed blocks (paper's `packedBlocks`).
+    pub packed: Vec<u8>,
+    /// Byte offset of each block in `packed` (paper's `sizePtr`).
+    pub size_ptr: Vec<u64>,
+    /// Active column ids, `TK`-padded per block (paper's `activeCols`;
+    /// padding slots repeat the block's last real column — they carry no
+    /// values, so any in-range id is safe).
+    pub active_cols: Vec<u32>,
+}
+
+impl Hrpb {
+    /// Number of row panels.
+    pub fn num_panels(&self) -> usize {
+        self.blocked_row_ptr.len() - 1
+    }
+
+    /// Number of blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Blocks of row panel `p`.
+    pub fn panel_blocks(&self, p: usize) -> &[Block] {
+        let (s, e) = (self.blocked_row_ptr[p] as usize, self.blocked_row_ptr[p + 1] as usize);
+        &self.blocks[s..e]
+    }
+
+    /// `TK`-padded active-column slice of block `b`.
+    pub fn block_active_cols(&self, b: usize) -> &[u32] {
+        &self.active_cols[b * self.tk..(b + 1) * self.tk]
+    }
+
+    /// Validate the whole structure (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.blocked_row_ptr.len() != crate::util::bits::ceil_div(self.rows.max(1), self.tm) + 1 {
+            return Err("blocked_row_ptr length".into());
+        }
+        if *self.blocked_row_ptr.last().unwrap() as usize != self.blocks.len() {
+            return Err("blocked_row_ptr tail".into());
+        }
+        if self.size_ptr.len() != self.blocks.len() + 1 {
+            return Err("size_ptr length".into());
+        }
+        if self.active_cols.len() != self.blocks.len() * self.tk {
+            return Err("active_cols length".into());
+        }
+        let mut nnz = 0usize;
+        for (i, blk) in self.blocks.iter().enumerate() {
+            blk.validate(self.tm, self.tk).map_err(|e| format!("block {i}: {e}"))?;
+            for &c in &blk.active_cols {
+                if c as usize >= self.cols {
+                    return Err(format!("block {i}: column {c} out of range"));
+                }
+            }
+            nnz += blk.nnz();
+        }
+        if nnz != self.nnz {
+            return Err(format!("nnz mismatch: blocks {nnz} vs header {}", self.nnz));
+        }
+        pack::validate_packed(self)?;
+        Ok(())
+    }
+}

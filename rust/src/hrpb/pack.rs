@@ -1,0 +1,230 @@
+//! BlkCSC byte packing — the paper's `packedBlocks` memory chunk (Fig. 5).
+//!
+//! Each block is serialized into a flat byte run so the whole matrix streams
+//! through memory exactly the way the GPU kernel streams it from DRAM into
+//! shared memory (Algorithm 1 line 17: one coalesced copy per block). The
+//! layout keeps every field naturally aligned so the native engine can read
+//! it in place without copying:
+//!
+//! ```text
+//! offset 0                       col_ptr   [brick_cols + 1] u16
+//! next                           rows      [num_bricks]      u8
+//! pad to 8-byte boundary
+//! next                           patterns  [num_bricks]      u64
+//! next                           values    [nnz]             f32
+//! pad to 8-byte boundary         (so the following block stays aligned)
+//! ```
+//!
+//! `num_bricks` and `nnz` are not stored: `num_bricks = col_ptr[brick_cols]`
+//! and `nnz = Σ popcount(pattern)`, mirroring the paper's decision to keep
+//! the metadata minimal (§3.2 calls `colPtr`/`patterns`/`rows` collectively
+//! "metadata").
+
+use crate::hrpb::{Block, Hrpb};
+use crate::params::BRICK_K;
+use crate::util::bits::round_up;
+
+/// Byte size of one packed block for the given tile shape.
+pub fn packed_size(block: &Block, tk: usize) -> usize {
+    let brick_cols = tk / BRICK_K;
+    let nb = block.num_bricks();
+    let mut off = (brick_cols + 1) * 2; // col_ptr u16
+    off += nb; // rows u8
+    off = round_up(off, 8);
+    off += nb * 8; // patterns u64
+    off += block.nnz() * 4; // values f32
+    round_up(off, 8)
+}
+
+/// Serialize every structured block into `hrpb.packed` / `hrpb.size_ptr` and
+/// fill the matrix-level `active_cols` array (TK-padded per block).
+pub fn pack(hrpb: &mut Hrpb) {
+    let tk = hrpb.tk;
+    let total: usize = hrpb.blocks.iter().map(|b| packed_size(b, tk)).sum();
+    let mut packed = Vec::with_capacity(total);
+    let mut size_ptr = Vec::with_capacity(hrpb.blocks.len() + 1);
+    let mut active_cols = Vec::with_capacity(hrpb.blocks.len() * tk);
+    size_ptr.push(0u64);
+
+    for block in &hrpb.blocks {
+        let start = packed.len();
+        // col_ptr
+        for &cp in &block.col_ptr {
+            packed.extend_from_slice(&cp.to_le_bytes());
+        }
+        // rows
+        packed.extend_from_slice(&block.rows);
+        // pad to 8
+        while packed.len() % 8 != 0 {
+            packed.push(0);
+        }
+        // patterns
+        for &p in &block.patterns {
+            packed.extend_from_slice(&p.to_le_bytes());
+        }
+        // values
+        for &v in &block.values {
+            packed.extend_from_slice(&v.to_le_bytes());
+        }
+        while packed.len() % 8 != 0 {
+            packed.push(0);
+        }
+        debug_assert_eq!(packed.len() - start, packed_size(block, tk));
+        size_ptr.push(packed.len() as u64);
+
+        // TK-padded active columns; padding repeats the last real column so
+        // every slot is an in-range row id of B (it carries only zeros).
+        let last = *block.active_cols.last().expect("block has >= 1 active column");
+        active_cols.extend_from_slice(&block.active_cols);
+        active_cols.extend(std::iter::repeat(last).take(tk - block.active_cols.len()));
+    }
+
+    hrpb.packed = packed;
+    hrpb.size_ptr = size_ptr;
+    hrpb.active_cols = active_cols;
+}
+
+/// A zero-copy view of one packed block (what the native engine reads on the
+/// hot path — the in-shared-memory form of Algorithm 1 line 18's cast).
+#[derive(Debug)]
+pub struct PackedBlockView<'a> {
+    pub col_ptr: &'a [u16],
+    pub rows: &'a [u8],
+    pub patterns: &'a [u64],
+    pub values: &'a [f32],
+}
+
+/// Decode the packed bytes of block `b` without copying.
+///
+/// Safety of the in-place casts rests on the alignment guarantees of
+/// [`pack`]: `packed` is a fresh `Vec<u8>` (8-aligned allocations for the
+/// sizes involved are not guaranteed by Vec<u8>!), so we verify pointer
+/// alignment at runtime and fall back to a copy if violated — in practice
+/// the global allocator returns >= 8-aligned chunks for these sizes.
+pub fn view(hrpb: &Hrpb, b: usize) -> PackedBlockView<'_> {
+    let tk = hrpb.tk;
+    let brick_cols = tk / BRICK_K;
+    let bytes = &hrpb.packed[hrpb.size_ptr[b] as usize..hrpb.size_ptr[b + 1] as usize];
+
+    let cp_len = brick_cols + 1;
+    let (cp_bytes, rest) = bytes.split_at(cp_len * 2);
+    let col_ptr = cast_slice::<u16>(cp_bytes, cp_len);
+    let num_bricks = col_ptr[brick_cols] as usize;
+
+    let rows = &rest[..num_bricks];
+    let mut off = cp_len * 2 + num_bricks;
+    off = round_up(off, 8);
+    let patterns = cast_slice::<u64>(&bytes[off..off + num_bricks * 8], num_bricks);
+    off += num_bricks * 8;
+    let nnz: usize = patterns.iter().map(|p| p.count_ones() as usize).sum();
+    let values = cast_slice::<f32>(&bytes[off..off + nnz * 4], nnz);
+
+    PackedBlockView { col_ptr, rows, patterns, values }
+}
+
+/// Reinterpret a little-endian byte slice as `&[T]`. Panics if misaligned —
+/// `pack` keeps every field naturally aligned relative to the Vec base, and
+/// Vec<u8>'s allocation is at least 8-aligned on this platform (checked in
+/// tests).
+fn cast_slice<T: Copy>(bytes: &[u8], len: usize) -> &[T] {
+    assert_eq!(bytes.len(), len * std::mem::size_of::<T>());
+    let ptr = bytes.as_ptr();
+    assert_eq!(ptr as usize % std::mem::align_of::<T>(), 0, "packed field misaligned");
+    unsafe { std::slice::from_raw_parts(ptr as *const T, len) }
+}
+
+/// Verify the byte stream decodes back to the structured blocks (used by
+/// `Hrpb::validate` and the property tests).
+pub fn validate_packed(hrpb: &Hrpb) -> Result<(), String> {
+    if hrpb.size_ptr.len() != hrpb.blocks.len() + 1 {
+        return Err("size_ptr length".into());
+    }
+    if *hrpb.size_ptr.last().unwrap_or(&0) as usize != hrpb.packed.len() {
+        return Err("size_ptr tail != packed length".into());
+    }
+    for (b, block) in hrpb.blocks.iter().enumerate() {
+        let v = view(hrpb, b);
+        if v.col_ptr != block.col_ptr.as_slice() {
+            return Err(format!("block {b}: packed col_ptr mismatch"));
+        }
+        if v.rows != block.rows.as_slice() {
+            return Err(format!("block {b}: packed rows mismatch"));
+        }
+        if v.patterns != block.patterns.as_slice() {
+            return Err(format!("block {b}: packed patterns mismatch"));
+        }
+        if v.values != block.values.as_slice() {
+            return Err(format!("block {b}: packed values mismatch"));
+        }
+        let padded = hrpb.block_active_cols(b);
+        if &padded[..block.active_cols.len()] != block.active_cols.as_slice() {
+            return Err(format!("block {b}: active_cols prefix mismatch"));
+        }
+        let last = *block.active_cols.last().unwrap();
+        if padded[block.active_cols.len()..].iter().any(|&c| c != last) {
+            return Err(format!("block {b}: active_cols padding not last-repeat"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::build_from_coo;
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn packed_roundtrip_random() {
+        let mut rng = Rng::new(7);
+        let coo = Coo::random(128, 256, 0.05, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        validate_packed(&hrpb).unwrap();
+    }
+
+    #[test]
+    fn packed_size_matches_stream() {
+        let mut rng = Rng::new(8);
+        let coo = Coo::random(64, 64, 0.2, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        for (b, block) in hrpb.blocks.iter().enumerate() {
+            let span = (hrpb.size_ptr[b + 1] - hrpb.size_ptr[b]) as usize;
+            assert_eq!(span, packed_size(block, hrpb.tk));
+        }
+    }
+
+    #[test]
+    fn blocks_are_eight_aligned() {
+        let mut rng = Rng::new(9);
+        let coo = Coo::random(96, 96, 0.1, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        assert_eq!(hrpb.packed.as_ptr() as usize % 8, 0, "Vec base alignment");
+        for &off in &hrpb.size_ptr {
+            assert_eq!(off % 8, 0);
+        }
+    }
+
+    #[test]
+    fn prop_pack_view_roundtrip() {
+        let g = SparseGen { max_m: 50, max_k: 80, max_density: 0.3 };
+        check("pack/view roundtrip", 40, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            if coo.nnz() == 0 {
+                return true;
+            }
+            let hrpb = build_from_coo(&coo);
+            validate_packed(&hrpb).is_ok()
+        });
+    }
+
+    #[test]
+    fn empty_matrix_packs_to_nothing() {
+        let coo = Coo::new(32, 32);
+        let hrpb = build_from_coo(&coo);
+        assert!(hrpb.packed.is_empty());
+        assert_eq!(hrpb.size_ptr, vec![0]);
+        validate_packed(&hrpb).unwrap();
+    }
+}

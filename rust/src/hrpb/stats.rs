@@ -1,0 +1,160 @@
+//! HRPB structural statistics — everything the paper's §4 analysis and §6.4
+//! synergy classification read off the representation: brick density `α`,
+//! brick-column reuse `β`, active brick/block counts, storage footprint.
+
+use crate::hrpb::Hrpb;
+use crate::params::{BRICK_K, BRICK_M};
+
+/// Structural statistics of a built HRPB instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HrpbStats {
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Row panels (M / TM).
+    pub num_panels: usize,
+    /// Non-empty row panels.
+    pub active_panels: usize,
+    /// `(TM, TK)` blocks.
+    pub num_blocks: usize,
+    /// Active `(BRICK_M, BRICK_K)` bricks.
+    pub num_bricks: usize,
+    /// Occupied brick columns summed over blocks (a brick column is one of
+    /// the `TK/BRICK_K` column groups of a block; occupied if it holds at
+    /// least one active brick).
+    pub num_brick_cols: usize,
+    /// The paper's α: average nonzero density of *active* bricks,
+    /// `nnz / (num_bricks * BRICK_M * BRICK_K)` ∈ [1/(BRICK_M·BRICK_K), 1].
+    pub alpha: f64,
+    /// The paper's β (Eq. 5): average active bricks per occupied brick
+    /// column, `num_bricks / num_brick_cols` ∈ [1, TM/BRICK_M].
+    pub beta: f64,
+    /// Bytes of the packed stream (values + metadata, the DRAM traffic for A).
+    pub packed_bytes: usize,
+    /// Bytes of matrix-level metadata (blockedRowPtr + sizePtr + activeCols).
+    pub meta_bytes: usize,
+    /// Zero-fill ratio: MMA-fed element slots over stored nonzeros
+    /// (`1/α`) — how much dense work the TCU does per real nonzero.
+    pub fill_ratio: f64,
+}
+
+impl HrpbStats {
+    /// CSR storage of the same matrix (4-byte values + 4-byte col ids +
+    /// row ptr) for compression-ratio comparisons.
+    pub fn csr_bytes(&self, rows: usize) -> usize {
+        self.nnz * 8 + (rows + 1) * 4
+    }
+}
+
+/// Compute statistics from a built instance.
+pub fn compute(hrpb: &Hrpb) -> HrpbStats {
+    let brick_cols_per_block = hrpb.tk / BRICK_K;
+    let mut num_bricks = 0usize;
+    let mut num_brick_cols = 0usize;
+    for block in &hrpb.blocks {
+        num_bricks += block.num_bricks();
+        for c in 0..brick_cols_per_block {
+            if block.col_ptr[c + 1] > block.col_ptr[c] {
+                num_brick_cols += 1;
+            }
+        }
+    }
+    let active_panels = (0..hrpb.num_panels())
+        .filter(|&p| hrpb.blocked_row_ptr[p + 1] > hrpb.blocked_row_ptr[p])
+        .count();
+    let brick_slots = (num_bricks * BRICK_M * BRICK_K) as f64;
+    let alpha = if num_bricks == 0 { 0.0 } else { hrpb.nnz as f64 / brick_slots };
+    let beta = if num_brick_cols == 0 { 0.0 } else { num_bricks as f64 / num_brick_cols as f64 };
+    HrpbStats {
+        nnz: hrpb.nnz,
+        num_panels: hrpb.num_panels(),
+        active_panels,
+        num_blocks: hrpb.num_blocks(),
+        num_bricks,
+        num_brick_cols,
+        alpha,
+        beta,
+        packed_bytes: hrpb.packed.len(),
+        meta_bytes: hrpb.blocked_row_ptr.len() * 4
+            + hrpb.size_ptr.len() * 8
+            + hrpb.active_cols.len() * 4,
+        fill_ratio: if alpha == 0.0 { 0.0 } else { 1.0 / alpha },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::build_from_coo;
+    use crate::params::{BRICK_K, BRICK_M};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_nonzero_brick_alpha() {
+        let coo = Coo::from_triplets(16, 16, &[(3, 2, 1.0)]);
+        let s = compute(&build_from_coo(&coo));
+        assert_eq!(s.num_bricks, 1);
+        assert!((s.alpha - 1.0 / (BRICK_M * BRICK_K) as f64).abs() < 1e-12);
+        assert_eq!(s.beta, 1.0);
+    }
+
+    #[test]
+    fn full_brick_alpha_one() {
+        let mut t = Vec::new();
+        for r in 0..16 {
+            for c in 0..4 {
+                t.push((r, c, 1.0f32));
+            }
+        }
+        let coo = Coo::from_triplets(16, 16, &t);
+        let s = compute(&build_from_coo(&coo));
+        assert_eq!(s.num_bricks, 1);
+        assert_eq!(s.alpha, 1.0);
+        assert_eq!(s.fill_ratio, 1.0);
+    }
+
+    #[test]
+    fn alpha_bounds_hold_randomly() {
+        let mut rng = Rng::new(14);
+        for seed in 0..10 {
+            let coo = Coo::random(64, 128, 0.01 + 0.02 * seed as f64, &mut rng);
+            if coo.nnz() == 0 {
+                continue;
+            }
+            let s = compute(&build_from_coo(&coo));
+            let lo = 1.0 / (BRICK_M * BRICK_K) as f64;
+            assert!(s.alpha >= lo - 1e-12 && s.alpha <= 1.0, "alpha {}", s.alpha);
+            assert!(s.beta >= 1.0 - 1e-12, "beta {}", s.beta);
+        }
+    }
+
+    #[test]
+    fn beta_counts_column_sharing() {
+        // two bricks stacked in the same brick column of a TM=32 panel
+        let coo = Coo::from_triplets(32, 8, &[(0, 0, 1.0), (20, 0, 2.0)]);
+        let csr = crate::formats::Csr::from_coo(&coo);
+        let hrpb = crate::hrpb::builder::build_with(&csr, 32, 16);
+        let s = compute(&hrpb);
+        assert_eq!(s.num_bricks, 2);
+        assert_eq!(s.num_brick_cols, 1);
+        assert_eq!(s.beta, 2.0);
+    }
+
+    #[test]
+    fn empty_matrix_stats() {
+        let coo = Coo::new(16, 16);
+        let s = compute(&build_from_coo(&coo));
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.num_bricks, 0);
+        assert_eq!(s.alpha, 0.0);
+    }
+
+    #[test]
+    fn meta_bytes_positive_and_packed_covers_values() {
+        let mut rng = Rng::new(15);
+        let coo = Coo::random(48, 48, 0.15, &mut rng);
+        let s = compute(&build_from_coo(&coo));
+        assert!(s.packed_bytes >= s.nnz * 4);
+        assert!(s.meta_bytes > 0);
+    }
+}

@@ -1,0 +1,58 @@
+//! # cutespmm — a reproduction of *cuTeSpMM: Accelerating Sparse-Dense Matrix
+//! Multiplication using GPU Tensor Cores* as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The crate is organised bottom-up (see `DESIGN.md` for the full inventory
+//! and the paper-experiment index):
+//!
+//! * [`util`] — RNG, bit ops, statistics, a minimal JSON writer and an
+//!   in-repo property-testing harness (the offline image has no proptest).
+//! * [`formats`] — COO/CSR/CSC sparse formats, dense matrices, MatrixMarket IO.
+//! * [`gen`] — synthetic SuiteSparse-like corpus + named GNN matrix recipes
+//!   (the testbed substitution documented in DESIGN.md §2).
+//! * [`hrpb`] — the paper's Hierarchical Row-Panel-Blocking structure:
+//!   row-panel compaction, 64-bit brick patterns, BlkCSC packing (Figs 3-5).
+//! * [`synergy`] — brick density α, `OI_shmem = 512·α` (Eq. 4) and the
+//!   Low/Medium/High TCU-Synergy classes (Table 1).
+//! * [`loadbalance`] — wave-aware virtual row-panel partitioning (§5).
+//! * [`spmm`] — executable engines: the native HRPB hot path (Algorithm 1 on
+//!   CPU) plus the scalar-core and TC-GNN-style baselines.
+//! * [`gpumodel`] — analytical A100 / RTX-4090 cost models for all six
+//!   algorithms (regenerates the paper's figures and tables).
+//! * [`runtime`] — PJRT artifact registry + executor (the AOT path).
+//! * [`coordinator`] — the L3 serving layer: matrix registry, router,
+//!   dynamic batcher, worker pool, metrics.
+//! * [`bench`] — the experiment harness behind `benches/` and the CLI.
+
+pub mod bench;
+pub mod coordinator;
+pub mod formats;
+pub mod gen;
+pub mod gpumodel;
+pub mod hrpb;
+pub mod loadbalance;
+pub mod runtime;
+pub mod spmm;
+pub mod synergy;
+pub mod util;
+
+/// Paper-fixed tile constants (§3.1, §4): row-panel height `TM`, block width
+/// `TK`, WMMA brick shape `(BRICK_M, BRICK_K, BRICK_N)` and warp-coarsened
+/// output width `TN`.
+pub mod params {
+    /// Row-panel height (paper evaluates TM = 16 = brick_m).
+    pub const TM: usize = 16;
+    /// Block width along K (paper: empirically 16).
+    pub const TK: usize = 16;
+    /// WMMA A-fragment rows (Ampere TF32 m16n8k4).
+    pub const BRICK_M: usize = 16;
+    /// WMMA A-fragment cols / B-fragment rows.
+    pub const BRICK_K: usize = 4;
+    /// WMMA B-fragment cols.
+    pub const BRICK_N: usize = 8;
+    /// Warp-coarsened output width (paper §4 chooses 32 to balance A/B
+    /// shared-memory traffic).
+    pub const TN: usize = 32;
+    /// Bits in a brick nonzero pattern (BRICK_M * BRICK_K).
+    pub const BRICK_BITS: usize = BRICK_M * BRICK_K;
+}

@@ -1,0 +1,295 @@
+//! Wave-aware load balancing — the paper's §5 scheme plus the two strawmen
+//! it argues against (used by the ablation bench).
+//!
+//! Row panels have wildly different numbers of blocks. §5's insight: if the
+//! grid runs in `num_waves` waves over the SMs, a panel only needs splitting
+//! when its work exceeds *a whole device-wave's worth* of average panels —
+//! splitting any finer just buys atomic-consolidation cost without reducing
+//! the critical path. Hence `partition_ratio = num_loads / num_waves`
+//! (Eq. 7) instead of the naive `num_loads` (Eq. 6) alone.
+
+use crate::hrpb::Hrpb;
+
+/// How thread blocks map onto panels — the output of a balancing policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// One entry per *virtual* panel: the source row panel and the block
+    /// subrange `[start, end)` it covers (within that panel's blocks).
+    pub units: Vec<WorkUnit>,
+    /// Virtual panels per source panel > 1 require atomic consolidation of
+    /// partial C tiles; this counts those extra atomically-merged units.
+    pub atomic_units: usize,
+}
+
+/// One thread-block's worth of work: a contiguous run of blocks in a panel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkUnit {
+    pub panel: u32,
+    /// Block range within the panel (indices into the panel's block list).
+    pub start: u32,
+    pub end: u32,
+    /// True when this unit is one of several covering its panel (its writes
+    /// must be atomic / merged).
+    pub atomic: bool,
+}
+
+impl Schedule {
+    /// Max blocks any single unit processes — the critical path length in
+    /// block units (what balancing minimizes).
+    pub fn critical_path(&self) -> usize {
+        self.units.iter().map(|u| (u.end - u.start) as usize).max().unwrap_or(0)
+    }
+
+    /// Validate that units exactly tile every panel's blocks.
+    pub fn validate(&self, hrpb: &Hrpb) -> Result<(), String> {
+        let mut covered: Vec<Vec<(u32, u32)>> = vec![Vec::new(); hrpb.num_panels()];
+        for u in &self.units {
+            if u.start > u.end {
+                return Err("unit range inverted".into());
+            }
+            covered[u.panel as usize].push((u.start, u.end));
+        }
+        for p in 0..hrpb.num_panels() {
+            let blocks =
+                (hrpb.blocked_row_ptr[p + 1] - hrpb.blocked_row_ptr[p]) as u32;
+            let mut runs = covered[p].clone();
+            runs.sort_unstable();
+            let mut pos = 0u32;
+            for (s, e) in runs {
+                if s != pos {
+                    return Err(format!("panel {p}: gap/overlap at block {pos}"));
+                }
+                pos = e;
+            }
+            if pos != blocks {
+                return Err(format!("panel {p}: covered {pos} of {blocks} blocks"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Device geometry needed by the wave computation (§5). For the analytical
+/// GPU models this comes from `gpumodel::Machine`; for the native CPU engine
+/// it is threads × 1.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub num_sms: usize,
+    pub blocks_per_sm: usize,
+}
+
+impl Device {
+    pub fn concurrent_blocks(&self) -> usize {
+        (self.num_sms * self.blocks_per_sm).max(1)
+    }
+
+    /// §5: `num_waves = ceil(total_thread_blocks / (SMs × blocks/SM))`.
+    pub fn num_waves(&self, total_blocks: usize) -> usize {
+        total_blocks.div_ceil(self.concurrent_blocks()).max(1)
+    }
+}
+
+/// Blocks per panel (the §5 workload measure).
+pub fn panel_loads(hrpb: &Hrpb) -> Vec<usize> {
+    (0..hrpb.num_panels())
+        .map(|p| (hrpb.blocked_row_ptr[p + 1] - hrpb.blocked_row_ptr[p]) as usize)
+        .collect()
+}
+
+/// Average blocks over *non-empty* panels (`AVG_BLK_ROW_PANEL` in Eq. 6).
+pub fn avg_blocks_per_panel(loads: &[usize]) -> f64 {
+    let active: Vec<usize> = loads.iter().copied().filter(|&l| l > 0).collect();
+    if active.is_empty() {
+        return 0.0;
+    }
+    active.iter().sum::<usize>() as f64 / active.len() as f64
+}
+
+/// No balancing: one unit per non-empty panel (the §3 base kernel).
+pub fn schedule_none(hrpb: &Hrpb) -> Schedule {
+    let units = panel_loads(hrpb)
+        .iter()
+        .enumerate()
+        .filter(|&(_, &l)| l > 0)
+        .map(|(p, &l)| WorkUnit { panel: p as u32, start: 0, end: l as u32, atomic: false })
+        .collect();
+    Schedule { units, atomic_units: 0 }
+}
+
+/// Strawman 1 (§5): keep one unit per panel but order heaviest-first.
+/// Improves tail scheduling but disrupts consecutive-panel B reuse; it never
+/// splits, so the critical path is unchanged.
+pub fn schedule_sorted(hrpb: &Hrpb) -> Schedule {
+    let mut s = schedule_none(hrpb);
+    s.units.sort_by_key(|u| std::cmp::Reverse(u.end - u.start));
+    s
+}
+
+/// Strawman 2 (§5): split every panel whose load exceeds the average down to
+/// average-sized virtual panels, ignoring waves — maximal atomics.
+pub fn schedule_avg_split(hrpb: &Hrpb) -> Schedule {
+    let loads = panel_loads(hrpb);
+    let avg = avg_blocks_per_panel(&loads).max(1.0);
+    split_by_ratio(&loads, |load| load as f64 / avg)
+}
+
+/// The paper's scheme (Eqs 6-7): split only by `num_loads / num_waves`.
+pub fn schedule_wave_aware(hrpb: &Hrpb, dev: Device) -> Schedule {
+    let loads = panel_loads(hrpb);
+    let avg = avg_blocks_per_panel(&loads).max(1.0);
+    let total_blocks: usize = loads.iter().filter(|&&l| l > 0).map(|_| 1).sum();
+    let waves = dev.num_waves(total_blocks) as f64;
+    split_by_ratio(&loads, |load| (load as f64 / avg) / waves)
+}
+
+/// Shared splitter: `ratio(load)` gives the desired number of virtual panels
+/// (≤ 1 means no split); block ranges are dealt out as evenly as possible.
+fn split_by_ratio(loads: &[usize], ratio: impl Fn(usize) -> f64) -> Schedule {
+    let mut units = Vec::new();
+    let mut atomic_units = 0usize;
+    for (p, &load) in loads.iter().enumerate() {
+        if load == 0 {
+            continue;
+        }
+        let parts = ratio(load).floor().max(1.0) as usize;
+        let parts = parts.min(load); // at least one block per unit
+        if parts <= 1 {
+            units.push(WorkUnit { panel: p as u32, start: 0, end: load as u32, atomic: false });
+            continue;
+        }
+        let base = load / parts;
+        let extra = load % parts;
+        let mut pos = 0u32;
+        for i in 0..parts {
+            let len = base + usize::from(i < extra);
+            units.push(WorkUnit {
+                panel: p as u32,
+                start: pos,
+                end: pos + len as u32,
+                atomic: true,
+            });
+            pos += len as u32;
+        }
+        atomic_units += parts - 1; // first writer needs no merge
+    }
+    Schedule { units, atomic_units }
+}
+
+/// Simulated makespan of a schedule on `workers` equal workers using LPT-ish
+/// greedy dispatch (largest remaining unit to the least-loaded worker) —
+/// a proxy for the wave argument in §5's 991-panel example, used by tests
+/// and the ablation bench.
+pub fn simulate_makespan(schedule: &Schedule, workers: usize) -> usize {
+    let mut lens: Vec<usize> =
+        schedule.units.iter().map(|u| (u.end - u.start) as usize).collect();
+    lens.sort_unstable_by_key(|&l| std::cmp::Reverse(l));
+    let mut heap: Vec<usize> = vec![0; workers.max(1)];
+    for l in lens {
+        let i = (0..heap.len()).min_by_key(|&i| heap[i]).unwrap();
+        heap[i] += l;
+    }
+    heap.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::build_from_coo;
+    use crate::util::rng::Rng;
+
+    /// A matrix with one heavy panel (many active cols) and many light ones.
+    fn skewed(rows: usize) -> Coo {
+        let mut t = Vec::new();
+        // panel 0: 160 active columns -> 10 blocks
+        for c in 0..160 {
+            t.push((c % 16, c * 2, 1.0f32));
+        }
+        // other panels: one block each
+        for r in (16..rows).step_by(16) {
+            t.push((r, 0, 1.0f32));
+        }
+        Coo::from_triplets(rows, 512, &t)
+    }
+
+    #[test]
+    fn none_schedule_tiles_panels() {
+        let hrpb = build_from_coo(&skewed(160));
+        let s = schedule_none(&hrpb);
+        s.validate(&hrpb).unwrap();
+        assert_eq!(s.atomic_units, 0);
+        assert_eq!(s.critical_path(), 10);
+    }
+
+    #[test]
+    fn sorted_puts_heaviest_first_without_splitting() {
+        let hrpb = build_from_coo(&skewed(160));
+        let s = schedule_sorted(&hrpb);
+        s.validate(&hrpb).unwrap();
+        assert_eq!(s.units[0].end - s.units[0].start, 10);
+        assert_eq!(s.critical_path(), 10);
+    }
+
+    #[test]
+    fn avg_split_reduces_critical_path_with_atomics() {
+        let hrpb = build_from_coo(&skewed(160));
+        let s = schedule_avg_split(&hrpb);
+        s.validate(&hrpb).unwrap();
+        assert!(s.critical_path() < 10);
+        assert!(s.atomic_units > 0);
+    }
+
+    #[test]
+    fn wave_aware_skips_split_when_waves_absorb_imbalance() {
+        // §5's worked example: 10 panels with loads [10,1,...,1] on 1
+        // concurrent block -> many waves, no split needed.
+        let hrpb = build_from_coo(&skewed(160));
+        let dev = Device { num_sms: 1, blocks_per_sm: 1 };
+        let s = schedule_wave_aware(&hrpb, dev);
+        s.validate(&hrpb).unwrap();
+        assert_eq!(s.atomic_units, 0, "waves absorb the heavy panel");
+    }
+
+    #[test]
+    fn wave_aware_splits_when_single_wave() {
+        // plenty of SMs -> 1 wave -> the heavy panel must split
+        let hrpb = build_from_coo(&skewed(160));
+        let dev = Device { num_sms: 100, blocks_per_sm: 2 };
+        let s = schedule_wave_aware(&hrpb, dev);
+        s.validate(&hrpb).unwrap();
+        assert!(s.atomic_units > 0);
+        assert!(s.critical_path() < 10);
+    }
+
+    #[test]
+    fn wave_aware_never_more_atomics_than_avg_split() {
+        let mut rng = Rng::new(40);
+        for trial in 0..5 {
+            let coo = Coo::random(320, 640, 0.01 + 0.01 * trial as f64, &mut rng);
+            let hrpb = build_from_coo(&coo);
+            let dev = Device { num_sms: 4, blocks_per_sm: 2 };
+            let wave = schedule_wave_aware(&hrpb, dev);
+            let avg = schedule_avg_split(&hrpb);
+            wave.validate(&hrpb).unwrap();
+            avg.validate(&hrpb).unwrap();
+            assert!(wave.atomic_units <= avg.atomic_units);
+        }
+    }
+
+    #[test]
+    fn makespan_improves_with_wave_split_on_one_wave() {
+        let hrpb = build_from_coo(&skewed(160));
+        let dev = Device { num_sms: 20, blocks_per_sm: 1 };
+        let none = simulate_makespan(&schedule_none(&hrpb), 20);
+        let wave = simulate_makespan(&schedule_wave_aware(&hrpb, dev), 20);
+        assert!(wave <= none);
+    }
+
+    #[test]
+    fn empty_matrix_empty_schedule() {
+        let hrpb = build_from_coo(&Coo::new(64, 64));
+        let s = schedule_wave_aware(&hrpb, Device { num_sms: 4, blocks_per_sm: 4 });
+        assert!(s.units.is_empty());
+        s.validate(&hrpb).unwrap();
+    }
+}

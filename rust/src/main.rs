@@ -1,0 +1,350 @@
+//! cutespmm CLI — leader entrypoint.
+//!
+//! ```text
+//! cutespmm gen --name <recipe|family spec> --out m.mtx
+//! cutespmm preprocess --mtx m.mtx            # HRPB stats + synergy
+//! cutespmm spmm --mtx m.mtx --n 128 [--algo cutespmm] [--pjrt]
+//! cutespmm synergy --mtx m.mtx [--n 128]
+//! cutespmm serve --matrix cora --requests 200 --n 32 [--pjrt]
+//! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
+//!                      preproc|ablation-tiles|ablation-balance|all> [--quick]
+//! cutespmm selfcheck                          # engines vs oracle + PJRT
+//! ```
+//!
+//! Arguments are parsed by hand: the offline image has no clap (DESIGN.md §9).
+
+use cutespmm::bench::experiments;
+use cutespmm::coordinator::{BatchPolicy, Config, Coordinator, EnginePolicy};
+use cutespmm::formats::{mtx, Coo, Dense};
+use cutespmm::gen::named;
+use cutespmm::gpumodel::{algos as gpu_algos, Machine, MatrixProfile};
+use cutespmm::runtime;
+use cutespmm::spmm::Algo;
+use cutespmm::util::rng::Rng;
+use cutespmm::util::timer::{measure, time_once};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+/// Minimal flag parser: `--key value` pairs plus bare flags.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((key.to_string(), value));
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn load_matrix(args: &Args) -> Result<(String, Coo), String> {
+    if let Some(path) = args.get("mtx") {
+        let coo = mtx::read_mtx(&PathBuf::from(path)).map_err(|e| e.to_string())?;
+        return Ok((path.to_string(), coo));
+    }
+    if let Some(name) = args.get("matrix") {
+        let scale = args.usize_or("scale", 1);
+        let spec = named::scaled(name, scale)
+            .ok_or_else(|| format!("unknown named matrix '{name}' (see gen --list)"))?;
+        return Ok((spec.name.clone(), spec.generate()));
+    }
+    Err("need --mtx <file> or --matrix <name>".into())
+}
+
+fn cmd_gen(args: &Args) -> Result<(), String> {
+    if args.has("list") {
+        println!("named recipes (Tables 3/4):");
+        for m in named::all() {
+            println!("  {:<16} nodes={:<9} edges={}", m.name, m.nodes, m.edges);
+        }
+        return Ok(());
+    }
+    let (name, coo) = load_matrix(args)?;
+    let out = args.get("out").ok_or("need --out <file.mtx>")?;
+    mtx::write_mtx(&PathBuf::from(out), &coo, Some(&format!("cutespmm gen {name}")))
+        .map_err(|e| e.to_string())?;
+    println!("wrote {}: {}x{} nnz={}", out, coo.rows, coo.cols, coo.nnz());
+    Ok(())
+}
+
+fn cmd_preprocess(args: &Args) -> Result<(), String> {
+    let (name, coo) = load_matrix(args)?;
+    let (hrpb, t) = time_once(|| cutespmm::hrpb::build_from_coo(&coo));
+    let stats = cutespmm::hrpb::stats::compute(&hrpb);
+    println!("matrix {name}: {}x{} nnz={}", coo.rows, coo.cols, coo.nnz());
+    println!(
+        "HRPB: panels={} blocks={} bricks={} alpha={:.4} beta={:.2} packed={}B meta={}B ({:.2}x CSR)",
+        stats.num_panels,
+        stats.num_blocks,
+        stats.num_bricks,
+        stats.alpha,
+        stats.beta,
+        stats.packed_bytes,
+        stats.meta_bytes,
+        (stats.packed_bytes + stats.meta_bytes) as f64 / stats.csr_bytes(coo.rows) as f64,
+    );
+    println!("preprocessing: {:.3} ms", t * 1e3);
+    Ok(())
+}
+
+fn cmd_synergy(args: &Args) -> Result<(), String> {
+    let (name, coo) = load_matrix(args)?;
+    let n = args.usize_or("n", 128);
+    let p = MatrixProfile::compute(&coo);
+    let oi = cutespmm::synergy::model(&p.hrpb, n);
+    println!("matrix {name}: alpha={:.4} synergy={}", p.hrpb.alpha, p.synergy().name());
+    println!(
+        "OI_shmem={:.1} (closed form 512a={:.1}), beta={:.2}, fill={:.1}x",
+        oi.oi_shmem,
+        cutespmm::synergy::oi_shmem_closed_form(p.hrpb.alpha),
+        p.hrpb.beta,
+        p.hrpb.fill_ratio
+    );
+    for m in [Machine::a100(), Machine::rtx4090()] {
+        let cute = gpu_algos::predict(Algo::Hrpb, &p, n, &m);
+        let (ba, best) = gpu_algos::predict_best_sc(&p, n, &m);
+        let tc = gpu_algos::predict(Algo::TcGnn, &p, n, &m);
+        println!(
+            "[{}] modeled GFLOPs @N={n}: cuTeSpMM={:.0} ({}), best-SC={:.0} ({}), tcgnn={:.0} -> speedup {:.2}x",
+            m.name,
+            cute.gflops,
+            cute.bound.name(),
+            best.gflops,
+            ba.name(),
+            tc.gflops,
+            cute.gflops / best.gflops
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spmm(args: &Args) -> Result<(), String> {
+    let (name, coo) = load_matrix(args)?;
+    let n = args.usize_or("n", 128);
+    let algo = args
+        .get("algo")
+        .map(|a| Algo::parse(a).ok_or_else(|| format!("unknown algo '{a}'")))
+        .transpose()?
+        .unwrap_or(Algo::Hrpb);
+    let mut rng = Rng::new(args.usize_or("seed", 1) as u64);
+    let b = Dense::random(coo.cols, n, &mut rng);
+
+    if args.has("pjrt") {
+        let svc = runtime::PjrtService::start(runtime::default_artifacts_dir())?;
+        let hrpb = std::sync::Arc::new(cutespmm::hrpb::build_from_coo(&coo));
+        let handle = svc.handle();
+        let (c, t) = time_once(|| handle.spmm(hrpb.clone(), b.clone()));
+        let c = c?;
+        let gf = 2.0 * coo.nnz() as f64 * n as f64 / t / 1e9;
+        println!("{name} via PJRT ({}): {:.3} ms, {:.2} GFLOP/s, C={}x{}",
+                 handle.platform()?, t * 1e3, gf, c.rows, c.cols);
+        return Ok(());
+    }
+
+    let (engine, t_prep) = time_once(|| algo.prepare(&coo));
+    let meas = measure(1, args.usize_or("samples", 5), || {
+        let _ = engine.spmm(&b);
+    });
+    println!(
+        "{name} via {}: prep {:.3} ms, spmm {:.3} ms (median of {}), {:.2} GFLOP/s useful",
+        engine.name(),
+        t_prep * 1e3,
+        meas.median_s * 1e3,
+        meas.samples,
+        engine.flops(n) / meas.median_s / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let (name, coo) = load_matrix(args)?;
+    let n = args.usize_or("n", 32);
+    let requests = args.usize_or("requests", 200);
+    let workers = args.usize_or("workers", 4);
+
+    let pjrt_svc = if args.has("pjrt") {
+        Some(runtime::PjrtService::start(runtime::default_artifacts_dir())?)
+    } else {
+        None
+    };
+    let engine = if pjrt_svc.is_some() { EnginePolicy::PreferPjrt } else { EnginePolicy::Native };
+    let coord = Coordinator::start(
+        Config { workers, engine, batch: BatchPolicy::default(), ..Default::default() },
+        pjrt_svc.as_ref().map(|s| s.handle()),
+    );
+    let id = coord.register(&name, &coo);
+    let entry = coord.registry().get(id).unwrap();
+    println!(
+        "registered {name}: {}x{} nnz={} synergy={} (preprocess {:.1} ms)",
+        entry.rows,
+        entry.cols,
+        entry.nnz,
+        entry.synergy.name(),
+        entry.preprocess_time.as_secs_f64() * 1e3
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let b = Dense::random(coo.cols, n, &mut rng);
+        rxs.push(coord.submit(id, b));
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map_err(|e| e.to_string())?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {ok}/{requests} requests in {:.3} s ({:.1} req/s)", wall, ok as f64 / wall);
+    println!("{}", coord.metrics().report());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<(), String> {
+    let mut rng = Rng::new(99);
+    let coo = Coo::random(200, 300, 0.03, &mut rng);
+    let b = Dense::random(300, 32, &mut rng);
+    let want = coo.to_dense().matmul(&b);
+    let mut failures = 0;
+    for algo in Algo::all() {
+        let engine = algo.prepare(&coo);
+        let err = engine.spmm(&b).rel_fro_error(&want);
+        let ok = err < 1e-4;
+        println!("  engine {:<10} rel_err={err:.2e} {}", algo.name(), if ok { "OK" } else { "FAIL" });
+        failures += usize::from(!ok);
+    }
+    if args.has("pjrt") || runtime::artifacts_available() {
+        match runtime::PjrtService::start(runtime::default_artifacts_dir()) {
+            Ok(svc) => {
+                let hrpb = std::sync::Arc::new(cutespmm::hrpb::build_from_coo(&coo));
+                let err = svc
+                    .handle()
+                    .spmm(hrpb, b.clone())?
+                    .rel_fro_error(&want);
+                let ok = err < 1e-3;
+                println!("  engine {:<10} rel_err={err:.2e} {}", "pjrt", if ok { "OK" } else { "FAIL" });
+                failures += usize::from(!ok);
+            }
+            Err(e) => println!("  engine pjrt skipped: {e}"),
+        }
+    } else {
+        println!("  engine pjrt skipped: artifacts not built (run `make artifacts`)");
+    }
+    if failures > 0 {
+        return Err(format!("{failures} engine(s) failed selfcheck"));
+    }
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.has("quick");
+    let needs_corpus = matches!(which, "fig2" | "fig7" | "fig9" | "fig10" | "table2" | "all");
+    let records = if needs_corpus {
+        eprintln!(
+            "generating + profiling the {} corpus ...",
+            if quick { "quick (1/10)" } else { "full ~1100-matrix" }
+        );
+        experiments::corpus_records(quick)
+    } else {
+        Vec::new()
+    };
+    let mut ran = false;
+    let mut run = |name: &str, report: String| {
+        println!("{report}");
+        eprintln!("[{name}] csv -> {}", experiments::results_dir().display());
+        ran = true;
+    };
+    match which {
+        "fig2" => run("fig2", experiments::fig2(&records)),
+        "fig7" => run("fig7", experiments::fig7(&records)),
+        "fig9" => run("fig9", experiments::fig9(&records)),
+        "fig10" => run("fig10", experiments::fig10(&records)),
+        "table1" => run("table1", experiments::table1()),
+        "table2" => run("table2", experiments::table2(&records)),
+        "table3" => run("table3", experiments::table34(3)),
+        "table4" => run("table4", experiments::table34(4)),
+        "preproc" => run("preproc", experiments::preprocessing()),
+        "ablation-tiles" => run("ablation-tiles", experiments::ablation_tiles()),
+        "ablation-balance" => run("ablation-balance", experiments::ablation_loadbalance()),
+        "all" => {
+            run("table1", experiments::table1());
+            run("table2", experiments::table2(&records));
+            run("fig2", experiments::fig2(&records));
+            run("fig7", experiments::fig7(&records));
+            run("fig9", experiments::fig9(&records));
+            run("fig10", experiments::fig10(&records));
+            run("table3", experiments::table34(3));
+            run("table4", experiments::table34(4));
+            run("preproc", experiments::preprocessing());
+            run("ablation-tiles", experiments::ablation_tiles());
+            run("ablation-balance", experiments::ablation_loadbalance());
+        }
+        other => return Err(format!("unknown experiment '{other}'")),
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "usage: cutespmm <gen|preprocess|spmm|synergy|serve|experiment|selfcheck> [flags]\n\
+     see the module docs at the top of rust/src/main.rs for flag details"
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "gen" => cmd_gen(&args),
+        "preprocess" => cmd_preprocess(&args),
+        "spmm" => cmd_spmm(&args),
+        "synergy" => cmd_synergy(&args),
+        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "" | "help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Shape buckets — MUST agree with `python/compile/aot.py`.
+//!
+//! PJRT executables are compiled for fixed shapes; a matrix/feed is padded up
+//! to the smallest bucket that fits (inert padding blocks, zero B rows,
+//! output rows sliced back). `N` must match exactly: padding the feature
+//! dimension would change the artifact's output width contract.
+
+/// One `hrpb_spmm` artifact bucket: (num_blocks, num_panels, K, N).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpmmBucket {
+    pub nb: usize,
+    pub mp: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Mirror of `aot.py::SPMM_BUCKETS`.
+pub const SPMM_BUCKETS: [SpmmBucket; 6] = [
+    SpmmBucket { nb: 256, mp: 32, k: 512, n: 32 },
+    SpmmBucket { nb: 256, mp: 32, k: 512, n: 128 },
+    SpmmBucket { nb: 1024, mp: 128, k: 2048, n: 32 },
+    SpmmBucket { nb: 1024, mp: 128, k: 2048, n: 128 },
+    SpmmBucket { nb: 4096, mp: 192, k: 4096, n: 32 },
+    SpmmBucket { nb: 4096, mp: 192, k: 4096, n: 128 },
+];
+
+impl SpmmBucket {
+    pub fn artifact_name(&self) -> String {
+        format!("hrpb_spmm__nb{}_mp{}_k{}_n{}", self.nb, self.mp, self.k, self.n)
+    }
+
+    /// Does a workload with these requirements fit this bucket?
+    pub fn fits(&self, nb: usize, mp: usize, k: usize, n: usize) -> bool {
+        nb <= self.nb && mp <= self.mp && k <= self.k && n == self.n
+    }
+
+    /// Padded-problem cost proxy (used to pick the cheapest fitting bucket).
+    pub fn cost(&self) -> usize {
+        self.nb * self.k * self.n
+    }
+}
+
+/// Smallest bucket fitting `(nb, mp, k, n)`, or `None` (fall back to the
+/// native engine).
+pub fn pick_spmm_bucket(nb: usize, mp: usize, k: usize, n: usize) -> Option<SpmmBucket> {
+    SPMM_BUCKETS
+        .iter()
+        .filter(|b| b.fits(nb, mp, k, n))
+        .min_by_key(|b| b.cost())
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_smallest_fitting() {
+        let b = pick_spmm_bucket(100, 20, 400, 32).unwrap();
+        assert_eq!(b, SPMM_BUCKETS[0]);
+        let b = pick_spmm_bucket(100, 20, 400, 128).unwrap();
+        assert_eq!(b, SPMM_BUCKETS[1]);
+        let b = pick_spmm_bucket(2000, 150, 3000, 128).unwrap();
+        assert_eq!(b.nb, 4096);
+    }
+
+    #[test]
+    fn n_must_match_exactly() {
+        assert!(pick_spmm_bucket(10, 10, 100, 64).is_none());
+        assert!(pick_spmm_bucket(10, 10, 100, 32).is_some());
+    }
+
+    #[test]
+    fn oversize_returns_none() {
+        assert!(pick_spmm_bucket(10_000, 10, 100, 128).is_none());
+        assert!(pick_spmm_bucket(10, 10, 100_000, 128).is_none());
+    }
+
+    #[test]
+    fn names_match_python_convention() {
+        assert_eq!(
+            SPMM_BUCKETS[0].artifact_name(),
+            "hrpb_spmm__nb256_mp32_k512_n32"
+        );
+    }
+}

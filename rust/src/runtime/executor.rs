@@ -1,0 +1,228 @@
+//! PJRT executor — loads `artifacts/*.hlo.txt`, compiles once per artifact
+//! (warm cache), and runs the AOT-compiled SpMM from the Rust hot path.
+//!
+//! Interchange is HLO *text* (see `aot.py` header: jax ≥ 0.5 emits protos
+//! with 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). Lowering used `return_tuple=True`, so outputs unwrap with
+//! `to_tuple1`.
+
+use crate::formats::Dense;
+use crate::hrpb::decode::DenseBrickFeed;
+use crate::hrpb::Hrpb;
+use crate::runtime::bucket::{pick_spmm_bucket, SpmmBucket};
+use crate::runtime::manifest::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled-executable cache over one PJRT CPU client.
+///
+/// NOT `Send`: PJRT handles hold raw pointers. Use [`super::service`] to
+/// drive it from multi-threaded code.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtRuntime, String> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch) the executable for a named artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, String> {
+        if !self.cache.contains_key(name) {
+            let art = self.manifest.find(name).ok_or_else(|| format!("no artifact '{name}'"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                art.file.to_str().ok_or("non-utf8 path")?,
+            )
+            .map_err(|e| format!("parse {}: {e}", art.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Is an artifact available (and will `spmm` succeed bucket-wise)?
+    pub fn can_spmm(&self, hrpb: &Hrpb, k: usize, n: usize) -> bool {
+        let mp = hrpb.num_panels();
+        pick_spmm_bucket(hrpb.num_blocks().max(1), mp, k, n)
+            .map(|b| self.manifest.find(&b.artifact_name()).is_some())
+            .unwrap_or(false)
+    }
+
+    /// Run the AOT `hrpb_spmm` artifact: pad the feed to the bucket, execute,
+    /// slice the padded output back to `rows × n`.
+    pub fn spmm(&mut self, hrpb: &Hrpb, b: &Dense) -> Result<Dense, String> {
+        assert_eq!(b.rows, hrpb.cols, "B rows must equal A cols");
+        let mut feed = crate::hrpb::decode::to_feed(hrpb);
+        if feed.num_blocks == 0 {
+            feed.pad_to(1); // artifact needs >= 1 (inert) block
+        }
+        let mp = hrpb.num_panels();
+        let bucket = pick_spmm_bucket(feed.num_blocks, mp, b.rows, b.cols)
+            .ok_or_else(|| format!(
+                "no bucket fits nb={} mp={} k={} n={}",
+                feed.num_blocks, mp, b.rows, b.cols
+            ))?;
+        let out = self.spmm_in_bucket(&mut feed, b, bucket)?;
+        // slice padded output (bucket.mp * TM rows) down to the real rows
+        let mut c = Dense::zeros(hrpb.rows, b.cols);
+        c.data.copy_from_slice(&out.data[..hrpb.rows * b.cols]);
+        Ok(c)
+    }
+
+    fn spmm_in_bucket(
+        &mut self,
+        feed: &mut DenseBrickFeed,
+        b: &Dense,
+        bucket: SpmmBucket,
+    ) -> Result<Dense, String> {
+        feed.pad_to(bucket.nb);
+        // pad B with zero rows up to bucket.k
+        let mut b_padded = vec![0f32; bucket.k * bucket.n];
+        for r in 0..b.rows {
+            b_padded[r * bucket.n..r * bucket.n + b.cols].copy_from_slice(b.row(r));
+        }
+
+        let lit_blocks = xla::Literal::vec1(feed.blocks.as_slice())
+            .reshape(&[bucket.nb as i64, feed.tm as i64, feed.tk as i64])
+            .map_err(|e| format!("reshape blocks: {e}"))?;
+        let lit_cols = xla::Literal::vec1(feed.active_cols.as_slice())
+            .reshape(&[bucket.nb as i64, feed.tk as i64])
+            .map_err(|e| format!("reshape active_cols: {e}"))?;
+        let lit_pids = xla::Literal::vec1(feed.panel_ids.as_slice());
+        let lit_b = xla::Literal::vec1(b_padded.as_slice())
+            .reshape(&[bucket.k as i64, bucket.n as i64])
+            .map_err(|e| format!("reshape B: {e}"))?;
+
+        let name = bucket.artifact_name();
+        let exe = self.executable(&name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit_blocks, lit_cols, lit_pids, lit_b])
+            .map_err(|e| format!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| format!("untuple: {e}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))?;
+        let rows = bucket.mp * feed.tm;
+        if data.len() != rows * bucket.n {
+            return Err(format!("output size {} != {}x{}", data.len(), rows, bucket.n));
+        }
+        Ok(Dense::from_vec(rows, bucket.n, data))
+    }
+
+    /// Run the dense reference artifact (examples / self-check).
+    pub fn dense_mm(&mut self, a: &Dense, b: &Dense, name: &str) -> Result<Dense, String> {
+        let art = self.manifest.find(name).ok_or_else(|| format!("no artifact '{name}'"))?;
+        let (m, k, n) = (
+            art.dim("m").ok_or("dense_mm m")?,
+            art.dim("k").ok_or("dense_mm k")?,
+            art.dim("n").ok_or("dense_mm n")?,
+        );
+        if a.rows != m || a.cols != k || b.rows != k || b.cols != n {
+            return Err(format!(
+                "dense_mm {name}: shape mismatch a={}x{} b={}x{}",
+                a.rows, a.cols, b.rows, b.cols
+            ));
+        }
+        let la = xla::Literal::vec1(a.data.as_slice())
+            .reshape(&[m as i64, k as i64])
+            .map_err(|e| e.to_string())?;
+        let lb = xla::Literal::vec1(b.data.as_slice())
+            .reshape(&[k as i64, n as i64])
+            .map_err(|e| e.to_string())?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb]).map_err(|e| e.to_string())?[0][0]
+            .to_literal_sync()
+            .map_err(|e| e.to_string())?;
+        let out = result.to_tuple1().map_err(|e| e.to_string())?;
+        let data = out.to_vec::<f32>().map_err(|e| e.to_string())?;
+        Ok(Dense::from_vec(m, n, data))
+    }
+
+    /// Number of compiled executables held warm.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::build_from_coo;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping PJRT test: run `make artifacts`");
+            return None;
+        }
+        Some(PjrtRuntime::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn pjrt_spmm_matches_native() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::new(200);
+        let coo = Coo::random(300, 400, 0.02, &mut rng);
+        let b = Dense::random(400, 32, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        let got = rt.spmm(&hrpb, &b).unwrap();
+        let want = coo.to_dense().matmul(&b);
+        assert!(got.rel_fro_error(&want) < 1e-4, "err {}", got.rel_fro_error(&want));
+    }
+
+    #[test]
+    fn pjrt_executable_cache_warm() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::new(201);
+        let coo = Coo::random(100, 200, 0.03, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        let b = Dense::random(200, 32, &mut rng);
+        assert_eq!(rt.cached(), 0);
+        rt.spmm(&hrpb, &b).unwrap();
+        assert_eq!(rt.cached(), 1);
+        rt.spmm(&hrpb, &b).unwrap();
+        assert_eq!(rt.cached(), 1, "second call reuses the compiled executable");
+    }
+
+    #[test]
+    fn pjrt_rejects_oversize() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::new(202);
+        let coo = Coo::random(64, 100_000, 0.0001, &mut rng);
+        let hrpb = build_from_coo(&coo);
+        let b = Dense::zeros(100_000, 128);
+        assert!(rt.spmm(&hrpb, &b).is_err());
+    }
+
+    #[test]
+    fn pjrt_dense_mm() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = Rng::new(203);
+        let a = Dense::random(256, 256, &mut rng);
+        let b = Dense::random(256, 128, &mut rng);
+        let got = rt.dense_mm(&a, &b, "dense_mm__m256_k256_n128").unwrap();
+        assert!(got.rel_fro_error(&a.matmul(&b)) < 1e-4);
+    }
+}

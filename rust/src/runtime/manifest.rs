@@ -1,0 +1,133 @@
+//! Artifact manifest loader — reads `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) so the Rust side can validate feeds without
+//! parsing HLO.
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Declared shape+dtype of one executable argument.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub model: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub out_shape: Vec<usize>,
+    /// Model-specific dims (nb/mp/k/n/f/m) kept as raw pairs.
+    pub dims: Vec<(String, usize)>,
+}
+
+impl Artifact {
+    pub fn dim(&self, key: &str) -> Option<usize> {
+        self.dims.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tm: usize,
+    pub tk: usize,
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let root = parse(&text)?;
+        let tm = root.get("tm").and_then(Json::as_usize).ok_or("manifest: tm")?;
+        let tk = root.get("tk").and_then(Json::as_usize).ok_or("manifest: tk")?;
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts").and_then(Json::as_arr).ok_or("manifest: artifacts")? {
+            let name = a.get("name").and_then(Json::as_str).ok_or("artifact name")?.to_string();
+            let model = a.get("model").and_then(Json::as_str).ok_or("artifact model")?.to_string();
+            let file = dir.join(a.get("file").and_then(Json::as_str).ok_or("artifact file")?);
+            let mut args = Vec::new();
+            for spec in a.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = spec
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or("arg shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let dtype = spec.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+                args.push(ArgSpec { shape, dtype });
+            }
+            let out_shape = a
+                .get("out_shape")
+                .and_then(Json::as_arr)
+                .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            let mut dims = Vec::new();
+            for key in ["nb", "mp", "k", "n", "f", "m"] {
+                if let Some(v) = a.get(key).and_then(Json::as_usize) {
+                    dims.push((key.to_string(), v));
+                }
+            }
+            artifacts.push(Artifact { name, model, file, args, out_shape, dims });
+        }
+        Ok(Manifest { tm, tk, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of one model kind.
+    pub fn by_model(&self, model: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.model == model).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tm, 16);
+        assert_eq!(m.tk, 16);
+        assert!(!m.artifacts.is_empty());
+        let spmm = m.by_model("hrpb_spmm");
+        assert!(!spmm.is_empty());
+        for a in spmm {
+            assert_eq!(a.args.len(), 4, "{}: blocks, active_cols, panel_ids, B", a.name);
+            assert!(a.file.exists(), "{} missing", a.file.display());
+            let nb = a.dim("nb").unwrap();
+            assert_eq!(a.args[0].shape, vec![nb, m.tm, m.tk]);
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_an_error() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir")).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! AOT runtime — loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them via the `xla` crate's PJRT CPU
+//! client. Python never runs on the request path: `make artifacts` is the
+//! one-time build step, and the Rust binary is self-contained afterwards.
+
+pub mod bucket;
+pub mod executor;
+pub mod manifest;
+pub mod service;
+
+pub use bucket::{pick_spmm_bucket, SpmmBucket};
+pub use executor::PjrtRuntime;
+pub use manifest::{Artifact, Manifest};
+pub use service::{PjrtHandle, PjrtService};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$CUTESPMM_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("CUTESPMM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Are artifacts present (manifest exists)?
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,152 @@
+//! PJRT service thread — multi-threaded access to the (`!Send`) PJRT
+//! runtime.
+//!
+//! PJRT handles are raw pointers, so [`super::PjrtRuntime`] must live on one
+//! thread. The service owns that thread and a request channel; callers hold
+//! a cheap cloneable [`PjrtHandle`] and get synchronous results. This is the
+//! engine the coordinator's workers call into.
+
+use crate::formats::Dense;
+use crate::hrpb::Hrpb;
+use crate::runtime::executor::PjrtRuntime;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+enum Req {
+    Spmm {
+        hrpb: Arc<Hrpb>,
+        b: Dense,
+        reply: Sender<Result<Dense, String>>,
+    },
+    Platform {
+        reply: Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Sender<Req>,
+}
+
+// Sender<Req> is Send but not Sync; wrap-per-clone is fine because each
+// worker clones its own handle.
+impl PjrtHandle {
+    /// Run the AOT SpMM on the service thread (blocks for the result).
+    pub fn spmm(&self, hrpb: Arc<Hrpb>, b: Dense) -> Result<Dense, String> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Req::Spmm { hrpb, b, reply })
+            .map_err(|_| "pjrt service stopped".to_string())?;
+        rx.recv().map_err(|_| "pjrt service dropped reply".to_string())?
+    }
+
+    pub fn platform(&self) -> Result<String, String> {
+        let (reply, rx) = channel();
+        self.tx.send(Req::Platform { reply }).map_err(|_| "pjrt service stopped".to_string())?;
+        rx.recv().map_err(|_| "pjrt service dropped reply".to_string())
+    }
+}
+
+/// The running service; dropping it shuts the thread down.
+pub struct PjrtService {
+    tx: Sender<Req>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service over an artifacts directory. Fails fast if the
+    /// manifest or PJRT client cannot be created.
+    pub fn start(artifacts_dir: PathBuf) -> Result<PjrtService, String> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let mut rt = match PjrtRuntime::new(&artifacts_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Spmm { hrpb, b, reply } => {
+                            let _ = reply.send(rt.spmm(&hrpb, &b));
+                        }
+                        Req::Platform { reply } => {
+                            let _ = reply.send(rt.platform());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn pjrt service: {e}"))?;
+        ready_rx.recv().map_err(|_| "pjrt service died at startup".to_string())??;
+        Ok(PjrtService { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        PjrtHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::build_from_coo;
+    use crate::util::rng::Rng;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn service_runs_spmm_from_many_threads() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let svc = PjrtService::start(artifacts_dir()).unwrap();
+        let mut rng = Rng::new(300);
+        let coo = Coo::random(128, 256, 0.05, &mut rng);
+        let hrpb = Arc::new(build_from_coo(&coo));
+        let want = {
+            let b = Dense::from_vec(256, 32, vec![1.0; 256 * 32]);
+            coo.to_dense().matmul(&b)
+        };
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = svc.handle();
+                let hrpb = hrpb.clone();
+                let want = &want;
+                s.spawn(move || {
+                    let b = Dense::from_vec(256, 32, vec![1.0; 256 * 32]);
+                    let got = h.spmm(hrpb, b).unwrap();
+                    assert!(got.rel_fro_error(want) < 1e-4);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn bad_dir_fails_fast() {
+        assert!(PjrtService::start(PathBuf::from("/nonexistent")).is_err());
+    }
+}

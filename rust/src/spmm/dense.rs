@@ -1,0 +1,64 @@
+//! Dense oracle engine: zero-fill the sparse matrix and run a full matmul.
+//! Correctness reference for every other engine; also the "what if the TCU
+//! did *no* compression" strawman in the ablation bench.
+
+use crate::formats::{Coo, Dense};
+use crate::spmm::SpmmEngine;
+
+pub struct DenseEngine {
+    a: Dense,
+}
+
+impl DenseEngine {
+    pub fn prepare(coo: &Coo) -> Self {
+        DenseEngine { a: coo.to_dense() }
+    }
+}
+
+impl SpmmEngine for DenseEngine {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn spmm(&self, b: &Dense) -> Dense {
+        self.a.matmul(b)
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        let nnz = self.a.data.iter().filter(|&&v| v != 0.0).count();
+        2.0 * nnz as f64 * n as f64
+    }
+
+    fn executed_flops(&self, n: usize) -> f64 {
+        2.0 * (self.a.rows * self.a.cols * n) as f64
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.a.rows, self.a.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::testutil;
+    use crate::spmm::Algo;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_oracle_by_construction() {
+        testutil::engine_matches_oracle(Algo::Dense);
+    }
+
+    #[test]
+    fn empty_ok() {
+        testutil::engine_handles_empty(Algo::Dense);
+    }
+
+    #[test]
+    fn executed_flops_counts_zeros() {
+        let coo = Coo::random(32, 32, 0.1, &mut Rng::new(2));
+        let e = DenseEngine::prepare(&coo);
+        assert!(e.executed_flops(16) > e.flops(16));
+    }
+}

@@ -1,0 +1,359 @@
+//! cuTeSpMM native engine — the paper's Algorithm 1 re-hosted on CPU.
+//!
+//! Faithful structural mirror of the GPU kernel:
+//! * one *work unit* (= GPU thread block) per row panel, or per virtual
+//!   panel after §5 wave-aware splitting;
+//! * per block: the packed byte run is read in place (the shared-memory
+//!   staging of line 17), the needed B rows are addressed through
+//!   `active_cols` (lines 19-22), brick patterns are decoded with prefix
+//!   popcounts (lines 33-38, `util::bits`), and a dense `TM × N` accumulator
+//!   tile stays register/L1-stationary until the panel completes (c_frag,
+//!   line 46);
+//! * units run on a work-stealing worker pool in natural panel order
+//!   (consecutive panels share B rows — §5's cache argument); split panels
+//!   accumulate into private tiles merged once at the end — the CPU
+//!   analogue of the atomic consolidation §5 prices in.
+//!
+//! The scalar FMA here skips the zero-fill the real TCU would execute;
+//! [`SpmmEngine::executed_flops`] reports the TCU count (bricks × 64 × N)
+//! so the cost models and benches can charge it.
+
+use crate::formats::{Coo, Dense};
+use crate::hrpb::{self, pack, Hrpb};
+use crate::loadbalance::{self, Device, Schedule, WorkUnit};
+use crate::params::{BRICK_K, BRICK_M};
+use crate::spmm::SpmmEngine;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub struct HrpbEngine {
+    hrpb: Hrpb,
+    schedule: Schedule,
+    /// Unit processing order, longest first (LPT dispatch).
+    order: Vec<u32>,
+    stats: hrpb::HrpbStats,
+}
+
+impl HrpbEngine {
+    /// Prepare with the paper's default tiles and wave-aware balancing for
+    /// this host's worker count.
+    pub fn prepare(coo: &Coo) -> Self {
+        let hrpb = hrpb::build_from_coo(coo);
+        Self::from_hrpb(hrpb)
+    }
+
+    /// Wrap an already-built HRPB (preprocessing measured separately).
+    pub fn from_hrpb(hrpb: Hrpb) -> Self {
+        let workers = crate::spmm::num_workers(hrpb.rows);
+        // CPU "device": `workers` SMs × 1 resident block
+        let dev = Device { num_sms: workers, blocks_per_sm: 1 };
+        let schedule = loadbalance::schedule_wave_aware(&hrpb, dev);
+        Self::with_schedule(hrpb, schedule)
+    }
+
+    /// Explicit schedule (the §5 ablation entry point).
+    pub fn with_schedule(hrpb: Hrpb, schedule: Schedule) -> Self {
+        debug_assert!(schedule.validate(&hrpb).is_ok());
+        // Natural (panel) order: §5's observation — consecutive panels share
+        // active columns, so processing them in order keeps B rows hot in
+        // cache; the work-stealing dispatch already absorbs imbalance the
+        // way GPU waves do (heaviest-first LPT measured 10-20% slower on
+        // banded matrices — EXPERIMENTS.md §Perf step 3).
+        let order: Vec<u32> = (0..schedule.units.len() as u32).collect();
+        let stats = hrpb::stats::compute(&hrpb);
+        HrpbEngine { hrpb, schedule, order, stats }
+    }
+
+    pub fn hrpb(&self) -> &Hrpb {
+        &self.hrpb
+    }
+
+    pub fn stats(&self) -> &hrpb::HrpbStats {
+        &self.stats
+    }
+
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Process one work unit, accumulating into `tile` (either a private
+    /// `TM × n` buffer or the panel's rows of C directly). The caller
+    /// guarantees `tile` starts zeroed.
+    #[inline]
+    fn run_unit(&self, unit: &WorkUnit, b: &Dense, tile: &mut [f32]) {
+        let n = b.cols;
+        let (tm, tk) = (self.hrpb.tm, self.hrpb.tk);
+        let brick_cols = tk / BRICK_K;
+        let panel_base = self.hrpb.blocked_row_ptr[unit.panel as usize] as usize;
+
+        for blk_idx in (panel_base + unit.start as usize)..(panel_base + unit.end as usize) {
+            // line 17-18: the packed block, read in place
+            let blk = pack::view(&self.hrpb, blk_idx);
+            let active = self.hrpb.block_active_cols(blk_idx);
+            debug_assert_eq!(active.len(), tk);
+
+            // lines 25-41: walk brick columns, decode patterns, FMA.
+            // Perf-shaped decode (EXPERIMENTS.md §Perf): B-row slices are
+            // hoisted once per brick column (the register reuse the GPU
+            // kernel gets from b_frag, lines 26-28) and the C-tile row slice
+            // once per brick row (c_frag), so the innermost loop is a pure
+            // 2-term FMA stream over N.
+            let mut vi = 0usize;
+            for bc in 0..brick_cols {
+                let (s, e) = (blk.col_ptr[bc] as usize, blk.col_ptr[bc + 1] as usize);
+                if s == e {
+                    continue;
+                }
+                // b_frag: the 4 B rows of this brick column, fetched once
+                let brows: [&[f32]; BRICK_K] = std::array::from_fn(|c| {
+                    b.row(active[bc * BRICK_K + c] as usize)
+                });
+                for j in s..e {
+                    let br = blk.rows[j] as usize * BRICK_M;
+                    let pattern = blk.patterns[j];
+                    // walk brick rows; each row's nibble of the pattern is
+                    // its nonzero mask (row-major bit order, Fig. 3(b))
+                    let mut rest = pattern;
+                    while rest != 0 {
+                        let r = rest.trailing_zeros() as usize / BRICK_K;
+                        let row_bits = (pattern >> (r * BRICK_K)) & 0xF;
+                        rest &= !(0xFu64 << (r * BRICK_K));
+                        let crow = &mut tile[(br + r) * n..(br + r + 1) * n];
+                        // the MMA (line 41), zero-skipped on CPU. The brick
+                        // row's 1-4 products fuse into ONE pass over crow —
+                        // the CPU analogue of the MMA's 4-deep contraction
+                        // (reads/writes crow once instead of per nonzero).
+                        let mut av = [0f32; BRICK_K];
+                        let mut bs: [&[f32]; BRICK_K] = [brows[0]; BRICK_K];
+                        let mut cnt = 0usize;
+                        let mut bits = row_bits;
+                        while bits != 0 {
+                            let c = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            av[cnt] = blk.values[vi];
+                            bs[cnt] = brows[c];
+                            vi += 1;
+                            cnt += 1;
+                        }
+                        match cnt {
+                            1 => {
+                                let (a0, b0) = (av[0], &bs[0][..n]);
+                                for (cv, v0) in crow.iter_mut().zip(b0) {
+                                    *cv += a0 * v0;
+                                }
+                            }
+                            2 => {
+                                let (a0, b0) = (av[0], &bs[0][..n]);
+                                let (a1, b1) = (av[1], &bs[1][..n]);
+                                for ((cv, v0), v1) in crow.iter_mut().zip(b0).zip(b1) {
+                                    *cv += a0 * v0 + a1 * v1;
+                                }
+                            }
+                            3 => {
+                                let (a0, b0) = (av[0], &bs[0][..n]);
+                                let (a1, b1) = (av[1], &bs[1][..n]);
+                                let (a2, b2) = (av[2], &bs[2][..n]);
+                                for (((cv, v0), v1), v2) in
+                                    crow.iter_mut().zip(b0).zip(b1).zip(b2)
+                                {
+                                    *cv += a0 * v0 + a1 * v1 + a2 * v2;
+                                }
+                            }
+                            _ => {
+                                let (a0, b0) = (av[0], &bs[0][..n]);
+                                let (a1, b1) = (av[1], &bs[1][..n]);
+                                let (a2, b2) = (av[2], &bs[2][..n]);
+                                let (a3, b3) = (av[3], &bs[3][..n]);
+                                for ((((cv, v0), v1), v2), v3) in
+                                    crow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                                {
+                                    *cv += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let _ = tm;
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Accessor so closures capture the whole `SendPtr` (Send + Sync) rather
+    /// than disjointly capturing the raw pointer field (2021 capture rules).
+    #[inline]
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+impl SpmmEngine for HrpbEngine {
+    fn name(&self) -> &'static str {
+        "cutespmm"
+    }
+
+    fn spmm(&self, b: &Dense) -> Dense {
+        assert_eq!(b.rows, self.hrpb.cols, "B rows must equal A cols");
+        let n = b.cols;
+        let tm = self.hrpb.tm;
+        let mut c = Dense::zeros(self.hrpb.rows, n);
+        let units = &self.schedule.units;
+        if units.is_empty() {
+            return c;
+        }
+
+        let workers = crate::spmm::num_workers(self.hrpb.rows).min(units.len());
+        let next = AtomicUsize::new(0);
+        // partial tiles from atomic (split-panel) units, merged afterwards
+        let partials: Mutex<Vec<(u32, Vec<f32>)>> = Mutex::new(Vec::new());
+        let cptr = SendPtr(c.data.as_mut_ptr());
+        let rows = self.hrpb.rows;
+
+        let worker = |_: usize| {
+            let mut tile = vec![0f32; tm * n];
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= self.order.len() {
+                    break;
+                }
+                let unit = &units[self.order[i] as usize];
+                let r0 = unit.panel as usize * tm;
+                let rows_here = tm.min(rows - r0);
+                if unit.atomic {
+                    tile.fill(0.0);
+                    self.run_unit(unit, b, &mut tile);
+                    partials.lock().unwrap().push((unit.panel, tile[..].to_vec()));
+                } else {
+                    // exclusive writer of this panel's rows: accumulate
+                    // straight into C (the tile buffer + copy would double
+                    // the per-panel traffic — §Perf step 2).
+                    // SAFETY: non-atomic units own their panel exclusively
+                    // (Schedule::validate guarantees exact tiling), and C
+                    // was allocated zeroed, matching run_unit's contract.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(cptr.get().add(r0 * n), rows_here * n)
+                    };
+                    self.run_unit(unit, b, out);
+                }
+            }
+        };
+
+        if workers <= 1 {
+            worker(0);
+        } else {
+            std::thread::scope(|s| {
+                for w in 0..workers {
+                    let worker = &worker;
+                    s.spawn(move || worker(w));
+                }
+            });
+        }
+
+        // consolidation of split panels (the atomic cost of §5)
+        for (panel, tile) in partials.into_inner().unwrap() {
+            let r0 = panel as usize * tm;
+            let rows_here = tm.min(rows - r0);
+            let out = &mut c.data[r0 * n..r0 * n + rows_here * n];
+            for (cv, tv) in out.iter_mut().zip(&tile[..rows_here * n]) {
+                *cv += tv;
+            }
+        }
+        c
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        2.0 * self.hrpb.nnz as f64 * n as f64
+    }
+
+    fn executed_flops(&self, n: usize) -> f64 {
+        // each active brick costs a full dense 16x4 x 4xN MMA pass
+        2.0 * (self.stats.num_bricks * BRICK_M * BRICK_K * n) as f64
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.hrpb.rows, self.hrpb.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::{testutil, Algo};
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_oracle() {
+        testutil::engine_matches_oracle(Algo::Hrpb);
+    }
+
+    #[test]
+    fn empty_ok() {
+        testutil::engine_handles_empty(Algo::Hrpb);
+    }
+
+    #[test]
+    fn split_schedule_matches_unsplit() {
+        // force maximal splitting (avg-split strawman) and verify the atomic
+        // consolidation path produces identical results
+        let mut rng = Rng::new(90);
+        let mut t = Vec::new();
+        for c in 0..200usize {
+            t.push((c % 16, c * 3, rng.nz_value()));
+        }
+        for r in (16..160).step_by(16) {
+            t.push((r, 0, rng.nz_value()));
+        }
+        let coo = crate::formats::Coo::from_triplets(160, 640, &t);
+        let b = Dense::random(640, 48, &mut rng);
+
+        let h1 = crate::hrpb::build_from_coo(&coo);
+        let none = HrpbEngine::with_schedule(h1.clone(), loadbalance::schedule_none(&h1));
+        let split = HrpbEngine::with_schedule(h1.clone(), loadbalance::schedule_avg_split(&h1));
+        assert!(split.schedule().atomic_units > 0, "test needs real splitting");
+        let c1 = none.spmm(&b);
+        let c2 = split.spmm(&b);
+        assert!(c1.rel_fro_error(&c2) < 1e-6);
+    }
+
+    #[test]
+    fn prop_hrpb_engine_equals_csr_engine() {
+        let g = SparseGen { max_m: 80, max_k: 120, max_density: 0.2 };
+        let mut rng = Rng::new(91);
+        check("hrpb == csr engine", 30, &g, |case| {
+            let coo = crate::formats::Coo::from_triplets(case.m, case.k, &case.triplets);
+            let b = Dense::random(case.k, 24, &mut Rng::new(case.m as u64 * 31 + case.k as u64));
+            let want = Algo::Csr.prepare(&coo).spmm(&b);
+            let got = Algo::Hrpb.prepare(&coo).spmm(&b);
+            got.rel_fro_error(&want) < 1e-5
+        });
+        let _ = &mut rng;
+    }
+
+    #[test]
+    fn executed_flops_charge_brick_zero_fill() {
+        let coo = crate::formats::Coo::random(128, 512, 0.004, &mut Rng::new(92));
+        let e = HrpbEngine::prepare(&coo);
+        assert!(e.executed_flops(32) >= e.flops(32));
+        // fill ratio consistency: executed / useful == 1/alpha
+        let ratio = e.executed_flops(32) / e.flops(32);
+        assert!((ratio - 1.0 / e.stats().alpha).abs() / ratio < 1e-9);
+    }
+
+    #[test]
+    fn tall_matrix_last_panel_partial() {
+        // rows not a multiple of TM: last panel is ragged
+        let mut rng = Rng::new(93);
+        let coo = crate::formats::Coo::random(37, 64, 0.15, &mut rng);
+        let b = Dense::random(64, 16, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        let got = HrpbEngine::prepare(&coo).spmm(&b);
+        assert!(got.rel_fro_error(&want) < 1e-5);
+    }
+}

@@ -1,0 +1,196 @@
+//! Executable SpMM engines (CPU).
+//!
+//! These are the *algorithms* of the paper's evaluation, re-hosted on CPU so
+//! every comparison runs end-to-end on this testbed (DESIGN.md §2): the
+//! native HRPB hot path mirrors cuTeSpMM's Algorithm 1, and the baselines
+//! mirror the scalar-core kernels (cuSparse CSR/COO, Sputnik, GE-SpMM) and
+//! the TC-GNN SGT scheme. Emulated tensor-core engines perform the *full*
+//! zero-filled dense brick products so their operation counts match what the
+//! TCU would execute; scalar engines touch only stored nonzeros.
+//!
+//! Preprocessing (format construction) is deliberately separated from
+//! execution — §6.3 measures it.
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod gespmm;
+pub mod hrpb;
+pub mod sputnik;
+pub mod tcgnn;
+
+use crate::formats::{Coo, Dense};
+
+/// A prepared SpMM engine: the sparse matrix has been converted to the
+/// algorithm's native format; `spmm` may be invoked many times (the
+/// amortization argument of §6.3).
+pub trait SpmmEngine: Send + Sync {
+    /// Algorithm name (stable, used in reports).
+    fn name(&self) -> &'static str;
+    /// `C = A · B`; `B.rows` must equal the sparse matrix's column count.
+    fn spmm(&self, b: &Dense) -> Dense;
+    /// Useful FLOPs per invocation at width `n`: `2 · nnz · n`.
+    fn flops(&self, n: usize) -> f64;
+    /// FLOPs the hardware would *execute* per invocation, including
+    /// zero-fill (equals `flops` for scalar engines).
+    fn executed_flops(&self, n: usize) -> f64 {
+        self.flops(n)
+    }
+    /// Sparse operand shape `(rows, cols)`.
+    fn shape(&self) -> (usize, usize);
+}
+
+/// Algorithm selector (CLI / bench wiring).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Dense oracle (zero-filled full matmul).
+    Dense,
+    /// cuSparse-CSR-like row-split scalar kernel.
+    Csr,
+    /// cuSparse-COO-like segmented scalar kernel.
+    Coo,
+    /// Sputnik-like: row swizzle + 1-D tiling.
+    Sputnik,
+    /// GE-SpMM-like: CSR with coalesced sparse-row caching.
+    GeSpmm,
+    /// TC-GNN SGT: row-window column condensing into 16×8 TC blocks.
+    TcGnn,
+    /// cuTeSpMM: HRPB + Algorithm 1 (this paper).
+    Hrpb,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Dense => "dense",
+            Algo::Csr => "csr",
+            Algo::Coo => "coo",
+            Algo::Sputnik => "sputnik",
+            Algo::GeSpmm => "gespmm",
+            Algo::TcGnn => "tcgnn",
+            Algo::Hrpb => "cutespmm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        Some(match s {
+            "dense" => Algo::Dense,
+            "csr" => Algo::Csr,
+            "coo" => Algo::Coo,
+            "sputnik" => Algo::Sputnik,
+            "gespmm" => Algo::GeSpmm,
+            "tcgnn" => Algo::TcGnn,
+            "cutespmm" | "hrpb" => Algo::Hrpb,
+            _ => return None,
+        })
+    }
+
+    /// All executable algorithms.
+    pub fn all() -> [Algo; 7] {
+        [Algo::Dense, Algo::Csr, Algo::Coo, Algo::Sputnik, Algo::GeSpmm, Algo::TcGnn, Algo::Hrpb]
+    }
+
+    /// The scalar-core baselines forming the paper's `Best-SC` envelope.
+    pub fn scalar_core() -> [Algo; 4] {
+        [Algo::Csr, Algo::Coo, Algo::Sputnik, Algo::GeSpmm]
+    }
+
+    /// Prepare an engine for this algorithm (the preprocessing step).
+    pub fn prepare(&self, coo: &Coo) -> Box<dyn SpmmEngine> {
+        match self {
+            Algo::Dense => Box::new(dense::DenseEngine::prepare(coo)),
+            Algo::Csr => Box::new(csr::CsrEngine::prepare(coo)),
+            Algo::Coo => Box::new(coo::CooEngine::prepare(coo)),
+            Algo::Sputnik => Box::new(sputnik::SputnikEngine::prepare(coo)),
+            Algo::GeSpmm => Box::new(gespmm::GeSpmmEngine::prepare(coo)),
+            Algo::TcGnn => Box::new(tcgnn::TcGnnEngine::prepare(coo)),
+            Algo::Hrpb => Box::new(hrpb::HrpbEngine::prepare(coo)),
+        }
+    }
+}
+
+/// Worker count for the parallel engines (capped so test machines with many
+/// cores don't oversubscribe tiny matrices).
+pub(crate) fn num_workers(rows: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(rows.div_ceil(64)).max(1)
+}
+
+/// Split `n` items into per-worker contiguous ranges.
+pub(crate) fn chunks(n: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    let workers = workers.min(n.max(1)).max(1);
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut pos = 0;
+    for i in 0..workers {
+        let len = base + usize::from(i < extra);
+        out.push(pos..pos + len);
+        pos += len;
+    }
+    out
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every engine must match the dense oracle on a batch of random cases.
+    pub fn engine_matches_oracle(algo: Algo) {
+        let mut rng = Rng::new(0xC0FFEE);
+        for (m, k, n, d) in [
+            (1, 1, 1, 1.0),
+            (16, 16, 8, 0.3),
+            (33, 70, 32, 0.12),
+            (128, 256, 64, 0.03),
+            (100, 64, 17, 0.08),
+            (257, 300, 33, 0.015),
+        ] {
+            let coo = Coo::random(m, k, d, &mut rng);
+            let b = Dense::random(k, n, &mut rng);
+            let want = coo.to_dense().matmul(&b);
+            let engine = algo.prepare(&coo);
+            let got = engine.spmm(&b);
+            assert_eq!((got.rows, got.cols), (m, n), "{} shape", algo.name());
+            let err = got.rel_fro_error(&want);
+            assert!(err < 1e-5, "{} ({m}x{k}, n={n}, d={d}): rel err {err}", algo.name());
+        }
+    }
+
+    /// Engines must handle an empty matrix.
+    pub fn engine_handles_empty(algo: Algo) {
+        let coo = Coo::new(32, 48);
+        let b = Dense::random(48, 8, &mut Rng::new(1));
+        let got = algo.prepare(&coo).spmm(&b);
+        assert_eq!(got.data.iter().filter(|&&v| v != 0.0).count(), 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for algo in Algo::all() {
+            assert_eq!(Algo::parse(algo.name()), Some(algo));
+        }
+        assert_eq!(Algo::parse("hrpb"), Some(Algo::Hrpb));
+        assert_eq!(Algo::parse("nope"), None);
+    }
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for n in [0usize, 1, 7, 64, 100] {
+            for w in [1usize, 3, 8] {
+                let cs = chunks(n, w);
+                let total: usize = cs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                for pair in cs.windows(2) {
+                    assert_eq!(pair[0].end, pair[1].start);
+                }
+            }
+        }
+    }
+}

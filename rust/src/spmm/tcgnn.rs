@@ -1,0 +1,218 @@
+//! TC-GNN-like engine (Wang et al., ATC'23): SGT — Sparse Graph Translation.
+//!
+//! Rows are cut into 16-high *row windows*; the unique columns of each window
+//! are condensed (deduplicated, order of first appearance) and grouped into
+//! 16×8 TC blocks that a tensor core consumes after zero-filling. Unlike
+//! HRPB there is **no brick-level pattern compression**: every TC block is
+//! materialized densely (zeros included) and the MMA executes the full
+//! 16×8×N product. That single-level blocking — and the dense decode traffic
+//! it implies — is exactly the inefficiency the paper's Fig. 2/9/10 measure
+//! against cuTeSpMM.
+
+use crate::formats::{Coo, Dense};
+use crate::spmm::{chunks, num_workers, SpmmEngine};
+
+const WIN_H: usize = 16; // row-window height = TC block rows
+const WIN_W: usize = 8; // TC block columns (condensed)
+
+/// One 16×8 TC block, stored dense (the zero-filled operand the TCU sees).
+struct TcBlock {
+    /// Original B-row index of each of the 8 condensed column slots
+    /// (`u32::MAX` for padding slots).
+    cols: [u32; WIN_W],
+    /// Dense 16×8 values, row-major.
+    vals: [f32; WIN_H * WIN_W],
+}
+
+pub struct TcGnnEngine {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    /// TC blocks of window `w`: `win_ptr[w]..win_ptr[w+1]`.
+    win_ptr: Vec<u32>,
+    blocks: Vec<TcBlock>,
+}
+
+impl TcGnnEngine {
+    pub fn prepare(coo: &Coo) -> Self {
+        let mut c = coo.clone();
+        if !c.is_normalized() {
+            c.normalize();
+        }
+        let num_windows = c.rows.div_ceil(WIN_H).max(1);
+        let mut win_ptr = Vec::with_capacity(num_windows + 1);
+        win_ptr.push(0u32);
+        let mut blocks = Vec::new();
+
+        // entries are row-major sorted; walk windows
+        let mut i = 0usize;
+        for w in 0..num_windows {
+            let r_end = ((w + 1) * WIN_H) as u32;
+            let start = i;
+            while i < c.nnz() && c.row_idx[i] < r_end {
+                i += 1;
+            }
+            let entries = start..i;
+
+            // condense: unique columns sorted ascending (SGT orders by
+            // column id), then group into blocks of 8
+            let mut uniq: Vec<u32> = entries.clone().map(|j| c.col_idx[j]).collect();
+            uniq.sort_unstable();
+            uniq.dedup();
+            let nblk = uniq.len().div_ceil(WIN_W);
+            let blk_base = blocks.len();
+            for b in 0..nblk {
+                let slot_cols = &uniq[b * WIN_W..((b + 1) * WIN_W).min(uniq.len())];
+                let mut cols = [u32::MAX; WIN_W];
+                cols[..slot_cols.len()].copy_from_slice(slot_cols);
+                blocks.push(TcBlock { cols, vals: [0.0; WIN_H * WIN_W] });
+            }
+            // scatter values into their block slots
+            for j in entries {
+                let col = c.col_idx[j];
+                let slot = uniq.binary_search(&col).unwrap();
+                let (b, s) = (slot / WIN_W, slot % WIN_W);
+                let r = (c.row_idx[j] as usize) % WIN_H;
+                blocks[blk_base + b].vals[r * WIN_W + s] = c.values[j];
+            }
+            win_ptr.push(blocks.len() as u32);
+        }
+
+        TcGnnEngine { rows: c.rows, cols: c.cols, nnz: c.nnz(), win_ptr, blocks }
+    }
+
+    /// Number of TC blocks (the SGT compression metric).
+    pub fn num_tc_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+impl SpmmEngine for TcGnnEngine {
+    fn name(&self) -> &'static str {
+        "tcgnn"
+    }
+
+    fn spmm(&self, b: &Dense) -> Dense {
+        assert_eq!(b.rows, self.cols, "B rows must equal A cols");
+        let n = b.cols;
+        let num_windows = self.win_ptr.len() - 1;
+        let mut c = Dense::zeros(self.rows, n);
+
+        let run = |win_range: std::ops::Range<usize>, out: &mut [f32]| {
+            let base_row = win_range.start * WIN_H;
+            for w in win_range {
+                let (bs, be) = (self.win_ptr[w] as usize, self.win_ptr[w + 1] as usize);
+                for blk in &self.blocks[bs..be] {
+                    // dense 16x8 @ 8xN MMA, zero-fill included: the inner
+                    // loops do NOT skip zeros — that is the TCU's execution
+                    // model and TC-GNN's cost structure.
+                    for (s, &col) in blk.cols.iter().enumerate() {
+                        if col == u32::MAX {
+                            continue; // padding slot: no B row exists
+                        }
+                        let brow = b.row(col as usize);
+                        for r in 0..WIN_H {
+                            let row = w * WIN_H + r;
+                            if row >= self.rows {
+                                break;
+                            }
+                            let a = blk.vals[r * WIN_W + s];
+                            let off = (row - base_row) * n;
+                            let crow = &mut out[off..off + n];
+                            for (cv, bv) in crow.iter_mut().zip(brow) {
+                                *cv += a * bv;
+                            }
+                        }
+                    }
+                }
+            }
+        };
+
+        let workers = num_workers(self.rows);
+        if workers <= 1 || num_windows < 8 {
+            run(0..num_windows, &mut c.data);
+            return c;
+        }
+        let ranges = chunks(num_windows, workers);
+        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f32] = &mut c.data;
+        for rg in &ranges {
+            let rows_here = (rg.end.min(self.rows.div_ceil(WIN_H)) * WIN_H).min(self.rows)
+                - (rg.start * WIN_H).min(self.rows);
+            let (head, tail) = rest.split_at_mut(rows_here * n);
+            slices.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|s| {
+            for (rg, out) in ranges.into_iter().zip(slices) {
+                let run = &run;
+                s.spawn(move || run(rg, out));
+            }
+        });
+        c
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        2.0 * self.nnz as f64 * n as f64
+    }
+
+    fn executed_flops(&self, n: usize) -> f64 {
+        // every TC block runs the full dense 16x8xN product
+        2.0 * (self.blocks.len() * WIN_H * WIN_W * n) as f64
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::{testutil, Algo};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_oracle() {
+        testutil::engine_matches_oracle(Algo::TcGnn);
+    }
+
+    #[test]
+    fn empty_ok() {
+        testutil::engine_handles_empty(Algo::TcGnn);
+    }
+
+    #[test]
+    fn condensing_dedups_columns() {
+        // 16 rows all hitting columns {0, 500}: one window, 2 unique cols,
+        // one TC block
+        let mut t = Vec::new();
+        for r in 0..16 {
+            t.push((r, 0usize, 1.0f32));
+            t.push((r, 500usize, 2.0f32));
+        }
+        let coo = Coo::from_triplets(16, 1000, &t);
+        let e = TcGnnEngine::prepare(&coo);
+        assert_eq!(e.num_tc_blocks(), 1);
+    }
+
+    #[test]
+    fn executed_flops_exceed_useful_on_sparse_input() {
+        let coo = Coo::random(128, 512, 0.005, &mut Rng::new(80));
+        let e = TcGnnEngine::prepare(&coo);
+        assert!(e.executed_flops(32) > e.flops(32));
+    }
+
+    #[test]
+    fn tc_blocks_at_least_hrpb_bricks_worth() {
+        // SGT has no 16x4 brick packing; its 16x8 blocks over the same
+        // matrix can't beat HRPB's active-column compaction by more than the
+        // width ratio — sanity relation used by the cost models.
+        let coo = Coo::random(256, 256, 0.02, &mut Rng::new(81));
+        let e = TcGnnEngine::prepare(&coo);
+        let hrpb = crate::hrpb::build_from_coo(&coo);
+        let s = crate::hrpb::stats::compute(&hrpb);
+        // 2 brick columns (4 wide) per TC block (8 wide)
+        assert!(e.num_tc_blocks() * 2 >= s.num_brick_cols / 2);
+    }
+}

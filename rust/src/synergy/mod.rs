@@ -1,0 +1,215 @@
+//! TCU-Synergy — the paper's §6.4 metric and §4 operational-intensity model.
+//!
+//! A matrix's *synergy* with tensor-core SpMM is driven by the packed brick
+//! density `α` (HRPB stats): each B element loaded from shared memory feeds
+//! `16·α` MACs per brick column, so `OI_shmem = 512·α` at the paper's TN=32
+//! (Eq. 4). Table 1 cuts α into Low / Medium / High classes that predict
+//! whether cuTeSpMM beats the best scalar-core SpMM.
+
+use crate::hrpb::HrpbStats;
+use crate::params::{BRICK_K, BRICK_M, TN};
+
+/// The paper's Table 1 synergy classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Synergy {
+    /// α ∈ [0, 12.5%): ≤ 1 B-reuse per shared-memory load; scalar cores
+    /// usually win.
+    Low,
+    /// α ∈ [12.5%, 25%): OI_shmem between 32 and 64.
+    Medium,
+    /// α ∈ [25%, 100%]: OI_shmem > 64; TCUs win decisively.
+    High,
+}
+
+impl Synergy {
+    /// Classify by packed brick density α (Table 1 ranges).
+    pub fn from_alpha(alpha: f64) -> Synergy {
+        if alpha < 0.125 {
+            Synergy::Low
+        } else if alpha < 0.25 {
+            Synergy::Medium
+        } else {
+            Synergy::High
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Synergy::Low => "Low",
+            Synergy::Medium => "Medium",
+            Synergy::High => "High",
+        }
+    }
+
+    pub fn all() -> [Synergy; 3] {
+        [Synergy::Low, Synergy::Medium, Synergy::High]
+    }
+
+    /// Table 1 α range of this class, `[lo, hi)` (`hi` inclusive for High).
+    pub fn alpha_range(&self) -> (f64, f64) {
+        match self {
+            Synergy::Low => (0.0, 0.125),
+            Synergy::Medium => (0.125, 0.25),
+            Synergy::High => (0.25, 1.0),
+        }
+    }
+}
+
+/// The paper's modeled operational intensity and shared-memory traffic for
+/// cuTeSpMM on a given matrix (§4, Eqs 1-5).
+#[derive(Clone, Copy, Debug)]
+pub struct OiModel {
+    /// Packed brick density (from HRPB stats).
+    pub alpha: f64,
+    /// Brick-column stacking factor (Eq. 5; 1 when TM = brick_m).
+    pub beta: f64,
+    /// Modeled shared-memory transactions for A at width N (Eq. 1/3).
+    pub shmem_trans_a: f64,
+    /// Modeled shared-memory transactions for B (Eq. 2/3, with β of Eq. 5).
+    pub shmem_trans_b: f64,
+    /// FLOPs of the sparse product: `2 · nnz · N`.
+    pub flops: f64,
+    /// Operational intensity w.r.t. shared memory, FLOPs per 32-wide
+    /// transaction. With TN=32 and β=1 this reduces to the paper's
+    /// `OI_shmem = 512 · α` (Eq. 4).
+    pub oi_shmem: f64,
+    /// Synergy class of α.
+    pub synergy: Synergy,
+}
+
+/// Eq. 4's closed form: `OI_shmem = 512 · α` (valid at TN=32, β=1).
+pub fn oi_shmem_closed_form(alpha: f64) -> f64 {
+    512.0 * alpha
+}
+
+/// Build the §4 model for a matrix with the given HRPB stats and dense width
+/// `n`, using the paper's default tile parameters.
+pub fn model(stats: &HrpbStats, n: usize) -> OiModel {
+    model_with(stats, n, TN)
+}
+
+/// Build the model with an explicit TN (the §4 TN sweep / ablation).
+pub fn model_with(stats: &HrpbStats, n: usize, tn: usize) -> OiModel {
+    let nnz = stats.nnz as f64;
+    let (alpha, beta) = (stats.alpha, stats.beta.max(1.0));
+    let nf = n as f64;
+    if nnz == 0.0 || alpha == 0.0 {
+        return OiModel {
+            alpha,
+            beta,
+            shmem_trans_a: 0.0,
+            shmem_trans_b: 0.0,
+            flops: 0.0,
+            oi_shmem: 0.0,
+            synergy: Synergy::Low,
+        };
+    }
+    let brick = (BRICK_M * BRICK_K) as f64;
+    // Eq. 1: per brick, each lane reads the 8-byte mask (2 transactions) plus
+    // the warp collectively reads the ⌈α·64/32⌉ value words; one pass per TN
+    // slice of N.
+    let bricks = nnz / (alpha * brick);
+    let per_brick = ((alpha * brick) / 32.0).ceil() + 2.0;
+    let shmem_trans_a = per_brick * (nf / tn as f64).max(1.0) * bricks;
+    // Eq. 2 with Eq. 5's β reuse: one N-wide row load per brick column.
+    let shmem_trans_b = nf * nnz / (32.0 * alpha * BRICK_M as f64 * beta);
+    let flops = 2.0 * nnz * nf;
+    OiModel {
+        alpha,
+        beta,
+        shmem_trans_a,
+        shmem_trans_b,
+        flops,
+        oi_shmem: flops / (shmem_trans_a + shmem_trans_b),
+        synergy: Synergy::from_alpha(alpha),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::{build_from_coo, stats};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table1_class_boundaries() {
+        assert_eq!(Synergy::from_alpha(0.0), Synergy::Low);
+        assert_eq!(Synergy::from_alpha(0.124), Synergy::Low);
+        assert_eq!(Synergy::from_alpha(0.125), Synergy::Medium);
+        assert_eq!(Synergy::from_alpha(0.249), Synergy::Medium);
+        assert_eq!(Synergy::from_alpha(0.25), Synergy::High);
+        assert_eq!(Synergy::from_alpha(1.0), Synergy::High);
+    }
+
+    #[test]
+    fn eq4_closed_form_at_tn32_beta1() {
+        // a matrix whose bricks land exactly: α = 0.25 (16 of 64 slots)
+        let mut t = Vec::new();
+        for r in 0..16 {
+            t.push((r, r % 4, 1.0f32)); // 16 nnz in one brick => α = 0.25
+        }
+        let coo = Coo::from_triplets(16, 16, &t);
+        let hrpb = build_from_coo(&coo);
+        let s = stats::compute(&hrpb);
+        assert_eq!(s.alpha, 0.25);
+        let m = model(&s, 128);
+        // Eq. 4: OI = 512 α = 128; the Eq. 1 ceil() makes the A term slightly
+        // coarser than the paper's asymptotic form, so allow 20%.
+        let closed = oi_shmem_closed_form(s.alpha);
+        assert!(
+            (m.oi_shmem - closed).abs() / closed < 0.2,
+            "modeled {} vs closed-form {closed}",
+            m.oi_shmem
+        );
+    }
+
+    #[test]
+    fn oi_increases_with_alpha() {
+        let mut rng = Rng::new(30);
+        let sparse = Coo::random(256, 256, 0.01, &mut rng);
+        let dense = Coo::random(256, 256, 0.30, &mut rng);
+        let ms = model(&stats::compute(&build_from_coo(&sparse)), 128);
+        let md = model(&stats::compute(&build_from_coo(&dense)), 128);
+        assert!(md.alpha > ms.alpha);
+        assert!(md.oi_shmem > ms.oi_shmem);
+    }
+
+    #[test]
+    fn beta_reuse_raises_oi() {
+        // same stats but doubled beta must not lower OI (Eq. 5)
+        let mut rng = Rng::new(31);
+        let coo = Coo::random(128, 128, 0.05, &mut rng);
+        let s = stats::compute(&build_from_coo(&coo));
+        let mut s2 = s;
+        s2.beta = s.beta * 2.0;
+        assert!(model(&s2, 128).oi_shmem >= model(&s, 128).oi_shmem);
+    }
+
+    #[test]
+    fn tn_balances_a_and_b_traffic() {
+        // §4: TN=32 roughly equalizes A and B shared-memory transactions
+        // when β=1 (the Eq. 1 ceil() and mask term skew it slightly).
+        let mut t = Vec::new();
+        for r in 0..16 {
+            for c in 0..4 {
+                if (r + c) % 2 == 0 {
+                    t.push((r, c, 1.0f32)); // α = 0.5
+                }
+            }
+        }
+        let coo = Coo::from_triplets(16, 16, &t);
+        let s = stats::compute(&build_from_coo(&coo));
+        let m = model_with(&s, 512, 32);
+        let ratio = m.shmem_trans_a / m.shmem_trans_b;
+        assert!(ratio > 0.5 && ratio < 4.0, "A/B traffic ratio {ratio}");
+    }
+
+    #[test]
+    fn empty_matrix_is_low_synergy_zero_oi() {
+        let coo = Coo::new(32, 32);
+        let m = model(&stats::compute(&build_from_coo(&coo)), 128);
+        assert_eq!(m.synergy, Synergy::Low);
+        assert_eq!(m.oi_shmem, 0.0);
+    }
+}

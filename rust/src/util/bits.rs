@@ -1,0 +1,126 @@
+//! Brick-pattern bit manipulation — the scalar-core half of the paper's
+//! Algorithm 1 (lines 33-39): each thread finds its nonzero via a prefix
+//! popcount over the brick's 64-bit pattern.
+
+use crate::params::{BRICK_K, BRICK_M};
+
+/// Bit index of element `(row, col)` inside a brick pattern (row-major, the
+/// paper's Fig. 3(b) encoding).
+#[inline]
+pub fn brick_bit(row: usize, col: usize) -> u32 {
+    debug_assert!(row < BRICK_M && col < BRICK_K);
+    (row * BRICK_K + col) as u32
+}
+
+/// Number of nonzeros encoded by a pattern.
+#[inline]
+pub fn pattern_nnz(pattern: u64) -> usize {
+    pattern.count_ones() as usize
+}
+
+/// Prefix popcount: how many set bits strictly below `bit` — the index of the
+/// nonzero assigned to lane `bit` inside the brick's packed value run
+/// (Algorithm 1 line 34: `count_1s[pattern[0:lane_id]]`).
+#[inline]
+pub fn prefix_count(pattern: u64, bit: u32) -> usize {
+    debug_assert!(bit < 64);
+    (pattern & ((1u64 << bit) - 1)).count_ones() as usize
+}
+
+/// Is element `(row, col)` present?
+#[inline]
+pub fn pattern_has(pattern: u64, row: usize, col: usize) -> bool {
+    pattern >> brick_bit(row, col) & 1 == 1
+}
+
+/// Set element `(row, col)`.
+#[inline]
+pub fn pattern_set(pattern: u64, row: usize, col: usize) -> u64 {
+    pattern | 1u64 << brick_bit(row, col)
+}
+
+/// Iterate `(row, col, value_index)` of every nonzero in pattern order.
+pub fn pattern_iter(pattern: u64) -> impl Iterator<Item = (usize, usize, usize)> {
+    let mut bits = pattern;
+    let mut idx = 0usize;
+    std::iter::from_fn(move || {
+        if bits == 0 {
+            return None;
+        }
+        let bit = bits.trailing_zeros() as usize;
+        bits &= bits - 1;
+        let out = (bit / BRICK_K, bit % BRICK_K, idx);
+        idx += 1;
+        Some(out)
+    })
+}
+
+/// Ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to a multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_layout_is_row_major() {
+        assert_eq!(brick_bit(0, 0), 0);
+        assert_eq!(brick_bit(0, 3), 3);
+        assert_eq!(brick_bit(1, 0), 4);
+        assert_eq!(brick_bit(15, 3), 63);
+    }
+
+    #[test]
+    fn prefix_count_matches_scan() {
+        let p: u64 = 0b1011_0110_0101;
+        for bit in 0..64u32 {
+            let naive = (0..bit).filter(|&b| p >> b & 1 == 1).count();
+            assert_eq!(prefix_count(p, bit), naive, "bit {bit}");
+        }
+    }
+
+    #[test]
+    fn set_then_has() {
+        let mut p = 0u64;
+        p = pattern_set(p, 3, 2);
+        p = pattern_set(p, 15, 3);
+        assert!(pattern_has(p, 3, 2));
+        assert!(pattern_has(p, 15, 3));
+        assert!(!pattern_has(p, 0, 0));
+        assert_eq!(pattern_nnz(p), 2);
+    }
+
+    #[test]
+    fn iter_yields_in_pattern_order_with_indices() {
+        let mut p = 0u64;
+        p = pattern_set(p, 0, 1); // bit 1
+        p = pattern_set(p, 2, 0); // bit 8
+        p = pattern_set(p, 2, 3); // bit 11
+        let got: Vec<_> = pattern_iter(p).collect();
+        assert_eq!(got, vec![(0, 1, 0), (2, 0, 1), (2, 3, 2)]);
+    }
+
+    #[test]
+    fn iter_full_pattern() {
+        let got: Vec<_> = pattern_iter(u64::MAX).collect();
+        assert_eq!(got.len(), 64);
+        assert_eq!(got[63], (15, 3, 63));
+    }
+
+    #[test]
+    fn ceil_and_round() {
+        assert_eq!(ceil_div(10, 4), 3);
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(8, 4), 8);
+    }
+}

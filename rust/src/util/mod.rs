@@ -1,0 +1,14 @@
+//! Small shared substrates: deterministic RNG, bit manipulation, descriptive
+//! statistics, wall-clock measurement, JSON emission and a property-testing
+//! mini-framework.
+
+pub mod bits;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tf32;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

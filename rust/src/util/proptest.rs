@@ -1,0 +1,231 @@
+//! A minimal property-testing harness (the real `proptest` crate is not in
+//! the offline vendor set — see DESIGN.md §9).
+//!
+//! `check` runs a property over `cases` randomly-generated inputs; on failure
+//! it performs greedy shrinking via the generator's `shrink` hook and panics
+//! with the smallest failing case and its seed, so failures are reproducible
+//! with `CUTESPMM_PROPTEST_SEED=<seed> cargo test`.
+
+use crate::util::rng::Rng;
+
+/// A generator of random test inputs with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    /// Produce a random value.
+    fn gen(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` random inputs from `gen`.
+///
+/// Panics with the (shrunk) counterexample on the first failure.
+pub fn check<G: Gen>(name: &str, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let seed = std::env::var("CUTESPMM_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            // deterministic per property name: stable across runs, distinct
+            // across properties
+            name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x100000001b3)
+            })
+        });
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.gen(&mut rng);
+        if !prop(&v) {
+            let shrunk = shrink_loop(gen, v, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}).\n\
+                 counterexample (shrunk): {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // greedy descent, bounded to avoid pathological loops
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+/// Generator: usize uniform in [lo, hi] that shrinks toward lo.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+    fn gen(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: pair of independent generators; shrinks component-wise.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn gen(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.gen(rng), self.1.gen(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Generator for random sparse matrices in triplet form, shrinking by
+/// dropping nonzeros and reducing dimensions.
+pub struct SparseGen {
+    pub max_m: usize,
+    pub max_k: usize,
+    pub max_density: f64,
+}
+
+/// A generated sparse matrix specification.
+#[derive(Clone, Debug)]
+pub struct SparseCase {
+    pub m: usize,
+    pub k: usize,
+    pub triplets: Vec<(usize, usize, f32)>,
+}
+
+impl Gen for SparseGen {
+    type Value = SparseCase;
+
+    fn gen(&self, rng: &mut Rng) -> SparseCase {
+        let m = rng.range(1, self.max_m + 1);
+        let k = rng.range(1, self.max_k + 1);
+        let density = rng.f64() * self.max_density;
+        let target = ((m * k) as f64 * density).ceil() as usize;
+        let mut seen = std::collections::HashSet::new();
+        let mut triplets = Vec::new();
+        for _ in 0..target {
+            let r = rng.below(m);
+            let c = rng.below(k);
+            if seen.insert((r, c)) {
+                triplets.push((r, c, rng.nz_value()));
+            }
+        }
+        SparseCase { m, k, triplets }
+    }
+
+    fn shrink(&self, v: &SparseCase) -> Vec<SparseCase> {
+        let mut out = Vec::new();
+        if v.triplets.len() > 1 {
+            // halve the nonzeros
+            let mut half = v.clone();
+            half.triplets.truncate(v.triplets.len() / 2);
+            out.push(half);
+            // drop the last nonzero
+            let mut minus = v.clone();
+            minus.triplets.pop();
+            out.push(minus);
+        } else if !v.triplets.is_empty() {
+            out.push(SparseCase { m: v.m, k: v.k, triplets: vec![] });
+        }
+        if v.m > 1 {
+            let m2 = v.m / 2 + 1;
+            out.push(SparseCase {
+                m: m2.min(v.m - 1),
+                k: v.k,
+                triplets: v
+                    .triplets
+                    .iter()
+                    .filter(|t| t.0 < m2.min(v.m - 1))
+                    .cloned()
+                    .collect(),
+            });
+        }
+        if v.k > 1 {
+            let k2 = v.k / 2 + 1;
+            out.push(SparseCase {
+                m: v.m,
+                k: k2.min(v.k - 1),
+                triplets: v
+                    .triplets
+                    .iter()
+                    .filter(|t| t.1 < k2.min(v.k - 1))
+                    .cloned()
+                    .collect(),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("usize in range", 200, &UsizeGen { lo: 2, hi: 50 }, |&v| {
+            (2..=50).contains(&v)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_counterexample() {
+        check("always fails", 10, &UsizeGen { lo: 0, hi: 100 }, |_| false);
+    }
+
+    #[test]
+    fn shrinking_reaches_minimum() {
+        // property "v < 10" fails from 10 upward; shrinker should land at 10
+        let gen = UsizeGen { lo: 0, hi: 1000 };
+        let failing = 873;
+        let shrunk = shrink_loop(&gen, failing, &|&v: &usize| v < 10);
+        assert_eq!(shrunk, 10);
+    }
+
+    #[test]
+    fn sparse_gen_respects_bounds() {
+        let g = SparseGen { max_m: 40, max_k: 60, max_density: 0.3 };
+        check("sparse bounds", 50, &g, |c| {
+            c.m >= 1
+                && c.m <= 40
+                && c.k >= 1
+                && c.k <= 60
+                && c.triplets.iter().all(|&(r, cc, v)| r < c.m && cc < c.k && v != 0.0)
+        });
+    }
+
+    #[test]
+    fn pair_gen_shrinks_componentwise() {
+        let g = PairGen(UsizeGen { lo: 0, hi: 10 }, UsizeGen { lo: 0, hi: 10 });
+        let shrinks = g.shrink(&(5, 5));
+        assert!(shrinks.iter().any(|&(a, b)| a < 5 && b == 5));
+        assert!(shrinks.iter().any(|&(a, b)| a == 5 && b < 5));
+    }
+}

@@ -1,0 +1,199 @@
+//! Descriptive statistics used by the experiment harness: percentiles,
+//! box-plot summaries (the paper's Fig. 9), Pearson/Spearman correlation
+//! (Fig. 7), and geometric means for speedup aggregation (Fig. 10).
+
+/// Five-number summary + mean, matching a matplotlib box plot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q25: f64,
+    pub median: f64,
+    pub q75: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub count: usize,
+}
+
+/// Linear-interpolated percentile `p` in `[0, 100]` of unsorted data.
+pub fn percentile(data: &[f64], p: f64) -> f64 {
+    assert!(!data.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of already-sorted data.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Box-plot summary of unsorted data.
+pub fn box_stats(data: &[f64]) -> BoxStats {
+    assert!(!data.is_empty(), "box_stats of empty slice");
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BoxStats {
+        min: v[0],
+        q25: percentile_sorted(&v, 25.0),
+        median: percentile_sorted(&v, 50.0),
+        q75: percentile_sorted(&v, 75.0),
+        max: v[v.len() - 1],
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        count: v.len(),
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        let dx = a - mx;
+        let dy = b - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Spearman rank correlation (Pearson over fractional ranks).
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Fractional ranks with tie averaging.
+pub fn ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Geometric mean (requires strictly positive inputs).
+pub fn geomean(data: &[f64]) -> f64 {
+    assert!(!data.is_empty());
+    let s: f64 = data
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean needs positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (s / data.len() as f64).exp()
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(data: &[f64]) -> (f64, f64) {
+    assert!(!data.is_empty());
+    let n = data.len() as f64;
+    let mean = data.iter().sum::<f64>() / n;
+    if data.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_endpoints_and_median() {
+        let d = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&d, 0.0), 1.0);
+        assert_eq!(percentile(&d, 100.0), 5.0);
+        assert_eq!(percentile(&d, 50.0), 3.0);
+        assert_eq!(percentile(&d, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let d = [0.0, 10.0];
+        assert!((percentile(&d, 30.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_basic() {
+        let d = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let b = box_stats(&d);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 5.0);
+        assert_eq!(b.median, 3.0);
+        assert_eq!(b.mean, 3.0);
+        assert_eq!(b.count, 5);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        let x = [1.0, 1.0, 1.0];
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(pearson(&x, &y), 0.0);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear_is_one() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y: Vec<f64> = x.iter().map(|v: &f64| v.exp()).collect();
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_tie_averaging() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.138089935).abs() < 1e-6);
+    }
+}

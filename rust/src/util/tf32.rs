@@ -1,0 +1,120 @@
+//! TF32 emulation — the tensor-core input format (§2 of the paper): FP32's
+//! 8-bit exponent with a 10-bit mantissa. Inputs are rounded to TF32,
+//! products accumulate in FP32 — the paper's numerics contract for
+//! "preserving the output precision of FP32".
+//!
+//! Used by the error-bound tests to show the HRPB engine's results under
+//! TF32 input rounding stay within the paper-implied tolerance of full
+//! FP32, and available to callers who want GPU-faithful numerics.
+
+/// Round an f32 to TF32 precision (10 explicit mantissa bits), using
+/// round-to-nearest-even on the truncated 13 bits — what the A100's TCU
+/// does to FP32 inputs.
+#[inline]
+pub fn round_tf32(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    // keep 1 sign + 8 exponent + 10 mantissa = top 19 bits; RNE on bit 12
+    let mask: u32 = 0x0000_1FFF; // low 13 mantissa bits dropped
+    let half: u32 = 0x0000_1000;
+    let trunc = bits & !mask;
+    let rem = bits & mask;
+    let rounded = if rem > half || (rem == half && (trunc >> 13) & 1 == 1) {
+        trunc.wrapping_add(0x0000_2000)
+    } else {
+        trunc
+    };
+    f32::from_bits(rounded)
+}
+
+/// Round a slice in place.
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = round_tf32(*x);
+    }
+}
+
+/// TF32-emulated SpMM wrapper: rounds both operands' values to TF32, runs
+/// the wrapped engine (FP32 accumulation), mirroring the TCU dataflow.
+pub fn spmm_tf32(
+    engine: &dyn crate::spmm::SpmmEngine,
+    b: &crate::formats::Dense,
+) -> crate::formats::Dense {
+    let mut b32 = b.clone();
+    round_slice(&mut b32.data);
+    engine.spmm(&b32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Coo, Dense};
+    use crate::spmm::Algo;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_values_survive() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 1024.0, -0.125] {
+            assert_eq!(round_tf32(v), v, "{v} is exactly representable in TF32");
+        }
+    }
+
+    #[test]
+    fn mantissa_is_10_bits() {
+        // 1 + 2^-10 representable; 1 + 2^-11 rounds to 1 or 1 + 2^-10
+        let v = 1.0 + 2f32.powi(-10);
+        assert_eq!(round_tf32(v), v);
+        let w = 1.0 + 2f32.powi(-11);
+        let r = round_tf32(w);
+        assert!(r == 1.0 || r == v, "RNE lands on a TF32 neighbour, got {r}");
+        // rounded values always have zero low mantissa bits
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = (rng.f32() - 0.5) * 1e6;
+            assert_eq!(round_tf32(x).to_bits() & 0x1FFF, 0);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_by_tf32_eps() {
+        // eps(TF32) = 2^-11 for RNE
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 1e8;
+            if x == 0.0 {
+                continue;
+            }
+            let rel = ((round_tf32(x) - x) / x).abs();
+            assert!(rel <= 2f32.powi(-11), "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn specials_pass_through() {
+        assert!(round_tf32(f32::NAN).is_nan());
+        assert_eq!(round_tf32(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_tf32(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn tf32_spmm_error_within_paper_bound() {
+        // §2: TF32 inputs + FP32 accumulate preserves "FP32 output
+        // precision" — relative error should track eps(TF32) ~ 5e-4, far
+        // from eps(FP16) ~ 1e-3 * dynamic-range problems
+        let mut rng = Rng::new(3);
+        let coo = Coo::random(256, 256, 0.05, &mut rng);
+        let b = Dense::random(256, 64, &mut rng);
+        let engine = Algo::Hrpb.prepare(&coo);
+        let exact = engine.spmm(&b);
+        // round A too: rebuild with rounded values
+        let mut coo32 = coo.clone();
+        round_slice(&mut coo32.values);
+        let engine32 = Algo::Hrpb.prepare(&coo32);
+        let approx = spmm_tf32(engine32.as_ref(), &b);
+        let rel = approx.rel_fro_error(&exact);
+        assert!(rel > 0.0, "rounding must actually perturb something");
+        assert!(rel < 2e-3, "TF32 error {rel} above the paper-implied bound");
+    }
+}

@@ -1,0 +1,103 @@
+//! Measurement harness: warmup + repeated timing with robust aggregation.
+//! This replaces criterion (unavailable on the offline image) for the
+//! `benches/` targets; methodology mirrors criterion's warmup/sample split.
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Result of a repeated measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Minimum seconds per iteration (least-noise estimate).
+    pub min_s: f64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    /// Throughput in "units per second" for a per-iteration work amount.
+    pub fn per_sec(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / self.median_s
+    }
+
+    /// GFLOP/s given FLOPs per iteration.
+    pub fn gflops(&self, flops_per_iter: f64) -> f64 {
+        flops_per_iter / self.median_s / 1e9
+    }
+}
+
+/// Run `f` with `warmup` unmeasured iterations, then time `samples`
+/// iterations individually and aggregate.
+pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Measurement {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_s = times[times.len() / 2];
+    let min_s = times[0];
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    Measurement { median_s, min_s, mean_s, samples }
+}
+
+/// Time a single invocation (for one-shot costs like preprocessing).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut n = 0usize;
+        let m = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(m.samples, 5);
+        assert!(m.min_s <= m.median_s && m.median_s <= m.mean_s * 5.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, s) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let m = Measurement { median_s: 0.5, min_s: 0.5, mean_s: 0.5, samples: 1 };
+        assert!((m.gflops(1e9) - 2.0).abs() < 1e-12);
+        assert!((m.per_sec(10.0) - 20.0).abs() < 1e-12);
+    }
+}

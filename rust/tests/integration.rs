@@ -1,0 +1,166 @@
+//! Cross-module integration tests: generators → HRPB → engines → synergy →
+//! load balancing → cost models, exercised together on realistic matrices.
+
+use cutespmm::formats::{Coo, Csr, Dense};
+use cutespmm::gen::corpus::{specs, CorpusScale};
+use cutespmm::gen::{named, Family, MatrixSpec};
+use cutespmm::gpumodel::{algos, Machine, MatrixProfile};
+use cutespmm::spmm::{Algo, SpmmEngine};
+use cutespmm::synergy::Synergy;
+use cutespmm::util::rng::Rng;
+
+/// Every engine agrees with the dense oracle on every generator family.
+#[test]
+fn all_engines_agree_across_families() {
+    let families = vec![
+        Family::Banded { bandwidth: 12, band_fill: 0.6, noise: 0.01 },
+        Family::Mesh { dims: 2 },
+        Family::Mesh { dims: 3 },
+        Family::Rmat { edge_factor: 6, skew: 0.57 },
+        Family::Community { communities: 16, intra_degree: 8, inter_frac: 0.1 },
+        Family::BlockDiag { unit: 20, unit_density: 0.3 },
+        Family::Random { avg_degree: 5 },
+    ];
+    let mut rng = Rng::new(1);
+    for (i, family) in families.into_iter().enumerate() {
+        let spec = MatrixSpec { name: format!("it{i}"), rows: 1200, family, seed: i as u64 };
+        let coo = spec.generate();
+        let b = Dense::random(coo.cols, 24, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        for algo in Algo::all() {
+            let got = algo.prepare(&coo).spmm(&b);
+            let err = got.rel_fro_error(&want);
+            assert!(err < 1e-4, "{} on family {i}: err {err}", algo.name());
+        }
+    }
+}
+
+/// The named GNN recipes flow through profile → model → prediction and the
+/// executable engine agrees with the oracle.
+#[test]
+fn named_recipes_end_to_end() {
+    for name in ["cora", "citeseer"] {
+        let spec = named::by_name(name).unwrap().spec;
+        let coo = spec.generate();
+        let p = MatrixProfile::compute(&coo);
+        assert!(p.nnz > 0);
+        for m in [Machine::a100(), Machine::rtx4090()] {
+            for algo in [Algo::Hrpb, Algo::TcGnn] {
+                let pred = algos::predict(algo, &p, 32, &m);
+                assert!(pred.gflops > 0.0 && pred.gflops < 200_000.0);
+            }
+        }
+        let mut rng = Rng::new(3);
+        let b = Dense::random(coo.cols, 16, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        assert!(Algo::Hrpb.prepare(&coo).spmm(&b).rel_fro_error(&want) < 1e-4);
+    }
+}
+
+/// Corpus matrices stay structurally valid through HRPB round trips and the
+/// synergy classes cover the expected spread.
+#[test]
+fn corpus_sample_roundtrips_and_classifies() {
+    let all = specs(CorpusScale::Quick, 42);
+    // a stratified handful (keep the test < a few seconds)
+    let sample: Vec<_> = all.into_iter().step_by(23).take(6).collect();
+    let mut seen = std::collections::HashSet::new();
+    for spec in &sample {
+        // scale rows down for the dense-oracle comparison
+        let mut small = spec.clone();
+        small.rows = 2000;
+        if let Family::Community { ref mut communities, .. } = small.family {
+            *communities = (*communities).min(200);
+        }
+        let coo = small.generate();
+        if coo.nnz() == 0 {
+            continue;
+        }
+        let hrpb = cutespmm::hrpb::build_from_coo(&coo);
+        hrpb.validate().unwrap();
+        let back = cutespmm::hrpb::decode::to_dense(&hrpb);
+        assert_eq!(back.max_abs_diff(&coo.to_dense()), 0.0, "{}", spec.name);
+        let stats = cutespmm::hrpb::stats::compute(&hrpb);
+        seen.insert(Synergy::from_alpha(stats.alpha));
+    }
+    assert!(!seen.is_empty());
+}
+
+/// Load-balanced execution must agree with unbalanced execution on a
+/// pathological skewed matrix (atomic consolidation correctness).
+#[test]
+fn balanced_execution_is_exact() {
+    let mut t = Vec::new();
+    let mut rng = Rng::new(9);
+    for c in 0..3000usize {
+        t.push((c % 16, (c * 3) % 8000, rng.nz_value()));
+    }
+    for r in (16..4000).step_by(16) {
+        t.push((r, r % 8000, rng.nz_value()));
+    }
+    let coo = Coo::from_triplets(4000, 8000, &t);
+    let hrpb = cutespmm::hrpb::build_from_coo(&coo);
+    let b = Dense::random(8000, 32, &mut rng);
+
+    use cutespmm::loadbalance as lb;
+    use cutespmm::spmm::hrpb::HrpbEngine;
+    let base = HrpbEngine::with_schedule(hrpb.clone(), lb::schedule_none(&hrpb)).spmm(&b);
+    for schedule in [
+        lb::schedule_sorted(&hrpb),
+        lb::schedule_avg_split(&hrpb),
+        lb::schedule_wave_aware(&hrpb, lb::Device { num_sms: 8, blocks_per_sm: 2 }),
+    ] {
+        let got = HrpbEngine::with_schedule(hrpb.clone(), schedule).spmm(&b);
+        assert!(got.rel_fro_error(&base) < 1e-6);
+    }
+}
+
+/// MatrixMarket IO round trip composed with the whole pipeline.
+#[test]
+fn mtx_io_to_engine() {
+    let mut rng = Rng::new(17);
+    let coo = Coo::random(500, 300, 0.02, &mut rng);
+    let path = std::env::temp_dir().join("cutespmm_integration.mtx");
+    cutespmm::formats::mtx::write_mtx(&path, &coo, Some("integration")).unwrap();
+    let back = cutespmm::formats::mtx::read_mtx(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back.nnz(), coo.nnz());
+    let b = Dense::random(300, 8, &mut rng);
+    let want = coo.to_dense().matmul(&b);
+    assert!(Algo::Hrpb.prepare(&back).spmm(&b).rel_fro_error(&want) < 1e-4);
+}
+
+/// The §4 paper claim: compaction means HRPB block count tracks *active*
+/// columns, not the full K extent; and CSR conversion is lossless.
+#[test]
+fn compaction_and_formats_consistency() {
+    let mut rng = Rng::new(23);
+    // 100 columns active out of 100k
+    let t: Vec<(usize, usize, f32)> =
+        (0..1600).map(|i| (i % 64, (i % 100) * 1000, rng.nz_value())).collect();
+    let coo = Coo::from_triplets(64, 100_000, &t);
+    let csr = Csr::from_coo(&coo);
+    assert_eq!(csr.to_coo().nnz(), coo.nnz());
+    let hrpb = cutespmm::hrpb::build_from_coo(&coo);
+    // per panel at most ceil(100/16) = 7 blocks
+    let max_blocks = (0..hrpb.num_panels())
+        .map(|p| hrpb.panel_blocks(p).len())
+        .max()
+        .unwrap();
+    assert!(max_blocks <= 7, "compaction failed: {max_blocks} blocks in one panel");
+}
+
+/// Synergy ordering is monotone in structure: banded-dense > mesh > random.
+#[test]
+fn synergy_ordering_matches_structure() {
+    let alpha = |family: Family| {
+        let spec = MatrixSpec { name: "s".into(), rows: 8000, family, seed: 5 };
+        let coo = spec.generate();
+        cutespmm::hrpb::stats::compute(&cutespmm::hrpb::build_from_coo(&coo)).alpha
+    };
+    let fem = alpha(Family::Banded { bandwidth: 16, band_fill: 0.7, noise: 0.0 });
+    let mesh = alpha(Family::Mesh { dims: 2 });
+    let rand = alpha(Family::Random { avg_degree: 4 });
+    assert!(fem > mesh, "fem {fem} mesh {mesh}");
+    assert!(mesh > rand, "mesh {mesh} rand {rand}");
+}

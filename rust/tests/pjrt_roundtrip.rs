@@ -1,0 +1,130 @@
+//! Integration tests of the full three-layer AOT path: HRPB feed → PJRT
+//! executable (compiled from the Pallas/JAX HLO artifacts) → Rust results,
+//! cross-checked against the native engine and the dense oracle.
+//!
+//! These tests skip (with a notice) when `make artifacts` has not run.
+
+use cutespmm::coordinator::{Config, Coordinator, EnginePolicy};
+use cutespmm::formats::{Coo, Dense};
+use cutespmm::runtime;
+use cutespmm::spmm::Algo;
+use cutespmm::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    let ok = runtime::artifacts_available();
+    if !ok {
+        eprintln!("skipping PJRT integration test: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn pjrt_matches_native_and_oracle_across_shapes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = runtime::PjrtService::start(runtime::default_artifacts_dir()).unwrap();
+    let h = svc.handle();
+    let mut rng = Rng::new(1);
+    // shapes spanning several buckets, incl. awkward non-multiples
+    for (m, k, n, d) in [
+        (100, 200, 32, 0.05),
+        (500, 510, 32, 0.01),
+        (300, 400, 128, 0.02),
+        (1000, 1800, 128, 0.004),
+        (17, 33, 32, 0.2),
+    ] {
+        let coo = Coo::random(m, k, d, &mut rng);
+        let b = Dense::random(k, n, &mut rng);
+        let hrpb = Arc::new(cutespmm::hrpb::build_from_coo(&coo));
+        let via_pjrt = h.spmm(hrpb, b.clone()).unwrap();
+        let via_native = Algo::Hrpb.prepare(&coo).spmm(&b);
+        let oracle = coo.to_dense().matmul(&b);
+        assert!(via_pjrt.rel_fro_error(&oracle) < 1e-4, "pjrt vs oracle ({m}x{k} n={n})");
+        assert!(via_pjrt.rel_fro_error(&via_native) < 1e-4, "pjrt vs native ({m}x{k} n={n})");
+    }
+}
+
+#[test]
+fn pjrt_under_concurrent_coordinator_traffic() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = runtime::PjrtService::start(runtime::default_artifacts_dir()).unwrap();
+    let coord = Arc::new(Coordinator::start(
+        Config { workers: 3, engine: EnginePolicy::PreferPjrt, ..Default::default() },
+        Some(svc.handle()),
+    ));
+    let mut rng = Rng::new(2);
+    let coo = Coo::random(400, 500, 0.02, &mut rng);
+    let id = coord.register("pjrt-mat", &coo);
+    let dense = Arc::new(coo.to_dense());
+
+    let mut saw_pjrt = false;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let coord = coord.clone();
+            let dense = dense.clone();
+            handles.push(s.spawn(move || {
+                let mut any_pjrt = false;
+                for i in 0..6 {
+                    let b = Dense::random(500, 32, &mut Rng::new(t * 31 + i));
+                    let want = dense.matmul(&b);
+                    let resp = coord.call(id, b).unwrap();
+                    assert!(resp.c.rel_fro_error(&want) < 1e-4);
+                    any_pjrt |= resp.engine == "pjrt";
+                }
+                any_pjrt
+            }));
+        }
+        for h in handles {
+            saw_pjrt |= h.join().unwrap();
+        }
+    });
+    assert!(saw_pjrt, "no request was served by the PJRT engine");
+}
+
+#[test]
+fn pjrt_falls_back_to_native_on_oversize() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = runtime::PjrtService::start(runtime::default_artifacts_dir()).unwrap();
+    let coord = Coordinator::start(
+        Config { workers: 1, engine: EnginePolicy::PreferPjrt, ..Default::default() },
+        Some(svc.handle()),
+    );
+    let mut rng = Rng::new(3);
+    // K = 9000 exceeds every bucket -> PJRT must fail -> fallback serves it
+    let coo = Coo::random(300, 9000, 0.002, &mut rng);
+    let id = coord.register("oversize", &coo);
+    let b = Dense::random(9000, 32, &mut rng);
+    let want = coo.to_dense().matmul(&b);
+    let resp = coord.call(id, b).unwrap();
+    assert_eq!(resp.engine, "cutespmm-native");
+    assert!(resp.c.rel_fro_error(&want) < 1e-5);
+    coord.shutdown();
+}
+
+#[test]
+fn bucket_padding_is_inert_through_pjrt() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = runtime::PjrtService::start(runtime::default_artifacts_dir()).unwrap();
+    let h = svc.handle();
+    // two matrices identical except the second has fewer blocks (more
+    // padding in-bucket); both must be exact
+    let mut rng = Rng::new(4);
+    let a1 = Coo::random(128, 300, 0.05, &mut rng);
+    let a2 = Coo::random(48, 300, 0.01, &mut rng);
+    for a in [a1, a2] {
+        let b = Dense::random(300, 32, &mut rng);
+        let want = a.to_dense().matmul(&b);
+        let hrpb = Arc::new(cutespmm::hrpb::build_from_coo(&a));
+        let got = h.spmm(hrpb, b).unwrap();
+        assert!(got.rel_fro_error(&want) < 1e-4);
+    }
+}

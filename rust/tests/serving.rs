@@ -1,0 +1,177 @@
+//! Integration tests of the L3 serving stack: coordinator + registry +
+//! batcher + workers under load, failure injection, and backpressure.
+
+use cutespmm::coordinator::{BatchPolicy, Config, Coordinator, EnginePolicy, MatrixId};
+use cutespmm::formats::{Coo, Dense};
+use cutespmm::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn coordinator(workers: usize, queue: usize) -> Coordinator {
+    Coordinator::start(
+        Config {
+            workers,
+            queue_capacity: queue,
+            batch: BatchPolicy {
+                max_batch_cols: 64,
+                max_batch_reqs: 8,
+                max_delay: Duration::from_millis(1),
+            },
+            engine: EnginePolicy::Native,
+        },
+        None,
+    )
+}
+
+#[test]
+fn sustained_mixed_load_is_correct() {
+    let coord = Arc::new(coordinator(4, 4096));
+    let mut rng = Rng::new(1);
+    let mats: Vec<(MatrixId, Coo)> = (0..3)
+        .map(|i| {
+            let coo = Coo::random(200 + i * 64, 300, 0.03, &mut rng);
+            (coord.register(&format!("m{i}"), &coo), coo)
+        })
+        .collect();
+    let denses: Vec<Dense> = mats.iter().map(|(_, c)| c.to_dense()).collect();
+
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let coord = coord.clone();
+            let mats = &mats;
+            let denses = &denses;
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for i in 0..25 {
+                    let mi = (t as usize + i) % mats.len();
+                    let n = [8, 16, 32][i % 3];
+                    let b = Dense::random(300, n, &mut rng);
+                    let want = denses[mi].matmul(&b);
+                    let resp = coord.call(mats[mi].0, b).unwrap();
+                    assert!(resp.c.rel_fro_error(&want) < 1e-5);
+                }
+            });
+        }
+    });
+    let m = coord.metrics();
+    assert_eq!(m.responses.load(Ordering::Relaxed), 150);
+    assert_eq!(m.failures.load(Ordering::Relaxed), 0);
+    // batching must actually happen under this concurrency
+    let batches = m.batches.load(Ordering::Relaxed);
+    assert!(batches < 150, "no batching occurred ({batches} batches for 150 reqs)");
+}
+
+#[test]
+fn try_submit_backpressure() {
+    // 1-capacity queue + a heavy matrix: try_submit must eventually reject
+    let coord = Coordinator::start(
+        Config {
+            workers: 1,
+            queue_capacity: 1,
+            batch: BatchPolicy {
+                max_batch_cols: 16,
+                max_batch_reqs: 1,
+                max_delay: Duration::from_millis(0),
+            },
+            engine: EnginePolicy::Native,
+        },
+        None,
+    );
+    let mut rng = Rng::new(2);
+    let coo = Coo::random(4096, 4096, 0.01, &mut rng);
+    let id = coord.register("heavy", &coo);
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..64 {
+        let b = Dense::random(4096, 16, &mut rng);
+        match coord.try_submit(id, b) {
+            Ok(rx) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    // all accepted requests must still complete
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    assert!(accepted > 0);
+    assert!(rejected > 0, "queue of 1 never filled (accepted {accepted})");
+    assert_eq!(coord.metrics().rejected.load(Ordering::Relaxed), rejected);
+    coord.shutdown();
+}
+
+#[test]
+fn failure_injection_bad_shapes_interleaved() {
+    let coord = coordinator(2, 256);
+    let mut rng = Rng::new(3);
+    let coo = Coo::random(100, 120, 0.05, &mut rng);
+    let id = coord.register("m", &coo);
+    let dense = coo.to_dense();
+    let mut ok = 0;
+    let mut bad = 0;
+    for i in 0..40 {
+        let rows = if i % 5 == 0 { 37 } else { 120 }; // every 5th is malformed
+        let b = Dense::random(rows, 8, &mut rng);
+        match coord.call(id, b.clone()) {
+            Ok(resp) => {
+                ok += 1;
+                assert!(resp.c.rel_fro_error(&dense.matmul(&b)) < 1e-5);
+            }
+            Err(_) => bad += 1,
+        }
+    }
+    assert_eq!(ok, 32);
+    assert_eq!(bad, 8);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_pending() {
+    let coord = coordinator(1, 1024);
+    let mut rng = Rng::new(4);
+    let coo = Coo::random(256, 256, 0.02, &mut rng);
+    let id = coord.register("m", &coo);
+    let mut rxs = Vec::new();
+    for _ in 0..20 {
+        rxs.push(coord.submit(id, Dense::random(256, 8, &mut rng)));
+    }
+    coord.shutdown(); // must not drop queued work
+    let mut served = 0;
+    for rx in rxs {
+        if let Ok(Ok(_)) = rx.recv() {
+            served += 1;
+        }
+    }
+    assert_eq!(served, 20, "shutdown dropped {} in-flight requests", 20 - served);
+}
+
+#[test]
+fn preprocess_once_amortization_visible() {
+    let coord = coordinator(2, 256);
+    let mut rng = Rng::new(5);
+    let coo = Coo::random(2000, 2000, 0.005, &mut rng);
+    let id = coord.register("amort", &coo);
+    let entry = coord.registry().get(id).unwrap();
+    let prep = entry.preprocess_time;
+
+    // 30 requests reuse the single preprocessing
+    let t0 = std::time::Instant::now();
+    for _ in 0..30 {
+        let b = Dense::random(2000, 16, &mut rng);
+        coord.call(id, b).unwrap();
+    }
+    let serve_time = t0.elapsed();
+    // §6.3's premise: prep is paid once; serving 30 requests does not pay it
+    // 30 more times. (weak bound to stay robust on loaded CI machines)
+    assert!(
+        serve_time < prep * 30,
+        "serving 30 reqs ({serve_time:?}) should beat 30x preprocessing ({:?})",
+        prep * 30
+    );
+    assert_eq!(coord.registry().len(), 1);
+    coord.shutdown();
+}
