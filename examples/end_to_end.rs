@@ -84,6 +84,7 @@ fn drive(engine_policy: EnginePolicy, pjrt: Option<cutespmm::runtime::PjrtHandle
         engine: match engine_policy {
             EnginePolicy::Native => "native",
             EnginePolicy::PreferPjrt => "pjrt",
+            EnginePolicy::Auto => "auto",
         },
         requests: matrices.len() * requests_per_matrix,
         wall_s,

@@ -1,0 +1,126 @@
+//! Plan router: the synergy-driven planner end to end — rank engines per
+//! matrix, serve a mixed model zoo under `EnginePolicy::Auto`, and show the
+//! per-engine routing counters and observed-vs-predicted drift.
+//!
+//! ```text
+//! cargo run --release --example plan_router [-- calibrate]
+//! ```
+//!
+//! With `calibrate`, a micro-benchmark pass first rescales the analytical
+//! model into this host's seconds, which arms the online feedback loop.
+
+use cutespmm::coordinator::{Config, Coordinator, EnginePolicy};
+use cutespmm::formats::Dense;
+use cutespmm::gen::{Family, MatrixSpec};
+use cutespmm::gpumodel::Machine;
+use cutespmm::planner::Planner;
+use cutespmm::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let planner = Arc::new(Planner::new(Machine::a100()));
+    if std::env::args().any(|a| a == "calibrate") {
+        println!("calibrating candidate engines on this host ...");
+        let c = planner.calibrate(4096);
+        for algo in cutespmm::planner::CANDIDATES {
+            println!("  {:<10} model x {:.3e}", algo.name(), c.scale_for(algo));
+        }
+    }
+
+    // a zoo spanning the synergy regimes: the planner should split it
+    let zoo = vec![
+        MatrixSpec {
+            name: "fem-dense-band".into(),
+            rows: 16_384,
+            family: Family::Banded { bandwidth: 24, band_fill: 0.65, noise: 0.0 },
+            seed: 1,
+        },
+        MatrixSpec {
+            name: "mesh2d".into(),
+            rows: 16_384,
+            family: Family::Mesh { dims: 2 },
+            seed: 2,
+        },
+        MatrixSpec {
+            name: "web-rmat".into(),
+            rows: 8_192,
+            family: Family::Rmat { edge_factor: 6, skew: 0.57 },
+            seed: 3,
+        },
+        MatrixSpec {
+            name: "chem-blockdiag".into(),
+            rows: 8_192,
+            family: Family::BlockDiag { unit: 24, unit_density: 0.3 },
+            seed: 4,
+        },
+    ];
+
+    let coord = Arc::new(Coordinator::start_with_planner(
+        Config { workers: 4, engine: EnginePolicy::Auto, ..Default::default() },
+        None,
+        Some(planner.clone()),
+    ));
+
+    let mut ids = Vec::new();
+    for spec in &zoo {
+        let coo = spec.generate();
+        let id = coord.register(&spec.name, &coo);
+        let entry = coord.registry().get(id).unwrap();
+        let plan = entry.plan.as_ref().expect("auto registration plans");
+        println!(
+            "{:<16} {:>7}x{:<7} nnz={:<8} alpha={:.3} {:<6} -> {:<8} ({})",
+            entry.name,
+            entry.rows,
+            entry.cols,
+            entry.nnz,
+            plan.alpha,
+            plan.synergy.name(),
+            plan.engine.name(),
+            plan.rationale
+        );
+        ids.push((id, coo.cols));
+    }
+
+    // mixed traffic: every matrix serves on its planned engine
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let coord = coord.clone();
+            let ids = ids.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for i in 0..20 {
+                    let (id, cols) = ids[(t as usize + i) % ids.len()];
+                    let b = Dense::random(cols, 16, &mut rng);
+                    let resp = coord.call(id, b).expect("request failed");
+                    assert_eq!(resp.c.cols, 16);
+                }
+            });
+        }
+    });
+
+    println!("\n{}", coord.metrics().report());
+    println!("\nper-engine routing:");
+    for lane in coord.metrics().engine_snapshot() {
+        print!(
+            "  {:<10} requests={:<4} batches={:<4} observed={:>8} us",
+            lane.engine, lane.requests, lane.batches, lane.observed_us
+        );
+        if lane.predicted_us > 0 {
+            println!("  predicted={:>8} us  drift={:.2}x", lane.predicted_us, lane.drift);
+        } else {
+            println!();
+        }
+    }
+    let cache = planner.cache().stats();
+    println!("\nplan cache: {} hits / {} misses", cache.hits, cache.misses);
+    for d in planner.feedback().snapshot() {
+        println!(
+            "feedback {:<10} ratio={:.2} samples={} demoted={}",
+            d.algo.name(),
+            d.ratio,
+            d.samples,
+            d.demoted
+        );
+    }
+    println!("plan_router OK");
+}

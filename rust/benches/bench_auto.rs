@@ -1,0 +1,13 @@
+//! Auto-policy experiment: adaptive engine selection (planner decision rule)
+//! vs fixed policies vs the per-matrix oracle, over the synthetic corpus.
+//!
+//! `cargo bench --bench bench_auto` (quick 1/10 corpus by default;
+//! set `CUTESPMM_FULL=1` for the full ~1100-matrix run).
+
+use cutespmm::bench::experiments;
+
+fn main() {
+    let quick = std::env::var_os("CUTESPMM_FULL").is_none();
+    let records = experiments::corpus_records(quick);
+    println!("{}", experiments::auto_policy(&records));
+}

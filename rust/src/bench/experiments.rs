@@ -465,6 +465,151 @@ pub fn ablation_loadbalance() -> String {
     out
 }
 
+/// Aggregate-throughput comparison of engine-selection policies over one
+/// `(machine, n)` slice of the corpus records.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoPolicySummary {
+    pub matrices: usize,
+    /// Fraction of matrices where the synergy-gated choice equals the
+    /// model's fastest candidate.
+    pub agreement: f64,
+    /// Aggregate useful throughput (total FLOPs / total modeled time) per
+    /// policy.
+    pub auto_gflops: f64,
+    pub oracle_gflops: f64,
+    pub hrpb_gflops: f64,
+    pub best_sc_gflops: f64,
+    pub tcgnn_gflops: f64,
+    /// How many matrices Auto routed to each engine ([`Algo::index`]).
+    pub routed: [usize; Algo::COUNT],
+}
+
+/// Replay the planner's synergy-gated decision rule
+/// ([`crate::planner::choose`]) over the records at `(machine, n)`.
+pub fn auto_policy_summary(records: &[Record], machine: &str, n: usize) -> Option<AutoPolicySummary> {
+    use crate::planner::{self, PlannerConfig};
+
+    let cfg = PlannerConfig::default();
+    // (flops, time) accumulators: auto, oracle, hrpb, best-sc, tcgnn
+    let mut agg: [(f64, f64); 5] = [(0.0, 0.0); 5];
+    let mut routed = [0usize; Algo::COUNT];
+    let (mut agree, mut total) = (0usize, 0usize);
+    for r in records {
+        let cells: Vec<(Algo, f64)> = planner::CANDIDATES
+            .iter()
+            .filter_map(|&a| r.get(machine, n, a).map(|c| (a, c.time_s)))
+            .collect();
+        if cells.len() != planner::CANDIDATES.len() {
+            continue;
+        }
+        let mut ranked = cells.clone();
+        ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let (chosen, _why) = planner::choose(
+            &ranked,
+            r.synergy,
+            r.alpha,
+            cfg.high_synergy_slack,
+            cfg.low_synergy_margin,
+        );
+        let time_of =
+            |algo: Algo| cells.iter().find(|(a, _)| *a == algo).map(|(_, t)| *t).unwrap();
+        let best_sc = cells
+            .iter()
+            .filter(|(a, _)| Algo::scalar_core().contains(a))
+            .map(|(_, t)| *t)
+            .fold(f64::INFINITY, f64::min);
+        let flops = 2.0 * r.nnz as f64 * n as f64;
+        for (slot, t) in [
+            (0, time_of(chosen)),
+            (1, ranked[0].1),
+            (2, time_of(Algo::Hrpb)),
+            (3, best_sc),
+            (4, time_of(Algo::TcGnn)),
+        ] {
+            agg[slot].0 += flops;
+            agg[slot].1 += t;
+        }
+        routed[chosen.index()] += 1;
+        total += 1;
+        if chosen == ranked[0].0 {
+            agree += 1;
+        }
+    }
+    if total == 0 {
+        return None;
+    }
+    let gflops = |slot: usize| agg[slot].0 / agg[slot].1 / 1e9;
+    Some(AutoPolicySummary {
+        matrices: total,
+        agreement: agree as f64 / total as f64,
+        auto_gflops: gflops(0),
+        oracle_gflops: gflops(1),
+        hrpb_gflops: gflops(2),
+        best_sc_gflops: gflops(3),
+        tcgnn_gflops: gflops(4),
+        routed,
+    })
+}
+
+/// Auto-policy experiment — Auto vs fixed policies vs the per-matrix oracle
+/// (fastest candidate everywhere), over the synthetic corpus.
+pub fn auto_policy(records: &[Record]) -> String {
+    let mut out = String::from(
+        "== Auto policy: synergy-driven engine selection vs fixed policies (modeled) ==\n",
+    );
+    let mut csv = Vec::new();
+    for m in MACHINES {
+        for n in [32usize, 128, 512] {
+            let Some(s) = auto_policy_summary(records, m, n) else { continue };
+            out.push_str(&format!(
+                "\n[{m}, N={n}] {} matrices, planner/oracle agreement {:.1}%\n",
+                s.matrices,
+                100.0 * s.agreement
+            ));
+            let mut rows = Vec::new();
+            for (g, label) in [
+                (s.auto_gflops, "auto"),
+                (s.oracle_gflops, "oracle"),
+                (s.hrpb_gflops, "hrpb-always"),
+                (s.best_sc_gflops, "best-sc-always"),
+                (s.tcgnn_gflops, "tcgnn-always"),
+            ] {
+                rows.push(vec![
+                    label.to_string(),
+                    format!("{g:.0}"),
+                    format!("{:.3}", g / s.oracle_gflops),
+                ]);
+                csv.push(vec![
+                    m.to_string(),
+                    n.to_string(),
+                    label.to_string(),
+                    format!("{g:.1}"),
+                    format!("{:.4}", g / s.oracle_gflops),
+                ]);
+            }
+            out.push_str(&render::table(&["policy", "agg GFLOPs", "vs oracle"], &rows));
+            out.push_str("auto routing: ");
+            for a in crate::planner::CANDIDATES {
+                if s.routed[a.index()] > 0 {
+                    out.push_str(&format!("{}={} ", a.name(), s.routed[a.index()]));
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out.push_str(
+        "\npaper shape: Auto tracks the oracle (within 10%) while every fixed policy \
+         pays for its losing regime: TCU-always loses on Low synergy, Best-SC-always \
+         loses on High.\n",
+    );
+    let _ = render::write_csv(
+        &results_dir().join("auto_policy.csv"),
+        &["machine", "n", "policy", "agg_gflops", "vs_oracle"],
+        &csv,
+    );
+    out
+}
+
 /// Run the corpus once at the scale implied by `quick` for the corpus-wide
 /// experiments (fig2/7/9/10, table2).
 pub fn corpus_records(quick: bool) -> Vec<Record> {
@@ -501,5 +646,31 @@ mod tests {
         let t = ablation_tiles();
         assert!(t.contains("TN=32"));
         assert!(t.contains("OI_shmem"));
+    }
+
+    #[test]
+    fn auto_policy_tracks_oracle_within_10_percent() {
+        let recs = tiny_records();
+        let mut checked = 0;
+        for m in MACHINES {
+            for n in [32usize, 128, 512] {
+                let Some(s) = auto_policy_summary(&recs, m, n) else { continue };
+                checked += 1;
+                assert!(s.oracle_gflops > 0.0);
+                assert!(s.auto_gflops <= s.oracle_gflops * (1.0 + 1e-9));
+                // acceptance: Auto within 10% of oracle aggregate throughput
+                assert!(
+                    s.auto_gflops >= 0.9 * s.oracle_gflops,
+                    "[{m}, N={n}] auto {} vs oracle {}",
+                    s.auto_gflops,
+                    s.oracle_gflops
+                );
+                assert!(s.routed.iter().sum::<usize>() == s.matrices);
+            }
+        }
+        assert!(checked >= 6, "summaries missing: {checked}");
+        let report = auto_policy(&recs);
+        assert!(report.contains("auto routing:"), "{report}");
+        assert!(report.contains("vs oracle"), "{report}");
     }
 }

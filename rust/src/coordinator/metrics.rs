@@ -1,5 +1,8 @@
-//! Serving metrics: latency histograms, throughput counters, queue gauges.
+//! Serving metrics: latency histograms, throughput counters, queue gauges,
+//! and per-engine routing lanes (which engine served what, and how far the
+//! observed latency drifts from the planner's prediction).
 
+use crate::spmm::Algo;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -79,6 +82,52 @@ impl LatencyHistogram {
     }
 }
 
+/// Routing lanes: one per executable algorithm plus one for the PJRT
+/// artifact engine.
+pub const ENGINE_LANES: usize = Algo::COUNT + 1;
+
+/// Lane index of the PJRT engine (algorithm lanes use [`Algo::index`]).
+pub const PJRT_LANE: usize = Algo::COUNT;
+
+/// Display name of a routing lane.
+pub fn lane_name(lane: usize) -> &'static str {
+    if lane == PJRT_LANE {
+        return "pjrt";
+    }
+    Algo::all()
+        .into_iter()
+        .find(|a| a.index() == lane)
+        .map(|a| a.name())
+        .unwrap_or("?")
+}
+
+/// Per-engine routing counters and observed-vs-predicted latency gauges.
+#[derive(Default)]
+pub struct EngineLane {
+    /// Requests served by this engine.
+    pub requests: AtomicU64,
+    /// Batches executed by this engine.
+    pub batches: AtomicU64,
+    /// Total observed execution time (µs) across batches.
+    pub observed_us: AtomicU64,
+    /// Total planner-predicted time (µs) for the same batches (0 when the
+    /// route had no plan, e.g. fixed policies).
+    pub predicted_us: AtomicU64,
+}
+
+/// Snapshot of one routing lane.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineLaneSnapshot {
+    pub engine: &'static str,
+    pub requests: u64,
+    pub batches: u64,
+    pub observed_us: u64,
+    pub predicted_us: u64,
+    /// observed/predicted across all batches; 1.0 = model exact, 0.0 = no
+    /// prediction recorded.
+    pub drift: f64,
+}
+
 /// Aggregate serving metrics.
 #[derive(Default)]
 pub struct Metrics {
@@ -97,6 +146,8 @@ pub struct Metrics {
     pub queue_depth: AtomicUsize,
     /// FLOPs served (useful, 2·nnz·n per request).
     pub flops: Mutex<f64>,
+    /// Per-engine routing lanes ([`Algo::index`] + [`PJRT_LANE`]).
+    pub engines: [EngineLane; ENGINE_LANES],
 }
 
 impl Metrics {
@@ -104,9 +155,53 @@ impl Metrics {
         *self.flops.lock().unwrap() += f;
     }
 
+    /// Record one executed batch on a routing lane. `predicted_s` is the
+    /// planner's corrected prediction for this batch (0.0 when unplanned).
+    pub fn record_route(&self, lane: usize, requests: u64, observed: Duration, predicted_s: f64) {
+        let l = &self.engines[lane];
+        l.requests.fetch_add(requests, Ordering::Relaxed);
+        l.batches.fetch_add(1, Ordering::Relaxed);
+        l.observed_us.fetch_add(observed.as_micros().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        if predicted_s > 0.0 {
+            l.predicted_us.fetch_add((predicted_s * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Requests served by `algo`'s lane (test + report convenience).
+    pub fn engine_requests(&self, algo: Algo) -> u64 {
+        self.engines[algo.index()].requests.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of every lane that served at least one batch.
+    pub fn engine_snapshot(&self) -> Vec<EngineLaneSnapshot> {
+        (0..ENGINE_LANES)
+            .filter_map(|i| {
+                let l = &self.engines[i];
+                let batches = l.batches.load(Ordering::Relaxed);
+                if batches == 0 {
+                    return None;
+                }
+                let observed_us = l.observed_us.load(Ordering::Relaxed);
+                let predicted_us = l.predicted_us.load(Ordering::Relaxed);
+                Some(EngineLaneSnapshot {
+                    engine: lane_name(i),
+                    requests: l.requests.load(Ordering::Relaxed),
+                    batches,
+                    observed_us,
+                    predicted_us,
+                    drift: if predicted_us > 0 {
+                        observed_us as f64 / predicted_us as f64
+                    } else {
+                        0.0
+                    },
+                })
+            })
+            .collect()
+    }
+
     pub fn report(&self) -> String {
         let lat = &self.request_latency;
-        format!(
+        let mut out = format!(
             "requests={} responses={} failures={} rejected={} batches={} \
              avg_batch={:.2} latency(mean/p50/p95/p99/max µs)={:.0}/{}/{}/{}/{} \
              served_gflop={:.3}",
@@ -123,7 +218,23 @@ impl Metrics {
             lat.percentile_us(99.0),
             lat.max_us(),
             *self.flops.lock().unwrap() / 1e9,
-        )
+        );
+        let lanes = self.engine_snapshot();
+        if !lanes.is_empty() {
+            out.push_str(" routing=[");
+            for (i, l) in lanes.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                if l.predicted_us > 0 {
+                    out.push_str(&format!("{}:{}(drift={:.2}x)", l.engine, l.requests, l.drift));
+                } else {
+                    out.push_str(&format!("{}:{}", l.engine, l.requests));
+                }
+            }
+            out.push(']');
+        }
+        out
     }
 }
 
@@ -168,5 +279,41 @@ mod tests {
         let r = m.report();
         assert!(r.contains("requests=3"));
         assert!(r.contains("served_gflop=1.000"));
+        assert!(!r.contains("routing="), "no lanes used -> no routing section");
+    }
+
+    #[test]
+    fn routing_lanes_accumulate_and_report() {
+        let m = Metrics::default();
+        m.record_route(Algo::Hrpb.index(), 4, Duration::from_micros(200), 100e-6);
+        m.record_route(Algo::Hrpb.index(), 2, Duration::from_micros(200), 100e-6);
+        m.record_route(Algo::Sputnik.index(), 1, Duration::from_micros(50), 0.0);
+        assert_eq!(m.engine_requests(Algo::Hrpb), 6);
+        assert_eq!(m.engine_requests(Algo::Sputnik), 1);
+        assert_eq!(m.engine_requests(Algo::Csr), 0);
+
+        let snap = m.engine_snapshot();
+        assert_eq!(snap.len(), 2);
+        let hrpb = snap.iter().find(|l| l.engine == "cutespmm").unwrap();
+        assert_eq!(hrpb.batches, 2);
+        assert_eq!(hrpb.observed_us, 400);
+        assert_eq!(hrpb.predicted_us, 200);
+        assert!((hrpb.drift - 2.0).abs() < 1e-9, "drift {}", hrpb.drift);
+        let sput = snap.iter().find(|l| l.engine == "sputnik").unwrap();
+        assert_eq!(sput.drift, 0.0, "no prediction -> no drift gauge");
+
+        let r = m.report();
+        assert!(r.contains("routing="), "{r}");
+        assert!(r.contains("cutespmm:6(drift=2.00x)"), "{r}");
+        assert!(r.contains("sputnik:1"), "{r}");
+    }
+
+    #[test]
+    fn lane_names_cover_all_lanes() {
+        for lane in 0..ENGINE_LANES {
+            assert_ne!(lane_name(lane), "?", "lane {lane}");
+        }
+        assert_eq!(lane_name(PJRT_LANE), "pjrt");
+        assert_eq!(lane_name(Algo::Hrpb.index()), "cutespmm");
     }
 }

@@ -28,13 +28,16 @@ pub use metrics::Metrics;
 pub use registry::{Entry, MatrixId, Registry};
 
 use crate::formats::Dense;
+use crate::planner::Planner;
 use crate::runtime::PjrtHandle;
-use crate::spmm::SpmmEngine;
+use crate::spmm::{Algo, SpmmEngine};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use self::metrics::PJRT_LANE;
 
 /// Which engine executes batches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,6 +47,32 @@ pub enum EnginePolicy {
     /// Prefer the AOT PJRT artifact, fall back to native when no shape
     /// bucket fits or execution fails.
     PreferPjrt,
+    /// Per-matrix adaptive routing: the [`crate::planner`] ranks every
+    /// executable engine at registration time (synergy class + modeled
+    /// runtimes + calibration + online feedback) and each matrix executes
+    /// on its planned engine. Routing is fixed at registration: feedback
+    /// demotion invalidates the plan cache and reroutes matrices registered
+    /// *afterwards*; already-registered entries keep their engine.
+    Auto,
+}
+
+impl EnginePolicy {
+    pub fn parse(s: &str) -> Option<EnginePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(EnginePolicy::Native),
+            "pjrt" | "prefer-pjrt" => Some(EnginePolicy::PreferPjrt),
+            "auto" => Some(EnginePolicy::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnginePolicy::Native => "native",
+            EnginePolicy::PreferPjrt => "pjrt",
+            EnginePolicy::Auto => "auto",
+        }
+    }
 }
 
 /// Coordinator configuration.
@@ -70,7 +99,9 @@ impl Default for Config {
 #[derive(Debug)]
 pub struct Response {
     pub c: Dense,
-    /// Engine that produced it ("cutespmm-native" / "pjrt").
+    /// Engine that produced it: "cutespmm-native" / "pjrt" under the fixed
+    /// policies, or the planned engine's name (e.g. "sputnik", "cutespmm")
+    /// under `EnginePolicy::Auto`.
     pub engine: &'static str,
     /// Submit → response latency.
     pub latency: Duration,
@@ -100,6 +131,7 @@ enum Ingress {
 pub struct Coordinator {
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
+    planner: Option<Arc<Planner>>,
     ingress: SyncSender<Ingress>,
     next_token: AtomicU64,
     router: Option<std::thread::JoinHandle<()>>,
@@ -108,8 +140,27 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start router + workers. `pjrt` supplies the AOT engine when the
-    /// policy prefers it.
+    /// policy prefers it. `EnginePolicy::Auto` gets a default planner
+    /// (A100 cost model); use [`Coordinator::start_with_planner`] to supply
+    /// a calibrated one.
     pub fn start(config: Config, pjrt: Option<PjrtHandle>) -> Coordinator {
+        let planner = match config.engine {
+            EnginePolicy::Auto => Some(Arc::new(Planner::new(crate::gpumodel::Machine::a100()))),
+            _ => None,
+        };
+        Coordinator::start_with_planner(config, pjrt, planner)
+    }
+
+    /// Start with an explicit planner (ignored unless the policy is `Auto`).
+    pub fn start_with_planner(
+        config: Config,
+        pjrt: Option<PjrtHandle>,
+        planner: Option<Arc<Planner>>,
+    ) -> Coordinator {
+        let planner = match config.engine {
+            EnginePolicy::Auto => planner,
+            _ => None,
+        };
         let registry = Arc::new(Registry::new());
         let metrics = Arc::new(Metrics::default());
         let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(config.queue_capacity);
@@ -123,11 +174,12 @@ impl Coordinator {
             let registry = registry.clone();
             let metrics = metrics.clone();
             let pjrt = pjrt.clone();
+            let planner = planner.clone();
             let engine = config.engine;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cutespmm-worker-{w}"))
-                    .spawn(move || worker_loop(job_rx, registry, metrics, engine, pjrt))
+                    .spawn(move || worker_loop(job_rx, registry, metrics, engine, pjrt, planner))
                     .expect("spawn worker"),
             );
         }
@@ -145,6 +197,7 @@ impl Coordinator {
         Coordinator {
             registry,
             metrics,
+            planner,
             ingress: ingress_tx,
             next_token: AtomicU64::new(0),
             router: Some(router),
@@ -160,9 +213,18 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Register a matrix (preprocess-once; see [`Registry`]).
+    /// The engine planner (present only under `EnginePolicy::Auto`).
+    pub fn planner(&self) -> Option<&Arc<Planner>> {
+        self.planner.as_ref()
+    }
+
+    /// Register a matrix (preprocess-once; see [`Registry`]). Under
+    /// `EnginePolicy::Auto` this plans the matrix's engine.
     pub fn register(&self, name: &str, coo: &crate::formats::Coo) -> MatrixId {
-        self.registry.register(name, coo)
+        match &self.planner {
+            Some(planner) => self.registry.register_planned(name, coo, planner),
+            None => self.registry.register(name, coo),
+        }
     }
 
     /// Submit a request; blocks only if the bounded ingress queue is full
@@ -306,6 +368,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     engine: EnginePolicy,
     pjrt: Option<PjrtHandle>,
+    planner: Option<Arc<Planner>>,
 ) {
     loop {
         let job = {
@@ -313,7 +376,7 @@ fn worker_loop(
             guard.recv()
         };
         let Ok(job) = job else { break };
-        execute_job(job, &registry, &metrics, engine, pjrt.as_ref());
+        execute_job(job, &registry, &metrics, engine, pjrt.as_ref(), planner.as_deref());
     }
 }
 
@@ -323,6 +386,7 @@ fn execute_job(
     metrics: &Metrics,
     engine: EnginePolicy,
     pjrt: Option<&PjrtHandle>,
+    planner: Option<&Planner>,
 ) {
     let batch_size = job.reqs.len();
     let Some(entry) = registry.get(job.matrix) else {
@@ -353,23 +417,60 @@ fn execute_job(
         col += req.b.cols;
     }
 
-    // execute (one launch per batch)
+    // execute (one launch per batch); `lane` tags the routing metrics and
+    // `predicted_s` is the planner's corrected estimate for this batch
+    // (0.0 when the route is unplanned).
     let t0 = Instant::now();
-    let (c, engine_name): (Dense, &'static str) = if good_cols == 0 {
-        (Dense::zeros(entry.rows, 0), "none")
-    } else {
-        match engine {
-            EnginePolicy::PreferPjrt => {
-                let via_pjrt = pjrt.and_then(|h| h.spmm(entry.hrpb.clone(), fused.clone()).ok());
-                match via_pjrt {
-                    Some(c) => (c, "pjrt"),
-                    None => (entry.engine.spmm(&fused), "cutespmm-native"),
+    let (c, engine_name, lane, predicted_s): (Dense, &'static str, Option<usize>, f64) =
+        if good_cols == 0 {
+            (Dense::zeros(entry.rows, 0), "none", None, 0.0)
+        } else {
+            // fixed policies only see unplanned entries, which always carry
+            // the HRPB engine (see `Entry::engine`)
+            let native =
+                || entry.engine.as_ref().expect("fixed-policy entry carries the HRPB engine");
+            match engine {
+                EnginePolicy::PreferPjrt => {
+                    let via_pjrt =
+                        pjrt.and_then(|h| h.spmm(entry.hrpb.clone(), fused.clone()).ok());
+                    match via_pjrt {
+                        Some(c) => (c, "pjrt", Some(PJRT_LANE), 0.0),
+                        None => {
+                            (native().spmm(&fused), "cutespmm-native",
+                             Some(Algo::Hrpb.index()), 0.0)
+                        }
+                    }
+                }
+                EnginePolicy::Native => {
+                    (native().spmm(&fused), "cutespmm-native", Some(Algo::Hrpb.index()), 0.0)
+                }
+                EnginePolicy::Auto => {
+                    let predicted = entry
+                        .plan
+                        .as_ref()
+                        .map(|p| p.predicted_s_per_col * good_cols as f64)
+                        .unwrap_or(0.0);
+                    let lane = entry
+                        .plan
+                        .as_ref()
+                        .map(|p| p.engine.index())
+                        .unwrap_or(Algo::Hrpb.index());
+                    (entry.exec.spmm(&fused), entry.exec.name(), Some(lane), predicted)
                 }
             }
-            EnginePolicy::Native => (entry.engine.spmm(&fused), "cutespmm-native"),
+        };
+    let exec_elapsed = t0.elapsed();
+    metrics.exec_latency.record(exec_elapsed);
+    if let Some(lane) = lane {
+        let good_reqs = bad.iter().filter(|&&b| !b).count() as u64;
+        metrics.record_route(lane, good_reqs, exec_elapsed, predicted_s);
+        // close the loop: observed batch latency feeds engine demotion
+        if let (Some(planner), Some(plan)) = (planner, entry.plan.as_ref()) {
+            if predicted_s > 0.0 {
+                planner.observe(plan.engine, predicted_s, exec_elapsed.as_secs_f64());
+            }
         }
-    };
-    metrics.exec_latency.record(t0.elapsed());
+    }
 
     // split C back per request and reply
     let mut col = 0usize;
@@ -524,6 +625,72 @@ mod tests {
         assert!(m.request_latency.count() == 8);
         assert!(m.report().contains("responses=8"));
         coord.shutdown();
+    }
+
+    #[test]
+    fn auto_policy_routes_by_synergy() {
+        use crate::gen::{Family, MatrixSpec};
+        use crate::synergy::Synergy;
+
+        let coord = Coordinator::start(
+            Config { workers: 2, engine: EnginePolicy::Auto, ..Default::default() },
+            None,
+        );
+        assert!(coord.planner().is_some());
+
+        // high synergy: dense-banded FEM regime (Emilia-like clustering)
+        let high = MatrixSpec {
+            name: "fem".into(),
+            rows: 16_384,
+            family: Family::Banded { bandwidth: 24, band_fill: 0.65, noise: 0.0 },
+            seed: 7,
+        }
+        .generate();
+        // low synergy: uniformly scattered (NotreDame-like)
+        let low = Coo::random(4096, 4096, 8.0 / 4096.0, &mut Rng::new(8));
+
+        let high_id = coord.register("high", &high);
+        let low_id = coord.register("low", &low);
+
+        let high_plan = coord.registry().get(high_id).unwrap().plan.clone().unwrap();
+        let low_plan = coord.registry().get(low_id).unwrap().plan.clone().unwrap();
+        assert_eq!(high_plan.synergy, Synergy::High, "alpha={}", high_plan.alpha);
+        assert_eq!(high_plan.engine, Algo::Hrpb, "{}", high_plan.rationale);
+        assert_eq!(low_plan.synergy, Synergy::Low, "alpha={}", low_plan.alpha);
+        assert!(
+            Algo::scalar_core().contains(&low_plan.engine),
+            "low synergy chose {} ({})",
+            low_plan.engine.name(),
+            low_plan.rationale
+        );
+
+        // serve one request per matrix: results must match an independent
+        // engine and the routing counters must attribute each batch to its
+        // planned engine
+        let mut rng = Rng::new(9);
+        for (id, coo, plan_engine) in
+            [(high_id, &high, high_plan.engine), (low_id, &low, low_plan.engine)]
+        {
+            let b = Dense::random(coo.cols, 8, &mut rng);
+            let want = Algo::Csr.prepare(coo).spmm(&b);
+            let resp = coord.call(id, b).unwrap();
+            assert!(resp.c.rel_fro_error(&want) < 1e-5);
+            assert_eq!(resp.engine, plan_engine.name());
+        }
+        let m = coord.metrics();
+        assert!(m.engine_requests(Algo::Hrpb) >= 1, "{}", m.report());
+        assert!(m.engine_requests(low_plan.engine) >= 1, "{}", m.report());
+        assert!(m.report().contains("routing="));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn engine_policy_parses() {
+        assert_eq!(EnginePolicy::parse("native"), Some(EnginePolicy::Native));
+        assert_eq!(EnginePolicy::parse("pjrt"), Some(EnginePolicy::PreferPjrt));
+        assert_eq!(EnginePolicy::parse("AUTO"), Some(EnginePolicy::Auto));
+        assert_eq!(EnginePolicy::parse("gpu"), None);
+        assert_eq!(EnginePolicy::Auto.name(), "auto");
     }
 
     #[test]

@@ -6,7 +6,9 @@
 
 use crate::formats::Coo;
 use crate::hrpb::{self, Hrpb, HrpbStats};
+use crate::planner::{Plan, Planner};
 use crate::spmm::hrpb::HrpbEngine;
+use crate::spmm::{Algo, SpmmEngine};
 use crate::synergy::{self, Synergy};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
@@ -24,11 +26,21 @@ pub struct Entry {
     pub cols: usize,
     pub nnz: usize,
     pub hrpb: Arc<Hrpb>,
-    pub engine: Arc<HrpbEngine>,
+    /// The native HRPB engine. `None` only for planned entries routed to a
+    /// scalar engine — building it there would deep-clone the HRPB for an
+    /// engine that never executes (fixed policies always carry it).
+    pub engine: Option<Arc<HrpbEngine>>,
     pub stats: HrpbStats,
     pub synergy: Synergy,
-    /// Wall-clock preprocessing cost (the §6.3 overhead).
+    /// Wall-clock preprocessing cost (the §6.3 overhead; under planned
+    /// registration this includes planning plus the chosen engine's
+    /// preparation).
     pub preprocess_time: Duration,
+    /// The planner's decision for this matrix (`None` under fixed policies).
+    pub plan: Option<Arc<Plan>>,
+    /// Engine that executes batches under `EnginePolicy::Auto`: the planned
+    /// engine, or the HRPB engine when registration was unplanned.
+    pub exec: Arc<dyn SpmmEngine>,
 }
 
 /// Thread-safe preprocess-once registry.
@@ -47,14 +59,35 @@ impl Registry {
     /// Register a matrix: builds HRPB + engine once, returns the handle.
     /// Re-registering the same name returns the existing entry.
     pub fn register(&self, name: &str, coo: &Coo) -> MatrixId {
+        self.register_inner(name, coo, None)
+    }
+
+    /// Register with per-matrix engine planning (`EnginePolicy::Auto`): the
+    /// planner ranks every candidate engine off the (already built) HRPB
+    /// stats and the entry carries the chosen engine, prepared once. Repeat
+    /// registrations of a structurally identical matrix hit the plan cache.
+    pub fn register_planned(&self, name: &str, coo: &Coo, planner: &Planner) -> MatrixId {
+        self.register_inner(name, coo, Some(planner))
+    }
+
+    fn register_inner(&self, name: &str, coo: &Coo, planner: Option<&Planner>) -> MatrixId {
         if let Some(&id) = self.by_name.read().unwrap().get(name) {
             return id;
         }
         let t0 = std::time::Instant::now();
         let hrpb = Arc::new(hrpb::build_from_coo(coo));
-        let engine = Arc::new(HrpbEngine::from_hrpb((*hrpb).clone()));
+        let stats = hrpb::stats::compute(&hrpb);
+        let plan = planner.map(|p| p.plan_with_hrpb(coo, &hrpb));
+        let (engine, exec): (Option<Arc<HrpbEngine>>, Arc<dyn SpmmEngine>) = match &plan {
+            Some(plan) if plan.engine != Algo::Hrpb => {
+                (None, Arc::from(plan.engine.prepare(coo)))
+            }
+            _ => {
+                let e = Arc::new(HrpbEngine::from_hrpb((*hrpb).clone()));
+                (Some(e.clone()), e)
+            }
+        };
         let preprocess_time = t0.elapsed();
-        let stats = *engine.stats();
         let id = MatrixId(self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
         let entry = Arc::new(Entry {
             id,
@@ -67,6 +100,8 @@ impl Registry {
             stats,
             synergy: synergy::Synergy::from_alpha(stats.alpha),
             preprocess_time,
+            plan,
+            exec,
         });
         self.entries.write().unwrap().insert(id, entry);
         self.by_name.write().unwrap().insert(name.to_string(), id);
@@ -127,6 +162,41 @@ mod tests {
         assert_ne!(ia, ib);
         assert_eq!(reg.by_name("b").unwrap().id, ib);
         assert_eq!(reg.entries().len(), 2);
+    }
+
+    #[test]
+    fn unplanned_entries_execute_on_hrpb() {
+        let reg = Registry::new();
+        let coo = Coo::random(64, 64, 0.1, &mut Rng::new(3));
+        let id = reg.register("m", &coo);
+        let e = reg.get(id).unwrap();
+        assert!(e.plan.is_none());
+        assert!(e.engine.is_some());
+        assert_eq!(e.exec.name(), "cutespmm");
+    }
+
+    #[test]
+    fn planned_registration_carries_plan_and_engine() {
+        use crate::gpumodel::Machine;
+        let planner = Planner::new(Machine::a100());
+        let reg = Registry::new();
+
+        // low synergy: one nonzero per brick -> a scalar engine
+        let lone: Vec<(usize, usize, f32)> = (0..64).map(|p| (p * 16, p * 16, 1.0)).collect();
+        let low = Coo::from_triplets(1024, 1024, &lone);
+        let low_id = reg.register_planned("low", &low, &planner);
+        let e = reg.get(low_id).unwrap();
+        let plan = e.plan.as_ref().unwrap();
+        assert!(Algo::scalar_core().contains(&plan.engine), "{}", plan.rationale);
+        assert_eq!(e.exec.name(), plan.engine.name());
+        assert_eq!(e.exec.shape(), (1024, 1024));
+        assert!(e.engine.is_none(), "scalar-routed entries skip the HRPB engine build");
+
+        // structurally identical matrix under a new name: plan cache hit
+        let hits_before = planner.cache().stats().hits;
+        let low2_id = reg.register_planned("low-again", &low, &planner);
+        assert_ne!(low_id, low2_id);
+        assert_eq!(planner.cache().stats().hits, hits_before + 1);
     }
 
     #[test]

@@ -6,9 +6,71 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
 use crate::formats::coo::Coo;
+
+/// MatrixMarket IO error (a message; the offline image has no `anyhow`).
+#[derive(Debug)]
+pub struct MtxError(pub String);
+
+impl std::fmt::Display for MtxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for MtxError {}
+
+impl From<std::io::Error> for MtxError {
+    fn from(e: std::io::Error) -> Self {
+        MtxError(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for MtxError {
+    fn from(e: std::num::ParseIntError) -> Self {
+        MtxError(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for MtxError {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        MtxError(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, MtxError>;
+
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(MtxError(format!($($arg)*)))
+    };
+}
+
+/// `anyhow::Context`-shaped helpers for the two wrapping styles used below.
+trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| MtxError(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| MtxError(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| MtxError(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| MtxError(f()))
+    }
+}
 
 /// Symmetry classes we understand.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -32,8 +32,15 @@ pub struct MatrixProfile {
 impl MatrixProfile {
     pub fn compute(coo: &Coo) -> MatrixProfile {
         let hrpb_mat = hrpb::build_from_coo(coo);
-        let stats = hrpb::stats::compute(&hrpb_mat);
-        let loads = loadbalance::panel_loads(&hrpb_mat);
+        Self::with_hrpb(coo, &hrpb_mat)
+    }
+
+    /// Profile against an already-built HRPB instance (the registry and the
+    /// planner build HRPB once and share it; rebuilding here would double
+    /// the §6.3 preprocessing cost).
+    pub fn with_hrpb(coo: &Coo, hrpb_mat: &hrpb::Hrpb) -> MatrixProfile {
+        let stats = hrpb::stats::compute(hrpb_mat);
+        let loads = loadbalance::panel_loads(hrpb_mat);
         let active: Vec<usize> = loads.iter().copied().filter(|&l| l > 0).collect();
         let mean_load = if active.is_empty() {
             0.0

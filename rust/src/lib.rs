@@ -19,6 +19,12 @@
 //!   CPU) plus the scalar-core and TC-GNN-style baselines.
 //! * [`gpumodel`] — analytical A100 / RTX-4090 cost models for all six
 //!   algorithms (regenerates the paper's figures and tables).
+//! * [`planner`] — synergy-driven adaptive engine selection: ranks every
+//!   executable engine per matrix (Table 1 classes + `gpumodel` runtimes),
+//!   caches plans by matrix fingerprint, optionally calibrates the model to
+//!   this host with a micro-benchmark pass, and demotes engines whose
+//!   observed serving latency drifts from the prediction. Surfaces as
+//!   `EnginePolicy::Auto` in the coordinator and `cutespmm plan` in the CLI.
 //! * [`runtime`] — PJRT artifact registry + executor (the AOT path).
 //! * [`coordinator`] — the L3 serving layer: matrix registry, router,
 //!   dynamic batcher, worker pool, metrics.
@@ -31,6 +37,7 @@ pub mod gen;
 pub mod gpumodel;
 pub mod hrpb;
 pub mod loadbalance;
+pub mod planner;
 pub mod runtime;
 pub mod spmm;
 pub mod synergy;

@@ -5,25 +5,31 @@
 //! cutespmm preprocess --mtx m.mtx            # HRPB stats + synergy
 //! cutespmm spmm --mtx m.mtx --n 128 [--algo cutespmm] [--pjrt]
 //! cutespmm synergy --mtx m.mtx [--n 128]
-//! cutespmm serve --matrix cora --requests 200 --n 32 [--pjrt]
+//! cutespmm plan --matrix cora [--n 128] [--machine a100] [--calibrate [rows]]
+//!               [--profile calib.json]       # ranked engine table + rationale
+//! cutespmm serve --matrix cora --requests 200 --n 32
+//!               [--engine native|pjrt|auto] [--calibrate] [--pjrt]
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
-//!                      preproc|ablation-tiles|ablation-balance|all> [--quick]
+//!                      preproc|ablation-tiles|ablation-balance|auto|all>
+//!                     [--quick]
 //! cutespmm selfcheck                          # engines vs oracle + PJRT
 //! ```
 //!
 //! Arguments are parsed by hand: the offline image has no clap (DESIGN.md §9).
 
-use cutespmm::bench::experiments;
+use cutespmm::bench::{experiments, render};
 use cutespmm::coordinator::{BatchPolicy, Config, Coordinator, EnginePolicy};
 use cutespmm::formats::{mtx, Coo, Dense};
 use cutespmm::gen::named;
 use cutespmm::gpumodel::{algos as gpu_algos, Machine, MatrixProfile};
+use cutespmm::planner::{Calibration, Planner, PlannerConfig};
 use cutespmm::runtime;
 use cutespmm::spmm::Algo;
 use cutespmm::util::rng::Rng;
 use cutespmm::util::timer::{measure, time_once};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
 
 /// Minimal flag parser: `--key value` pairs plus bare flags.
 struct Args {
@@ -146,6 +152,87 @@ fn cmd_synergy(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Build a planner from the shared CLI flags (`--machine`, `--n`,
+/// `--profile`, `--calibrate [rows]`).
+fn planner_from_args(args: &Args, n: usize) -> Result<Planner, String> {
+    let machine = match args.get("machine") {
+        Some(m) => Machine::by_name(m).ok_or_else(|| format!("unknown machine '{m}'"))?,
+        None => Machine::a100(),
+    };
+    let planner = Planner::with_config(PlannerConfig { machine, width: n, ..Default::default() });
+    if let Some(path) = args.get("profile") {
+        match Calibration::load(Path::new(path)) {
+            Ok(c) => {
+                println!("loaded calibration profile {path} (machine {})", c.machine);
+                planner.set_calibration(c);
+            }
+            // a missing/bad profile is only acceptable when --calibrate is
+            // about to (re)write it; otherwise the user would silently run
+            // uncalibrated
+            Err(e) if args.has("calibrate") => {
+                eprintln!("calibration profile {path} not loaded ({e}); writing it after calibration");
+            }
+            Err(e) => return Err(format!("failed to load calibration profile {path}: {e}")),
+        }
+    }
+    if args.has("calibrate") {
+        let rows = args.usize_or("calibrate", 8192).max(256);
+        eprintln!("calibrating candidate engines on this host (rows={rows}, width={n}) ...");
+        let c = planner.calibrate(rows);
+        for algo in cutespmm::planner::CANDIDATES {
+            eprintln!("  {:<10} model x {:.3e}", algo.name(), c.scale_for(algo));
+        }
+        if let Some(path) = args.get("profile") {
+            c.save(Path::new(path))?;
+            println!("saved calibration profile to {path}");
+        }
+    }
+    Ok(planner)
+}
+
+fn cmd_plan(args: &Args) -> Result<(), String> {
+    let (name, coo) = load_matrix(args)?;
+    let n = args.usize_or("n", 128);
+    let planner = planner_from_args(args, n)?;
+    let (plan, t_plan) = time_once(|| planner.plan(&coo));
+
+    println!(
+        "matrix {name}: {}x{} nnz={} — planned in {:.2} ms",
+        coo.rows,
+        coo.cols,
+        coo.nnz(),
+        t_plan * 1e3
+    );
+    println!(
+        "alpha={:.4} synergy={} OI_shmem={:.1} (512a) machine={} width={n}",
+        plan.alpha,
+        plan.synergy.name(),
+        512.0 * plan.alpha,
+        planner.machine().name,
+    );
+    let calibrated = planner.calibration().calibrated;
+    let mut rows = Vec::new();
+    for (rank, c) in plan.ranked.iter().enumerate() {
+        rows.push(vec![
+            format!("{}", rank + 1),
+            c.algo.name().to_string(),
+            format!("{:.1}", c.predicted_s * 1e6),
+            format!("{:.1}", c.modeled_s * 1e6),
+            c.bound.name().to_string(),
+            if c.algo == plan.engine { "<- chosen".to_string() } else { String::new() },
+        ]);
+    }
+    let pred_header = if calibrated { "predicted(us)" } else { "predicted(us,model)" };
+    println!(
+        "{}",
+        render::table(&["rank", "engine", pred_header, "modeled(us)", "bound", ""], &rows)
+    );
+    println!("chosen: {} — {}", plan.engine.name(), plan.rationale);
+    let cache = planner.cache().stats();
+    println!("plan cache: {} hits / {} misses / {} entries", cache.hits, cache.misses, cache.entries);
+    Ok(())
+}
+
 fn cmd_spmm(args: &Args) -> Result<(), String> {
     let (name, coo) = load_matrix(args)?;
     let n = args.usize_or("n", 128);
@@ -190,26 +277,48 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let requests = args.usize_or("requests", 200);
     let workers = args.usize_or("workers", 4);
 
-    let pjrt_svc = if args.has("pjrt") {
+    // --engine {native,pjrt,auto}; the legacy --pjrt flag implies pjrt
+    let engine = match args.get("engine") {
+        Some(e) => EnginePolicy::parse(e)
+            .ok_or_else(|| format!("unknown engine policy '{e}' (native|pjrt|auto)"))?,
+        None if args.has("pjrt") => EnginePolicy::PreferPjrt,
+        None => EnginePolicy::Native,
+    };
+    let pjrt_svc = if engine == EnginePolicy::PreferPjrt {
         Some(runtime::PjrtService::start(runtime::default_artifacts_dir())?)
     } else {
         None
     };
-    let engine = if pjrt_svc.is_some() { EnginePolicy::PreferPjrt } else { EnginePolicy::Native };
-    let coord = Coordinator::start(
+    let planner = if engine == EnginePolicy::Auto {
+        Some(Arc::new(planner_from_args(args, n.max(1))?))
+    } else {
+        None
+    };
+    let coord = Coordinator::start_with_planner(
         Config { workers, engine, batch: BatchPolicy::default(), ..Default::default() },
         pjrt_svc.as_ref().map(|s| s.handle()),
+        planner,
     );
     let id = coord.register(&name, &coo);
     let entry = coord.registry().get(id).unwrap();
     println!(
-        "registered {name}: {}x{} nnz={} synergy={} (preprocess {:.1} ms)",
+        "registered {name}: {}x{} nnz={} synergy={} engine-policy={} (preprocess {:.1} ms)",
         entry.rows,
         entry.cols,
         entry.nnz,
         entry.synergy.name(),
+        engine.name(),
         entry.preprocess_time.as_secs_f64() * 1e3
     );
+    if let Some(plan) = &entry.plan {
+        println!(
+            "plan: engine={} predicted={:.1} us/batch@{} — {}",
+            plan.engine.name(),
+            plan.predicted_s * 1e6,
+            plan.width,
+            plan.rationale
+        );
+    }
 
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(7);
@@ -271,7 +380,8 @@ fn cmd_selfcheck(args: &Args) -> Result<(), String> {
 fn cmd_experiment(args: &Args) -> Result<(), String> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let quick = args.has("quick");
-    let needs_corpus = matches!(which, "fig2" | "fig7" | "fig9" | "fig10" | "table2" | "all");
+    let needs_corpus =
+        matches!(which, "fig2" | "fig7" | "fig9" | "fig10" | "table2" | "auto" | "all");
     let records = if needs_corpus {
         eprintln!(
             "generating + profiling the {} corpus ...",
@@ -299,6 +409,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "preproc" => run("preproc", experiments::preprocessing()),
         "ablation-tiles" => run("ablation-tiles", experiments::ablation_tiles()),
         "ablation-balance" => run("ablation-balance", experiments::ablation_loadbalance()),
+        "auto" => run("auto", experiments::auto_policy(&records)),
         "all" => {
             run("table1", experiments::table1());
             run("table2", experiments::table2(&records));
@@ -311,6 +422,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             run("preproc", experiments::preprocessing());
             run("ablation-tiles", experiments::ablation_tiles());
             run("ablation-balance", experiments::ablation_loadbalance());
+            run("auto", experiments::auto_policy(&records));
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }
@@ -318,7 +430,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: cutespmm <gen|preprocess|spmm|synergy|serve|experiment|selfcheck> [flags]\n\
+    "usage: cutespmm <gen|preprocess|spmm|synergy|plan|serve|experiment|selfcheck> [flags]\n\
      see the module docs at the top of rust/src/main.rs for flag details"
 }
 
@@ -331,6 +443,7 @@ fn main() -> ExitCode {
         "preprocess" => cmd_preprocess(&args),
         "spmm" => cmd_spmm(&args),
         "synergy" => cmd_synergy(&args),
+        "plan" => cmd_plan(&args),
         "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "selfcheck" => cmd_selfcheck(&args),

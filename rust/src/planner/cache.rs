@@ -1,0 +1,148 @@
+//! Concurrent plan cache — repeat registrations of the same matrix reuse the
+//! ranked plan instead of re-running profile + cost models.
+//!
+//! Keys are structural fingerprints ([`super::fingerprint`]) combined with
+//! the planning width, so the same matrix planned at two widths holds two
+//! entries. Online feedback invalidates by bumping a generation counter:
+//! entries stamped with an older generation are treated as misses and
+//! replaced, so demotions propagate without a stop-the-world flush.
+
+use super::Plan;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Cache statistics snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub generation: u64,
+}
+
+#[derive(Default)]
+pub struct PlanCache {
+    entries: RwLock<HashMap<(u64, usize), (u64, Arc<Plan>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    generation: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Current invalidation generation.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Invalidate every cached plan (feedback demoted an engine, or the
+    /// calibration changed): plans stamped before the bump become misses.
+    pub fn invalidate(&self) {
+        self.generation.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Look a plan up; counts a hit only when the entry is current.
+    pub fn get(&self, fingerprint: u64, width: usize) -> Option<Arc<Plan>> {
+        let generation = self.generation();
+        let guard = self.entries.read().unwrap();
+        match guard.get(&(fingerprint, width)) {
+            Some((stamp, plan)) if *stamp == generation => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(plan.clone())
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a plan under the current generation.
+    pub fn insert(&self, fingerprint: u64, width: usize, plan: Arc<Plan>) {
+        let generation = self.generation();
+        self.entries.write().unwrap().insert((fingerprint, width), (generation, plan));
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.read().unwrap().len(),
+            generation: self.generation(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::Algo;
+    use crate::synergy::Synergy;
+
+    fn dummy_plan(engine: Algo) -> Arc<Plan> {
+        Arc::new(Plan {
+            engine,
+            width: 128,
+            predicted_s: 1e-4,
+            predicted_s_per_col: 1e-6,
+            alpha: 0.5,
+            synergy: Synergy::High,
+            ranked: Vec::new(),
+            rationale: "test".to_string(),
+            fingerprint: 7,
+        })
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let cache = PlanCache::new();
+        assert!(cache.get(7, 128).is_none());
+        cache.insert(7, 128, dummy_plan(Algo::Hrpb));
+        let got = cache.get(7, 128).unwrap();
+        assert_eq!(got.engine, Algo::Hrpb);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn width_is_part_of_the_key() {
+        let cache = PlanCache::new();
+        cache.insert(7, 128, dummy_plan(Algo::Hrpb));
+        assert!(cache.get(7, 32).is_none());
+        assert!(cache.get(8, 128).is_none());
+        assert!(cache.get(7, 128).is_some());
+    }
+
+    #[test]
+    fn invalidate_turns_hits_into_misses() {
+        let cache = PlanCache::new();
+        cache.insert(7, 128, dummy_plan(Algo::Hrpb));
+        assert!(cache.get(7, 128).is_some());
+        cache.invalidate();
+        assert!(cache.get(7, 128).is_none(), "stale generation must miss");
+        // re-inserting under the new generation makes it hit again
+        cache.insert(7, 128, dummy_plan(Algo::Sputnik));
+        assert_eq!(cache.get(7, 128).unwrap().engine, Algo::Sputnik);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache = std::sync::Arc::new(PlanCache::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let cache = cache.clone();
+                s.spawn(move || {
+                    for i in 0..50 {
+                        cache.insert(t * 100 + i, 128, dummy_plan(Algo::Csr));
+                        let _ = cache.get(t * 100 + i, 128);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.stats().entries, 200);
+    }
+}

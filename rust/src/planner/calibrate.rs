@@ -1,0 +1,233 @@
+//! Calibration — anchor the analytical cost model to this host.
+//!
+//! The `gpumodel` predictions are *modeled GPU* times; the engines this repo
+//! executes are the CPU re-hosts. The relative structure (who wins on which
+//! matrix) transfers, the absolute scale does not. A calibration pass times
+//! every candidate engine on sampled matrices at a sampled width, and stores
+//! the per-engine ratio `measured / modeled` as a multiplicative correction.
+//! Corrected predictions are in *this machine's* seconds, which makes the
+//! online observed-vs-predicted feedback meaningful.
+//!
+//! Profiles persist as JSON (`util::json`; serde is unavailable offline) so
+//! repeat runs on the same machine skip the micro-benchmark.
+
+use crate::formats::{Coo, Dense};
+use crate::gen::{Family, MatrixSpec};
+use crate::gpumodel::{algos, Machine, MatrixProfile};
+use crate::spmm::{Algo, SpmmEngine};
+use crate::util::json::{self, Json};
+use crate::util::stats::geomean;
+use crate::util::timer::measure;
+use std::path::Path;
+
+/// Per-engine model correction for one (machine, host) pair.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Multiplier on the modeled time, indexed by [`Algo::index`].
+    pub scale: [f64; Algo::COUNT],
+    /// False for the identity profile (predictions stay in modeled-GPU
+    /// space; the feedback loop stays disarmed to avoid spurious demotion).
+    pub calibrated: bool,
+    /// Dense width the micro-benchmark sampled.
+    pub width: usize,
+    /// Machine model the corrections were measured against.
+    pub machine: String,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration::identity()
+    }
+}
+
+impl Calibration {
+    /// The identity profile: modeled times pass through unchanged.
+    pub fn identity() -> Calibration {
+        Calibration {
+            scale: [1.0; Algo::COUNT],
+            calibrated: false,
+            width: 0,
+            machine: String::new(),
+        }
+    }
+
+    pub fn scale_for(&self, algo: Algo) -> f64 {
+        self.scale[algo.index()]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let scales: Vec<(&str, Json)> = Algo::all()
+            .into_iter()
+            .map(|a| (a.name(), Json::num(self.scale[a.index()])))
+            .collect();
+        Json::obj(vec![
+            ("machine", Json::str(self.machine.clone())),
+            ("width", Json::num(self.width as f64)),
+            ("calibrated", Json::Bool(self.calibrated)),
+            ("scale", Json::obj(scales)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibration, String> {
+        let machine = j
+            .get("machine")
+            .and_then(|m| m.as_str())
+            .ok_or("calibration: missing machine")?
+            .to_string();
+        let width = j.get("width").and_then(|w| w.as_usize()).unwrap_or(0);
+        let calibrated = matches!(j.get("calibrated"), Some(Json::Bool(true)));
+        let scales = j.get("scale").ok_or("calibration: missing scale")?;
+        let mut scale = [1.0; Algo::COUNT];
+        for a in Algo::all() {
+            if let Some(s) = scales.get(a.name()).and_then(|v| v.as_f64()) {
+                if s.is_finite() && s > 0.0 {
+                    scale[a.index()] = s;
+                }
+            }
+        }
+        Ok(Calibration { scale, calibrated, width, machine })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(path, self.to_json().to_string()).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<Calibration, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Calibration::from_json(&json::parse(&text)?)
+    }
+}
+
+/// The matrices the micro-benchmark samples: one per synergy regime so every
+/// engine is timed in the regime it is expected to win (or lose) in.
+fn sample_specs(rows: usize) -> Vec<MatrixSpec> {
+    vec![
+        MatrixSpec {
+            name: "calib-fem".into(),
+            rows,
+            family: Family::Banded { bandwidth: 24, band_fill: 0.65, noise: 0.01 },
+            seed: 0xCA11B0,
+        },
+        MatrixSpec {
+            name: "calib-mesh".into(),
+            rows,
+            family: Family::Mesh { dims: 2 },
+            seed: 0xCA11B1,
+        },
+        MatrixSpec {
+            name: "calib-rmat".into(),
+            rows,
+            family: Family::Rmat { edge_factor: 6, skew: 0.57 },
+            seed: 0xCA11B2,
+        },
+    ]
+}
+
+/// Time `candidates` on sampled matrices at `width` and derive per-engine
+/// corrections against `machine`'s model. `rows` sizes the samples (the CLI
+/// uses ~16k; tests shrink it).
+pub fn microbenchmark(
+    machine: &Machine,
+    width: usize,
+    rows: usize,
+    candidates: &[Algo],
+) -> Calibration {
+    let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); Algo::COUNT];
+    for spec in sample_specs(rows.max(256)) {
+        let coo: Coo = spec.generate();
+        if coo.nnz() == 0 {
+            continue;
+        }
+        let profile = MatrixProfile::compute(&coo);
+        let b = Dense::from_vec(coo.cols, width, vec![0.5; coo.cols * width]);
+        for &algo in candidates {
+            let modeled = algos::predict(algo, &profile, width, machine).time_s;
+            if !(modeled > 0.0) {
+                continue;
+            }
+            let engine: Box<dyn SpmmEngine> = algo.prepare(&coo);
+            let meas = measure(1, 3, || {
+                let _ = engine.spmm(&b);
+            });
+            ratios[algo.index()].push(meas.median_s / modeled);
+        }
+    }
+    let mut scale = [1.0; Algo::COUNT];
+    for a in Algo::all() {
+        let rs = &ratios[a.index()];
+        if !rs.is_empty() {
+            scale[a.index()] = geomean(rs).max(1e-12);
+        }
+    }
+    Calibration {
+        scale,
+        calibrated: true,
+        width,
+        machine: machine.name.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_inert() {
+        let c = Calibration::identity();
+        assert!(!c.calibrated);
+        for a in Algo::all() {
+            assert_eq!(c.scale_for(a), 1.0);
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = Calibration::identity();
+        c.scale[Algo::Hrpb.index()] = 123.5;
+        c.scale[Algo::Csr.index()] = 0.25;
+        c.calibrated = true;
+        c.width = 64;
+        c.machine = "A100".to_string();
+        let back = Calibration::from_json(&c.to_json()).unwrap();
+        assert!(back.calibrated);
+        assert_eq!(back.width, 64);
+        assert_eq!(back.machine, "A100");
+        assert_eq!(back.scale_for(Algo::Hrpb), 123.5);
+        assert_eq!(back.scale_for(Algo::Csr), 0.25);
+        assert_eq!(back.scale_for(Algo::Coo), 1.0);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut c = Calibration::identity();
+        c.calibrated = true;
+        c.machine = "RTX-4090".to_string();
+        c.scale[Algo::Sputnik.index()] = 42.0;
+        let path = std::env::temp_dir().join("cutespmm_calib_test/profile.json");
+        c.save(&path).unwrap();
+        let back = Calibration::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.machine, "RTX-4090");
+        assert_eq!(back.scale_for(Algo::Sputnik), 42.0);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        assert!(Calibration::load(Path::new("/nonexistent/profile.json")).is_err());
+        assert!(Calibration::from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn microbenchmark_produces_positive_scales() {
+        // tiny samples: this is a structure test, not a timing test
+        let c = microbenchmark(&Machine::a100(), 16, 256, &[Algo::Csr, Algo::Hrpb]);
+        assert!(c.calibrated);
+        assert!(c.scale_for(Algo::Csr) > 0.0);
+        assert!(c.scale_for(Algo::Hrpb) > 0.0);
+        // untimed engines keep the identity scale
+        assert_eq!(c.scale_for(Algo::Dense), 1.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Online feedback — observed batch latency vs the plan's prediction.
+//!
+//! Workers report `(engine, predicted, observed)` after every batch, where
+//! `predicted` is the plan's calibration-only estimate (never the
+//! penalty-adjusted one — comparing against a penalized prediction would
+//! make the drift signal self-referential and demotion would flap). The
+//! tracker keeps an EWMA of the observed/predicted ratio per engine; once an
+//! engine's ratio drifts past the demotion threshold (with enough samples to
+//! trust it), the engine is *demoted*: its EWMA becomes a multiplicative
+//! penalty on future predictions, so matrices registered from then on route
+//! away from the drifting engine unless it wins by more than the penalty
+//! (already-registered entries keep their engine; see
+//! `coordinator::EnginePolicy::Auto`). Demotion is sticky until the
+//! engine's observed ratio recovers below the threshold.
+
+use crate::spmm::Algo;
+use std::sync::Mutex;
+
+/// Per-engine drift state.
+#[derive(Clone, Copy, Debug)]
+struct Lane {
+    /// EWMA of observed/predicted (1.0 = model is exact).
+    ewma: f64,
+    samples: u64,
+    demoted: bool,
+}
+
+impl Default for Lane {
+    fn default() -> Self {
+        Lane { ewma: 1.0, samples: 0, demoted: false }
+    }
+}
+
+/// Snapshot of one engine's drift state.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSnapshot {
+    pub algo: Algo,
+    pub ratio: f64,
+    pub samples: u64,
+    pub demoted: bool,
+}
+
+pub struct FeedbackTracker {
+    lanes: Mutex<[Lane; Algo::COUNT]>,
+    /// Demote when the EWMA ratio exceeds this (4.0 = observed 4x slower
+    /// than predicted).
+    demote_ratio: f64,
+    /// Ignore drift until this many observations (early batches are noisy).
+    min_samples: u64,
+    /// EWMA smoothing weight for new observations.
+    smoothing: f64,
+}
+
+impl Default for FeedbackTracker {
+    fn default() -> Self {
+        FeedbackTracker::new(4.0, 8)
+    }
+}
+
+impl FeedbackTracker {
+    pub fn new(demote_ratio: f64, min_samples: u64) -> FeedbackTracker {
+        FeedbackTracker {
+            lanes: Mutex::new(std::array::from_fn(|_| Lane::default())),
+            demote_ratio,
+            min_samples,
+            smoothing: 0.25,
+        }
+    }
+
+    /// Record one observation. Returns `true` when this observation flipped
+    /// the engine's demotion state (the caller invalidates cached plans).
+    pub fn observe(&self, algo: Algo, predicted_s: f64, observed_s: f64) -> bool {
+        if !(predicted_s > 0.0) || !(observed_s > 0.0) {
+            return false;
+        }
+        let ratio = observed_s / predicted_s;
+        let mut lanes = self.lanes.lock().unwrap();
+        let lane = &mut lanes[algo.index()];
+        lane.samples += 1;
+        lane.ewma = if lane.samples == 1 {
+            ratio
+        } else {
+            lane.ewma * (1.0 - self.smoothing) + ratio * self.smoothing
+        };
+        let should_demote = lane.samples >= self.min_samples && lane.ewma > self.demote_ratio;
+        let flipped = should_demote != lane.demoted;
+        lane.demoted = should_demote;
+        flipped
+    }
+
+    /// Multiplicative penalty the planner applies to this engine's predicted
+    /// time (1.0 while healthy; the drifted EWMA once demoted).
+    pub fn penalty(&self, algo: Algo) -> f64 {
+        let lanes = self.lanes.lock().unwrap();
+        let lane = lanes[algo.index()];
+        if lane.demoted {
+            lane.ewma.max(self.demote_ratio)
+        } else {
+            1.0
+        }
+    }
+
+    pub fn is_demoted(&self, algo: Algo) -> bool {
+        self.lanes.lock().unwrap()[algo.index()].demoted
+    }
+
+    /// Drift state for every engine with at least one observation.
+    pub fn snapshot(&self) -> Vec<DriftSnapshot> {
+        let lanes = self.lanes.lock().unwrap();
+        Algo::all()
+            .into_iter()
+            .filter(|a| lanes[a.index()].samples > 0)
+            .map(|a| {
+                let lane = lanes[a.index()];
+                DriftSnapshot {
+                    algo: a,
+                    ratio: lane.ewma,
+                    samples: lane.samples,
+                    demoted: lane.demoted,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_engine_keeps_unit_penalty() {
+        let fb = FeedbackTracker::new(4.0, 4);
+        for _ in 0..20 {
+            assert!(!fb.observe(Algo::Hrpb, 1e-3, 1.1e-3));
+        }
+        assert_eq!(fb.penalty(Algo::Hrpb), 1.0);
+        assert!(!fb.is_demoted(Algo::Hrpb));
+    }
+
+    #[test]
+    fn drifting_engine_is_demoted_after_min_samples() {
+        let fb = FeedbackTracker::new(4.0, 4);
+        let mut flipped_at = None;
+        for i in 0..10 {
+            if fb.observe(Algo::Sputnik, 1e-3, 8e-3) {
+                flipped_at = Some(i);
+                break;
+            }
+        }
+        // ratio is constant 8x, so demotion lands exactly at min_samples
+        assert_eq!(flipped_at, Some(3));
+        assert!(fb.is_demoted(Algo::Sputnik));
+        assert!(fb.penalty(Algo::Sputnik) >= 4.0);
+        // other engines are untouched
+        assert_eq!(fb.penalty(Algo::Hrpb), 1.0);
+    }
+
+    #[test]
+    fn recovery_lifts_the_demotion() {
+        let fb = FeedbackTracker::new(4.0, 2);
+        for _ in 0..4 {
+            fb.observe(Algo::Csr, 1e-3, 9e-3);
+        }
+        assert!(fb.is_demoted(Algo::Csr));
+        // sustained accurate observations pull the EWMA back under the bar
+        let mut recovered = false;
+        for _ in 0..64 {
+            if fb.observe(Algo::Csr, 1e-3, 1e-3) {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered);
+        assert!(!fb.is_demoted(Algo::Csr));
+        assert_eq!(fb.penalty(Algo::Csr), 1.0);
+    }
+
+    #[test]
+    fn nonpositive_observations_are_ignored() {
+        let fb = FeedbackTracker::default();
+        assert!(!fb.observe(Algo::Coo, 0.0, 1.0));
+        assert!(!fb.observe(Algo::Coo, 1.0, 0.0));
+        assert!(fb.snapshot().is_empty());
+    }
+
+    #[test]
+    fn snapshot_reports_observed_lanes_only() {
+        let fb = FeedbackTracker::default();
+        fb.observe(Algo::Hrpb, 1e-3, 2e-3);
+        fb.observe(Algo::Csr, 1e-3, 1e-3);
+        let snap = fb.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().any(|s| s.algo == Algo::Hrpb && (s.ratio - 2.0).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,559 @@
+//! Synergy-driven adaptive engine selection.
+//!
+//! The paper's central observation (§6.4, Table 1) is that the packed brick
+//! density α — via `OI_shmem = 512·α` — predicts when the TCU path beats the
+//! best scalar-core SpMM. This module *acts* on that prediction: at
+//! registration time a [`Planner`] combines the [`crate::synergy`]
+//! classification with [`crate::gpumodel`] predicted runtimes for every
+//! executable engine and produces a [`Plan`] — a ranked engine table plus
+//! the chosen engine and a human-readable rationale.
+//!
+//! Layers on top of the ranking:
+//!
+//! * **Calibration** ([`calibrate`]) — an optional micro-benchmark pass that
+//!   times candidate engines on sampled matrices and rescales the analytical
+//!   model into this host's seconds, persisted per machine profile.
+//! * **Plan cache** ([`cache`]) — plans are memoized by structural matrix
+//!   fingerprint, so repeat registrations are free.
+//! * **Online feedback** ([`feedback`]) — workers report observed batch
+//!   latency; an engine whose observed/predicted ratio drifts past the
+//!   demotion threshold is penalized in future plans and cached plans are
+//!   invalidated.
+//!
+//! The serving layer consumes this through `EnginePolicy::Auto`
+//! ([`crate::coordinator`]); the `cutespmm plan` CLI subcommand prints the
+//! ranked table directly.
+
+pub mod cache;
+pub mod calibrate;
+pub mod feedback;
+
+pub use cache::{CacheStats, PlanCache};
+pub use calibrate::Calibration;
+pub use feedback::{DriftSnapshot, FeedbackTracker};
+
+use crate::formats::Coo;
+use crate::gpumodel::{algos, Bound, Machine, MatrixProfile};
+use crate::hrpb::Hrpb;
+use crate::spmm::Algo;
+use crate::synergy::Synergy;
+use std::sync::{Arc, RwLock};
+
+/// Engines the planner ranks. `Dense` is excluded: materializing the
+/// zero-filled operand is the ablation strawman, never a serving choice.
+pub const CANDIDATES: [Algo; 6] =
+    [Algo::Hrpb, Algo::TcGnn, Algo::Csr, Algo::Coo, Algo::Sputnik, Algo::GeSpmm];
+
+/// One row of the ranked engine table.
+#[derive(Clone, Copy, Debug)]
+pub struct RankedChoice {
+    pub algo: Algo,
+    /// Raw analytical model time (modeled-GPU seconds).
+    pub modeled_s: f64,
+    /// Calibration-corrected time (no feedback penalty) — what observed
+    /// latency is compared against.
+    pub calibrated_s: f64,
+    /// Calibration- and penalty-corrected time the ranking sorts by.
+    pub predicted_s: f64,
+    /// What bounds the kernel in the model.
+    pub bound: Bound,
+}
+
+/// An executable per-matrix plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The chosen engine.
+    pub engine: Algo,
+    /// Dense width the plan was evaluated at.
+    pub width: usize,
+    /// Calibration-corrected predicted time of the chosen engine at
+    /// `width`. Deliberately excludes the feedback penalty: the feedback
+    /// loop compares observed latency against this, and folding the
+    /// penalty in would make the drift signal self-referential (a demoted
+    /// engine would immediately look healthy again and flap).
+    pub predicted_s: f64,
+    /// `predicted_s / width` — the coordinator scales this by the fused
+    /// batch width to get a per-batch prediction for the feedback loop.
+    pub predicted_s_per_col: f64,
+    /// Packed brick density of the matrix.
+    pub alpha: f64,
+    /// Table 1 class of `alpha`.
+    pub synergy: Synergy,
+    /// All candidates, fastest first.
+    pub ranked: Vec<RankedChoice>,
+    /// Why this engine (synergy class + model margin).
+    pub rationale: String,
+    /// Structural fingerprint the plan is cached under.
+    pub fingerprint: u64,
+}
+
+/// Planner tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerConfig {
+    /// Machine whose cost model ranks the engines.
+    pub machine: Machine,
+    /// Dense width plans are evaluated at.
+    pub width: usize,
+    /// High synergy: keep the TCU path while it is within this factor of
+    /// the model's fastest candidate (Table 1 says TCUs win decisively;
+    /// only an overwhelming model verdict overrides it).
+    pub high_synergy_slack: f64,
+    /// Low synergy: route to scalar cores unless the model puts the TCU
+    /// path below this fraction of the best scalar time.
+    pub low_synergy_margin: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            machine: Machine::a100(),
+            width: 128,
+            high_synergy_slack: 1.10,
+            low_synergy_margin: 0.77,
+        }
+    }
+}
+
+/// Structural fingerprint of a matrix: shape, nnz, and a strided sample of
+/// the (row, col, value-bits) stream. Two structurally identical matrices
+/// collide (that is the point — their plans are interchangeable).
+pub fn fingerprint(coo: &Coo) -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x100000001b3)
+    }
+    let mut h = 0xcbf29ce484222325u64;
+    h = mix(h, coo.rows as u64);
+    h = mix(h, coo.cols as u64);
+    let nnz = coo.nnz();
+    h = mix(h, nnz as u64);
+    let stride = (nnz / 512).max(1);
+    let mut i = 0;
+    while i < nnz {
+        h = mix(h, coo.row_idx[i] as u64);
+        h = mix(h, coo.col_idx[i] as u64);
+        h = mix(h, coo.values[i].to_bits() as u64);
+        i += stride;
+    }
+    h
+}
+
+/// The synergy-gated decision rule over a ranked `(algo, predicted_s)` table
+/// (sorted fastest first). Pure so the bench experiments can replay it over
+/// precomputed corpus records.
+pub fn choose(
+    ranked: &[(Algo, f64)],
+    synergy: Synergy,
+    alpha: f64,
+    high_synergy_slack: f64,
+    low_synergy_margin: f64,
+) -> (Algo, String) {
+    assert!(!ranked.is_empty(), "no candidates to choose from");
+    let (best_algo, best_t) = ranked[0];
+    let hrpb = ranked.iter().find(|(a, _)| *a == Algo::Hrpb).copied();
+    let scalar = ranked
+        .iter()
+        .find(|(a, _)| Algo::scalar_core().contains(a))
+        .copied();
+    let oi = 512.0 * alpha;
+    match synergy {
+        Synergy::Low => match (hrpb, scalar) {
+            (Some((_, t_h)), Some((_, t_sc))) if t_h < low_synergy_margin * t_sc => (
+                Algo::Hrpb,
+                format!(
+                    "low synergy (α={alpha:.4}, OI_shmem={oi:.0}) but the model favors the \
+                     TCU path by {:.2}x — overriding Table 1",
+                    t_sc / t_h
+                ),
+            ),
+            (_, Some((sc, _))) => (
+                sc,
+                format!(
+                    "low synergy (α={alpha:.4} < 12.5%, OI_shmem={oi:.0} ≤ 64): \
+                     ≤1 B-reuse per shared-memory load, scalar cores win (Table 1)"
+                ),
+            ),
+            _ => (best_algo, format!("low synergy (α={alpha:.4}): fastest candidate")),
+        },
+        Synergy::Medium => (
+            best_algo,
+            format!(
+                "medium synergy (α={alpha:.4}, OI_shmem={oi:.0} in [32, 64)): \
+                 contested regime, fastest of {} modeled candidates",
+                ranked.len()
+            ),
+        ),
+        Synergy::High => match hrpb {
+            Some((_, t_h)) if t_h <= high_synergy_slack * best_t => (
+                Algo::Hrpb,
+                format!(
+                    "high synergy (α={alpha:.4} ≥ 25%, OI_shmem={oi:.0} > 64): \
+                     TCUs win decisively (Table 1)"
+                ),
+            ),
+            Some((_, t_h)) => (
+                best_algo,
+                format!(
+                    "high synergy but the model puts the TCU path {:.2}x behind — \
+                     deferring to the fastest candidate",
+                    t_h / best_t
+                ),
+            ),
+            None => (best_algo, format!("high synergy (α={alpha:.4}): fastest candidate")),
+        },
+    }
+}
+
+/// The planner: ranks engines per matrix, caches plans, absorbs calibration
+/// and online feedback. Thread-safe; the coordinator shares one behind an
+/// `Arc`.
+pub struct Planner {
+    config: PlannerConfig,
+    calibration: RwLock<Calibration>,
+    cache: PlanCache,
+    feedback: FeedbackTracker,
+}
+
+impl Planner {
+    pub fn new(machine: Machine) -> Planner {
+        Planner::with_config(PlannerConfig { machine, ..Default::default() })
+    }
+
+    pub fn with_config(config: PlannerConfig) -> Planner {
+        Planner {
+            config,
+            calibration: RwLock::new(Calibration::identity()),
+            cache: PlanCache::new(),
+            feedback: FeedbackTracker::default(),
+        }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.config.machine
+    }
+
+    pub fn width(&self) -> usize {
+        self.config.width
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn feedback(&self) -> &FeedbackTracker {
+        &self.feedback
+    }
+
+    pub fn calibration(&self) -> Calibration {
+        self.calibration.read().unwrap().clone()
+    }
+
+    /// Install a calibration profile (loaded from disk or freshly measured)
+    /// and invalidate every cached plan.
+    pub fn set_calibration(&self, c: Calibration) {
+        *self.calibration.write().unwrap() = c;
+        self.cache.invalidate();
+    }
+
+    /// Run the micro-benchmark calibration pass on this host and install the
+    /// result. `rows` sizes the sample matrices (~16k for a faithful
+    /// profile; smaller for quick runs).
+    pub fn calibrate(&self, rows: usize) -> Calibration {
+        let c = calibrate::microbenchmark(
+            &self.config.machine,
+            self.config.width,
+            rows,
+            &CANDIDATES,
+        );
+        self.set_calibration(c.clone());
+        c
+    }
+
+    /// Plan for a matrix; cached by fingerprint.
+    pub fn plan(&self, coo: &Coo) -> Arc<Plan> {
+        let fp = fingerprint(coo);
+        if let Some(plan) = self.cache.get(fp, self.config.width) {
+            return plan;
+        }
+        let profile = MatrixProfile::compute(coo);
+        let plan = Arc::new(self.plan_profile(fp, &profile));
+        self.cache.insert(fp, self.config.width, plan.clone());
+        plan
+    }
+
+    /// Plan reusing an already-built HRPB (the registry builds it anyway).
+    pub fn plan_with_hrpb(&self, coo: &Coo, hrpb: &Hrpb) -> Arc<Plan> {
+        let fp = fingerprint(coo);
+        if let Some(plan) = self.cache.get(fp, self.config.width) {
+            return plan;
+        }
+        let profile = MatrixProfile::with_hrpb(coo, hrpb);
+        let plan = Arc::new(self.plan_profile(fp, &profile));
+        self.cache.insert(fp, self.config.width, plan.clone());
+        plan
+    }
+
+    /// Rank + choose from a precomputed profile (no caching).
+    pub fn plan_profile(&self, fingerprint: u64, profile: &MatrixProfile) -> Plan {
+        let n = self.config.width;
+        let calibration = self.calibration.read().unwrap();
+        let mut ranked: Vec<RankedChoice> = CANDIDATES
+            .iter()
+            .map(|&algo| {
+                let pred = algos::predict(algo, profile, n, &self.config.machine);
+                let calibrated = pred.time_s * calibration.scale_for(algo);
+                RankedChoice {
+                    algo,
+                    modeled_s: pred.time_s,
+                    calibrated_s: calibrated,
+                    predicted_s: calibrated * self.feedback.penalty(algo),
+                    bound: pred.bound,
+                }
+            })
+            .collect();
+        drop(calibration);
+        ranked.sort_by(|a, b| a.predicted_s.total_cmp(&b.predicted_s));
+
+        let alpha = profile.hrpb.alpha;
+        let synergy = profile.synergy();
+        let pairs: Vec<(Algo, f64)> = ranked.iter().map(|c| (c.algo, c.predicted_s)).collect();
+        let (engine, rationale) = choose(
+            &pairs,
+            synergy,
+            alpha,
+            self.config.high_synergy_slack,
+            self.config.low_synergy_margin,
+        );
+        // penalty-free: this is the baseline observed latency is judged
+        // against (see the field docs on `Plan::predicted_s`)
+        let predicted_s = ranked
+            .iter()
+            .find(|c| c.algo == engine)
+            .map(|c| c.calibrated_s)
+            .unwrap_or(ranked[0].calibrated_s);
+        Plan {
+            engine,
+            width: n,
+            predicted_s,
+            predicted_s_per_col: predicted_s / n.max(1) as f64,
+            alpha,
+            synergy,
+            ranked,
+            rationale,
+            fingerprint,
+        }
+    }
+
+    /// Report an observed batch execution. Demotion only arms once a real
+    /// calibration is installed — against the identity profile, predictions
+    /// are modeled-GPU times and every CPU observation would look drifted.
+    pub fn observe(&self, algo: Algo, predicted_s: f64, observed_s: f64) {
+        if !self.calibration.read().unwrap().calibrated {
+            return;
+        }
+        if self.feedback.observe(algo, predicted_s, observed_s) {
+            self.cache.invalidate();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    /// Deterministic high-synergy matrix: fully dense 16x16 blocks (every
+    /// brick full, α = 1.0), one block per row panel.
+    fn full_brick_matrix(panels: usize) -> Coo {
+        let mut t = Vec::new();
+        for p in 0..panels {
+            for r in 0..16 {
+                for c in 0..16 {
+                    t.push((p * 16 + r, (p % 4) * 16 + c, 1.0 + (r + c) as f32 * 0.01));
+                }
+            }
+        }
+        Coo::from_triplets(panels * 16, 64, &t)
+    }
+
+    /// Deterministic low-synergy matrix: one nonzero per brick (α = 1/64),
+    /// scattered on the diagonal.
+    fn lone_nnz_matrix(panels: usize) -> Coo {
+        let t: Vec<(usize, usize, f32)> =
+            (0..panels).map(|p| (p * 16, (p * 16) % 1024, 1.0)).collect();
+        Coo::from_triplets(panels * 16, 1024, &t)
+    }
+
+    /// Medium boundary: exactly 8 of 64 slots per brick (α = 0.125).
+    fn boundary_matrix(panels: usize) -> Coo {
+        let mut t = Vec::new();
+        for p in 0..panels {
+            for r in 0..8 {
+                t.push((p * 16 + r, 0usize, 1.0f32));
+            }
+        }
+        Coo::from_triplets(panels * 16, 64, &t)
+    }
+
+    #[test]
+    fn high_synergy_routes_to_hrpb() {
+        let planner = Planner::new(Machine::a100());
+        let coo = full_brick_matrix(256);
+        let plan = planner.plan(&coo);
+        assert_eq!(plan.synergy, Synergy::High);
+        assert!((plan.alpha - 1.0).abs() < 1e-12);
+        assert_eq!(plan.engine, Algo::Hrpb, "rationale: {}", plan.rationale);
+        assert!(plan.rationale.contains("high synergy"));
+        assert!(plan.predicted_s > 0.0);
+    }
+
+    #[test]
+    fn low_synergy_routes_to_a_scalar_engine() {
+        let planner = Planner::new(Machine::a100());
+        let coo = lone_nnz_matrix(64);
+        let plan = planner.plan(&coo);
+        assert_eq!(plan.synergy, Synergy::Low);
+        assert!(
+            Algo::scalar_core().contains(&plan.engine),
+            "low synergy chose {} ({})",
+            plan.engine.name(),
+            plan.rationale
+        );
+        assert!(plan.rationale.contains("scalar") || plan.rationale.contains("low synergy"));
+    }
+
+    #[test]
+    fn boundary_alpha_is_medium_and_planned() {
+        let planner = Planner::new(Machine::a100());
+        let coo = boundary_matrix(32);
+        let plan = planner.plan(&coo);
+        assert!((plan.alpha - 0.125).abs() < 1e-12, "alpha {}", plan.alpha);
+        assert_eq!(plan.synergy, Synergy::Medium);
+        // medium is the model-decides regime: chosen == fastest candidate
+        assert_eq!(plan.engine, plan.ranked[0].algo);
+    }
+
+    #[test]
+    fn ranked_table_is_sorted_and_complete() {
+        let planner = Planner::new(Machine::a100());
+        let plan = planner.plan(&full_brick_matrix(32));
+        assert_eq!(plan.ranked.len(), CANDIDATES.len());
+        for pair in plan.ranked.windows(2) {
+            assert!(pair[0].predicted_s <= pair[1].predicted_s);
+        }
+        for algo in CANDIDATES {
+            assert!(plan.ranked.iter().any(|c| c.algo == algo));
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeat_registration() {
+        let planner = Planner::new(Machine::a100());
+        let coo = full_brick_matrix(48);
+        let p1 = planner.plan(&coo);
+        let p2 = planner.plan(&coo);
+        assert!(Arc::ptr_eq(&p1, &p2), "second plan must come from the cache");
+        let stats = planner.cache().stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        // a different matrix misses
+        let _ = planner.plan(&lone_nnz_matrix(48));
+        assert_eq!(planner.cache().stats().misses, 2);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_structure() {
+        let a = full_brick_matrix(32);
+        let b = lone_nnz_matrix(32);
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&full_brick_matrix(32)));
+    }
+
+    #[test]
+    fn prop_fingerprint_is_deterministic_and_value_sensitive() {
+        let g = SparseGen { max_m: 60, max_k: 80, max_density: 0.2 };
+        check("fingerprint deterministic", 30, &g, |case| {
+            let a = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let b = Coo::from_triplets(case.m, case.k, &case.triplets);
+            fingerprint(&a) == fingerprint(&b)
+        });
+        let mut rng = Rng::new(77);
+        let coo = Coo::random(64, 64, 0.1, &mut rng);
+        if coo.nnz() > 0 {
+            let mut bumped = coo.clone();
+            bumped.values[0] += 1.0;
+            assert_ne!(fingerprint(&coo), fingerprint(&bumped));
+        }
+    }
+
+    #[test]
+    fn feedback_demotion_reroutes_and_invalidates() {
+        let planner = Planner::new(Machine::a100());
+        // arm the feedback loop with an identity-but-calibrated profile
+        let mut cal = Calibration::identity();
+        cal.calibrated = true;
+        cal.machine = "A100".to_string();
+        planner.set_calibration(cal);
+
+        let coo = full_brick_matrix(256);
+        let before = planner.plan(&coo);
+        assert_eq!(before.engine, Algo::Hrpb);
+        let gen_before = planner.cache().generation();
+
+        // observed 10x slower than predicted, repeatedly -> demotion
+        for _ in 0..10 {
+            planner.observe(Algo::Hrpb, before.predicted_s, before.predicted_s * 10.0);
+        }
+        assert!(planner.feedback().is_demoted(Algo::Hrpb));
+        assert!(planner.cache().generation() > gen_before, "demotion must invalidate plans");
+
+        let after = planner.plan(&coo);
+        assert_ne!(
+            after.engine,
+            Algo::Hrpb,
+            "a 10x-drifted HRPB must lose its marginal win ({})",
+            after.rationale
+        );
+    }
+
+    #[test]
+    fn observe_is_inert_without_calibration() {
+        let planner = Planner::new(Machine::a100());
+        for _ in 0..20 {
+            planner.observe(Algo::Hrpb, 1e-6, 1.0);
+        }
+        assert!(!planner.feedback().is_demoted(Algo::Hrpb));
+    }
+
+    #[test]
+    fn planner_agrees_with_model_oracle_on_corpus_sample() {
+        // oracle := the model's fastest candidate. The synergy gates may
+        // override it at the extremes; the satellite requirement is >= 80%
+        // agreement over a stratified corpus sample.
+        let planner = Planner::new(Machine::a100());
+        let all = crate::gen::corpus::specs(crate::gen::corpus::CorpusScale::Quick, 42);
+        let step = (all.len() / 24).max(1);
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for spec in all.iter().step_by(step) {
+            let mut small = spec.clone();
+            small.rows = 2500;
+            if let crate::gen::Family::Community { ref mut communities, .. } = small.family {
+                *communities = (*communities).min(250);
+            }
+            let coo = small.generate();
+            if coo.nnz() == 0 {
+                continue;
+            }
+            let profile = MatrixProfile::compute(&coo);
+            let plan = planner.plan_profile(0, &profile);
+            total += 1;
+            if plan.engine == plan.ranked[0].algo {
+                agree += 1;
+            }
+        }
+        assert!(total >= 10, "sample too small: {total}");
+        let rate = agree as f64 / total as f64;
+        assert!(rate >= 0.8, "planner/oracle agreement {rate:.2} over {total} matrices");
+    }
+}

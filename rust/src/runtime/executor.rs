@@ -11,6 +11,10 @@ use crate::hrpb::decode::DenseBrickFeed;
 use crate::hrpb::Hrpb;
 use crate::runtime::bucket::{pick_spmm_bucket, SpmmBucket};
 use crate::runtime::manifest::Manifest;
+// Offline build: the `xla` crate is not in the vendor set, so the executor
+// compiles against the API-compatible stub (see `runtime::xla_stub`). Swap
+// this alias for the extern crate on a machine that has `xla` vendored.
+use crate::runtime::xla_stub as xla;
 use std::collections::HashMap;
 use std::path::Path;
 

@@ -2,11 +2,16 @@
 //! `python/compile/aot.py` and executes them via the `xla` crate's PJRT CPU
 //! client. Python never runs on the request path: `make artifacts` is the
 //! one-time build step, and the Rust binary is self-contained afterwards.
+//!
+//! Offline builds (no `xla` crate in the vendor set) compile against the
+//! API-compatible [`xla_stub`]; every PJRT entry point then fails cleanly
+//! and callers fall back to the native engine.
 
 pub mod bucket;
 pub mod executor;
 pub mod manifest;
 pub mod service;
+pub mod xla_stub;
 
 pub use bucket::{pick_spmm_bucket, SpmmBucket};
 pub use executor::PjrtRuntime;

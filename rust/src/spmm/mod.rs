@@ -60,6 +60,23 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Number of algorithm variants (dense array sizing: planner scale
+    /// tables, metrics routing lanes).
+    pub const COUNT: usize = 7;
+
+    /// Stable dense index in `0..Algo::COUNT`, matching `Algo::all()` order.
+    pub fn index(&self) -> usize {
+        match self {
+            Algo::Dense => 0,
+            Algo::Csr => 1,
+            Algo::Coo => 2,
+            Algo::Sputnik => 3,
+            Algo::GeSpmm => 4,
+            Algo::TcGnn => 5,
+            Algo::Hrpb => 6,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Dense => "dense",
@@ -178,6 +195,17 @@ mod tests {
         }
         assert_eq!(Algo::parse("hrpb"), Some(Algo::Hrpb));
         assert_eq!(Algo::parse("nope"), None);
+    }
+
+    #[test]
+    fn algo_index_is_a_dense_bijection() {
+        let mut seen = [false; Algo::COUNT];
+        for (i, algo) in Algo::all().into_iter().enumerate() {
+            assert_eq!(algo.index(), i, "{}", algo.name());
+            assert!(!seen[algo.index()]);
+            seen[algo.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

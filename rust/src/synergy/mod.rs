@@ -143,6 +143,51 @@ mod tests {
     }
 
     #[test]
+    fn prop_alpha_classes_partition_the_range() {
+        use crate::util::proptest::{check, UsizeGen};
+        let claims = |alpha: f64| {
+            Synergy::all()
+                .iter()
+                .filter(|c| {
+                    let (lo, hi) = c.alpha_range();
+                    alpha >= lo && (alpha < hi || (**c == Synergy::High && alpha <= hi))
+                })
+                .count()
+        };
+        check("alpha classes partition [0,1]", 400, &UsizeGen { lo: 0, hi: 100_000 }, |&v| {
+            let alpha = v as f64 / 100_000.0;
+            let s = Synergy::from_alpha(alpha);
+            let (lo, hi) = s.alpha_range();
+            let inside = alpha >= lo && (alpha < hi || (s == Synergy::High && alpha <= hi));
+            inside && claims(alpha) == 1
+        });
+        // the Table 1 boundaries route upward, exactly
+        assert_eq!(claims(0.125), 1);
+        assert_eq!(Synergy::from_alpha(0.125), Synergy::Medium);
+        assert_eq!(claims(0.25), 1);
+        assert_eq!(Synergy::from_alpha(0.25), Synergy::High);
+    }
+
+    #[test]
+    fn boundary_alpha_from_real_matrices() {
+        // α exactly at the Table 1 cuts, built structurally: k of 64 slots
+        // occupied in a single brick.
+        let brick_with = |k: usize| {
+            let t: Vec<(usize, usize, f32)> = (0..k).map(|r| (r, 0usize, 1.0f32)).collect();
+            let coo = Coo::from_triplets(16, 16, &t);
+            stats::compute(&build_from_coo(&coo))
+        };
+        let s8 = brick_with(8);
+        assert_eq!(s8.alpha, 0.125, "8/64 slots");
+        assert_eq!(Synergy::from_alpha(s8.alpha), Synergy::Medium);
+        let s16 = brick_with(16);
+        assert_eq!(s16.alpha, 0.25, "16/64 slots");
+        assert_eq!(Synergy::from_alpha(s16.alpha), Synergy::High);
+        let s7 = brick_with(7);
+        assert_eq!(Synergy::from_alpha(s7.alpha), Synergy::Low);
+    }
+
+    #[test]
     fn eq4_closed_form_at_tn32_beta1() {
         // a matrix whose bricks land exactly: α = 0.25 (16 of 64 slots)
         let mut t = Vec::new();

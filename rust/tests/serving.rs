@@ -150,6 +150,40 @@ fn shutdown_drains_pending() {
 }
 
 #[test]
+fn auto_policy_serves_correctly_and_counts_routes() {
+    use cutespmm::spmm::Algo;
+    let coord = Coordinator::start(
+        Config { workers: 2, engine: EnginePolicy::Auto, ..Default::default() },
+        None,
+    );
+    // deterministic low-synergy structure: one nonzero per row panel
+    let t: Vec<(usize, usize, f32)> = (0..128).map(|p| (p * 16, p * 16, 1.0)).collect();
+    let low = Coo::from_triplets(2048, 2048, &t);
+    let id = coord.register("low", &low);
+    let plan = coord.registry().get(id).unwrap().plan.clone().expect("auto plans");
+    assert!(
+        Algo::scalar_core().contains(&plan.engine),
+        "low synergy routed to {} ({})",
+        plan.engine.name(),
+        plan.rationale
+    );
+
+    let mut rng = Rng::new(1);
+    let b = Dense::random(2048, 8, &mut rng);
+    let want = low.to_dense().matmul(&b);
+    let resp = coord.call(id, b).unwrap();
+    assert!(resp.c.rel_fro_error(&want) < 1e-5);
+    assert_eq!(resp.engine, plan.engine.name());
+    assert!(coord.metrics().engine_requests(plan.engine) >= 1);
+    // repeat registration under another name hits the plan cache
+    let planner = coord.planner().unwrap().clone();
+    let hits = planner.cache().stats().hits;
+    let _ = coord.register("low-replica", &low);
+    assert_eq!(planner.cache().stats().hits, hits + 1);
+    coord.shutdown();
+}
+
+#[test]
 fn preprocess_once_amortization_visible() {
     let coord = coordinator(2, 256);
     let mut rng = Rng::new(5);
