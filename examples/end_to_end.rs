@@ -44,6 +44,7 @@ fn drive(engine_policy: EnginePolicy, pjrt: Option<cutespmm::runtime::PjrtHandle
                 max_delay: Duration::from_millis(1),
             },
             engine: engine_policy,
+            qos: None,
         },
         pjrt,
     ));

@@ -33,6 +33,7 @@ fn main() {
                 max_delay: Duration::from_millis(2),
             },
             engine,
+            qos: None,
         },
         pjrt_svc.as_ref().map(|s| s.handle()),
     ));

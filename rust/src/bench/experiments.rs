@@ -7,10 +7,12 @@ use crate::formats::Dense;
 use crate::gen::corpus::CorpusScale;
 use crate::gen::{named, MatrixSpec};
 use crate::gpumodel::{algos, Machine, MatrixProfile};
+use crate::qos::{self, BoundedDualQueue, Priority, RejectReason, ShedPolicy, Ticket};
 use crate::spmm::{Algo, SpmmEngine};
 use crate::synergy::Synergy;
 use crate::util::stats;
 use std::path::PathBuf;
+use std::time::Duration;
 
 /// Where CSVs land.
 pub fn results_dir() -> PathBuf {
@@ -610,6 +612,279 @@ pub fn auto_policy(records: &[Record]) -> String {
     out
 }
 
+/// One arrival in the QoS saturation trace.
+struct SimReq {
+    at_s: f64,
+    cost_s: f64,
+    priority: Priority,
+    expensive: bool,
+    deadline_s: Option<f64>,
+}
+
+/// Deterministic saturation trace: arrivals at a fixed interval sized for
+/// ~1.3x offered load on one drain lane; 20% of requests hit an expensive
+/// (low-synergy) matrix at 10x the cheap cost, 20% ride the high-priority
+/// lane, and 30% carry a tight 2ms deadline (the rest get 20ms).
+fn qos_trace(n: usize, seed: u64) -> Vec<SimReq> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let cheap = 50e-6;
+    let dear = 500e-6;
+    let mean = 0.8 * cheap + 0.2 * dear;
+    let dt = mean / 1.3;
+    (0..n)
+        .map(|i| {
+            let expensive = rng.chance(0.2);
+            SimReq {
+                at_s: i as f64 * dt,
+                cost_s: if expensive { dear } else { cheap },
+                priority: if rng.chance(0.2) { Priority::High } else { Priority::Normal },
+                expensive,
+                deadline_s: Some(if rng.chance(0.3) { 2e-3 } else { 20e-3 }),
+            }
+        })
+        .collect()
+}
+
+/// An admission policy under test in the saturation study.
+pub struct SimPolicy {
+    pub name: &'static str,
+    /// Hard queue bound (`usize::MAX` models the unbounded baseline).
+    pub capacity: usize,
+    /// Queued-work watermark; `0.0` disables cost-aware shedding.
+    pub watermark_s: f64,
+    /// `false` collapses everything onto the normal lane (FIFO baselines).
+    pub use_priority: bool,
+    /// Whether requests' deadlines participate in admission.
+    pub use_deadline: bool,
+}
+
+/// One policy's outcome over the shared arrival trace.
+#[derive(Clone, Debug)]
+pub struct QosOutcome {
+    pub policy: &'static str,
+    pub capacity: usize,
+    pub offered: usize,
+    pub completed: usize,
+    /// Sheds per lane ([`Priority::index`]).
+    pub shed_lane: [u64; Priority::COUNT],
+    /// Sheds per reason ([`RejectReason::index`]).
+    pub shed_by_reason: [u64; RejectReason::COUNT],
+    /// Deepest the queue ever got.
+    pub max_depth: usize,
+    pub p50_wait_ms: f64,
+    pub p99_wait_ms: f64,
+    pub high_p99_wait_ms: f64,
+}
+
+fn drain_until(
+    queue: &mut BoundedDualQueue<(f64, Priority)>,
+    server_free_at: &mut f64,
+    until: f64,
+    waits: &mut Vec<f64>,
+    high_waits: &mut Vec<f64>,
+) {
+    while queue.depth() > 0 && *server_free_at <= until {
+        let Some((ticket, (enq_s, priority))) = queue.pop() else { break };
+        let start = (*server_free_at).max(enq_s);
+        let wait = start - enq_s;
+        waits.push(wait);
+        if priority == Priority::High {
+            high_waits.push(wait);
+        }
+        *server_free_at = start + ticket.cost_s;
+    }
+}
+
+/// Replay the trace against one admission policy: a single server drains
+/// the queue in priority order; admission runs the real
+/// [`crate::qos::admit`] rule over the live queue state.
+fn simulate_qos(policy: &SimPolicy, trace: &[SimReq]) -> QosOutcome {
+    let shed_policy = ShedPolicy { capacity: policy.capacity, watermark_s: policy.watermark_s };
+    let mut queue: BoundedDualQueue<(f64, Priority)> =
+        BoundedDualQueue::new(policy.capacity);
+    let mut server_free_at = 0.0f64;
+    let mut waits: Vec<f64> = Vec::new();
+    let mut high_waits: Vec<f64> = Vec::new();
+    let mut shed_by_reason = [0u64; RejectReason::COUNT];
+    let mut shed_lane = [0u64; Priority::COUNT];
+    let mut max_depth = 0usize;
+
+    for r in trace {
+        drain_until(&mut queue, &mut server_free_at, r.at_s, &mut waits, &mut high_waits);
+        let priority = if policy.use_priority { r.priority } else { Priority::Normal };
+        let mut ticket = Ticket::new(priority, r.cost_s);
+        ticket.expensive = r.expensive;
+        if policy.use_deadline {
+            ticket.deadline = r.deadline_s.map(Duration::from_secs_f64);
+        }
+        // mirror AdmissionQueue::submit exactly: the wait estimate counts
+        // the lane the request actually waits behind (plus work already past
+        // the queue), while the watermark sees the whole pipeline
+        let backlog_s = (server_free_at - r.at_s).max(0.0);
+        let lane_ahead_s = match priority {
+            Priority::High => queue.lane_cost_s(Priority::High),
+            Priority::Normal => queue.queued_cost_s(),
+        };
+        let est_wait = qos::estimate_wait(lane_ahead_s + backlog_s, 1);
+        let outstanding_s = queue.queued_cost_s() + backlog_s;
+        match qos::admit(&shed_policy, queue.depth(), outstanding_s, &ticket, est_wait) {
+            Ok(()) => {
+                queue.push(ticket, (r.at_s, priority)).expect("admit() bounds the queue");
+                max_depth = max_depth.max(queue.depth());
+            }
+            Err(reason) => {
+                shed_by_reason[reason.index()] += 1;
+                shed_lane[priority.index()] += 1;
+            }
+        }
+    }
+    drain_until(&mut queue, &mut server_free_at, f64::INFINITY, &mut waits, &mut high_waits);
+
+    waits.sort_by(|a, b| a.total_cmp(b));
+    high_waits.sort_by(|a, b| a.total_cmp(b));
+    let pct = |v: &[f64], p: f64| {
+        if v.is_empty() { 0.0 } else { stats::percentile_sorted(v, p) * 1e3 }
+    };
+    QosOutcome {
+        policy: policy.name,
+        capacity: policy.capacity,
+        offered: trace.len(),
+        completed: waits.len(),
+        shed_lane,
+        shed_by_reason,
+        max_depth,
+        p50_wait_ms: pct(&waits, 50.0),
+        p99_wait_ms: pct(&waits, 99.0),
+        high_p99_wait_ms: pct(&high_waits, 99.0),
+    }
+}
+
+/// The three policies the saturation study compares, over one shared trace:
+/// unbounded FIFO, bounded reject-on-full, and the full QoS layer.
+pub fn qos_saturation_outcomes() -> Vec<QosOutcome> {
+    let trace = qos_trace(4000, 4242);
+    let capacity = 64;
+    let watermark_s = 2e-3;
+    [
+        SimPolicy {
+            name: "unbounded",
+            capacity: usize::MAX,
+            watermark_s: 0.0,
+            use_priority: false,
+            use_deadline: false,
+        },
+        SimPolicy {
+            name: "reject-on-full",
+            capacity,
+            watermark_s: 0.0,
+            use_priority: false,
+            use_deadline: false,
+        },
+        SimPolicy {
+            name: "qos",
+            capacity,
+            watermark_s,
+            use_priority: true,
+            use_deadline: true,
+        },
+    ]
+    .iter()
+    .map(|p| simulate_qos(p, &trace))
+    .collect()
+}
+
+/// QoS saturation experiment — offered load ~1.3x drain capacity, replayed
+/// deterministically against the three admission policies.
+pub fn qos_saturation() -> String {
+    let outcomes = qos_saturation_outcomes();
+    let mut out = String::from(
+        "== QoS saturation: bounded priority admission vs baselines (1.3x offered load) ==\n",
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for o in &outcomes {
+        let cap = if o.capacity == usize::MAX {
+            "inf".to_string()
+        } else {
+            o.capacity.to_string()
+        };
+        let sheds: u64 = o.shed_by_reason.iter().sum();
+        rows.push(vec![
+            o.policy.to_string(),
+            cap.clone(),
+            format!("{}/{}", o.completed, o.offered),
+            format!("{}", sheds),
+            format!("{}h/{}n", o.shed_lane[Priority::High.index()], o.shed_lane[Priority::Normal.index()]),
+            format!(
+                "{}/{}/{}",
+                o.shed_by_reason[RejectReason::QueueFull.index()],
+                o.shed_by_reason[RejectReason::Overload.index()],
+                o.shed_by_reason[RejectReason::DeadlineUnmeetable.index()],
+            ),
+            o.max_depth.to_string(),
+            format!("{:.2}", o.p50_wait_ms),
+            format!("{:.2}", o.p99_wait_ms),
+            format!("{:.2}", o.high_p99_wait_ms),
+        ]);
+        csv.push(vec![
+            o.policy.to_string(),
+            cap,
+            o.offered.to_string(),
+            o.completed.to_string(),
+            o.shed_lane[Priority::High.index()].to_string(),
+            o.shed_lane[Priority::Normal.index()].to_string(),
+            o.shed_by_reason[RejectReason::QueueFull.index()].to_string(),
+            o.shed_by_reason[RejectReason::Overload.index()].to_string(),
+            o.shed_by_reason[RejectReason::DeadlineUnmeetable.index()].to_string(),
+            o.max_depth.to_string(),
+            format!("{:.4}", o.p50_wait_ms),
+            format!("{:.4}", o.p99_wait_ms),
+            format!("{:.4}", o.high_p99_wait_ms),
+        ]);
+    }
+    out.push_str(&render::table(
+        &[
+            "policy",
+            "cap",
+            "completed",
+            "shed",
+            "shed(lane)",
+            "shed(full/over/ddl)",
+            "max_depth",
+            "p50_wait(ms)",
+            "p99_wait(ms)",
+            "high_p99(ms)",
+        ],
+        &rows,
+    ));
+    out.push_str(
+        "\nexpected shape: unbounded queue depth grows without bound and tail wait explodes; \
+         reject-on-full caps depth but sheds blindly; qos holds depth at/below its bound, \
+         sheds cost-aware (normal-lane, low-synergy first) with typed rejections, and keeps \
+         p99 queue wait lowest — high lane lowest of all.\n",
+    );
+    let _ = render::write_csv(
+        &results_dir().join("qos_saturation.csv"),
+        &[
+            "policy",
+            "capacity",
+            "offered",
+            "completed",
+            "shed_high",
+            "shed_normal",
+            "shed_full",
+            "shed_overload",
+            "shed_deadline",
+            "max_depth",
+            "p50_wait_ms",
+            "p99_wait_ms",
+            "high_p99_wait_ms",
+        ],
+        &csv,
+    );
+    out
+}
+
 /// Run the corpus once at the scale implied by `quick` for the corpus-wide
 /// experiments (fig2/7/9/10, table2).
 pub fn corpus_records(quick: bool) -> Vec<Record> {
@@ -646,6 +921,69 @@ mod tests {
         let t = ablation_tiles();
         assert!(t.contains("TN=32"));
         assert!(t.contains("OI_shmem"));
+    }
+
+    /// Acceptance for the QoS saturation run: the bounded-queue policy holds
+    /// queue depth at or below its configured capacity with zero unbounded
+    /// growth, sheds load with typed rejections (reported per lane), and
+    /// achieves lower p99 queue wait than the unbounded baseline at the same
+    /// offered load.
+    #[test]
+    fn qos_saturation_bounds_depth_and_tail_latency() {
+        let outcomes = qos_saturation_outcomes();
+        assert_eq!(outcomes.len(), 3);
+        let unbounded = &outcomes[0];
+        let reject = &outcomes[1];
+        let qos_o = &outcomes[2];
+
+        // the unbounded baseline completes everything but grows without bound
+        assert_eq!(unbounded.completed, unbounded.offered);
+        assert!(
+            unbounded.max_depth > qos_o.capacity,
+            "unbounded depth {} should exceed the bounded capacity {}",
+            unbounded.max_depth,
+            qos_o.capacity
+        );
+
+        // both bounded policies hold the configured bound — zero unbounded growth
+        assert!(reject.max_depth <= reject.capacity);
+        assert!(qos_o.max_depth <= qos_o.capacity);
+
+        // qos sheds with typed rejections, reported per lane and per reason
+        let qos_sheds: u64 = qos_o.shed_by_reason.iter().sum();
+        assert!(qos_sheds > 0);
+        assert_eq!(
+            qos_sheds,
+            qos_o.shed_lane.iter().sum::<u64>(),
+            "per-lane and per-reason counts must agree"
+        );
+        assert!(
+            qos_o.shed_by_reason[RejectReason::Overload.index()] > 0,
+            "cost-aware watermark shedding never engaged"
+        );
+        assert!(
+            qos_o.shed_by_reason[RejectReason::DeadlineUnmeetable.index()] > 0,
+            "deadline shedding never engaged"
+        );
+        // the normal lane is shed first under pressure
+        assert!(
+            qos_o.shed_lane[Priority::Normal.index()]
+                > qos_o.shed_lane[Priority::High.index()],
+            "normal lane must shed more than the high lane"
+        );
+
+        // tail latency: qos beats the unbounded baseline at the same load
+        assert!(
+            qos_o.p99_wait_ms < unbounded.p99_wait_ms,
+            "qos p99 {} vs unbounded p99 {}",
+            qos_o.p99_wait_ms,
+            unbounded.p99_wait_ms
+        );
+
+        let report = qos_saturation();
+        assert!(report.contains("QoS saturation"), "{report}");
+        assert!(report.contains("unbounded"), "{report}");
+        assert!(report.contains("reject-on-full"), "{report}");
     }
 
     #[test]

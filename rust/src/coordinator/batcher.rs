@@ -121,7 +121,10 @@ impl Batcher {
         out
     }
 
-    /// Flush everything (shutdown).
+    /// Flush every pending group (shutdown). Nothing is dropped on the
+    /// floor: the coordinator either executes the returned groups (legacy
+    /// ingress) or fails each held request cleanly with a typed rejection
+    /// (QoS ingress, see `coordinator::qos_router_loop`).
     pub fn drain(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
         while let Some(i) = self.groups.iter().position(|(_, g)| !g.items.is_empty()) {
@@ -224,6 +227,25 @@ mod tests {
         let drained = b.drain();
         assert_eq!(drained.len(), 2);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn drain_hands_back_every_held_token_for_clean_failure() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch_cols: 10_000,
+            max_batch_reqs: 1000,
+            max_delay: Duration::from_secs(10),
+        });
+        let now = Instant::now();
+        for t in 0..5 {
+            assert!(b.push(pend(t, t % 2, 8), now).is_none());
+        }
+        let drained = b.drain();
+        let mut tokens: Vec<u64> = drained.iter().flat_map(|batch| batch.tokens.clone()).collect();
+        tokens.sort_unstable();
+        assert_eq!(tokens, vec![0, 1, 2, 3, 4], "no held request may be dropped");
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_deadline().is_none());
     }
 
     #[test]

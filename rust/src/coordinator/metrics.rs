@@ -1,7 +1,9 @@
 //! Serving metrics: latency histograms, throughput counters, queue gauges,
-//! and per-engine routing lanes (which engine served what, and how far the
-//! observed latency drifts from the planner's prediction).
+//! per-engine routing lanes (which engine served what, and how far the
+//! observed latency drifts from the planner's prediction), and per-lane QoS
+//! admission counters (admitted / shed-by-reason / depth / queue wait).
 
+use crate::qos::{Priority, RejectReason};
 use crate::spmm::Algo;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -128,6 +130,25 @@ pub struct EngineLaneSnapshot {
     pub drift: f64,
 }
 
+/// Per-lane QoS admission counters (indexed by [`Priority::index`]).
+#[derive(Default)]
+pub struct QosLane {
+    /// Requests admitted into this lane.
+    pub admitted: AtomicU64,
+    /// Requests shed at admission, by [`RejectReason::index`].
+    pub shed: [AtomicU64; RejectReason::COUNT],
+    /// Queue depth gauge (mirrored from the admission queue).
+    pub depth: AtomicUsize,
+    /// Admission → drain wait.
+    pub queue_wait: LatencyHistogram,
+}
+
+impl QosLane {
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
 /// Aggregate serving metrics.
 #[derive(Default)]
 pub struct Metrics {
@@ -148,6 +169,22 @@ pub struct Metrics {
     pub flops: Mutex<f64>,
     /// Per-engine routing lanes ([`Algo::index`] + [`PJRT_LANE`]).
     pub engines: [EngineLane; ENGINE_LANES],
+    /// QoS admission lanes ([`Priority::index`]); silent until the
+    /// admission layer is enabled.
+    pub qos: [QosLane; Priority::COUNT],
+    /// Predicted cost (µs) of QoS-admitted work already drained out of the
+    /// admission queue but not yet completed (batcher + job channel +
+    /// executing). Added on router pop, subtracted when the worker replies,
+    /// so the admission estimator sees the whole pipeline, not just the
+    /// queue.
+    pub qos_downstream_cost_us: AtomicU64,
+}
+
+/// Predicted-cost seconds → the µs unit the downstream gauge accumulates.
+/// Add and subtract sites convert from the *same* stored `f64`, so paired
+/// updates cancel exactly and the gauge can never underflow.
+fn qos_cost_us(cost_s: f64) -> u64 {
+    (cost_s.max(0.0) * 1e6) as u64
 }
 
 impl Metrics {
@@ -165,6 +202,49 @@ impl Metrics {
         if predicted_s > 0.0 {
             l.predicted_us.fetch_add((predicted_s * 1e6) as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Record one admitted request on a QoS lane.
+    pub fn record_admitted(&self, p: Priority) {
+        self.qos[p.index()].admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one shed request on a QoS lane.
+    pub fn record_shed(&self, p: Priority, reason: RejectReason) {
+        self.qos[p.index()].shed[reason.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one admission → drain wait on a QoS lane.
+    pub fn record_queue_wait(&self, p: Priority, wait: Duration) {
+        self.qos[p.index()].queue_wait.record(wait);
+    }
+
+    /// Mirror the admission queue's lane depth gauge.
+    pub fn set_qos_depth(&self, p: Priority, depth: usize) {
+        self.qos[p.index()].depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Requests shed at admission across all lanes and reasons.
+    pub fn shed_total(&self) -> u64 {
+        self.qos.iter().map(|l| l.shed_total()).sum()
+    }
+
+    /// Account predicted cost leaving the admission queue for the batcher.
+    pub fn add_qos_downstream(&self, cost_s: f64) {
+        self.qos_downstream_cost_us.fetch_add(qos_cost_us(cost_s), Ordering::Relaxed);
+    }
+
+    /// Account predicted cost leaving the pipeline (reply sent or request
+    /// failed). Must mirror a prior [`Metrics::add_qos_downstream`] with the
+    /// same stored cost.
+    pub fn sub_qos_downstream(&self, cost_s: f64) {
+        self.qos_downstream_cost_us.fetch_sub(qos_cost_us(cost_s), Ordering::Relaxed);
+    }
+
+    /// Predicted cost (seconds) drained from the admission queue but not yet
+    /// completed — the admission estimator's view of downstream backlog.
+    pub fn qos_downstream_cost_s(&self) -> f64 {
+        self.qos_downstream_cost_us.load(Ordering::Relaxed) as f64 / 1e6
     }
 
     /// Requests served by `algo`'s lane (test + report convenience).
@@ -230,6 +310,33 @@ impl Metrics {
                     out.push_str(&format!("{}:{}(drift={:.2}x)", l.engine, l.requests, l.drift));
                 } else {
                     out.push_str(&format!("{}:{}", l.engine, l.requests));
+                }
+            }
+            out.push(']');
+        }
+        let qos_active = self
+            .qos
+            .iter()
+            .any(|l| l.admitted.load(Ordering::Relaxed) > 0 || l.shed_total() > 0);
+        if qos_active {
+            out.push_str(" qos=[");
+            for (i, p) in Priority::all().into_iter().enumerate() {
+                if i > 0 {
+                    out.push_str(" | ");
+                }
+                let l = &self.qos[p.index()];
+                out.push_str(&format!(
+                    "{}: admitted={} depth={} wait_p99us={}",
+                    p.name(),
+                    l.admitted.load(Ordering::Relaxed),
+                    l.depth.load(Ordering::Relaxed),
+                    l.queue_wait.percentile_us(99.0),
+                ));
+                for r in RejectReason::all() {
+                    let c = l.shed[r.index()].load(Ordering::Relaxed);
+                    if c > 0 {
+                        out.push_str(&format!(" shed_{}={}", r.name(), c));
+                    }
                 }
             }
             out.push(']');
@@ -306,6 +413,46 @@ mod tests {
         assert!(r.contains("routing="), "{r}");
         assert!(r.contains("cutespmm:6(drift=2.00x)"), "{r}");
         assert!(r.contains("sputnik:1"), "{r}");
+    }
+
+    #[test]
+    fn qos_lanes_record_and_report() {
+        let m = Metrics::default();
+        m.record_admitted(Priority::High);
+        m.record_admitted(Priority::Normal);
+        m.record_shed(Priority::Normal, RejectReason::Overload);
+        m.record_shed(Priority::Normal, RejectReason::QueueFull);
+        m.record_queue_wait(Priority::High, Duration::from_micros(100));
+        m.set_qos_depth(Priority::High, 3);
+        assert_eq!(m.shed_total(), 2);
+        assert_eq!(m.qos[Priority::Normal.index()].shed_total(), 2);
+        let r = m.report();
+        assert!(r.contains("qos=["), "{r}");
+        assert!(r.contains("high: admitted=1 depth=3"), "{r}");
+        assert!(r.contains("shed_overload=1"), "{r}");
+        assert!(r.contains("shed_full=1"), "{r}");
+        assert!(!r.contains("shed_deadline"), "unused reasons stay silent: {r}");
+    }
+
+    #[test]
+    fn qos_downstream_gauge_pairs_exactly() {
+        let m = Metrics::default();
+        assert_eq!(m.qos_downstream_cost_s(), 0.0);
+        for cost in [1.5e-3, 2.25e-4, 0.0, -1.0] {
+            m.add_qos_downstream(cost);
+        }
+        assert!(m.qos_downstream_cost_s() > 1.6e-3);
+        for cost in [1.5e-3, 2.25e-4, 0.0, -1.0] {
+            m.sub_qos_downstream(cost);
+        }
+        assert_eq!(m.qos_downstream_cost_us.load(Ordering::Relaxed), 0, "paired updates cancel");
+    }
+
+    #[test]
+    fn qos_section_is_silent_without_activity() {
+        let m = Metrics::default();
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        assert!(!m.report().contains("qos=["));
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! Engines: the native HRPB hot path (always available) and the AOT PJRT
 //! artifact via [`crate::runtime::PjrtHandle`] (when artifacts are built and
 //! the padded shape fits a bucket). Python never runs here.
+//!
+//! With [`Config::qos`] set, the ingress is replaced by the [`crate::qos`]
+//! admission layer: a bounded dual-priority queue whose admission rule sheds
+//! load by planner-predicted cost and deadline feasibility, drained into the
+//! batcher in priority order.
 
 pub mod batcher;
 pub mod metrics;
@@ -29,8 +34,10 @@ pub use registry::{Entry, MatrixId, Registry};
 
 use crate::formats::Dense;
 use crate::planner::Planner;
+use crate::qos::{self, AdmissionQueue, Priority, QosConfig, RejectReason, Rejected, Ticket};
 use crate::runtime::PjrtHandle;
 use crate::spmm::{Algo, SpmmEngine};
+use crate::synergy::Synergy;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -82,6 +89,10 @@ pub struct Config {
     pub queue_capacity: usize,
     pub batch: BatchPolicy,
     pub engine: EnginePolicy,
+    /// QoS admission layer in front of the batcher: bounded dual-priority
+    /// queuing, cost-aware shedding, deadline checks ([`crate::qos`]).
+    /// `None` keeps the legacy bounded-channel ingress.
+    pub qos: Option<QosConfig>,
 }
 
 impl Default for Config {
@@ -91,6 +102,7 @@ impl Default for Config {
             queue_capacity: 1024,
             batch: BatchPolicy::default(),
             engine: EnginePolicy::Native,
+            qos: None,
         }
     }
 }
@@ -114,6 +126,10 @@ struct Request {
     matrix: MatrixId,
     b: Dense,
     submitted: Instant,
+    priority: Priority,
+    /// Planner-predicted execution cost (seconds); 0.0 on the legacy
+    /// channel path. Drives the QoS downstream-backlog gauge.
+    cost_s: f64,
     reply: Sender<Result<Response, String>>,
 }
 
@@ -127,12 +143,19 @@ enum Ingress {
     Shutdown,
 }
 
+/// How requests enter the router: the legacy bounded channel, or the QoS
+/// admission queue ([`Config::qos`]).
+enum IngressPath {
+    Channel(SyncSender<Ingress>),
+    Qos(Arc<AdmissionQueue<Request>>),
+}
+
 /// The running coordinator.
 pub struct Coordinator {
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
     planner: Option<Arc<Planner>>,
-    ingress: SyncSender<Ingress>,
+    ingress: IngressPath,
     next_token: AtomicU64,
     router: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -163,8 +186,10 @@ impl Coordinator {
         };
         let registry = Arc::new(Registry::new());
         let metrics = Arc::new(Metrics::default());
-        let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(config.queue_capacity);
-        let (job_tx, job_rx) = channel::<Job>();
+        // the job channel is bounded so the router backpressures instead of
+        // hiding unbounded growth behind the batcher (with QoS enabled this
+        // is what lets the admission queue fill and shed under saturation)
+        let (job_tx, job_rx) = sync_channel::<Job>(config.workers.max(1) * 2);
         let job_rx = Arc::new(Mutex::new(job_rx));
 
         // worker pool
@@ -184,21 +209,39 @@ impl Coordinator {
             );
         }
 
-        // router thread
-        let router = {
-            let metrics = metrics.clone();
-            let policy = config.batch;
-            std::thread::Builder::new()
-                .name("cutespmm-router".into())
-                .spawn(move || router_loop(ingress_rx, job_tx, policy, metrics))
-                .expect("spawn router")
+        // router thread: QoS admission drain loop or the legacy channel loop
+        let policy = config.batch;
+        let (ingress, router) = match config.qos {
+            Some(qos_config) => {
+                let queue = Arc::new(AdmissionQueue::new(qos_config, config.workers.max(1)));
+                let router = {
+                    let metrics = metrics.clone();
+                    let queue = queue.clone();
+                    std::thread::Builder::new()
+                        .name("cutespmm-qos-router".into())
+                        .spawn(move || qos_router_loop(queue, job_tx, policy, metrics))
+                        .expect("spawn qos router")
+                };
+                (IngressPath::Qos(queue), router)
+            }
+            None => {
+                let (ingress_tx, ingress_rx) = sync_channel::<Ingress>(config.queue_capacity);
+                let router = {
+                    let metrics = metrics.clone();
+                    std::thread::Builder::new()
+                        .name("cutespmm-router".into())
+                        .spawn(move || router_loop(ingress_rx, job_tx, policy, metrics))
+                        .expect("spawn router")
+                };
+                (IngressPath::Channel(ingress_tx), router)
+            }
         };
 
         Coordinator {
             registry,
             metrics,
             planner,
-            ingress: ingress_tx,
+            ingress,
             next_token: AtomicU64::new(0),
             router: Some(router),
             workers,
@@ -227,42 +270,149 @@ impl Coordinator {
         }
     }
 
-    /// Submit a request; blocks only if the bounded ingress queue is full
-    /// (backpressure). Returns the reply channel.
+    /// Submit a request on the normal lane with no deadline. Under the
+    /// legacy channel ingress this blocks only if the bounded queue is full
+    /// (backpressure); under QoS a shed request surfaces as a typed error
+    /// on the reply channel.
     pub fn submit(&self, matrix: MatrixId, b: Dense) -> Receiver<Result<Response, String>> {
+        self.submit_with(matrix, b, Priority::Normal, None)
+    }
+
+    /// Submit with a QoS priority and optional deadline. Without
+    /// `Config::qos` the priority and deadline are ignored (legacy channel
+    /// semantics); with it, admission rejections arrive as typed messages
+    /// on the reply channel (see [`Coordinator::submit_qos`] for the
+    /// `Result`-shaped variant).
+    pub fn submit_with(
+        &self,
+        matrix: MatrixId,
+        b: Dense,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Receiver<Result<Response, String>> {
+        match &self.ingress {
+            IngressPath::Channel(_) => self.submit_channel(matrix, b),
+            IngressPath::Qos(_) => match self.submit_qos(matrix, b, priority, deadline) {
+                Ok(rx) => rx,
+                Err((rejected, _b)) => {
+                    let (reply, rx) = channel();
+                    let _ = reply.send(Err(rejected.to_string()));
+                    rx
+                }
+            },
+        }
+    }
+
+    /// Typed QoS submit (requires `Config::qos`): the admission layer may
+    /// shed the request immediately — `Err` carries the [`Rejected`]
+    /// verdict (reason + estimated wait) and returns the B operand.
+    /// `deadline` overrides the configured default deadline.
+    ///
+    /// # Panics
+    /// Panics when the coordinator was started without `Config::qos`.
+    pub fn submit_qos(
+        &self,
+        matrix: MatrixId,
+        b: Dense,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<Response, String>>, (Rejected, Dense)> {
+        let IngressPath::Qos(queue) = &self.ingress else {
+            panic!("submit_qos requires Config::qos (the admission layer is not enabled)");
+        };
+        // per-matrix cost lookup: planner-predicted seconds for this request
+        let (cost_s, expensive) = match self.registry.get(matrix) {
+            Some(entry) => {
+                (entry.cost_s_per_col * b.cols as f64, entry.synergy == Synergy::Low)
+            }
+            // unknown matrices carry zero cost; the worker fails them with
+            // its own typed error
+            None => (0.0, false),
+        };
+        let mut ticket = Ticket::new(priority, cost_s);
+        ticket.deadline = deadline;
+        ticket.expensive = expensive;
         let (reply, rx) = channel();
         let req = Request {
             token: self.next_token.fetch_add(1, Ordering::Relaxed),
             matrix,
             b,
             submitted: Instant::now(),
+            priority,
+            cost_s,
+            reply,
+        };
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        // gauge up *before* the request becomes visible to the router, so a
+        // fast router+worker can never fetch_sub past zero and wrap it
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        match queue.submit(ticket, req, self.metrics.qos_downstream_cost_s()) {
+            Ok(()) => {
+                self.metrics.record_admitted(priority);
+                self.metrics.set_qos_depth(priority, queue.depth(priority));
+                Ok(rx)
+            }
+            Err((rejected, req)) => {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.record_shed(priority, rejected.reason);
+                Err((rejected, req.b))
+            }
+        }
+    }
+
+    fn submit_channel(&self, matrix: MatrixId, b: Dense) -> Receiver<Result<Response, String>> {
+        let IngressPath::Channel(tx) = &self.ingress else {
+            unreachable!("submit_channel is only called on the channel path");
+        };
+        let (reply, rx) = channel();
+        let req = Request {
+            token: self.next_token.fetch_add(1, Ordering::Relaxed),
+            matrix,
+            b,
+            submitted: Instant::now(),
+            priority: Priority::Normal,
+            cost_s: 0.0,
             reply,
         };
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        if self.ingress.send(Ingress::Req(req)).is_err() {
+        if tx.send(Ingress::Req(req)).is_err() {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
         }
         rx
     }
 
-    /// Non-blocking submit: `Err` when the ingress queue is full.
+    /// Non-blocking submit: `Err` returns the operand when the ingress
+    /// queue is full (or, under QoS, when admission sheds the request).
     pub fn try_submit(
         &self,
         matrix: MatrixId,
         b: Dense,
     ) -> Result<Receiver<Result<Response, String>>, Dense> {
+        let tx = match &self.ingress {
+            IngressPath::Channel(tx) => tx,
+            IngressPath::Qos(_) => {
+                return self
+                    .submit_qos(matrix, b, Priority::Normal, None)
+                    .map_err(|(_rejected, b)| b);
+            }
+        };
         let (reply, rx) = channel();
         let req = Request {
             token: self.next_token.fetch_add(1, Ordering::Relaxed),
             matrix,
             b,
             submitted: Instant::now(),
+            priority: Priority::Normal,
+            cost_s: 0.0,
             reply,
         };
-        match self.ingress.try_send(Ingress::Req(req)) {
+        // `requests` counts everything offered (matching the QoS path and
+        // the blocking submit), whether or not it is accepted
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(Ingress::Req(req)) {
             Ok(()) => {
-                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
                 Ok(rx)
             }
@@ -281,13 +431,25 @@ impl Coordinator {
             .map_err(|_| "coordinator dropped request".to_string())?
     }
 
-    /// Graceful shutdown: drain in-flight work, join threads.
+    /// Graceful shutdown. Legacy ingress: drain in-flight work, join
+    /// threads. QoS ingress: close admission, fail everything still queued
+    /// (and still grouped in the batcher) with typed `shutdown` rejections,
+    /// finish jobs already dispatched to workers, join threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        let _ = self.ingress.send(Ingress::Shutdown);
+        match &self.ingress {
+            IngressPath::Channel(tx) => {
+                let _ = tx.send(Ingress::Shutdown);
+            }
+            IngressPath::Qos(queue) => {
+                for (_ticket, req) in queue.close() {
+                    reject_shutdown(&self.metrics, req);
+                }
+            }
+        }
         if let Some(r) = self.router.take() {
             let _ = r.join();
         }
@@ -305,25 +467,67 @@ impl Drop for Coordinator {
     }
 }
 
+/// Move a flushed batch's held requests into a [`Job`] and dispatch it
+/// (shared by both router loops; blocks when the bounded job channel is
+/// full — that backpressure is what lets the admission queue fill).
+fn flush_batch(
+    batch: batcher::Batch,
+    held: &mut HashMap<u64, Request>,
+    job_tx: &SyncSender<Job>,
+    metrics: &Metrics,
+) {
+    let reqs: Vec<Request> = batch.tokens.iter().filter_map(|t| held.remove(t)).collect();
+    if reqs.is_empty() {
+        return;
+    }
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+    let _ = job_tx.send(Job { matrix: batch.matrix, reqs });
+}
+
+/// Feed one request into the batcher and flush whatever its arrival
+/// triggers (width/count trigger plus any deadline-expired groups) — the
+/// shared per-item step of both router loops.
+fn feed_batcher(
+    req: Request,
+    batcher: &mut Batcher,
+    held: &mut HashMap<u64, Request>,
+    job_tx: &SyncSender<Job>,
+    metrics: &Metrics,
+) {
+    let now = Instant::now();
+    let pending = batcher::Pending { token: req.token, matrix: req.matrix, cols: req.b.cols };
+    held.insert(req.token, req);
+    if let Some(batch) = batcher.push(pending, now) {
+        flush_batch(batch, held, job_tx, metrics);
+    }
+    for batch in batcher.poll(now) {
+        flush_batch(batch, held, job_tx, metrics);
+    }
+}
+
+/// Fail one request with a typed shutdown rejection (shared by the QoS
+/// router's batcher drain and the coordinator's admission-queue drain).
+fn reject_shutdown(metrics: &Metrics, req: Request) {
+    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+    metrics.record_shed(req.priority, RejectReason::Shutdown);
+    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    let rejected = Rejected {
+        reason: RejectReason::Shutdown,
+        est_wait: Duration::ZERO,
+        priority: req.priority,
+    };
+    let _ = req.reply.send(Err(rejected.to_string()));
+}
+
 fn router_loop(
     ingress: Receiver<Ingress>,
-    job_tx: Sender<Job>,
+    job_tx: SyncSender<Job>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
 ) {
     let mut batcher = Batcher::new(policy);
     let mut held: HashMap<u64, Request> = HashMap::new();
-
-    let flush = |batch: batcher::Batch, held: &mut HashMap<u64, Request>, job_tx: &Sender<Job>| {
-        let reqs: Vec<Request> =
-            batch.tokens.iter().filter_map(|t| held.remove(t)).collect();
-        if reqs.is_empty() {
-            return;
-        }
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.batched_requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-        let _ = job_tx.send(Job { matrix: batch.matrix, reqs });
-    };
 
     loop {
         // wait bounded by the next batching deadline
@@ -333,31 +537,67 @@ fn router_loop(
             .unwrap_or(Duration::from_millis(50));
         match ingress.recv_timeout(timeout) {
             Ok(Ingress::Req(req)) => {
-                let now = Instant::now();
-                let pending = batcher::Pending {
-                    token: req.token,
-                    matrix: req.matrix,
-                    cols: req.b.cols,
-                };
-                held.insert(req.token, req);
-                if let Some(batch) = batcher.push(pending, now) {
-                    flush(batch, &mut held, &job_tx);
-                }
-                for batch in batcher.poll(now) {
-                    flush(batch, &mut held, &job_tx);
-                }
+                feed_batcher(req, &mut batcher, &mut held, &job_tx, &metrics);
             }
             Ok(Ingress::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {
                 for batch in batcher.poll(Instant::now()) {
-                    flush(batch, &mut held, &job_tx);
+                    flush_batch(batch, &mut held, &job_tx, &metrics);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     for batch in batcher.drain() {
-        flush(batch, &mut held, &job_tx);
+        flush_batch(batch, &mut held, &job_tx, &metrics);
+    }
+    // job_tx drops here; workers exit on channel close
+}
+
+/// The QoS drain loop: feeds the batcher from the admission queue in
+/// priority order, records per-lane queue waits and the downstream-backlog
+/// gauge, and — on graceful shutdown — fails everything still grouped in
+/// the batcher with typed rejections ([`Batcher::drain`] hands the pending
+/// groups back) instead of dropping it on the floor.
+fn qos_router_loop(
+    queue: Arc<AdmissionQueue<Request>>,
+    job_tx: SyncSender<Job>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = Batcher::new(policy);
+    let mut held: HashMap<u64, Request> = HashMap::new();
+
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match queue.pop_timeout(timeout) {
+            qos::Pop::Item(ticket, req) => {
+                metrics.record_queue_wait(ticket.priority, ticket.enqueued.elapsed());
+                metrics.set_qos_depth(ticket.priority, queue.depth(ticket.priority));
+                // from here until the worker replies this request's cost is
+                // downstream backlog the admission estimator must still see
+                metrics.add_qos_downstream(req.cost_s);
+                feed_batcher(req, &mut batcher, &mut held, &job_tx, &metrics);
+            }
+            qos::Pop::TimedOut => {
+                for batch in batcher.poll(Instant::now()) {
+                    flush_batch(batch, &mut held, &job_tx, &metrics);
+                }
+            }
+            qos::Pop::Closed => break,
+        }
+    }
+    // graceful shutdown: pending groups are failed cleanly with typed
+    // rejections; jobs already sent to workers still execute
+    for batch in batcher.drain() {
+        for token in batch.tokens {
+            let Some(req) = held.remove(&token) else { continue };
+            metrics.sub_qos_downstream(req.cost_s);
+            reject_shutdown(&metrics, req);
+        }
     }
     // job_tx drops here; workers exit on channel close
 }
@@ -393,6 +633,7 @@ fn execute_job(
         for req in job.reqs {
             metrics.failures.fetch_add(1, Ordering::Relaxed);
             metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            metrics.sub_qos_downstream(req.cost_s);
             let _ = req.reply.send(Err(format!("unknown matrix {:?}", job.matrix)));
         }
         return;
@@ -476,6 +717,7 @@ fn execute_job(
     let mut col = 0usize;
     for (req, is_bad) in job.reqs.into_iter().zip(bad) {
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.sub_qos_downstream(req.cost_s);
         if is_bad {
             metrics.failures.fetch_add(1, Ordering::Relaxed);
             let _ = req.reply.send(Err(format!(
@@ -681,6 +923,96 @@ mod tests {
         assert!(m.engine_requests(Algo::Hrpb) >= 1, "{}", m.report());
         assert!(m.engine_requests(low_plan.engine) >= 1, "{}", m.report());
         assert!(m.report().contains("routing="));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn qos_sheds_when_saturated_with_typed_rejections() {
+        let coord = Coordinator::start(
+            Config {
+                workers: 1,
+                engine: EnginePolicy::Native,
+                qos: Some(QosConfig {
+                    queue_capacity: 2,
+                    watermark_s: 0.0,
+                    default_deadline: None,
+                }),
+                batch: BatchPolicy {
+                    max_batch_cols: 8,
+                    max_batch_reqs: 1,
+                    max_delay: Duration::from_millis(0),
+                },
+                ..Default::default()
+            },
+            None,
+        );
+        let coo = crate::formats::Coo::random(1024, 1024, 0.05, &mut Rng::new(500));
+        let id = coord.register("m", &coo);
+
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..64u64 {
+            let b = Dense::random(1024, 8, &mut Rng::new(600 + i));
+            match coord.submit_qos(id, b, Priority::Normal, None) {
+                Ok(rx) => accepted.push(rx),
+                Err((rejected, returned_b)) => {
+                    assert_eq!(rejected.reason, RejectReason::QueueFull);
+                    assert!(rejected.to_string().starts_with("rejected"));
+                    assert_eq!(returned_b.rows, 1024, "shed returns the operand");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(!accepted.is_empty());
+        assert!(shed > 0, "a 2-deep queue under 64 rapid submits must shed");
+        for rx in accepted {
+            assert!(rx.recv().unwrap().is_ok(), "admitted requests complete");
+        }
+        let m = coord.metrics();
+        assert_eq!(m.rejected.load(Ordering::Relaxed), shed);
+        assert_eq!(m.qos[Priority::Normal.index()].shed_total(), shed);
+        assert!(m.report().contains("qos=["), "{}", m.report());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn qos_submit_with_converts_rejections_to_reply_errors() {
+        let coord = Coordinator::start(
+            Config {
+                workers: 1,
+                qos: Some(QosConfig {
+                    queue_capacity: 1,
+                    watermark_s: 0.0,
+                    default_deadline: None,
+                }),
+                batch: BatchPolicy {
+                    max_batch_cols: 8,
+                    max_batch_reqs: 1,
+                    max_delay: Duration::from_millis(0),
+                },
+                ..Default::default()
+            },
+            None,
+        );
+        let coo = crate::formats::Coo::random(512, 512, 0.05, &mut Rng::new(501));
+        let id = coord.register("m", &coo);
+        let mut rxs = Vec::new();
+        for i in 0..32u64 {
+            let b = Dense::random(512, 8, &mut Rng::new(700 + i));
+            rxs.push(coord.submit_with(id, b, Priority::Normal, None));
+        }
+        let (mut ok, mut rejected) = (0, 0);
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(e.starts_with("rejected"), "{e}");
+                    rejected += 1;
+                }
+            }
+        }
+        assert_eq!(ok + rejected, 32);
+        assert!(ok >= 1);
         coord.shutdown();
     }
 

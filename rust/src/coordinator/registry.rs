@@ -38,6 +38,11 @@ pub struct Entry {
     pub preprocess_time: Duration,
     /// The planner's decision for this matrix (`None` under fixed policies).
     pub plan: Option<Arc<Plan>>,
+    /// Predicted execution cost per fused B column (seconds) — the QoS
+    /// admission layer's cost signal. Planned entries reuse the plan's
+    /// prediction; unplanned entries fall back to the analytical A100 model
+    /// for the HRPB engine.
+    pub cost_s_per_col: f64,
     /// Engine that executes batches under `EnginePolicy::Auto`: the planned
     /// engine, or the HRPB engine when registration was unplanned.
     pub exec: Arc<dyn SpmmEngine>,
@@ -87,6 +92,28 @@ impl Registry {
                 (Some(e.clone()), e)
             }
         };
+        let cost_s_per_col = match &plan {
+            Some(p) => p.predicted_s_per_col,
+            None => {
+                // cheap HRPB-only profile: prices the matrix for QoS
+                // admission without the full engine-ranking profile pass
+                let profile = crate::gpumodel::MatrixProfile::hrpb_only(
+                    coo.rows,
+                    coo.cols,
+                    coo.nnz(),
+                    stats,
+                    &hrpb,
+                );
+                let width = 128usize;
+                let pred = crate::gpumodel::algos::predict(
+                    Algo::Hrpb,
+                    &profile,
+                    width,
+                    &crate::gpumodel::Machine::a100(),
+                );
+                pred.time_s / width as f64
+            }
+        };
         let preprocess_time = t0.elapsed();
         let id = MatrixId(self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
         let entry = Arc::new(Entry {
@@ -101,6 +128,7 @@ impl Registry {
             synergy: synergy::Synergy::from_alpha(stats.alpha),
             preprocess_time,
             plan,
+            cost_s_per_col,
             exec,
         });
         self.entries.write().unwrap().insert(id, entry);
@@ -197,6 +225,27 @@ mod tests {
         let low2_id = reg.register_planned("low-again", &low, &planner);
         assert_ne!(low_id, low2_id);
         assert_eq!(planner.cache().stats().hits, hits_before + 1);
+    }
+
+    #[test]
+    fn entries_carry_positive_cost_estimates() {
+        use crate::gpumodel::Machine;
+        let reg = Registry::new();
+        let coo = Coo::random(256, 256, 0.05, &mut Rng::new(9));
+        let id = reg.register("unplanned", &coo);
+        let e = reg.get(id).unwrap();
+        assert!(
+            e.cost_s_per_col.is_finite() && e.cost_s_per_col > 0.0,
+            "cost {}",
+            e.cost_s_per_col
+        );
+
+        // planned entries reuse the plan's per-column prediction exactly
+        let planner = Planner::new(Machine::a100());
+        let id2 = reg.register_planned("planned", &coo, &planner);
+        let e2 = reg.get(id2).unwrap();
+        let plan = e2.plan.as_ref().unwrap();
+        assert_eq!(e2.cost_s_per_col, plan.predicted_s_per_col);
     }
 
     #[test]

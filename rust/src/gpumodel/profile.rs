@@ -72,6 +72,42 @@ impl MatrixProfile {
         }
     }
 
+    /// Minimal profile sufficient for the HRPB (cuTeSpMM) cost model only —
+    /// the serving registry prices unplanned matrices for QoS admission with
+    /// this, skipping the TC-GNN SGT build and row-statistics passes of
+    /// [`MatrixProfile::with_hrpb`]. Fields only the other engine models
+    /// consume (`tcgnn_blocks`, row stats) are left at neutral defaults, so
+    /// only `Algo::Hrpb` predictions are meaningful against it.
+    pub fn hrpb_only(
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        stats: HrpbStats,
+        hrpb_mat: &hrpb::Hrpb,
+    ) -> MatrixProfile {
+        let loads = loadbalance::panel_loads(hrpb_mat);
+        let active: Vec<usize> = loads.iter().copied().filter(|&l| l > 0).collect();
+        let mean_load = if active.is_empty() {
+            0.0
+        } else {
+            active.iter().sum::<usize>() as f64 / active.len() as f64
+        };
+        let max_load = active.iter().copied().max().unwrap_or(0);
+        let panel_imbalance = if mean_load > 0.0 { max_load as f64 / mean_load } else { 1.0 };
+        MatrixProfile {
+            rows,
+            cols,
+            nnz,
+            hrpb: stats,
+            tcgnn_blocks: 0,
+            row_mean: if rows > 0 { nnz as f64 / rows as f64 } else { 0.0 },
+            row_cv: 0.0,
+            row_max: 0,
+            panel_imbalance,
+            active_panels: stats.active_panels,
+        }
+    }
+
     /// Synergy class (Table 1) of the HRPB α.
     pub fn synergy(&self) -> Synergy {
         Synergy::from_alpha(self.hrpb.alpha)
@@ -144,6 +180,25 @@ mod tests {
         let pb = MatrixProfile::compute(&banded);
         let pr = MatrixProfile::compute(&random);
         assert!(pb.hrpb.alpha > pr.hrpb.alpha);
+    }
+
+    #[test]
+    fn hrpb_only_profile_matches_full_profile_for_hrpb_prediction() {
+        use crate::gpumodel::{algos, Machine};
+        use crate::spmm::Algo;
+        let coo = Coo::random(512, 384, 0.02, &mut Rng::new(104));
+        let hrpb_mat = crate::hrpb::build_from_coo(&coo);
+        let stats = crate::hrpb::stats::compute(&hrpb_mat);
+        let full = MatrixProfile::with_hrpb(&coo, &hrpb_mat);
+        let cheap =
+            MatrixProfile::hrpb_only(coo.rows, coo.cols, coo.nnz(), stats, &hrpb_mat);
+        let m = Machine::a100();
+        let a = algos::predict(Algo::Hrpb, &full, 128, &m).time_s;
+        let b = algos::predict(Algo::Hrpb, &cheap, 128, &m).time_s;
+        assert!(
+            (a - b).abs() <= a * 1e-9,
+            "hrpb_only diverged from the full profile: {a} vs {b}"
+        );
     }
 
     #[test]

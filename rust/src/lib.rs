@@ -25,6 +25,13 @@
 //!   this host with a micro-benchmark pass, and demotes engines whose
 //!   observed serving latency drifts from the prediction. Surfaces as
 //!   `EnginePolicy::Auto` in the coordinator and `cutespmm plan` in the CLI.
+//! * [`qos`] — the serving-path QoS admission layer: a bounded
+//!   dual-priority queue in front of the batcher, cost-aware load shedding
+//!   driven by the planner's per-matrix predicted time (low-synergy =
+//!   expensive, shed first), and deadline-driven scheduling that rejects
+//!   requests whose estimated wait already exceeds their deadline with a
+//!   typed `Rejected{est_wait}` error. Surfaces as `Config::qos`,
+//!   `serve --qos` and `experiment qos`.
 //! * [`runtime`] — PJRT artifact registry + executor (the AOT path).
 //! * [`coordinator`] — the L3 serving layer: matrix registry, router,
 //!   dynamic batcher, worker pool, metrics.
@@ -38,6 +45,7 @@ pub mod gpumodel;
 pub mod hrpb;
 pub mod loadbalance;
 pub mod planner;
+pub mod qos;
 pub mod runtime;
 pub mod spmm;
 pub mod synergy;

@@ -6,11 +6,13 @@
 //! cutespmm spmm --mtx m.mtx --n 128 [--algo cutespmm] [--pjrt]
 //! cutespmm synergy --mtx m.mtx [--n 128]
 //! cutespmm plan --matrix cora [--n 128] [--machine a100] [--calibrate [rows]]
-//!               [--profile calib.json]       # ranked engine table + rationale
+//!               [--profile calib.json] [--json]  # ranked engine table + rationale
 //! cutespmm serve --matrix cora --requests 200 --n 32
 //!               [--engine native|pjrt|auto] [--calibrate] [--pjrt]
+//!               [--qos] [--qos-capacity N] [--qos-watermark-ms MS]
+//!               [--qos-deadline-ms MS]      # bounded admission + shedding
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
-//!                      preproc|ablation-tiles|ablation-balance|auto|all>
+//!                      preproc|ablation-tiles|ablation-balance|auto|qos|all>
 //!                     [--quick]
 //! cutespmm selfcheck                          # engines vs oracle + PJRT
 //! ```
@@ -23,13 +25,16 @@ use cutespmm::formats::{mtx, Coo, Dense};
 use cutespmm::gen::named;
 use cutespmm::gpumodel::{algos as gpu_algos, Machine, MatrixProfile};
 use cutespmm::planner::{Calibration, Planner, PlannerConfig};
+use cutespmm::qos::{Priority, QosConfig};
 use cutespmm::runtime;
 use cutespmm::spmm::Algo;
+use cutespmm::util::json::Json;
 use cutespmm::util::rng::Rng;
 use cutespmm::util::timer::{measure, time_once};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Minimal flag parser: `--key value` pairs plus bare flags.
 struct Args {
@@ -196,6 +201,22 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
     let planner = planner_from_args(args, n)?;
     let (plan, t_plan) = time_once(|| planner.plan(&coo));
 
+    if args.has("json") {
+        // machine-readable: the ranked-engine table for scripts
+        let doc = Json::obj(vec![
+            ("matrix", Json::str(name.clone())),
+            ("rows", Json::num(coo.rows as f64)),
+            ("cols", Json::num(coo.cols as f64)),
+            ("nnz", Json::num(coo.nnz() as f64)),
+            ("machine", Json::str(planner.machine().name)),
+            ("calibrated", Json::Bool(planner.calibration().calibrated)),
+            ("plan_ms", Json::num(t_plan * 1e3)),
+            ("plan", plan.to_json()),
+        ]);
+        println!("{}", doc.to_string());
+        return Ok(());
+    }
+
     println!(
         "matrix {name}: {}x{} nnz={} — planned in {:.2} ms",
         coo.rows,
@@ -294,11 +315,34 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     } else {
         None
     };
+    // --qos puts the bounded admission layer in front of the batcher
+    let qos = if args.has("qos") {
+        Some(QosConfig {
+            queue_capacity: args.usize_or("qos-capacity", 256),
+            watermark_s: args.usize_or("qos-watermark-ms", 50) as f64 / 1e3,
+            default_deadline: args
+                .get("qos-deadline-ms")
+                .and_then(|v| v.parse::<u64>().ok())
+                .map(Duration::from_millis),
+        })
+    } else {
+        None
+    };
     let coord = Coordinator::start_with_planner(
-        Config { workers, engine, batch: BatchPolicy::default(), ..Default::default() },
+        Config { workers, engine, batch: BatchPolicy::default(), qos, ..Default::default() },
         pjrt_svc.as_ref().map(|s| s.handle()),
         planner,
     );
+    if let Some(q) = &qos {
+        println!(
+            "qos: capacity={} watermark={:.1}ms deadline={}",
+            q.queue_capacity,
+            q.watermark_s * 1e3,
+            q.default_deadline
+                .map(|d| format!("{}ms", d.as_millis()))
+                .unwrap_or_else(|| "none".into()),
+        );
+    }
     let id = coord.register(&name, &coo);
     let entry = coord.registry().get(id).unwrap();
     println!(
@@ -323,9 +367,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(7);
     let mut rxs = Vec::with_capacity(requests);
-    for _ in 0..requests {
+    let mut shed = 0usize;
+    for i in 0..requests {
         let b = Dense::random(coo.cols, n, &mut rng);
-        rxs.push(coord.submit(id, b));
+        if qos.is_some() {
+            // every 4th request rides the high-priority lane so the
+            // per-lane metrics exercise both lanes; sheds are counted from
+            // the typed rejection at submission time
+            let priority = if i % 4 == 0 { Priority::High } else { Priority::Normal };
+            match coord.submit_qos(id, b, priority, None) {
+                Ok(rx) => rxs.push(rx),
+                Err((_rejected, _b)) => shed += 1,
+            }
+        } else {
+            rxs.push(coord.submit(id, b));
+        }
     }
     let mut ok = 0usize;
     for rx in rxs {
@@ -334,9 +390,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    println!("served {ok}/{requests} requests in {:.3} s ({:.1} req/s)", wall, ok as f64 / wall);
+    let shed_note = if shed > 0 { format!(", {shed} shed at admission") } else { String::new() };
+    println!(
+        "served {ok}/{requests} requests in {:.3} s ({:.1} req/s){shed_note}",
+        wall,
+        ok as f64 / wall
+    );
     println!("{}", coord.metrics().report());
+    // shutdown ordering: coordinator first (workers hold PJRT handles),
+    // then the PJRT service
     coord.shutdown();
+    if let Some(svc) = pjrt_svc {
+        svc.shutdown();
+    }
     Ok(())
 }
 
@@ -410,6 +476,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "ablation-tiles" => run("ablation-tiles", experiments::ablation_tiles()),
         "ablation-balance" => run("ablation-balance", experiments::ablation_loadbalance()),
         "auto" => run("auto", experiments::auto_policy(&records)),
+        "qos" => run("qos", experiments::qos_saturation()),
         "all" => {
             run("table1", experiments::table1());
             run("table2", experiments::table2(&records));
@@ -423,6 +490,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             run("ablation-tiles", experiments::ablation_tiles());
             run("ablation-balance", experiments::ablation_loadbalance());
             run("auto", experiments::auto_policy(&records));
+            run("qos", experiments::qos_saturation());
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }

@@ -16,6 +16,16 @@
 use crate::spmm::Algo;
 use std::sync::Mutex;
 
+/// Predictions at or below this are degenerate (a real kernel launch is
+/// never sub-picosecond): the observation is discarded rather than letting
+/// an effectively-infinite observed/predicted ratio spuriously demote the
+/// engine.
+const MIN_PREDICTED_S: f64 = 1e-12;
+
+/// Cap on a single observation's ratio so one wild sample (or a tiny but
+/// nonzero prediction) cannot poison the EWMA beyond recovery.
+const MAX_RATIO: f64 = 1e6;
+
 /// Per-engine drift state.
 #[derive(Clone, Copy, Debug)]
 struct Lane {
@@ -69,11 +79,17 @@ impl FeedbackTracker {
 
     /// Record one observation. Returns `true` when this observation flipped
     /// the engine's demotion state (the caller invalidates cached plans).
+    /// Degenerate predictions (zero, negative, NaN, or sub-picosecond) are
+    /// ignored and extreme ratios are clamped — see `MIN_PREDICTED_S` and
+    /// `MAX_RATIO`.
     pub fn observe(&self, algo: Algo, predicted_s: f64, observed_s: f64) -> bool {
-        if !(predicted_s > 0.0) || !(observed_s > 0.0) {
+        if !(predicted_s > MIN_PREDICTED_S) || !(observed_s > 0.0) {
             return false;
         }
-        let ratio = observed_s / predicted_s;
+        let ratio = (observed_s / predicted_s).min(MAX_RATIO);
+        if !ratio.is_finite() {
+            return false;
+        }
         let mut lanes = self.lanes.lock().unwrap();
         let lane = &mut lanes[algo.index()];
         lane.samples += 1;
@@ -181,6 +197,29 @@ mod tests {
         assert!(!fb.observe(Algo::Coo, 0.0, 1.0));
         assert!(!fb.observe(Algo::Coo, 1.0, 0.0));
         assert!(fb.snapshot().is_empty());
+    }
+
+    #[test]
+    fn degenerate_predictions_cannot_demote() {
+        let fb = FeedbackTracker::new(4.0, 1);
+        // a zero/near-zero predicted time would yield an effectively
+        // infinite ratio; such observations are discarded entirely
+        for _ in 0..16 {
+            assert!(!fb.observe(Algo::Hrpb, 1e-300, 1.0));
+            assert!(!fb.observe(Algo::Hrpb, 0.0, 1.0));
+            assert!(!fb.observe(Algo::Hrpb, f64::NAN, 1.0));
+        }
+        assert!(!fb.is_demoted(Algo::Hrpb));
+        assert!(fb.snapshot().is_empty(), "degenerate samples must not count");
+
+        // a small-but-valid prediction still counts, with the ratio clamped
+        // so the EWMA stays finite and recoverable
+        fb.observe(Algo::Hrpb, 1e-9, 1e9);
+        let snap = fb.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert!(snap[0].ratio.is_finite());
+        assert!(snap[0].ratio <= 1e6, "ratio {} not clamped", snap[0].ratio);
+        assert!(fb.is_demoted(Algo::Hrpb), "a genuinely drifted engine still demotes");
     }
 
     #[test]

@@ -73,7 +73,9 @@ pub struct Plan {
     /// engine would immediately look healthy again and flap).
     pub predicted_s: f64,
     /// `predicted_s / width` — the coordinator scales this by the fused
-    /// batch width to get a per-batch prediction for the feedback loop.
+    /// batch width to get a per-batch prediction for the feedback loop, and
+    /// the QoS admission layer scales it by a request's width for its
+    /// cost-aware shedding and wait estimates (see [`crate::qos`]).
     pub predicted_s_per_col: f64,
     /// Packed brick density of the matrix.
     pub alpha: f64,
@@ -85,6 +87,38 @@ pub struct Plan {
     pub rationale: String,
     /// Structural fingerprint the plan is cached under.
     pub fingerprint: u64,
+}
+
+impl Plan {
+    /// Machine-readable form of the ranked-engine table, consumed by
+    /// `cutespmm plan --json` so scripts can parse the decision.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("engine", Json::str(self.engine.name())),
+            ("width", Json::num(self.width as f64)),
+            ("predicted_s", Json::num(self.predicted_s)),
+            ("predicted_s_per_col", Json::num(self.predicted_s_per_col)),
+            ("alpha", Json::num(self.alpha)),
+            ("synergy", Json::str(self.synergy.name())),
+            ("rationale", Json::str(self.rationale.clone())),
+            ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
+            (
+                "ranked",
+                Json::arr(self.ranked.iter().enumerate().map(|(i, c)| {
+                    Json::obj(vec![
+                        ("rank", Json::num((i + 1) as f64)),
+                        ("engine", Json::str(c.algo.name())),
+                        ("modeled_s", Json::num(c.modeled_s)),
+                        ("calibrated_s", Json::num(c.calibrated_s)),
+                        ("predicted_s", Json::num(c.predicted_s)),
+                        ("bound", Json::str(c.bound.name())),
+                        ("chosen", Json::Bool(c.algo == self.engine)),
+                    ])
+                })),
+            ),
+        ])
+    }
 }
 
 /// Planner tuning knobs.
@@ -484,6 +518,25 @@ mod tests {
             bumped.values[0] += 1.0;
             assert_ne!(fingerprint(&coo), fingerprint(&bumped));
         }
+    }
+
+    #[test]
+    fn plan_json_roundtrips() {
+        use crate::util::json::{parse, Json};
+        let planner = Planner::new(Machine::a100());
+        let plan = planner.plan(&full_brick_matrix(32));
+        let text = plan.to_json().to_string();
+        let doc = parse(&text).unwrap();
+        assert_eq!(doc.get("engine").unwrap().as_str(), Some(plan.engine.name()));
+        assert_eq!(doc.get("synergy").unwrap().as_str(), Some(plan.synergy.name()));
+        assert_eq!(doc.get("width").unwrap().as_usize(), Some(plan.width));
+        let ranked = doc.get("ranked").unwrap().as_arr().unwrap();
+        assert_eq!(ranked.len(), plan.ranked.len());
+        let chosen = ranked
+            .iter()
+            .filter(|r| r.get("chosen") == Some(&Json::Bool(true)))
+            .count();
+        assert_eq!(chosen, 1, "exactly one ranked row is marked chosen");
     }
 
     #[test]

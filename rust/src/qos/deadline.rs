@@ -1,0 +1,59 @@
+//! Deadline propagation: admission-time wait estimation.
+//!
+//! Each request may carry a relative deadline. At admission the estimated
+//! wait is `queued predicted work / drain parallelism` — if that alone
+//! already exceeds the deadline, the request is shed immediately with a
+//! typed rejection instead of timing out downstream after burning queue
+//! space and a kernel launch.
+
+use std::time::Duration;
+
+/// Waits are clamped here so a degenerate cost model can never produce an
+/// unrepresentable `Duration`.
+const MAX_WAIT_S: f64 = 3600.0;
+
+/// Estimated time a newly admitted request waits before execution starts:
+/// the total queued predicted work divided by the drain parallelism.
+pub fn estimate_wait(queued_cost_s: f64, drain_parallelism: usize) -> Duration {
+    let s = queued_cost_s / drain_parallelism.max(1) as f64;
+    if s.is_nan() || s <= 0.0 {
+        return Duration::ZERO;
+    }
+    Duration::from_secs_f64(s.min(MAX_WAIT_S))
+}
+
+/// A deadline is unmeetable when the estimated wait alone already exceeds it.
+pub fn unmeetable(est_wait: Duration, deadline: Option<Duration>) -> bool {
+    matches!(deadline, Some(d) if est_wait > d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_divides_by_parallelism() {
+        assert_eq!(estimate_wait(1.0, 1), Duration::from_secs(1));
+        assert_eq!(estimate_wait(1.0, 4), Duration::from_millis(250));
+        assert_eq!(estimate_wait(0.0, 4), Duration::ZERO);
+        // zero parallelism is treated as one drain lane, not a division blowup
+        assert_eq!(estimate_wait(2.0, 0), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn degenerate_costs_clamp() {
+        assert_eq!(estimate_wait(f64::NAN, 2), Duration::ZERO);
+        assert_eq!(estimate_wait(-5.0, 2), Duration::ZERO);
+        assert_eq!(estimate_wait(f64::INFINITY, 2), Duration::from_secs(3600));
+        assert_eq!(estimate_wait(1e12, 2), Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn unmeetable_only_past_the_deadline() {
+        let ms = Duration::from_millis;
+        assert!(!unmeetable(ms(5), None));
+        assert!(!unmeetable(ms(5), Some(ms(5))));
+        assert!(!unmeetable(ms(4), Some(ms(5))));
+        assert!(unmeetable(ms(6), Some(ms(5))));
+    }
+}

@@ -1,0 +1,379 @@
+//! QoS admission layer for the serving path: bounded priority queuing,
+//! cost-aware load shedding, and deadline-driven scheduling.
+//!
+//! The coordinator's batcher manufactures wide batches from concurrent
+//! traffic, but under saturation an unbounded ingress grows without bound
+//! and tail latency is unmanaged. This module puts a *bounded dual-priority
+//! admission queue* in front of the batcher and makes every admission a
+//! cost decision driven by the planner's per-matrix predicted execution
+//! time (cuTeSpMM's synergy model: high-synergy matrices are cheap on the
+//! TCU path, low-synergy ones are expensive):
+//!
+//! * [`queue`] — the pure bounded dual-lane queue: high before normal,
+//!   FIFO within a lane, hard depth bound, queued predicted-work gauge.
+//! * [`deadline`] — wait estimation; requests whose estimated wait already
+//!   exceeds their deadline are shed immediately with a typed
+//!   [`Rejected`]`{est_wait}` error instead of timing out downstream.
+//! * [`shed`] — the cost-aware admission rule: past a queued-work
+//!   watermark, normal-priority work on expensive (low-synergy) matrices
+//!   is rejected first; past twice the watermark all normal work is shed.
+//! * [`AdmissionQueue`] — the thread-safe wrapper the coordinator drains in
+//!   priority order, with lock-light depth gauges for metrics readers.
+//!
+//! Surfaces as `Config::qos` in [`crate::coordinator`], `serve --qos` in
+//! the CLI, and the `experiment qos` saturation study.
+
+pub mod deadline;
+pub mod queue;
+pub mod shed;
+
+pub use deadline::estimate_wait;
+pub use queue::{BoundedDualQueue, Priority, Ticket};
+pub use shed::{admit, RejectReason, Rejected, ShedPolicy};
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// QoS admission knobs (`serve --qos`).
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    /// Hard bound on queued requests across both lanes.
+    pub queue_capacity: usize,
+    /// Watermark on total outstanding predicted work in seconds — queued
+    /// plus already drained into the batcher/dispatch pipeline but not yet
+    /// completed. Above it new normal-priority work on expensive
+    /// (low-synergy) matrices is shed; above twice it all normal-priority
+    /// work is shed. `0.0` disables overload shedding.
+    pub watermark_s: f64,
+    /// Deadline applied to requests that don't carry their own.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            queue_capacity: 256,
+            watermark_s: 50e-3,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Result of draining the admission queue.
+pub enum Pop<T> {
+    /// The next request in priority order.
+    Item(Ticket, T),
+    /// Nothing arrived within the timeout.
+    TimedOut,
+    /// The queue is closed and empty — stop draining.
+    Closed,
+}
+
+/// Thread-safe bounded admission queue: producers run the shed policy and
+/// enqueue under one lock; a drain loop pops in priority order. Depth
+/// gauges are mirrored into atomics so metrics readers never take the
+/// queue lock.
+pub struct AdmissionQueue<T> {
+    inner: Mutex<BoundedDualQueue<T>>,
+    available: Condvar,
+    policy: ShedPolicy,
+    default_deadline: Option<Duration>,
+    drain_parallelism: usize,
+    closed: AtomicBool,
+    depths: [AtomicUsize; Priority::COUNT],
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(config: QosConfig, drain_parallelism: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            inner: Mutex::new(BoundedDualQueue::new(config.queue_capacity)),
+            available: Condvar::new(),
+            policy: ShedPolicy {
+                capacity: config.queue_capacity.max(1),
+                watermark_s: config.watermark_s,
+            },
+            default_deadline: config.default_deadline,
+            drain_parallelism: drain_parallelism.max(1),
+            closed: AtomicBool::new(false),
+            depths: [AtomicUsize::new(0), AtomicUsize::new(0)],
+        }
+    }
+
+    /// Lock-free depth gauge for one lane.
+    pub fn depth(&self, p: Priority) -> usize {
+        self.depths[p.index()].load(Ordering::Relaxed)
+    }
+
+    /// Lock-free total depth gauge.
+    pub fn total_depth(&self) -> usize {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Run the admission rule and enqueue. A ticket without a deadline gets
+    /// the configured default. `downstream_cost_s` is predicted work already
+    /// drained out of this queue but not yet completed (batcher, dispatch
+    /// channel, executing) — folding it in keeps the wait estimate and the
+    /// overload watermark honest about the whole pipeline, not just the
+    /// queue. `Err` returns the item with the typed rejection so the caller
+    /// can recover the payload.
+    pub fn submit(
+        &self,
+        mut ticket: Ticket,
+        item: T,
+        downstream_cost_s: f64,
+    ) -> Result<(), (Rejected, T)> {
+        if ticket.deadline.is_none() {
+            ticket.deadline = self.default_deadline;
+        }
+        let mut q = self.inner.lock().unwrap();
+        // checked under the lock: close() drains under the same lock, so an
+        // admitted item can never land in an already-drained queue (where
+        // its reply would be stranded forever)
+        if self.closed.load(Ordering::SeqCst) {
+            drop(q);
+            let rejected = Rejected {
+                reason: RejectReason::Shutdown,
+                est_wait: Duration::ZERO,
+                priority: ticket.priority,
+            };
+            return Err((rejected, item));
+        }
+        let downstream_s = downstream_cost_s.max(0.0);
+        // a high-priority request bypasses the normal lane, so its wait
+        // estimate only counts the high lane (plus downstream work already
+        // past the queue); the overload watermark stays a whole-pipeline
+        // pressure signal
+        let lane_ahead_s = match ticket.priority {
+            Priority::High => q.lane_cost_s(Priority::High),
+            Priority::Normal => q.queued_cost_s(),
+        };
+        let est_wait = estimate_wait(lane_ahead_s + downstream_s, self.drain_parallelism);
+        let outstanding_s = q.queued_cost_s() + downstream_s;
+        if let Err(reason) = admit(&self.policy, q.depth(), outstanding_s, &ticket, est_wait) {
+            drop(q);
+            return Err((Rejected { reason, est_wait, priority: ticket.priority }, item));
+        }
+        let priority = ticket.priority;
+        if let Err((t, item)) = q.push(ticket, item) {
+            // unreachable in practice: admit() bounds depth below capacity
+            drop(q);
+            let rejected = Rejected {
+                reason: RejectReason::QueueFull,
+                est_wait,
+                priority: t.priority,
+            };
+            return Err((rejected, item));
+        }
+        self.depths[priority.index()].store(q.lane_depth(priority), Ordering::Relaxed);
+        drop(q);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Pop the next request in priority order, blocking up to `timeout`.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some((ticket, item)) = q.pop() {
+                self.depths[ticket.priority.index()]
+                    .store(q.lane_depth(ticket.priority), Ordering::Relaxed);
+                return Pop::Item(ticket, item);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _timed_out) = self.available.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Close the queue for graceful shutdown: later submissions are
+    /// rejected with [`RejectReason::Shutdown`], the drain loop sees
+    /// [`Pop::Closed`], and everything still queued is returned (in
+    /// priority order) so the caller can fail it with typed rejections
+    /// instead of dropping it on the floor.
+    pub fn close(&self) -> Vec<(Ticket, T)> {
+        self.closed.store(true, Ordering::SeqCst);
+        let mut q = self.inner.lock().unwrap();
+        let rest = q.drain();
+        for d in &self.depths {
+            d.store(0, Ordering::Relaxed);
+        }
+        drop(q);
+        self.available.notify_all();
+        rest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn config(capacity: usize, watermark_s: f64) -> QosConfig {
+        QosConfig { queue_capacity: capacity, watermark_s, default_deadline: None }
+    }
+
+    #[test]
+    fn submit_pop_roundtrip_in_priority_order() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(config(8, 0.0), 1);
+        q.submit(Ticket::new(Priority::Normal, 1e-6), 1, 0.0).unwrap();
+        q.submit(Ticket::new(Priority::High, 1e-6), 2, 0.0).unwrap();
+        assert_eq!(q.depth(Priority::High), 1);
+        assert_eq!(q.total_depth(), 2);
+        match q.pop_timeout(Duration::ZERO) {
+            Pop::Item(t, v) => {
+                assert_eq!(v, 2);
+                assert_eq!(t.priority, Priority::High);
+            }
+            _ => panic!("expected the high-lane item"),
+        }
+        match q.pop_timeout(Duration::ZERO) {
+            Pop::Item(_, v) => assert_eq!(v, 1),
+            _ => panic!("expected the normal-lane item"),
+        }
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::TimedOut));
+    }
+
+    #[test]
+    fn hard_bound_sheds_with_typed_rejection() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(config(1, 0.0), 1);
+        q.submit(Ticket::new(Priority::Normal, 1e-6), 1, 0.0).unwrap();
+        let (rejected, item) = q.submit(Ticket::new(Priority::Normal, 1e-6), 2, 0.0).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::QueueFull);
+        assert_eq!(item, 2);
+    }
+
+    #[test]
+    fn default_deadline_sheds_unmeetable_requests() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(
+            QosConfig {
+                queue_capacity: 64,
+                watermark_s: 0.0,
+                default_deadline: Some(Duration::from_millis(1)),
+            },
+            1,
+        );
+        // empty queue: zero estimated wait, admitted
+        q.submit(Ticket::new(Priority::Normal, 1.0), 1, 0.0).unwrap();
+        // one second of queued predicted work / 1 drain lane >> 1ms deadline
+        let (rejected, _) = q.submit(Ticket::new(Priority::Normal, 1e-6), 2, 0.0).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::DeadlineUnmeetable);
+        assert!(rejected.est_wait >= Duration::from_millis(900), "{:?}", rejected.est_wait);
+        // an explicit generous deadline overrides the default
+        let mut t = Ticket::new(Priority::Normal, 1e-6);
+        t.deadline = Some(Duration::from_secs(10));
+        q.submit(t, 3, 0.0).unwrap();
+    }
+
+    #[test]
+    fn watermark_sheds_expensive_normal_work() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(config(64, 1e-3), 1);
+        q.submit(Ticket::new(Priority::Normal, 1.5e-3), 1, 0.0).unwrap();
+        let mut expensive = Ticket::new(Priority::Normal, 1e-6);
+        expensive.expensive = true;
+        let (rejected, _) = q.submit(expensive, 2, 0.0).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::Overload);
+        // the high lane rides through the overload
+        let mut high = Ticket::new(Priority::High, 1e-6);
+        high.expensive = true;
+        q.submit(high, 3, 0.0).unwrap();
+    }
+
+    #[test]
+    fn high_lane_deadline_ignores_normal_backlog_it_bypasses() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(
+            QosConfig {
+                queue_capacity: 64,
+                watermark_s: 0.0,
+                default_deadline: Some(Duration::from_millis(100)),
+            },
+            1,
+        );
+        // 1s of normal-lane backlog would sink any normal-lane deadline...
+        q.submit(Ticket::new(Priority::Normal, 1.0), 1, 0.0).unwrap();
+        let (rejected, _) = q.submit(Ticket::new(Priority::Normal, 1e-6), 2, 0.0).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::DeadlineUnmeetable);
+        // ...but a high request bypasses it and must be admitted
+        q.submit(Ticket::new(Priority::High, 1e-6), 3, 0.0).unwrap();
+        // high-lane backlog and downstream work still count against it
+        q.submit(Ticket::new(Priority::High, 1.0), 4, 0.0).unwrap();
+        let (rejected, _) = q.submit(Ticket::new(Priority::High, 1e-6), 5, 0.0).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::DeadlineUnmeetable);
+    }
+
+    #[test]
+    fn downstream_backlog_counts_against_deadline_and_watermark() {
+        // the queue itself is empty, but 10ms of drained-but-unfinished work
+        // sits in the pipeline: deadline and watermark must still see it
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(config(64, 1e-3), 1);
+        let mut tight = Ticket::new(Priority::Normal, 1e-6);
+        tight.deadline = Some(Duration::from_millis(5));
+        let (rejected, _) = q.submit(tight, 1, 10e-3).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::DeadlineUnmeetable);
+        assert!(rejected.est_wait >= Duration::from_millis(9));
+
+        let mut expensive = Ticket::new(Priority::Normal, 1e-6);
+        expensive.expensive = true;
+        let (rejected, _) = q.submit(expensive, 2, 10e-3).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::Overload);
+
+        // with no downstream backlog both are admitted
+        let mut tight = Ticket::new(Priority::Normal, 1e-6);
+        tight.deadline = Some(Duration::from_millis(5));
+        q.submit(tight, 3, 0.0).unwrap();
+        let mut expensive = Ticket::new(Priority::Normal, 1e-6);
+        expensive.expensive = true;
+        q.submit(expensive, 4, 0.0).unwrap();
+    }
+
+    #[test]
+    fn close_returns_remaining_and_rejects_later_submits() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(config(8, 0.0), 1);
+        q.submit(Ticket::new(Priority::Normal, 1e-6), 1, 0.0).unwrap();
+        q.submit(Ticket::new(Priority::High, 1e-6), 2, 0.0).unwrap();
+        let rest: Vec<u32> = q.close().into_iter().map(|(_, v)| v).collect();
+        assert_eq!(rest, vec![2, 1], "drained in priority order");
+        assert_eq!(q.total_depth(), 0);
+        let (rejected, _) = q.submit(Ticket::new(Priority::Normal, 1e-6), 3, 0.0).unwrap_err();
+        assert_eq!(rejected.reason, RejectReason::Shutdown);
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Closed));
+    }
+
+    #[test]
+    fn producer_consumer_across_threads() {
+        let q: Arc<AdmissionQueue<usize>> = Arc::new(AdmissionQueue::new(config(1024, 0.0), 2));
+        let total = 200usize;
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..total / 4 {
+                        let pr = if i % 3 == 0 { Priority::High } else { Priority::Normal };
+                        q.submit(Ticket::new(pr, 1e-6), t * 1000 + i, 0.0).unwrap();
+                    }
+                });
+            }
+            let q = q.clone();
+            let consumer = s.spawn(move || {
+                let mut got = 0usize;
+                while got < total {
+                    match q.pop_timeout(Duration::from_millis(100)) {
+                        Pop::Item(_, _) => got += 1,
+                        Pop::TimedOut => {}
+                        Pop::Closed => break,
+                    }
+                }
+                got
+            });
+            assert_eq!(consumer.join().unwrap(), total);
+        });
+        assert_eq!(q.total_depth(), 0);
+    }
+}

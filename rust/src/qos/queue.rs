@@ -1,0 +1,300 @@
+//! Bounded dual-priority admission queue (pure logic, thread-free).
+//!
+//! Two lanes — high and normal — with strict priority between them (high
+//! drains first) and FIFO order within a lane. Total depth is bounded by a
+//! hard capacity and the queue tracks the total planner-predicted work it
+//! holds, which is the signal the [`super::shed`] policy and the
+//! [`super::deadline`] estimator act on. The thread-safe wrapper lives in
+//! [`super::AdmissionQueue`].
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Request priority lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Drained before any normal-lane request; never shed by the overload
+    /// watermark (only by the hard bound or its own deadline).
+    High,
+    /// The default lane; shed first under pressure.
+    Normal,
+}
+
+impl Priority {
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+        }
+    }
+
+    pub fn all() -> [Priority; Priority::COUNT] {
+        [Priority::High, Priority::Normal]
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "high" => Some(Priority::High),
+            "normal" | "low" => Some(Priority::Normal),
+            _ => None,
+        }
+    }
+}
+
+/// Admission metadata carried by each queued request.
+#[derive(Clone, Copy, Debug)]
+pub struct Ticket {
+    pub priority: Priority,
+    /// Planner-predicted execution cost of this request (seconds); feeds the
+    /// queued-work watermark and the wait estimate.
+    pub cost_s: f64,
+    /// Relative deadline from submission; `None` means no deadline (the
+    /// admission queue may substitute a configured default).
+    pub deadline: Option<Duration>,
+    /// Low-synergy (cost-heavy) matrix class — shed first under pressure.
+    pub expensive: bool,
+    /// When the request entered admission (queue-wait metrics).
+    pub enqueued: Instant,
+}
+
+impl Ticket {
+    pub fn new(priority: Priority, cost_s: f64) -> Ticket {
+        Ticket {
+            priority,
+            cost_s,
+            deadline: None,
+            expensive: false,
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// Bounded dual-lane priority queue: high drains before normal, FIFO within
+/// a lane, total depth never exceeds `capacity`. The depth counter is
+/// derived from the lane lengths so it can never go negative or drift;
+/// predicted-work gauges are tracked per lane so a high-priority request's
+/// wait estimate can ignore normal-lane backlog it would bypass.
+pub struct BoundedDualQueue<T> {
+    lanes: [VecDeque<(Ticket, T)>; Priority::COUNT],
+    capacity: usize,
+    lane_cost_s: [f64; Priority::COUNT],
+}
+
+impl<T> BoundedDualQueue<T> {
+    pub fn new(capacity: usize) -> BoundedDualQueue<T> {
+        BoundedDualQueue {
+            lanes: [VecDeque::new(), VecDeque::new()],
+            capacity: capacity.max(1),
+            lane_cost_s: [0.0; Priority::COUNT],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently queued across both lanes.
+    pub fn depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn lane_depth(&self, p: Priority) -> usize {
+        self.lanes[p.index()].len()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.depth() >= self.capacity
+    }
+
+    /// Total planner-predicted work queued (seconds).
+    pub fn queued_cost_s(&self) -> f64 {
+        self.lane_cost_s.iter().sum()
+    }
+
+    /// Planner-predicted work queued in one lane (seconds).
+    pub fn lane_cost_s(&self, p: Priority) -> f64 {
+        self.lane_cost_s[p.index()]
+    }
+
+    /// Enqueue on the ticket's lane; returns the item when the hard bound
+    /// is reached (the caller decides how to report the rejection).
+    pub fn push(&mut self, ticket: Ticket, item: T) -> Result<(), (Ticket, T)> {
+        if self.is_full() {
+            return Err((ticket, item));
+        }
+        self.lane_cost_s[ticket.priority.index()] += ticket.cost_s.max(0.0);
+        self.lanes[ticket.priority.index()].push_back((ticket, item));
+        Ok(())
+    }
+
+    /// Dequeue in priority order: the high lane drains completely before the
+    /// normal lane is touched; FIFO within a lane.
+    pub fn pop(&mut self) -> Option<(Ticket, T)> {
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some((ticket, item)) = lane.pop_front() {
+                self.lane_cost_s[i] = (self.lane_cost_s[i] - ticket.cost_s.max(0.0)).max(0.0);
+                return Some((ticket, item));
+            }
+        }
+        None
+    }
+
+    /// Remove everything, in priority order (shutdown path).
+    pub fn drain(&mut self) -> Vec<(Ticket, T)> {
+        let mut out = Vec::with_capacity(self.depth());
+        while let Some(x) = self.pop() {
+            out.push(x);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, UsizeGen};
+    use crate::util::rng::Rng;
+
+    fn ticket(p: Priority, cost_s: f64) -> Ticket {
+        Ticket::new(p, cost_s)
+    }
+
+    #[test]
+    fn high_lane_drains_before_normal() {
+        let mut q: BoundedDualQueue<u32> = BoundedDualQueue::new(8);
+        q.push(ticket(Priority::Normal, 0.0), 1).unwrap();
+        q.push(ticket(Priority::High, 0.0), 2).unwrap();
+        q.push(ticket(Priority::Normal, 0.0), 3).unwrap();
+        q.push(ticket(Priority::High, 0.0), 4).unwrap();
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![2, 4, 1, 3], "high first, FIFO within each lane");
+    }
+
+    #[test]
+    fn capacity_bound_rejects_and_returns_item() {
+        let mut q: BoundedDualQueue<u32> = BoundedDualQueue::new(2);
+        assert!(q.push(ticket(Priority::Normal, 0.0), 1).is_ok());
+        assert!(q.push(ticket(Priority::High, 0.0), 2).is_ok());
+        assert!(q.is_full());
+        let (t, item) = q.push(ticket(Priority::High, 0.0), 3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(t.priority, Priority::High);
+        // popping frees a slot
+        assert!(q.pop().is_some());
+        assert!(q.push(ticket(Priority::Normal, 0.0), 4).is_ok());
+    }
+
+    #[test]
+    fn queued_cost_tracks_pushes_and_pops_per_lane() {
+        let mut q: BoundedDualQueue<u32> = BoundedDualQueue::new(8);
+        q.push(ticket(Priority::Normal, 2e-3), 1).unwrap();
+        q.push(ticket(Priority::High, 3e-3), 2).unwrap();
+        assert!((q.queued_cost_s() - 5e-3).abs() < 1e-12);
+        assert!((q.lane_cost_s(Priority::High) - 3e-3).abs() < 1e-12);
+        assert!((q.lane_cost_s(Priority::Normal) - 2e-3).abs() < 1e-12);
+        q.pop().unwrap(); // the high item drains first
+        assert!(q.lane_cost_s(Priority::High).abs() < 1e-12);
+        assert!((q.queued_cost_s() - 2e-3).abs() < 1e-12);
+        q.pop().unwrap();
+        assert!(q.queued_cost_s().abs() < 1e-12);
+        // negative costs never poison the gauges
+        q.push(ticket(Priority::Normal, -1.0), 3).unwrap();
+        assert!(q.queued_cost_s() >= 0.0);
+        assert!(q.lane_cost_s(Priority::Normal) >= 0.0);
+    }
+
+    #[test]
+    fn drain_returns_priority_order_and_empties() {
+        let mut q: BoundedDualQueue<u32> = BoundedDualQueue::new(8);
+        q.push(ticket(Priority::Normal, 0.0), 1).unwrap();
+        q.push(ticket(Priority::High, 0.0), 2).unwrap();
+        let drained: Vec<u32> = q.drain().into_iter().map(|(_, v)| v).collect();
+        assert_eq!(drained, vec![2, 1]);
+        assert_eq!(q.depth(), 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn priority_parse_and_names() {
+        assert_eq!(Priority::parse("high"), Some(Priority::High));
+        assert_eq!(Priority::parse("NORMAL"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("low"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::High.name(), "high");
+        assert_ne!(Priority::High.index(), Priority::Normal.index());
+    }
+
+    /// Property: under random interleaved push/pop sequences the queue stays
+    /// within its bound, tracks depth exactly, drains the high lane first,
+    /// and preserves FIFO order within each lane.
+    #[test]
+    fn prop_queue_invariants_hold_under_random_ops() {
+        check("qos queue invariants", 40, &UsizeGen { lo: 0, hi: 1_000_000 }, |&seed| {
+            let mut rng = Rng::new(seed as u64);
+            let capacity = rng.range(1, 12);
+            let mut q: BoundedDualQueue<u64> = BoundedDualQueue::new(capacity);
+            let mut model: [std::collections::VecDeque<u64>; 2] =
+                [std::collections::VecDeque::new(), std::collections::VecDeque::new()];
+            let mut next_token = 0u64;
+            for _ in 0..300 {
+                if rng.chance(0.6) {
+                    let pr = if rng.chance(0.4) { Priority::High } else { Priority::Normal };
+                    let t = ticket(pr, rng.f64() * 1e-3);
+                    let was_full = q.depth() >= capacity;
+                    match q.push(t, next_token) {
+                        Ok(()) => {
+                            if was_full {
+                                return false; // bound violated
+                            }
+                            model[pr.index()].push_back(next_token);
+                        }
+                        Err(_) => {
+                            if !was_full {
+                                return false; // rejected below the bound
+                            }
+                        }
+                    }
+                    next_token += 1;
+                } else {
+                    match q.pop() {
+                        Some((t, token)) => {
+                            let lane = if model[0].is_empty() { 1 } else { 0 };
+                            if t.priority.index() != lane {
+                                return false; // normal served while high waited
+                            }
+                            if model[lane].pop_front() != Some(token) {
+                                return false; // FIFO within lane violated
+                            }
+                        }
+                        None => {
+                            if !model[0].is_empty() || !model[1].is_empty() {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                if q.depth() != model[0].len() + model[1].len() {
+                    return false; // depth counter drifted
+                }
+                if q.depth() > capacity || q.queued_cost_s() < 0.0 {
+                    return false;
+                }
+                if q.lane_depth(Priority::High) != model[0].len()
+                    || q.lane_depth(Priority::Normal) != model[1].len()
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

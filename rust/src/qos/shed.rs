@@ -1,0 +1,244 @@
+//! Cost-aware load shedding — the pure admission rule.
+//!
+//! The planner's per-matrix predicted execution time (cuTeSpMM's synergy
+//! model: high-synergy matrices are cheap on the TCU path, low-synergy ones
+//! are expensive) turns admission into a cost decision rather than an
+//! arrival-order one. When the total queued predicted work crosses a
+//! watermark, new normal-priority work on expensive (low-synergy) matrices
+//! is rejected first; past twice the watermark all normal-priority work is
+//! shed. The high lane is only ever bounded by the hard capacity and its
+//! own deadline.
+
+use super::deadline;
+use super::queue::{Priority, Ticket};
+use std::fmt;
+use std::time::Duration;
+
+/// Why a request was shed at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue is at its hard capacity.
+    QueueFull,
+    /// Queued predicted work crossed the watermark and this request is in
+    /// the shed class (normal priority; expensive matrices go first).
+    Overload,
+    /// The estimated wait already exceeds the request's deadline.
+    DeadlineUnmeetable,
+    /// The queue was drained for graceful shutdown.
+    Shutdown,
+}
+
+impl RejectReason {
+    pub const COUNT: usize = 4;
+
+    pub fn index(self) -> usize {
+        match self {
+            RejectReason::QueueFull => 0,
+            RejectReason::Overload => 1,
+            RejectReason::DeadlineUnmeetable => 2,
+            RejectReason::Shutdown => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "full",
+            RejectReason::Overload => "overload",
+            RejectReason::DeadlineUnmeetable => "deadline",
+            RejectReason::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn all() -> [RejectReason; RejectReason::COUNT] {
+        [
+            RejectReason::QueueFull,
+            RejectReason::Overload,
+            RejectReason::DeadlineUnmeetable,
+            RejectReason::Shutdown,
+        ]
+    }
+}
+
+/// Typed admission rejection: the caller learns why the request was shed
+/// and how long the queue would have made it wait.
+#[derive(Clone, Copy, Debug)]
+pub struct Rejected {
+    pub reason: RejectReason,
+    /// Estimated queue wait at the moment of rejection.
+    pub est_wait: Duration,
+    pub priority: Priority,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "rejected ({}, {} lane, est_wait={:.1}ms)",
+            self.reason.name(),
+            self.priority.name(),
+            self.est_wait.as_secs_f64() * 1e3
+        )
+    }
+}
+
+/// Admission policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ShedPolicy {
+    /// Hard bound on queued requests (mirrors the queue's own bound so the
+    /// verdict can be computed from a snapshot of the queue state).
+    pub capacity: usize,
+    /// Watermark on total queued predicted work (seconds). `0.0` disables
+    /// overload shedding (only the hard bound and deadlines apply).
+    pub watermark_s: f64,
+}
+
+/// The pure admission rule over a snapshot of the queue state. Checks run
+/// hard-bound first, then deadline, then the cost watermark, so a rejection
+/// reason always names the tightest violated constraint.
+pub fn admit(
+    policy: &ShedPolicy,
+    depth: usize,
+    queued_cost_s: f64,
+    ticket: &Ticket,
+    est_wait: Duration,
+) -> Result<(), RejectReason> {
+    if depth >= policy.capacity {
+        return Err(RejectReason::QueueFull);
+    }
+    if deadline::unmeetable(est_wait, ticket.deadline) {
+        return Err(RejectReason::DeadlineUnmeetable);
+    }
+    let over = queued_cost_s > 2.0 * policy.watermark_s
+        || (queued_cost_s > policy.watermark_s && ticket.expensive);
+    if ticket.priority == Priority::Normal && policy.watermark_s > 0.0 && over {
+        return Err(RejectReason::Overload);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::queue::BoundedDualQueue;
+
+    fn ticket(p: Priority, expensive: bool, deadline: Option<Duration>) -> Ticket {
+        let mut t = Ticket::new(p, 100e-6);
+        t.expensive = expensive;
+        t.deadline = deadline;
+        t
+    }
+
+    #[test]
+    fn hard_bound_rejects_every_lane() {
+        let p = ShedPolicy { capacity: 4, watermark_s: 0.0 };
+        for pr in Priority::all() {
+            let t = ticket(pr, false, None);
+            assert_eq!(admit(&p, 4, 0.0, &t, Duration::ZERO), Err(RejectReason::QueueFull));
+            assert_eq!(admit(&p, 3, 0.0, &t, Duration::ZERO), Ok(()));
+        }
+    }
+
+    #[test]
+    fn deadline_shed_beats_waiting_to_time_out() {
+        let p = ShedPolicy { capacity: 100, watermark_s: 0.0 };
+        let t = ticket(Priority::High, false, Some(Duration::from_millis(5)));
+        assert_eq!(admit(&p, 0, 0.0, &t, Duration::from_millis(4)), Ok(()));
+        assert_eq!(
+            admit(&p, 0, 0.0, &t, Duration::from_millis(6)),
+            Err(RejectReason::DeadlineUnmeetable)
+        );
+        // no deadline -> no deadline shed, however long the wait
+        let t = ticket(Priority::Normal, false, None);
+        assert_eq!(admit(&p, 0, 0.0, &t, Duration::from_secs(60)), Ok(()));
+    }
+
+    #[test]
+    fn watermark_sheds_expensive_normal_work_first() {
+        let p = ShedPolicy { capacity: 1000, watermark_s: 1e-3 };
+        let over_soft = 1.5e-3; // between watermark and 2x watermark
+        let over_hard = 2.5e-3;
+
+        // below the watermark everything is admitted
+        for (pr, exp) in [(Priority::Normal, true), (Priority::Normal, false)] {
+            assert_eq!(admit(&p, 1, 0.5e-3, &ticket(pr, exp, None), Duration::ZERO), Ok(()));
+        }
+        // soft watermark: only normal+expensive is shed
+        assert_eq!(
+            admit(&p, 1, over_soft, &ticket(Priority::Normal, true, None), Duration::ZERO),
+            Err(RejectReason::Overload)
+        );
+        assert_eq!(
+            admit(&p, 1, over_soft, &ticket(Priority::Normal, false, None), Duration::ZERO),
+            Ok(())
+        );
+        // hard watermark: all normal work is shed
+        assert_eq!(
+            admit(&p, 1, over_hard, &ticket(Priority::Normal, false, None), Duration::ZERO),
+            Err(RejectReason::Overload)
+        );
+        // the high lane is never overload-shed
+        for cost in [over_soft, over_hard] {
+            assert_eq!(admit(&p, 1, cost, &ticket(Priority::High, true, None), Duration::ZERO), Ok(()));
+        }
+    }
+
+    #[test]
+    fn zero_watermark_disables_overload_shedding() {
+        let p = ShedPolicy { capacity: 1000, watermark_s: 0.0 };
+        let t = ticket(Priority::Normal, true, None);
+        assert_eq!(admit(&p, 10, 100.0, &t, Duration::ZERO), Ok(()));
+    }
+
+    #[test]
+    fn rejected_displays_reason_lane_and_wait() {
+        let r = Rejected {
+            reason: RejectReason::Overload,
+            est_wait: Duration::from_millis(12),
+            priority: Priority::Normal,
+        };
+        let s = r.to_string();
+        assert!(s.starts_with("rejected"), "{s}");
+        assert!(s.contains("overload"), "{s}");
+        assert!(s.contains("normal"), "{s}");
+        assert!(s.contains("12.0ms"), "{s}");
+    }
+
+    #[test]
+    fn reason_indices_cover_all() {
+        let mut seen = [false; RejectReason::COUNT];
+        for r in RejectReason::all() {
+            seen[r.index()] = true;
+            assert!(!r.name().is_empty());
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    /// Deterministic saturation: a steady overload against the admission
+    /// rule must engage the cost watermark long before the hard capacity
+    /// bound — shed-before-overflow.
+    #[test]
+    fn saturation_sheds_before_overflow() {
+        let policy = ShedPolicy { capacity: 1000, watermark_s: 1e-3 };
+        let mut q: BoundedDualQueue<usize> = BoundedDualQueue::new(policy.capacity);
+        let mut overload = 0usize;
+        let mut full = 0usize;
+        let mut max_depth = 0usize;
+        for i in 0..5000usize {
+            let t = ticket(Priority::Normal, true, None);
+            let est = super::super::deadline::estimate_wait(q.queued_cost_s(), 1);
+            match admit(&policy, q.depth(), q.queued_cost_s(), &t, est) {
+                Ok(()) => q.push(t, i).unwrap(),
+                Err(RejectReason::Overload) => overload += 1,
+                Err(RejectReason::QueueFull) => full += 1,
+                Err(_) => {}
+            }
+            if i % 3 == 0 {
+                let _ = q.pop(); // drain slower than arrivals
+            }
+            max_depth = max_depth.max(q.depth());
+        }
+        assert!(overload > 0, "watermark shedding never engaged");
+        assert_eq!(full, 0, "hard bound hit before cost-aware shedding");
+        assert!(max_depth < policy.capacity, "depth {max_depth} reached the hard bound");
+    }
+}

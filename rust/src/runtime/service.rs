@@ -95,14 +95,28 @@ impl PjrtService {
     pub fn handle(&self) -> PjrtHandle {
         PjrtHandle { tx: self.tx.clone() }
     }
-}
 
-impl Drop for PjrtService {
-    fn drop(&mut self) {
+    /// Explicit graceful shutdown (dropping the service does the same).
+    ///
+    /// Shutdown ordering: stop the *coordinator first*, then this service —
+    /// coordinator workers hold [`PjrtHandle`]s, and while a dead handle
+    /// only degrades them to the native fallback, shutting down in order
+    /// keeps every in-flight batch on its planned engine.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
         let _ = self.tx.send(Req::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
     }
 }
 

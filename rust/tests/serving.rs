@@ -3,6 +3,7 @@
 
 use cutespmm::coordinator::{BatchPolicy, Config, Coordinator, EnginePolicy, MatrixId};
 use cutespmm::formats::{Coo, Dense};
+use cutespmm::qos::{Priority, QosConfig, RejectReason};
 use cutespmm::util::rng::Rng;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -19,6 +20,7 @@ fn coordinator(workers: usize, queue: usize) -> Coordinator {
                 max_delay: Duration::from_millis(1),
             },
             engine: EnginePolicy::Native,
+            qos: None,
         },
         None,
     )
@@ -75,6 +77,7 @@ fn try_submit_backpressure() {
                 max_delay: Duration::from_millis(0),
             },
             engine: EnginePolicy::Native,
+            qos: None,
         },
         None,
     );
@@ -181,6 +184,101 @@ fn auto_policy_serves_correctly_and_counts_routes() {
     let _ = coord.register("low-replica", &low);
     assert_eq!(planner.cache().stats().hits, hits + 1);
     coord.shutdown();
+}
+
+#[test]
+fn qos_shutdown_rejects_queued_work_with_typed_errors() {
+    // slow matrix + single worker: most of the flood is still queued when
+    // shutdown lands, and every queued request must get a typed rejection
+    // instead of being dropped on the floor
+    let coord = Coordinator::start(
+        Config {
+            workers: 1,
+            queue_capacity: 1024,
+            batch: BatchPolicy {
+                max_batch_cols: 16,
+                max_batch_reqs: 1,
+                max_delay: Duration::from_millis(0),
+            },
+            engine: EnginePolicy::Native,
+            qos: Some(QosConfig {
+                queue_capacity: 64,
+                watermark_s: 0.0,
+                default_deadline: None,
+            }),
+        },
+        None,
+    );
+    let mut rng = Rng::new(20);
+    let coo = Coo::random(4096, 4096, 0.01, &mut rng);
+    let id = coord.register("heavy", &coo);
+    let mut rxs = Vec::new();
+    for _ in 0..32 {
+        let b = Dense::random(4096, 16, &mut rng);
+        match coord.submit_qos(id, b, Priority::Normal, None) {
+            Ok(rx) => rxs.push(rx),
+            Err((rejected, _)) => panic!("64-deep queue shed early: {rejected}"),
+        }
+    }
+    coord.shutdown();
+    let (mut served, mut rejected) = (0, 0);
+    for rx in rxs {
+        match rx.recv().expect("every admitted request gets a reply") {
+            Ok(_) => served += 1,
+            Err(e) => {
+                assert!(e.contains("shutdown"), "unexpected error: {e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(served + rejected, 32, "nothing may be dropped on the floor");
+    assert!(rejected > 0, "shutdown under load should reject queued work");
+}
+
+#[test]
+fn qos_high_priority_lane_is_served_and_counted() {
+    let coord = Coordinator::start(
+        Config {
+            workers: 2,
+            queue_capacity: 1024,
+            batch: BatchPolicy::default(),
+            engine: EnginePolicy::Native,
+            qos: Some(QosConfig {
+                queue_capacity: 256,
+                watermark_s: 0.0,
+                default_deadline: Some(Duration::from_secs(30)),
+            }),
+        },
+        None,
+    );
+    let mut rng = Rng::new(21);
+    let coo = Coo::random(200, 300, 0.03, &mut rng);
+    let dense = coo.to_dense();
+    let id = coord.register("m", &coo);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        let b = Dense::random(300, 8, &mut rng);
+        expected.push(dense.matmul(&b));
+        let pr = if i % 2 == 0 { Priority::High } else { Priority::Normal };
+        rxs.push(coord.submit_qos(id, b, pr, None).expect("capacity 256 never fills here"));
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.c.rel_fro_error(&want) < 1e-5);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.responses.load(Ordering::Relaxed), 24);
+    assert_eq!(m.qos[Priority::High.index()].admitted.load(Ordering::Relaxed), 12);
+    assert_eq!(m.qos[Priority::Normal.index()].admitted.load(Ordering::Relaxed), 12);
+    assert_eq!(m.shed_total(), 0);
+    assert!(m.qos[Priority::High.index()].queue_wait.count() >= 1);
+    let report = m.report();
+    assert!(report.contains("qos=["), "{report}");
+    assert!(report.contains("high: admitted=12"), "{report}");
+    coord.shutdown();
+    // unused reason indices stay accessible for reporting tools
+    assert_eq!(RejectReason::all().len(), RejectReason::COUNT);
 }
 
 #[test]
