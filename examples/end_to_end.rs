@@ -45,6 +45,7 @@ fn drive(engine_policy: EnginePolicy, pjrt: Option<cutespmm::runtime::PjrtHandle
             },
             engine: engine_policy,
             qos: None,
+            artifact_dir: None,
         },
         pjrt,
     ));

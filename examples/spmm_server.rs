@@ -34,6 +34,7 @@ fn main() {
             },
             engine,
             qos: None,
+            artifact_dir: None,
         },
         pjrt_svc.as_ref().map(|s| s.handle()),
     ));

@@ -5,7 +5,7 @@ use crate::bench::corpus_run::{self, Record};
 use crate::bench::render::{self, box_entry, BoxEntry};
 use crate::formats::Dense;
 use crate::gen::corpus::CorpusScale;
-use crate::gen::{named, MatrixSpec};
+use crate::gen::{named, Family, MatrixSpec};
 use crate::gpumodel::{algos, Machine, MatrixProfile};
 use crate::qos::{self, BoundedDualQueue, Priority, RejectReason, ShedPolicy, Ticket};
 use crate::spmm::{Algo, SpmmEngine};
@@ -612,6 +612,211 @@ pub fn auto_policy(records: &[Record]) -> String {
     out
 }
 
+/// Generator-corpus recipes for the artifact prep experiment — one per
+/// structural regime, sized so the HRPB build dominates fixed overheads.
+fn prep_specs() -> Vec<MatrixSpec> {
+    vec![
+        MatrixSpec {
+            name: "prep-fem".into(),
+            rows: 24_576,
+            family: Family::Banded { bandwidth: 32, band_fill: 0.65, noise: 0.01 },
+            seed: 0xFEED0,
+        },
+        MatrixSpec {
+            name: "prep-mesh".into(),
+            rows: 32_768,
+            family: Family::Mesh { dims: 2 },
+            seed: 0xFEED1,
+        },
+        MatrixSpec {
+            name: "prep-rmat".into(),
+            rows: 16_384,
+            family: Family::Rmat { edge_factor: 8, skew: 0.57 },
+            seed: 0xFEED2,
+        },
+        MatrixSpec {
+            name: "prep-banded-sparse".into(),
+            rows: 24_576,
+            family: Family::Banded { bandwidth: 64, band_fill: 0.25, noise: 0.05 },
+            seed: 0xFEED3,
+        },
+    ]
+}
+
+/// One matrix's measurements in the prep experiment.
+#[derive(Clone, Debug)]
+pub struct PrepOutcome {
+    pub matrix: String,
+    pub nnz: usize,
+    /// Serial [`crate::hrpb::builder::build_with`] wall time.
+    pub serial_build_s: f64,
+    /// Parallel build wall time at this host's thread count.
+    pub parallel_build_s: f64,
+    /// Parallel output byte-identical to serial?
+    pub parallel_identical: bool,
+    /// Cold registration (build + stats + persist) through a store-backed
+    /// registry.
+    pub cold_register_s: f64,
+    /// Warm registration (artifact load) through a fresh store-backed
+    /// registry — min of two runs to shave scheduler noise.
+    pub warm_register_s: f64,
+    /// Whether the warm registration actually hit the store.
+    pub warm_hit: bool,
+    /// Size of the persisted artifact on disk.
+    pub artifact_bytes: u64,
+}
+
+/// Run the prep experiment against `dir` (created, reused within the run).
+pub fn prep_outcomes(dir: &std::path::Path) -> Vec<PrepOutcome> {
+    use crate::coordinator::Registry;
+    use crate::formats::Csr;
+    use crate::hrpb::{builder, ArtifactStore};
+    use crate::params::{TK, TM};
+    use crate::planner::fingerprint;
+    use crate::util::timer::time_once;
+    use std::sync::Arc;
+
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut out = Vec::new();
+    for spec in prep_specs() {
+        let coo = spec.generate();
+        if coo.nnz() == 0 {
+            continue;
+        }
+        let csr = Csr::from_coo(&coo);
+        let (serial, serial_build_s) = time_once(|| builder::build_with(&csr, TM, TK));
+        let (parallel, parallel_build_s) =
+            time_once(|| builder::build_with_parallel(&csr, TM, TK, threads));
+        let parallel_identical = serial.packed == parallel.packed
+            && serial.size_ptr == parallel.size_ptr
+            && serial.blocked_row_ptr == parallel.blocked_row_ptr
+            && serial.active_cols == parallel.active_cols
+            && serial.blocks == parallel.blocks;
+
+        let store = Arc::new(ArtifactStore::open(dir).expect("open artifact store"));
+        let fp = fingerprint(&coo);
+        // cold: make sure no artifact is present, then register once
+        let _ = std::fs::remove_file(store.path_for(fp));
+        let cold_reg = Registry::with_store(store.clone());
+        let (_, cold_register_s) = time_once(|| cold_reg.register(&spec.name, &coo));
+        let artifact_bytes = std::fs::metadata(store.path_for(fp)).map(|m| m.len()).unwrap_or(0);
+
+        // warm: fresh registries (simulated restarts) against the same dir
+        let mut warm_register_s = f64::INFINITY;
+        for _ in 0..2 {
+            let warm_reg = Registry::with_store(store.clone());
+            let (_, t) = time_once(|| warm_reg.register(&spec.name, &coo));
+            warm_register_s = warm_register_s.min(t);
+        }
+        let warm_hit = store.stats().hits >= 2;
+
+        out.push(PrepOutcome {
+            matrix: spec.name.clone(),
+            nnz: coo.nnz(),
+            serial_build_s,
+            parallel_build_s,
+            parallel_identical,
+            cold_register_s,
+            warm_register_s,
+            warm_hit,
+            artifact_bytes,
+        });
+    }
+    out
+}
+
+/// Artifact prep experiment — cold vs warm registration and serial vs
+/// parallel HRPB build over the generator corpus (the §6.3 amortization
+/// story, extended across process restarts).
+pub fn prep() -> String {
+    let dir = std::env::temp_dir().join(format!("cutespmm_prep_exp_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let outcomes = prep_outcomes(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+    prep_report(&outcomes)
+}
+
+/// Render the prep experiment report (split from [`prep`] so tests can run
+/// the measurement suite once and exercise the rendering on the same data).
+pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
+    let mut out = String::from(
+        "== prep: persistent HRPB artifacts — cold vs warm registration, serial vs parallel build ==\n",
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let (mut cold_total, mut warm_total) = (0.0f64, 0.0f64);
+    for o in outcomes {
+        cold_total += o.cold_register_s;
+        warm_total += o.warm_register_s;
+        rows.push(vec![
+            o.matrix.clone(),
+            o.nnz.to_string(),
+            format!("{:.2}", o.serial_build_s * 1e3),
+            format!("{:.2}", o.parallel_build_s * 1e3),
+            format!("{:.2}x", o.serial_build_s / o.parallel_build_s.max(1e-12)),
+            if o.parallel_identical { "yes".into() } else { "NO".into() },
+            format!("{:.2}", o.cold_register_s * 1e3),
+            format!("{:.2}", o.warm_register_s * 1e3),
+            format!("{:.1}x", o.cold_register_s / o.warm_register_s.max(1e-12)),
+            format!("{}", o.artifact_bytes / 1024),
+        ]);
+        csv.push(vec![
+            o.matrix.clone(),
+            o.nnz.to_string(),
+            format!("{}", o.serial_build_s),
+            format!("{}", o.parallel_build_s),
+            o.parallel_identical.to_string(),
+            format!("{}", o.cold_register_s),
+            format!("{}", o.warm_register_s),
+            o.warm_hit.to_string(),
+            o.artifact_bytes.to_string(),
+        ]);
+    }
+    out.push_str(&render::table(
+        &[
+            "matrix",
+            "nnz",
+            "serial(ms)",
+            "parallel(ms)",
+            "build speedup",
+            "identical",
+            "cold reg(ms)",
+            "warm reg(ms)",
+            "warm speedup",
+            "artifact(KiB)",
+        ],
+        &rows,
+    ));
+    out.push_str(&format!(
+        "\ntotals: cold {:.2} ms vs warm {:.2} ms -> warm registration {:.1}x faster \
+         (acceptance floor: 5x)\n",
+        cold_total * 1e3,
+        warm_total * 1e3,
+        cold_total / warm_total.max(1e-12),
+    ));
+    out.push_str(
+        "expected shape: warm start skips the entire build+plan pass (file read + near-memcpy \
+         decode), and the parallel build scales with panels across cores while staying \
+         byte-identical to the serial result.\n",
+    );
+    let _ = render::write_csv(
+        &results_dir().join("prep.csv"),
+        &[
+            "matrix",
+            "nnz",
+            "serial_build_s",
+            "parallel_build_s",
+            "parallel_identical",
+            "cold_register_s",
+            "warm_register_s",
+            "warm_hit",
+            "artifact_bytes",
+        ],
+        &csv,
+    );
+    out
+}
+
 /// One arrival in the QoS saturation trace.
 struct SimReq {
     at_s: f64,
@@ -984,6 +1189,44 @@ mod tests {
         assert!(report.contains("QoS saturation"), "{report}");
         assert!(report.contains("unbounded"), "{report}");
         assert!(report.contains("reject-on-full"), "{report}");
+    }
+
+    /// Acceptance for the artifact prep run: the warm-start path must
+    /// demonstrably skip the rebuild — every warm registration an actual
+    /// store hit, parallel build byte-identical to serial on every matrix,
+    /// and aggregate warm registration decisively faster than cold. The
+    /// experiment report prints the exact speedup against the 5x acceptance
+    /// floor; the unit test enforces a 2x margin so a scheduler stall on a
+    /// loaded CI runner cannot flake the gate while a broken warm path
+    /// (which re-runs the build and lands near 1x) still fails it.
+    #[test]
+    fn prep_warm_start_skips_rebuild_and_parallel_is_identical() {
+        let dir = crate::hrpb::store::test_dir("prep_test");
+        let outcomes = prep_outcomes(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(outcomes.len() >= 3, "prep corpus too small: {}", outcomes.len());
+
+        let (mut cold, mut warm) = (0.0f64, 0.0f64);
+        for o in &outcomes {
+            assert!(o.parallel_identical, "{}: parallel build diverged from serial", o.matrix);
+            assert!(o.warm_hit, "{}: warm registration missed the store", o.matrix);
+            assert!(o.artifact_bytes > 0, "{}: artifact not persisted", o.matrix);
+            cold += o.cold_register_s;
+            warm += o.warm_register_s;
+        }
+        let speedup = cold / warm.max(1e-12);
+        assert!(
+            speedup >= 2.0,
+            "warm registration must decisively beat cold (got {speedup:.1}x, \
+             cold {cold:.4}s warm {warm:.4}s)"
+        );
+
+        // rendering, on the same measured data (no second build suite)
+        let report = prep_report(&outcomes);
+        assert!(report.contains("== prep:"), "{report}");
+        assert!(report.contains("warm registration"), "{report}");
+        assert!(report.contains("acceptance floor: 5x"), "{report}");
+        assert!(report.contains("identical"), "{report}");
     }
 
     #[test]

@@ -178,6 +178,12 @@ pub struct Metrics {
     /// so the admission estimator sees the whole pipeline, not just the
     /// queue.
     pub qos_downstream_cost_us: AtomicU64,
+    /// HRPB artifact store counters, mirrored from the registry's
+    /// [`crate::hrpb::ArtifactStore`] at registration time; silent until an
+    /// artifact directory is configured.
+    pub artifact_hits: AtomicU64,
+    pub artifact_misses: AtomicU64,
+    pub artifact_invalidated: AtomicU64,
 }
 
 /// Predicted-cost seconds → the µs unit the downstream gauge accumulates.
@@ -247,6 +253,14 @@ impl Metrics {
         self.qos_downstream_cost_us.load(Ordering::Relaxed) as f64 / 1e6
     }
 
+    /// Mirror the artifact store's counter snapshot (absolute values — the
+    /// store owns the counts, the metrics report only displays them).
+    pub fn sync_artifacts(&self, s: crate::hrpb::StoreStats) {
+        self.artifact_hits.store(s.hits, Ordering::Relaxed);
+        self.artifact_misses.store(s.misses, Ordering::Relaxed);
+        self.artifact_invalidated.store(s.invalidated, Ordering::Relaxed);
+    }
+
     /// Requests served by `algo`'s lane (test + report convenience).
     pub fn engine_requests(&self, algo: Algo) -> u64 {
         self.engines[algo.index()].requests.load(Ordering::Relaxed)
@@ -313,6 +327,16 @@ impl Metrics {
                 }
             }
             out.push(']');
+        }
+        let (a_hits, a_misses, a_inv) = (
+            self.artifact_hits.load(Ordering::Relaxed),
+            self.artifact_misses.load(Ordering::Relaxed),
+            self.artifact_invalidated.load(Ordering::Relaxed),
+        );
+        if a_hits + a_misses + a_inv > 0 {
+            out.push_str(&format!(
+                " artifacts=[hits={a_hits} misses={a_misses} invalidated={a_inv}]"
+            ));
         }
         let qos_active = self
             .qos
@@ -453,6 +477,18 @@ mod tests {
         let m = Metrics::default();
         m.requests.fetch_add(1, Ordering::Relaxed);
         assert!(!m.report().contains("qos=["));
+    }
+
+    #[test]
+    fn artifact_counters_report_when_active_and_stay_silent_otherwise() {
+        let m = Metrics::default();
+        assert!(!m.report().contains("artifacts=["));
+        m.sync_artifacts(crate::hrpb::StoreStats { hits: 3, misses: 1, invalidated: 2 });
+        let r = m.report();
+        assert!(r.contains("artifacts=[hits=3 misses=1 invalidated=2]"), "{r}");
+        // absolute mirror: a later snapshot replaces, not accumulates
+        m.sync_artifacts(crate::hrpb::StoreStats { hits: 4, misses: 1, invalidated: 2 });
+        assert!(m.report().contains("hits=4"), "{}", m.report());
     }
 
     #[test]

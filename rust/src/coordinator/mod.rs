@@ -93,6 +93,11 @@ pub struct Config {
     /// queuing, cost-aware shedding, deadline checks ([`crate::qos`]).
     /// `None` keeps the legacy bounded-channel ingress.
     pub qos: Option<QosConfig>,
+    /// HRPB artifact directory: registrations warm-start from persisted
+    /// artifacts and persist after cold builds
+    /// ([`crate::hrpb::ArtifactStore`]); hit/miss/invalidated counters show
+    /// up in the metrics report. `None` keeps registration in-memory only.
+    pub artifact_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for Config {
@@ -103,6 +108,7 @@ impl Default for Config {
             batch: BatchPolicy::default(),
             engine: EnginePolicy::Native,
             qos: None,
+            artifact_dir: None,
         }
     }
 }
@@ -184,7 +190,18 @@ impl Coordinator {
             EnginePolicy::Auto => planner,
             _ => None,
         };
-        let registry = Arc::new(Registry::new());
+        // artifact warm start: an unopenable directory degrades to
+        // in-memory registration rather than failing startup
+        let registry = match &config.artifact_dir {
+            Some(dir) => match crate::hrpb::ArtifactStore::open(dir) {
+                Ok(store) => Arc::new(Registry::with_store(Arc::new(store))),
+                Err(e) => {
+                    eprintln!("warning: artifact store disabled: {e}");
+                    Arc::new(Registry::new())
+                }
+            },
+            None => Arc::new(Registry::new()),
+        };
         let metrics = Arc::new(Metrics::default());
         // the job channel is bounded so the router backpressures instead of
         // hiding unbounded growth behind the batcher (with QoS enabled this
@@ -262,12 +279,18 @@ impl Coordinator {
     }
 
     /// Register a matrix (preprocess-once; see [`Registry`]). Under
-    /// `EnginePolicy::Auto` this plans the matrix's engine.
+    /// `EnginePolicy::Auto` this plans the matrix's engine. With an artifact
+    /// store attached, registration warm-starts from disk and the store's
+    /// hit/miss/invalidated counters are mirrored into the metrics report.
     pub fn register(&self, name: &str, coo: &crate::formats::Coo) -> MatrixId {
-        match &self.planner {
+        let id = match &self.planner {
             Some(planner) => self.registry.register_planned(name, coo, planner),
             None => self.registry.register(name, coo),
+        };
+        if let Some(store) = self.registry.store() {
+            self.metrics.sync_artifacts(store.stats());
         }
+        id
     }
 
     /// Submit a request on the normal lane with no deadline. Under the
@@ -1014,6 +1037,44 @@ mod tests {
         assert_eq!(ok + rejected, 32);
         assert!(ok >= 1);
         coord.shutdown();
+    }
+
+    #[test]
+    fn artifact_dir_warm_starts_and_reports() {
+        let dir = crate::hrpb::store::test_dir("coord_artifacts");
+        let coo = Coo::random(128, 160, 0.06, &mut Rng::new(510));
+        let want = {
+            let b = Dense::random(160, 8, &mut Rng::new(511));
+            (b.clone(), coo.to_dense().matmul(&b))
+        };
+
+        // cold process: builds, persists, reports a miss
+        let cold = Coordinator::start(
+            Config { workers: 2, artifact_dir: Some(dir.clone()), ..Default::default() },
+            None,
+        );
+        let id = cold.register("m", &coo);
+        assert!(cold.metrics().report().contains("artifacts=[hits=0 misses=1"));
+        let resp = cold.call(id, want.0.clone()).unwrap();
+        assert!(resp.c.rel_fro_error(&want.1) < 1e-5);
+        cold.shutdown();
+
+        // "restarted" process: same directory, registration is a hit and
+        // serving is still correct
+        let warm = Coordinator::start(
+            Config { workers: 2, artifact_dir: Some(dir.clone()), ..Default::default() },
+            None,
+        );
+        let id = warm.register("m", &coo);
+        assert!(
+            warm.metrics().report().contains("artifacts=[hits=1 misses=0"),
+            "{}",
+            warm.metrics().report()
+        );
+        let resp = warm.call(id, want.0).unwrap();
+        assert!(resp.c.rel_fro_error(&want.1) < 1e-5);
+        warm.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

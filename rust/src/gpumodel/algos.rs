@@ -36,6 +36,19 @@ impl Bound {
             Bound::Decode => "decode",
         }
     }
+
+    /// Every bound, in stable order (the HRPB artifact format serializes a
+    /// bound as its position in this array).
+    pub fn all() -> [Bound; 6] {
+        [
+            Bound::Launch,
+            Bound::TcuCompute,
+            Bound::ScalarCompute,
+            Bound::Shmem,
+            Bound::Dram,
+            Bound::Decode,
+        ]
+    }
 }
 
 /// Model output for one (algorithm, matrix, N, machine) point.

@@ -25,8 +25,7 @@ pub fn build_from_coo(coo: &Coo) -> Hrpb {
 /// Build with explicit tile sizes (`tm`, `tk` must be brick multiples).
 /// Used by the §4 TM/TK ablation.
 pub fn build_with(csr: &Csr, tm: usize, tk: usize) -> Hrpb {
-    assert!(tm % BRICK_M == 0 && tm > 0, "TM must be a positive multiple of {BRICK_M}");
-    assert!(tk % BRICK_K == 0 && tk > 0, "TK must be a positive multiple of {BRICK_K}");
+    assert_tiles(tm, tk);
     let num_panels = ceil_div(csr.rows.max(1), tm);
     let mut blocks: Vec<Block> = Vec::new();
     let mut blocked_row_ptr: Vec<u32> = Vec::with_capacity(num_panels + 1);
@@ -36,53 +35,136 @@ pub fn build_with(csr: &Csr, tm: usize, tk: usize) -> Hrpb {
     let mut entries: Vec<(u32, u8, f32)> = Vec::new(); // (col, row-in-panel, val)
 
     for p in 0..num_panels {
-        let r0 = p * tm;
-        let r1 = ((p + 1) * tm).min(csr.rows);
-
-        // gather the panel's entries sorted by (col, row): per-row CSR slices
-        // are already col-sorted, so a single sort by col with stable row
-        // order suffices.
-        entries.clear();
-        for r in r0..r1 {
-            for (c, v) in csr.row_entries(r) {
-                entries.push((c, (r - r0) as u8, v));
-            }
-        }
-        entries.sort_unstable_by_key(|&(c, r, _)| (c, r));
-
-        // walk active columns in compacted order, emitting a block every
-        // `tk` distinct columns
-        let mut i = 0usize;
-        while i < entries.len() {
-            // collect the next <= tk active columns into one block
-            let mut active_cols: Vec<u32> = Vec::with_capacity(tk);
-            let block_start = i;
-            let mut j = i;
-            while j < entries.len() {
-                let col = entries[j].0;
-                if active_cols.last() != Some(&col) {
-                    if active_cols.len() == tk {
-                        break;
-                    }
-                    active_cols.push(col);
-                }
-                j += 1;
-            }
-            let block_entries = &entries[block_start..j];
-            i = j;
-
-            blocks.push(build_block(block_entries, &active_cols, tm, tk));
-        }
+        build_panel(csr, tm, tk, p, &mut entries, &mut blocks);
         blocked_row_ptr.push(blocks.len() as u32);
     }
+    finish(csr, tm, tk, blocks, blocked_row_ptr)
+}
 
-    let nnz = csr.nnz();
+/// Parallel variant of [`build_with`]: row panels are independent, so
+/// contiguous panel ranges build on scoped worker threads and the per-panel
+/// block lists are stitched back in panel order. The result is
+/// **byte-identical** to the serial build — both paths run the same
+/// per-panel construction ([`build_panel`]) and the same deterministic
+/// packing pass.
+pub fn build_with_parallel(csr: &Csr, tm: usize, tk: usize, threads: usize) -> Hrpb {
+    assert_tiles(tm, tk);
+    let num_panels = ceil_div(csr.rows.max(1), tm);
+    let threads = threads.clamp(1, num_panels);
+    if threads <= 1 {
+        return build_with(csr, tm, tk);
+    }
+    let chunk = ceil_div(num_panels, threads);
+    let parts: Vec<(Vec<Block>, Vec<u32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let p0 = (t * chunk).min(num_panels);
+                let p1 = ((t + 1) * chunk).min(num_panels);
+                s.spawn(move || {
+                    let mut entries: Vec<(u32, u8, f32)> = Vec::new();
+                    let mut blocks: Vec<Block> = Vec::new();
+                    let mut counts: Vec<u32> = Vec::with_capacity(p1 - p0);
+                    for p in p0..p1 {
+                        let before = blocks.len();
+                        build_panel(csr, tm, tk, p, &mut entries, &mut blocks);
+                        counts.push((blocks.len() - before) as u32);
+                    }
+                    (blocks, counts)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("panel build worker panicked"))
+            .collect()
+    });
+
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut blocked_row_ptr: Vec<u32> = Vec::with_capacity(num_panels + 1);
+    blocked_row_ptr.push(0);
+    for (part_blocks, counts) in parts {
+        for c in counts {
+            let next = *blocked_row_ptr.last().unwrap() + c;
+            blocked_row_ptr.push(next);
+        }
+        blocks.extend(part_blocks);
+    }
+    finish(csr, tm, tk, blocks, blocked_row_ptr)
+}
+
+/// Parallel build from COO with the paper's default tiles, sized for this
+/// host (the registry's build path).
+pub fn build_from_coo_parallel(coo: &Coo) -> Hrpb {
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    build_with_parallel(&Csr::from_coo(coo), TM, TK, threads)
+}
+
+fn assert_tiles(tm: usize, tk: usize) {
+    assert!(tm % BRICK_M == 0 && tm > 0, "TM must be a positive multiple of {BRICK_M}");
+    // row-in-panel offsets are stored as u8 throughout the builder and the
+    // packed stream; a larger TM would silently truncate rows
+    assert!(tm <= 256, "TM must be <= 256 (row-in-panel offsets are u8), got {tm}");
+    assert!(tk % BRICK_K == 0 && tk > 0, "TK must be a positive multiple of {BRICK_K}");
+}
+
+/// Build the blocks of row panel `p`, appending to `blocks`. `entries` is
+/// caller-owned scratch reused across panels. Panels are fully independent:
+/// this is the unit both the serial and the parallel builder share.
+fn build_panel(
+    csr: &Csr,
+    tm: usize,
+    tk: usize,
+    p: usize,
+    entries: &mut Vec<(u32, u8, f32)>,
+    blocks: &mut Vec<Block>,
+) {
+    let r0 = p * tm;
+    let r1 = ((p + 1) * tm).min(csr.rows);
+
+    // gather the panel's entries sorted by (col, row): per-row CSR slices
+    // are already col-sorted, so a single sort by col with stable row
+    // order suffices.
+    entries.clear();
+    for r in r0..r1 {
+        for (c, v) in csr.row_entries(r) {
+            entries.push((c, (r - r0) as u8, v));
+        }
+    }
+    entries.sort_unstable_by_key(|&(c, r, _)| (c, r));
+
+    // walk active columns in compacted order, emitting a block every
+    // `tk` distinct columns
+    let mut i = 0usize;
+    while i < entries.len() {
+        // collect the next <= tk active columns into one block
+        let mut active_cols: Vec<u32> = Vec::with_capacity(tk);
+        let block_start = i;
+        let mut j = i;
+        while j < entries.len() {
+            let col = entries[j].0;
+            if active_cols.last() != Some(&col) {
+                if active_cols.len() == tk {
+                    break;
+                }
+                active_cols.push(col);
+            }
+            j += 1;
+        }
+        let block_entries = &entries[block_start..j];
+        i = j;
+
+        blocks.push(build_block(block_entries, &active_cols, tm, tk));
+    }
+}
+
+/// Shared tail of both builders: wrap the blocks and run the packing pass.
+fn finish(csr: &Csr, tm: usize, tk: usize, blocks: Vec<Block>, blocked_row_ptr: Vec<u32>) -> Hrpb {
     let mut hrpb = Hrpb {
         rows: csr.rows,
         cols: csr.cols,
         tm,
         tk,
-        nnz,
+        nnz: csr.nnz(),
         blocks,
         blocked_row_ptr,
         packed: Vec::new(),
@@ -278,6 +360,73 @@ mod tests {
             hrpb.validate().is_ok()
                 && decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()) == 0.0
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "TM must be <= 256")]
+    fn tm_above_256_is_rejected_not_truncated() {
+        // 512 is a BRICK_M multiple, so before the guard it sailed past the
+        // assert and silently truncated `(r - r0) as u8` for rows >= 256
+        let coo = Coo::from_triplets(512, 16, &[(0, 0, 1.0), (300, 1, 2.0)]);
+        let _ = build_with(&Csr::from_coo(&coo), 512, 16);
+    }
+
+    #[test]
+    fn tm_256_is_the_largest_legal_panel() {
+        // rows 0 and 255 land in the same panel; row-in-panel 255 is the
+        // last representable u8 offset
+        let coo = Coo::from_triplets(300, 32, &[(0, 0, 1.0), (255, 3, 2.0), (299, 7, 3.0)]);
+        let hrpb = build_with(&Csr::from_coo(&coo), 256, 16);
+        hrpb.validate().unwrap();
+        assert_eq!(hrpb.num_panels(), 2);
+        assert_eq!(decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()), 0.0);
+    }
+
+    fn assert_identical(a: &Hrpb, b: &Hrpb) {
+        assert_eq!((a.rows, a.cols, a.tm, a.tk, a.nnz), (b.rows, b.cols, b.tm, b.tk, b.nnz));
+        assert_eq!(a.blocked_row_ptr, b.blocked_row_ptr);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(a.size_ptr, b.size_ptr);
+        assert_eq!(a.active_cols, b.active_cols);
+        assert_eq!(a.packed, b.packed, "parallel build must be byte-identical");
+    }
+
+    #[test]
+    fn parallel_build_is_byte_identical_to_serial() {
+        let mut rng = Rng::new(22);
+        let coo = Coo::random(777, 300, 0.05, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let serial = build_with(&csr, 16, 16);
+        for threads in [1usize, 2, 3, 8, 1000] {
+            let parallel = build_with_parallel(&csr, 16, 16, threads);
+            assert_identical(&serial, &parallel);
+        }
+        serial.validate().unwrap();
+    }
+
+    #[test]
+    fn prop_parallel_equals_serial() {
+        let g = SparseGen { max_m: 90, max_k: 110, max_density: 0.25 };
+        check("parallel == serial build", 40, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let csr = Csr::from_coo(&coo);
+            let serial = build_with(&csr, 16, 16);
+            let parallel = build_with_parallel(&csr, 16, 16, 3);
+            serial.blocked_row_ptr == parallel.blocked_row_ptr
+                && serial.blocks == parallel.blocks
+                && serial.size_ptr == parallel.size_ptr
+                && serial.active_cols == parallel.active_cols
+                && serial.packed == parallel.packed
+        });
+    }
+
+    #[test]
+    fn parallel_build_from_coo_roundtrips() {
+        let mut rng = Rng::new(23);
+        let coo = Coo::random(400, 256, 0.04, &mut rng);
+        let hrpb = build_from_coo_parallel(&coo);
+        hrpb.validate().unwrap();
+        assert_eq!(decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()), 0.0);
     }
 
     #[test]

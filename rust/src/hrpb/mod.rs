@@ -19,10 +19,14 @@
 pub mod builder;
 pub mod decode;
 pub mod pack;
+pub mod serialize;
 pub mod stats;
+pub mod store;
 
-pub use builder::{build, build_from_coo};
+pub use builder::{build, build_from_coo, build_from_coo_parallel, build_with_parallel};
+pub use serialize::Artifact;
 pub use stats::HrpbStats;
+pub use store::{ArtifactStore, StoreStats};
 
 use crate::params::{BRICK_K, BRICK_M};
 

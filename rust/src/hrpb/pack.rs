@@ -23,6 +23,7 @@
 use crate::hrpb::{Block, Hrpb};
 use crate::params::BRICK_K;
 use crate::util::bits::round_up;
+use std::borrow::Cow;
 
 /// Byte size of one packed block for the given tile shape.
 pub fn packed_size(block: &Block, tk: usize) -> usize {
@@ -84,23 +85,28 @@ pub fn pack(hrpb: &mut Hrpb) {
     hrpb.active_cols = active_cols;
 }
 
-/// A zero-copy view of one packed block (what the native engine reads on the
-/// hot path — the in-shared-memory form of Algorithm 1 line 18's cast).
+/// A view of one packed block (what the native engine reads on the hot
+/// path — the in-shared-memory form of Algorithm 1 line 18's cast).
+///
+/// Fields are `Cow` slices: borrowed (zero-copy) when the underlying byte
+/// run is naturally aligned — the case for every freshly packed `Hrpb` —
+/// and owned copies otherwise (e.g. when an artifact was loaded from disk
+/// into a `Vec<u8>` whose base alignment the allocator doesn't promise).
 #[derive(Debug)]
 pub struct PackedBlockView<'a> {
-    pub col_ptr: &'a [u16],
+    pub col_ptr: Cow<'a, [u16]>,
     pub rows: &'a [u8],
-    pub patterns: &'a [u64],
-    pub values: &'a [f32],
+    pub patterns: Cow<'a, [u64]>,
+    pub values: Cow<'a, [f32]>,
 }
 
-/// Decode the packed bytes of block `b` without copying.
+/// Decode the packed bytes of block `b`, borrowing in place when aligned.
 ///
-/// Safety of the in-place casts rests on the alignment guarantees of
-/// [`pack`]: `packed` is a fresh `Vec<u8>` (8-aligned allocations for the
-/// sizes involved are not guaranteed by Vec<u8>!), so we verify pointer
-/// alignment at runtime and fall back to a copy if violated — in practice
-/// the global allocator returns >= 8-aligned chunks for these sizes.
+/// `pack` keeps every field naturally aligned *relative to the Vec base*;
+/// the base itself is only as aligned as the allocator makes it. When a
+/// field's absolute address is misaligned (a `Vec<u8>` loaded from disk is
+/// all the serialized artifact path has), the field is copied out instead of
+/// cast — behavior matches this documented contract in both cases.
 pub fn view(hrpb: &Hrpb, b: usize) -> PackedBlockView<'_> {
     let tk = hrpb.tk;
     let brick_cols = tk / BRICK_K;
@@ -122,15 +128,27 @@ pub fn view(hrpb: &Hrpb, b: usize) -> PackedBlockView<'_> {
     PackedBlockView { col_ptr, rows, patterns, values }
 }
 
-/// Reinterpret a little-endian byte slice as `&[T]`. Panics if misaligned —
-/// `pack` keeps every field naturally aligned relative to the Vec base, and
-/// Vec<u8>'s allocation is at least 8-aligned on this platform (checked in
-/// tests).
-fn cast_slice<T: Copy>(bytes: &[u8], len: usize) -> &[T] {
+/// Reinterpret a little-endian byte slice as `[T]`: a borrowed in-place cast
+/// when the address is aligned for `T`, an owned element-wise copy when it
+/// is not (the documented fallback; `read_unaligned` has identical
+/// semantics to the cast).
+fn cast_slice<T: Copy>(bytes: &[u8], len: usize) -> Cow<'_, [T]> {
     assert_eq!(bytes.len(), len * std::mem::size_of::<T>());
     let ptr = bytes.as_ptr();
-    assert_eq!(ptr as usize % std::mem::align_of::<T>(), 0, "packed field misaligned");
-    unsafe { std::slice::from_raw_parts(ptr as *const T, len) }
+    if ptr as usize % std::mem::align_of::<T>() == 0 {
+        // SAFETY: length and alignment checked above; T is plain-old-data
+        // (u16/u64/f32) with no invalid bit patterns.
+        Cow::Borrowed(unsafe { std::slice::from_raw_parts(ptr as *const T, len) })
+    } else {
+        let mut out = Vec::with_capacity(len);
+        for i in 0..len {
+            // SAFETY: i * size_of::<T>() + size_of::<T>() <= bytes.len() by
+            // the length assert; read_unaligned has no alignment requirement.
+            let v = unsafe { (ptr.add(i * std::mem::size_of::<T>()) as *const T).read_unaligned() };
+            out.push(v);
+        }
+        Cow::Owned(out)
+    }
 }
 
 /// Verify the byte stream decodes back to the structured blocks (used by
@@ -144,16 +162,16 @@ pub fn validate_packed(hrpb: &Hrpb) -> Result<(), String> {
     }
     for (b, block) in hrpb.blocks.iter().enumerate() {
         let v = view(hrpb, b);
-        if v.col_ptr != block.col_ptr.as_slice() {
+        if v.col_ptr.as_ref() != block.col_ptr.as_slice() {
             return Err(format!("block {b}: packed col_ptr mismatch"));
         }
         if v.rows != block.rows.as_slice() {
             return Err(format!("block {b}: packed rows mismatch"));
         }
-        if v.patterns != block.patterns.as_slice() {
+        if v.patterns.as_ref() != block.patterns.as_slice() {
             return Err(format!("block {b}: packed patterns mismatch"));
         }
-        if v.values != block.values.as_slice() {
+        if v.values.as_ref() != block.values.as_slice() {
             return Err(format!("block {b}: packed values mismatch"));
         }
         let padded = hrpb.block_active_cols(b);
@@ -197,13 +215,42 @@ mod tests {
 
     #[test]
     fn blocks_are_eight_aligned() {
+        // every block starts at an 8-aligned *offset*; base alignment of the
+        // Vec is the allocator's business and `view` no longer relies on it
         let mut rng = Rng::new(9);
         let coo = Coo::random(96, 96, 0.1, &mut rng);
         let hrpb = build_from_coo(&coo);
-        assert_eq!(hrpb.packed.as_ptr() as usize % 8, 0, "Vec base alignment");
         for &off in &hrpb.size_ptr {
             assert_eq!(off % 8, 0);
         }
+    }
+
+    #[test]
+    fn cast_slice_borrows_when_aligned_and_copies_when_not() {
+        // the same 3 u64 values written at an aligned and a misaligned
+        // offset of one buffer: the aligned read borrows in place, the
+        // misaligned read takes the documented copy fallback — identical
+        // values either way
+        let vals = [0x0102030405060708u64, 0x1112131415161718, u64::MAX];
+        let mut buf = vec![0u8; 64];
+        let base = buf.as_ptr() as usize;
+        let aligned_at = (8 - base % 8) % 8;
+        let misaligned_at = aligned_at + 25; // 25 ≢ 0 (mod 8)
+        for (i, v) in vals.iter().enumerate() {
+            buf[aligned_at + i * 8..aligned_at + (i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+            buf[misaligned_at + i * 8..misaligned_at + (i + 1) * 8]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+
+        let aligned = cast_slice::<u64>(&buf[aligned_at..aligned_at + 24], 3);
+        assert!(matches!(aligned, Cow::Borrowed(_)));
+        assert_eq!(aligned.as_ref(), &vals);
+
+        let off = &buf[misaligned_at..misaligned_at + 24];
+        assert_ne!(off.as_ptr() as usize % 8, 0, "test needs a misaligned slice");
+        let copied = cast_slice::<u64>(off, 3);
+        assert!(matches!(copied, Cow::Owned(_)));
+        assert_eq!(copied.as_ref(), &vals);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! On-disk HRPB artifact store — the cross-restart half of §6.3's
+//! amortization argument.
+//!
+//! Artifacts are keyed by the planner's structural matrix fingerprint
+//! ([`crate::planner::fingerprint`]) and written with the atomic
+//! write-to-temp-then-rename idiom, so a crash mid-write can never leave a
+//! half-written file under a live key. Loads are corruption-tolerant: a
+//! truncated, bit-flipped, version-bumped or shape-mismatched artifact is
+//! counted as `invalidated`, deleted, and reported as a miss — the caller
+//! rebuilds from source and re-persists; serving never crashes on a bad
+//! cache entry.
+//!
+//! The hit / miss / invalidated counters are mirrored into the coordinator
+//! metrics report (`artifacts=[...]`), so a restarted node's cold-start
+//! behavior is observable.
+
+use crate::hrpb::serialize::{self, Artifact};
+use crate::hrpb::{Hrpb, HrpbStats};
+use crate::planner::Plan;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Snapshot of the store's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Artifacts loaded successfully.
+    pub hits: u64,
+    /// Keys with no artifact on disk.
+    pub misses: u64,
+    /// Artifacts found but rejected (corrupt, stale version, shape
+    /// mismatch) and removed.
+    pub invalidated: u64,
+}
+
+/// A directory of persisted HRPB artifacts, keyed by matrix fingerprint.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidated: AtomicU64,
+    tmp_seq: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) the artifact directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore, String> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("artifact dir {}: {e}", dir.display()))?;
+        Ok(ArtifactStore {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Final path of the artifact for `fingerprint`.
+    pub fn path_for(&self, fingerprint: u64) -> PathBuf {
+        self.dir.join(format!("hrpb-{fingerprint:016x}.bin"))
+    }
+
+    pub fn contains(&self, fingerprint: u64) -> bool {
+        self.path_for(fingerprint).is_file()
+    }
+
+    /// Load the artifact for `fingerprint`, or `None` (counted as a miss).
+    /// A present-but-bad artifact counts as `invalidated`, is deleted so the
+    /// next save rewrites it, and returns `None`. A present-but-*unreadable*
+    /// artifact (permissions, I/O error) is NOT a silent miss — it counts as
+    /// `invalidated` and warns, so a deploy that breaks warm start is
+    /// visible in the `artifacts=[...]` metrics instead of masquerading as
+    /// an ordinary cold start on every restart.
+    pub fn load(&self, fingerprint: u64) -> Option<Artifact> {
+        let path = self.path_for(fingerprint);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Err(e) => {
+                eprintln!("warning: artifact {} unreadable: {e}", path.display());
+                self.invalidate(&path);
+                return None;
+            }
+        };
+        match serialize::decode(&bytes) {
+            Ok(a) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(a)
+            }
+            Err(_) => {
+                self.invalidate(&path);
+                None
+            }
+        }
+    }
+
+    /// [`ArtifactStore::load`] plus a full identity check against the source
+    /// matrix: shape, nnz and the full-content digest
+    /// ([`crate::hrpb::serialize::content_digest`]). The fingerprint the
+    /// store keys files by samples values, so a matrix whose values changed
+    /// at non-sampled indices still lands on the same key — the digest
+    /// check is what guarantees a stale artifact is invalidated instead of
+    /// silently serving old values.
+    pub fn load_matching(
+        &self,
+        fingerprint: u64,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        digest: u64,
+    ) -> Option<Artifact> {
+        let a = self.load(fingerprint)?;
+        if a.hrpb.rows != rows || a.hrpb.cols != cols || a.hrpb.nnz != nnz || a.digest != digest {
+            // the hit was provisional; reclassify it as an invalidation
+            self.hits.fetch_sub(1, Ordering::Relaxed);
+            self.invalidate(&self.path_for(fingerprint));
+            return None;
+        }
+        Some(a)
+    }
+
+    fn invalidate(&self, path: &Path) {
+        self.invalidated.fetch_add(1, Ordering::Relaxed);
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// Persist an artifact atomically: write to a unique temp file in the
+    /// same directory, then rename over the final path. `digest` is the
+    /// source matrix's full-content digest, verified on load.
+    pub fn save(
+        &self,
+        fingerprint: u64,
+        hrpb: &Hrpb,
+        stats: &HrpbStats,
+        digest: u64,
+        plan: Option<&Plan>,
+    ) -> Result<(), String> {
+        let bytes = serialize::encode(hrpb, stats, digest, plan);
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!(".tmp-{fingerprint:016x}-{}-{seq}", std::process::id()));
+        let path = self.path_for(fingerprint);
+        std::fs::write(&tmp, &bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })
+    }
+
+    /// Fingerprints of every artifact currently on disk (for `prep`
+    /// reporting; order unspecified).
+    pub fn list(&self) -> Vec<u64> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return Vec::new() };
+        entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                let hex = name.strip_prefix("hrpb-")?.strip_suffix(".bin")?;
+                u64::from_str_radix(hex, 16).ok()
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            invalidated: self.invalidated.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Unique per-test artifact directory (removed if it already exists).
+/// Shared by every unit-test module that exercises the store so the
+/// naming/cleanup scheme lives in one place.
+#[cfg(test)]
+pub(crate) fn test_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "cutespmm_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::{build_from_coo, stats};
+    use crate::hrpb::serialize::content_digest;
+    use crate::planner::fingerprint;
+    use crate::util::rng::Rng;
+
+    fn tmp_store(tag: &str) -> ArtifactStore {
+        ArtifactStore::open(test_dir(&format!("store_{tag}"))).unwrap()
+    }
+
+    fn build(coo: &Coo) -> (crate::hrpb::Hrpb, HrpbStats) {
+        let h = build_from_coo(coo);
+        let s = stats::compute(&h);
+        (h, s)
+    }
+
+    #[test]
+    fn save_then_load_hits() {
+        let store = tmp_store("hit");
+        let coo = Coo::random(96, 96, 0.1, &mut Rng::new(40));
+        let fp = fingerprint(&coo);
+        assert!(store.load(fp).is_none(), "empty store must miss");
+        let (h, s) = build(&coo);
+        let d = content_digest(&coo);
+        store.save(fp, &h, &s, d, None).unwrap();
+        assert!(store.contains(fp));
+        let a = store.load_matching(fp, coo.rows, coo.cols, coo.nnz(), d).unwrap();
+        assert_eq!(a.hrpb.packed, h.packed);
+        assert_eq!(store.stats(), StoreStats { hits: 1, misses: 1, invalidated: 0 });
+        assert_eq!(store.list(), vec![fp]);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_artifact_is_invalidated_not_fatal() {
+        let store = tmp_store("corrupt");
+        let coo = Coo::random(64, 64, 0.15, &mut Rng::new(41));
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        let d = content_digest(&coo);
+        store.save(fp, &h, &s, d, None).unwrap();
+        // flip a byte in the middle of the file
+        let path = store.path_for(fp);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        assert!(store.load(fp).is_none());
+        assert_eq!(store.stats().invalidated, 1);
+        assert!(!store.contains(fp), "bad artifact must be removed");
+        // a rebuild + save recovers
+        store.save(fp, &h, &s, d, None).unwrap();
+        assert!(store.load(fp).is_some());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn shape_mismatch_is_invalidated() {
+        let store = tmp_store("shape");
+        let coo = Coo::random(64, 64, 0.1, &mut Rng::new(42));
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        let d = content_digest(&coo);
+        store.save(fp, &h, &s, d, None).unwrap();
+        // same key, different claimed shape -> collision treated as stale
+        assert!(store.load_matching(fp, 128, 64, coo.nnz(), d).is_none());
+        let st = store.stats();
+        assert_eq!(st.hits, 0);
+        assert_eq!(st.invalidated, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn changed_values_at_non_sampled_indices_are_not_served_stale() {
+        // the fingerprint samples every (nnz/512)-th value, so a matrix
+        // with > 512 nonzeros whose values change at a non-sampled index
+        // keeps the same key — the content digest must reject the artifact
+        let store = tmp_store("stale");
+        let coo = Coo::random(128, 128, 0.1, &mut Rng::new(44));
+        assert!(coo.nnz() >= 1024, "test needs a sampling stride > 1");
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        store.save(fp, &h, &s, content_digest(&coo), None).unwrap();
+
+        let mut changed = coo.clone();
+        changed.values[1] += 1.0; // index 1 is never sampled when stride > 1
+        assert_eq!(fingerprint(&changed), fp, "premise: same fingerprint key");
+        assert_ne!(content_digest(&changed), content_digest(&coo));
+        let got = store.load_matching(
+            fp,
+            changed.rows,
+            changed.cols,
+            changed.nnz(),
+            content_digest(&changed),
+        );
+        assert!(got.is_none(), "stale values must not be served");
+        assert_eq!(store.stats().invalidated, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn truncated_file_is_invalidated() {
+        let store = tmp_store("trunc");
+        let coo = Coo::random(48, 48, 0.2, &mut Rng::new(43));
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        store.save(fp, &h, &s, content_digest(&coo), None).unwrap();
+        let path = store.path_for(fp);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(store.load(fp).is_none());
+        assert_eq!(store.stats().invalidated, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

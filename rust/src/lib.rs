@@ -11,7 +11,11 @@
 //! * [`gen`] — synthetic SuiteSparse-like corpus + named GNN matrix recipes
 //!   (the testbed substitution documented in DESIGN.md §2).
 //! * [`hrpb`] — the paper's Hierarchical Row-Panel-Blocking structure:
-//!   row-panel compaction, 64-bit brick patterns, BlkCSC packing (Figs 3-5).
+//!   row-panel compaction, 64-bit brick patterns, BlkCSC packing (Figs 3-5),
+//!   a panel-parallel builder, and the persistent artifact layer
+//!   ([`hrpb::serialize`] + [`hrpb::store`]) that makes §6.3's preprocessing
+//!   amortization survive process restarts: versioned, checksummed on-disk
+//!   artifacts keyed by matrix fingerprint, warm-starting registration.
 //! * [`synergy`] — brick density α, `OI_shmem = 512·α` (Eq. 4) and the
 //!   Low/Medium/High TCU-Synergy classes (Table 1).
 //! * [`loadbalance`] — wave-aware virtual row-panel partitioning (§5).

@@ -302,6 +302,15 @@ impl Planner {
         c
     }
 
+    /// Seed the plan cache with a plan restored from a persisted HRPB
+    /// artifact ([`crate::hrpb::store`]): warm-started registrations make
+    /// repeat registrations of the same structure cache hits without ever
+    /// re-running the ranking pass. The plan is keyed exactly as
+    /// [`Planner::plan`] would key it — by its own fingerprint and width.
+    pub fn seed_plan(&self, plan: Arc<Plan>) {
+        self.cache.insert(plan.fingerprint, plan.width, plan);
+    }
+
     /// Plan for a matrix; cached by fingerprint.
     pub fn plan(&self, coo: &Coo) -> Arc<Plan> {
         let fp = fingerprint(coo);

@@ -27,7 +27,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 pub struct HrpbEngine {
-    hrpb: Hrpb,
+    /// Shared with the registry entry under serving — the engine never
+    /// mutates the HRPB, so preparation avoids a deep clone of the whole
+    /// structure (blocks + packed stream).
+    hrpb: std::sync::Arc<Hrpb>,
     schedule: Schedule,
     /// Unit processing order, longest first (LPT dispatch).
     order: Vec<u32>,
@@ -44,15 +47,37 @@ impl HrpbEngine {
 
     /// Wrap an already-built HRPB (preprocessing measured separately).
     pub fn from_hrpb(hrpb: Hrpb) -> Self {
+        Self::from_shared(std::sync::Arc::new(hrpb))
+    }
+
+    /// Wrap a shared HRPB without cloning it (the registry's build path).
+    pub fn from_shared(hrpb: std::sync::Arc<Hrpb>) -> Self {
+        let stats = hrpb::stats::compute(&hrpb);
+        Self::from_shared_with_stats(hrpb, stats)
+    }
+
+    /// Wrap a shared HRPB reusing already-computed stats (the registry's
+    /// warm-start path — the artifact carries the stats, recomputing them
+    /// would touch every block again).
+    pub fn from_shared_with_stats(hrpb: std::sync::Arc<Hrpb>, stats: hrpb::HrpbStats) -> Self {
         let workers = crate::spmm::num_workers(hrpb.rows);
         // CPU "device": `workers` SMs × 1 resident block
         let dev = Device { num_sms: workers, blocks_per_sm: 1 };
         let schedule = loadbalance::schedule_wave_aware(&hrpb, dev);
-        Self::with_schedule(hrpb, schedule)
+        Self::with_shared_schedule(hrpb, schedule, stats)
     }
 
     /// Explicit schedule (the §5 ablation entry point).
     pub fn with_schedule(hrpb: Hrpb, schedule: Schedule) -> Self {
+        let stats = hrpb::stats::compute(&hrpb);
+        Self::with_shared_schedule(std::sync::Arc::new(hrpb), schedule, stats)
+    }
+
+    fn with_shared_schedule(
+        hrpb: std::sync::Arc<Hrpb>,
+        schedule: Schedule,
+        stats: hrpb::HrpbStats,
+    ) -> Self {
         debug_assert!(schedule.validate(&hrpb).is_ok());
         // Natural (panel) order: §5's observation — consecutive panels share
         // active columns, so processing them in order keeps B rows hot in
@@ -60,7 +85,6 @@ impl HrpbEngine {
         // way GPU waves do (heaviest-first LPT measured 10-20% slower on
         // banded matrices — EXPERIMENTS.md §Perf step 3).
         let order: Vec<u32> = (0..schedule.units.len() as u32).collect();
-        let stats = hrpb::stats::compute(&hrpb);
         HrpbEngine { hrpb, schedule, order, stats }
     }
 

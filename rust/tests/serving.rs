@@ -21,6 +21,7 @@ fn coordinator(workers: usize, queue: usize) -> Coordinator {
             },
             engine: EnginePolicy::Native,
             qos: None,
+            artifact_dir: None,
         },
         None,
     )
@@ -78,6 +79,7 @@ fn try_submit_backpressure() {
             },
             engine: EnginePolicy::Native,
             qos: None,
+            artifact_dir: None,
         },
         None,
     );
@@ -206,6 +208,7 @@ fn qos_shutdown_rejects_queued_work_with_typed_errors() {
                 watermark_s: 0.0,
                 default_deadline: None,
             }),
+            artifact_dir: None,
         },
         None,
     );
@@ -248,6 +251,7 @@ fn qos_high_priority_lane_is_served_and_counted() {
                 watermark_s: 0.0,
                 default_deadline: Some(Duration::from_secs(30)),
             }),
+            artifact_dir: None,
         },
         None,
     );
