@@ -53,11 +53,13 @@ fn main() {
         let coo = spec.generate();
         for n in [32usize, 128] {
             let b = Dense::from_vec(coo.cols, n, vec![0.5; coo.cols * n]);
+            let mut out = Dense::zeros(coo.rows, n);
             let mut cute_time = None;
             for algo in algos {
                 let engine = algo.prepare(&coo);
+                // spmm_into with a reused buffer: kernel time, not allocator
                 let m = measure(1, 3, || {
-                    let _ = engine.spmm(&b);
+                    engine.spmm_into(&b, &mut out);
                 });
                 if algo == Algo::Hrpb {
                     cute_time = Some(m.median_s);

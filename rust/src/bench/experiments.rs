@@ -434,13 +434,15 @@ pub fn ablation_loadbalance() -> String {
         ("wave-aware", lb::schedule_wave_aware(&hrpb, dev)),
     ];
     let mut rows = Vec::new();
+    let mut out_buf = Dense::zeros(40_000, 64);
     for (name, schedule) in schemes {
         let units = schedule.units.len();
         let atomics = schedule.atomic_units;
         let crit = schedule.critical_path();
         let engine = HrpbEngine::with_schedule(hrpb.clone(), schedule);
+        // spmm_into with a reused buffer: time the kernel, not the allocator
         let meas = measure(1, 5, || {
-            let _ = engine.spmm(&b);
+            engine.spmm_into(&b, &mut out_buf);
         });
         rows.push(vec![
             name.to_string(),
@@ -817,6 +819,264 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
     out
 }
 
+/// Matrices for the exec-runtime experiment: one per structural regime,
+/// sized so the SpMM hot loop (not fixed overheads) dominates.
+fn exec_specs(quick: bool) -> Vec<MatrixSpec> {
+    let scale = if quick { 1usize } else { 4 };
+    vec![
+        MatrixSpec {
+            name: "exec-fem".into(),
+            rows: 4096 * scale,
+            family: Family::Banded { bandwidth: 24, band_fill: 0.65, noise: 0.01 },
+            seed: 0xE8EC0,
+        },
+        MatrixSpec {
+            name: "exec-mesh".into(),
+            rows: 6144 * scale,
+            family: Family::Mesh { dims: 2 },
+            seed: 0xE8EC1,
+        },
+        MatrixSpec {
+            name: "exec-rmat".into(),
+            rows: 3072 * scale,
+            family: Family::Rmat { edge_factor: 8, skew: 0.57 },
+            seed: 0xE8EC2,
+        },
+    ]
+}
+
+/// Dense widths the exec experiment sweeps (the serving-scale axis).
+pub const EXEC_WIDTHS: [usize; 5] = [32, 64, 128, 256, 512];
+
+/// One (matrix, N) cell of the exec experiment: the four execution modes —
+/// {spawn-per-call, pooled} × {unblocked, slab-blocked} — timed on the same
+/// HRPB engine, plus the auto slab width and a correctness bound.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    pub matrix: String,
+    pub nnz: usize,
+    pub n: usize,
+    /// Slab width the cache model chose for this N.
+    pub slab_width: usize,
+    /// Seed behavior: scoped-spawn per call, full-width kernel, fresh
+    /// output allocation per call.
+    pub spawn_unblocked_s: f64,
+    /// Spawn per call, slab-blocked kernel.
+    pub spawn_blocked_s: f64,
+    /// Persistent pool, full-width kernel, reused output buffer.
+    pub pooled_unblocked_s: f64,
+    /// The runtime default: pool + slabs + `spmm_into` reuse.
+    pub pooled_blocked_s: f64,
+    /// Worst relative error of any mode against the CSR reference.
+    pub max_rel_err: f64,
+}
+
+impl ExecOutcome {
+    /// The headline ratio: runtime default vs seed behavior.
+    pub fn speedup(&self) -> f64 {
+        self.spawn_unblocked_s / self.pooled_blocked_s.max(1e-12)
+    }
+}
+
+/// Run the exec experiment measurements. `quick` shrinks the matrices and
+/// sample counts (CI smoke), keeping the full width sweep.
+pub fn exec_outcomes(quick: bool) -> Vec<ExecOutcome> {
+    exec_outcomes_for(&exec_specs(quick), &EXEC_WIDTHS, if quick { 3 } else { 5 })
+}
+
+/// Measurement core, parameterized so tests can run a tiny grid (debug-mode
+/// `cargo test` cannot afford the full serving-scale sweep).
+pub fn exec_outcomes_for(
+    specs: &[MatrixSpec],
+    widths: &[usize],
+    samples: usize,
+) -> Vec<ExecOutcome> {
+    use crate::spmm::exec::slab;
+    use crate::spmm::hrpb::{ExecOpts, HrpbEngine};
+    use crate::util::timer::measure;
+
+    let mut out = Vec::new();
+    for spec in specs {
+        let coo = spec.generate();
+        if coo.nnz() == 0 {
+            continue;
+        }
+        let engine = HrpbEngine::prepare(&coo);
+        let reference = Algo::Csr.prepare(&coo);
+        for &n in widths {
+            let b = Dense::from_vec(coo.cols, n, vec![0.25; coo.cols * n]);
+            let want = reference.spmm(&b);
+            let mut reused = Dense::zeros(coo.rows, n);
+            let mut max_rel_err = 0.0f64;
+            let mut time_mode = |pooled: bool, slab_width: usize, reuse: bool| -> f64 {
+                let opts = ExecOpts { pooled, slab_width };
+                max_rel_err = max_rel_err.max(engine.spmm_opts(&b, opts).rel_fro_error(&want));
+                let meas = measure(1, samples, || {
+                    if reuse {
+                        engine.spmm_into_opts(&b, &mut reused, opts);
+                    } else {
+                        let _ = engine.spmm_opts(&b, opts);
+                    }
+                });
+                meas.median_s
+            };
+            // seed behavior: spawn per call, unblocked, allocating output
+            let spawn_unblocked_s = time_mode(false, usize::MAX, false);
+            let spawn_blocked_s = time_mode(false, 0, false);
+            // runtime: persistent pool + spmm_into buffer reuse
+            let pooled_unblocked_s = time_mode(true, usize::MAX, true);
+            let pooled_blocked_s = time_mode(true, 0, true);
+            out.push(ExecOutcome {
+                matrix: spec.name.clone(),
+                nnz: coo.nnz(),
+                n,
+                slab_width: slab::choose(n),
+                spawn_unblocked_s,
+                spawn_blocked_s,
+                pooled_unblocked_s,
+                pooled_blocked_s,
+                max_rel_err,
+            });
+        }
+    }
+    out
+}
+
+/// Write the machine-readable perf-trajectory record the CI uploads.
+fn write_exec_json(outcomes: &[ExecOutcome], geomean_256: f64) -> std::path::PathBuf {
+    use crate::util::json::Json;
+    let threads =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("exec_runtime")),
+        ("pr", Json::num(4.0)),
+        ("host_threads", Json::num(threads as f64)),
+        ("widths", Json::arr(EXEC_WIDTHS.iter().map(|&n| Json::num(n as f64)))),
+        // a grid without N=256 has no headline figure; 0.0 keeps the JSON
+        // valid (NaN is not JSON)
+        (
+            "geomean_speedup_n256",
+            Json::num(if geomean_256.is_finite() { geomean_256 } else { 0.0 }),
+        ),
+        ("acceptance_floor_n256", Json::num(1.3)),
+        (
+            "cases",
+            Json::arr(outcomes.iter().map(|o| {
+                Json::obj(vec![
+                    ("matrix", Json::str(o.matrix.clone())),
+                    ("nnz", Json::num(o.nnz as f64)),
+                    ("n", Json::num(o.n as f64)),
+                    ("slab_width", Json::num(o.slab_width as f64)),
+                    ("spawn_unblocked_s", Json::num(o.spawn_unblocked_s)),
+                    ("spawn_blocked_s", Json::num(o.spawn_blocked_s)),
+                    ("pooled_unblocked_s", Json::num(o.pooled_unblocked_s)),
+                    ("pooled_blocked_s", Json::num(o.pooled_blocked_s)),
+                    ("speedup", Json::num(o.speedup())),
+                    ("max_rel_err", Json::num(o.max_rel_err)),
+                ])
+            })),
+        ),
+    ]);
+    let path = results_dir().join("BENCH_PR4.json");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(&path, doc.to_string());
+    path
+}
+
+/// Exec-runtime experiment — blocked-vs-unblocked × pooled-vs-spawn over the
+/// width sweep, emitting `BENCH_PR4.json` (the start of the perf
+/// trajectory).
+pub fn exec(quick: bool) -> String {
+    let outcomes = exec_outcomes(quick);
+    exec_report(&outcomes)
+}
+
+/// Render the exec experiment (split so tests measure once and reuse).
+pub fn exec_report(outcomes: &[ExecOutcome]) -> String {
+    let mut out = String::from(
+        "== exec: zero-allocation blocked runtime — pool + column slabs vs spawn-per-call ==\n",
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut speedups_256 = Vec::new();
+    for o in outcomes {
+        if o.n == 256 {
+            speedups_256.push(o.speedup());
+        }
+        rows.push(vec![
+            o.matrix.clone(),
+            o.n.to_string(),
+            o.slab_width.to_string(),
+            format!("{:.3}", o.spawn_unblocked_s * 1e3),
+            format!("{:.3}", o.spawn_blocked_s * 1e3),
+            format!("{:.3}", o.pooled_unblocked_s * 1e3),
+            format!("{:.3}", o.pooled_blocked_s * 1e3),
+            format!("{:.2}x", o.speedup()),
+            format!("{:.1e}", o.max_rel_err),
+        ]);
+        csv.push(vec![
+            o.matrix.clone(),
+            o.nnz.to_string(),
+            o.n.to_string(),
+            o.slab_width.to_string(),
+            format!("{}", o.spawn_unblocked_s),
+            format!("{}", o.spawn_blocked_s),
+            format!("{}", o.pooled_unblocked_s),
+            format!("{}", o.pooled_blocked_s),
+            format!("{:.4}", o.speedup()),
+            format!("{:.2e}", o.max_rel_err),
+        ]);
+    }
+    out.push_str(&render::table(
+        &[
+            "matrix",
+            "N",
+            "slab",
+            "spawn+unblk(ms)",
+            "spawn+blk(ms)",
+            "pool+unblk(ms)",
+            "pool+blk(ms)",
+            "speedup",
+            "max_rel_err",
+        ],
+        &rows,
+    ));
+    let geomean_256 =
+        if speedups_256.is_empty() { f64::NAN } else { stats::geomean(&speedups_256) };
+    out.push_str(&format!(
+        "\nblocked+pooled vs unblocked spawn-per-call at N=256: geomean {:.2}x \
+         (acceptance floor: 1.3x)\n",
+        geomean_256
+    ));
+    out.push_str(
+        "expected shape: the pool removes the per-call spawn tax (biggest at small N, where \
+         the kernel is short), slabs restore C-tile/B-row L1 residency (biggest at large N), \
+         and spmm_into makes the steady state allocation-free; every mode stays within 1e-5 \
+         of the CSR reference.\n",
+    );
+    let _ = render::write_csv(
+        &results_dir().join("exec.csv"),
+        &[
+            "matrix",
+            "nnz",
+            "n",
+            "slab_width",
+            "spawn_unblocked_s",
+            "spawn_blocked_s",
+            "pooled_unblocked_s",
+            "pooled_blocked_s",
+            "speedup",
+            "max_rel_err",
+        ],
+        &csv,
+    );
+    let json_path = write_exec_json(outcomes, geomean_256);
+    out.push_str(&format!("machine-readable record -> {}\n", json_path.display()));
+    out
+}
+
 /// One arrival in the QoS saturation trace.
 struct SimReq {
     at_s: f64,
@@ -1126,6 +1386,58 @@ mod tests {
         let t = ablation_tiles();
         assert!(t.contains("TN=32"));
         assert!(t.contains("OI_shmem"));
+    }
+
+    /// Acceptance for the exec experiment: every (mode, matrix, N) cell
+    /// matches the CSR reference, the acceptance width (N=256) is covered,
+    /// and the machine-readable BENCH_PR4.json lands on disk with the
+    /// headline geomean. The measurement grid is shrunk to what debug-mode
+    /// `cargo test` can afford; the 1.3x ratio itself is printed by the
+    /// release-mode `experiment exec` (a perf figure measured on real
+    /// hosts, not asserted on loaded CI runners — the prep experiment set
+    /// this precedent).
+    #[test]
+    fn exec_outcomes_are_correct_and_json_lands() {
+        let specs = vec![
+            MatrixSpec {
+                name: "exec-test-fem".into(),
+                rows: 768,
+                family: Family::Banded { bandwidth: 16, band_fill: 0.6, noise: 0.01 },
+                seed: 0xE8EC7,
+            },
+            MatrixSpec {
+                name: "exec-test-rmat".into(),
+                rows: 512,
+                family: Family::Rmat { edge_factor: 6, skew: 0.57 },
+                seed: 0xE8EC8,
+            },
+        ];
+        let widths = [32usize, 256];
+        let outcomes = exec_outcomes_for(&specs, &widths, 1);
+        assert_eq!(outcomes.len(), specs.len() * widths.len(), "full matrix x width grid");
+        for o in &outcomes {
+            assert!(
+                o.max_rel_err < 1e-5,
+                "{} N={}: some exec mode diverged (rel err {})",
+                o.matrix,
+                o.n,
+                o.max_rel_err
+            );
+            assert!(o.spawn_unblocked_s > 0.0 && o.pooled_blocked_s > 0.0);
+            assert!(o.slab_width >= 1 && o.slab_width <= o.n.max(32));
+        }
+        assert!(outcomes.iter().any(|o| o.n == 256), "the acceptance width is measured");
+
+        let report = exec_report(&outcomes);
+        assert!(report.contains("== exec:"), "{report}");
+        assert!(report.contains("acceptance floor: 1.3x"), "{report}");
+        assert!(report.contains("BENCH_PR4.json"), "{report}");
+        let path = results_dir().join("BENCH_PR4.json");
+        let text = std::fs::read_to_string(&path).expect("BENCH_PR4.json written");
+        let doc = crate::util::json::parse(&text).expect("BENCH_PR4.json parses");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("exec_runtime"));
+        assert!(doc.get("geomean_speedup_n256").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(doc.get("cases").unwrap().as_arr().unwrap().len(), outcomes.len());
     }
 
     /// Acceptance for the QoS saturation run: the bounded-queue policy holds

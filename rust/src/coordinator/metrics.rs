@@ -184,6 +184,11 @@ pub struct Metrics {
     pub artifact_hits: AtomicU64,
     pub artifact_misses: AtomicU64,
     pub artifact_invalidated: AtomicU64,
+    /// Output-buffer arena counters, mirrored from the workers' shared
+    /// [`crate::spmm::exec::OutputArena`] after each batch: in steady state
+    /// `arena_misses` stops moving (zero output allocations per batch).
+    pub arena_hits: AtomicU64,
+    pub arena_misses: AtomicU64,
 }
 
 /// Predicted-cost seconds → the µs unit the downstream gauge accumulates.
@@ -259,6 +264,13 @@ impl Metrics {
         self.artifact_hits.store(s.hits, Ordering::Relaxed);
         self.artifact_misses.store(s.misses, Ordering::Relaxed);
         self.artifact_invalidated.store(s.invalidated, Ordering::Relaxed);
+    }
+
+    /// Mirror the output-buffer arena's counter snapshot (absolute values —
+    /// the arena owns the counts, the report only displays them).
+    pub fn sync_arena(&self, hits: u64, misses: u64) {
+        self.arena_hits.store(hits, Ordering::Relaxed);
+        self.arena_misses.store(misses, Ordering::Relaxed);
     }
 
     /// Requests served by `algo`'s lane (test + report convenience).
@@ -337,6 +349,13 @@ impl Metrics {
             out.push_str(&format!(
                 " artifacts=[hits={a_hits} misses={a_misses} invalidated={a_inv}]"
             ));
+        }
+        let (b_hits, b_misses) = (
+            self.arena_hits.load(Ordering::Relaxed),
+            self.arena_misses.load(Ordering::Relaxed),
+        );
+        if b_hits + b_misses > 0 {
+            out.push_str(&format!(" arena=[hits={b_hits} misses={b_misses}]"));
         }
         let qos_active = self
             .qos
@@ -489,6 +508,17 @@ mod tests {
         // absolute mirror: a later snapshot replaces, not accumulates
         m.sync_artifacts(crate::hrpb::StoreStats { hits: 4, misses: 1, invalidated: 2 });
         assert!(m.report().contains("hits=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn arena_counters_report_when_active_and_stay_silent_otherwise() {
+        let m = Metrics::default();
+        assert!(!m.report().contains("arena=["));
+        m.sync_arena(10, 2);
+        assert!(m.report().contains("arena=[hits=10 misses=2]"), "{}", m.report());
+        // absolute mirror: a later snapshot replaces, not accumulates
+        m.sync_arena(11, 2);
+        assert!(m.report().contains("arena=[hits=11 misses=2]"), "{}", m.report());
     }
 
     #[test]

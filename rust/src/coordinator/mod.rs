@@ -36,6 +36,7 @@ use crate::formats::Dense;
 use crate::planner::Planner;
 use crate::qos::{self, AdmissionQueue, Priority, QosConfig, RejectReason, Rejected, Ticket};
 use crate::runtime::PjrtHandle;
+use crate::spmm::exec::OutputArena;
 use crate::spmm::{Algo, SpmmEngine};
 use crate::synergy::Synergy;
 use std::collections::HashMap;
@@ -161,6 +162,10 @@ pub struct Coordinator {
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
     planner: Option<Arc<Planner>>,
+    /// Reusable output buffers (fused B + C) shared by the workers — the
+    /// zero-allocation half of the execution runtime: in steady state every
+    /// batch reuses released buffers and the miss counter stops moving.
+    arena: Arc<OutputArena>,
     ingress: IngressPath,
     next_token: AtomicU64,
     router: Option<std::thread::JoinHandle<()>>,
@@ -203,6 +208,8 @@ impl Coordinator {
             None => Arc::new(Registry::new()),
         };
         let metrics = Arc::new(Metrics::default());
+        // 2 buffers per worker (fused B + C) keeps steady state miss-free
+        let arena = Arc::new(OutputArena::with_capacity(config.workers.max(1) * 2));
         // the job channel is bounded so the router backpressures instead of
         // hiding unbounded growth behind the batcher (with QoS enabled this
         // is what lets the admission queue fill and shed under saturation)
@@ -218,10 +225,13 @@ impl Coordinator {
             let pjrt = pjrt.clone();
             let planner = planner.clone();
             let engine = config.engine;
+            let arena = arena.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cutespmm-worker-{w}"))
-                    .spawn(move || worker_loop(job_rx, registry, metrics, engine, pjrt, planner))
+                    .spawn(move || {
+                        worker_loop(job_rx, registry, metrics, engine, pjrt, planner, arena)
+                    })
                     .expect("spawn worker"),
             );
         }
@@ -258,6 +268,7 @@ impl Coordinator {
             registry,
             metrics,
             planner,
+            arena,
             ingress,
             next_token: AtomicU64::new(0),
             router: Some(router),
@@ -271,6 +282,12 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The workers' shared output-buffer arena (hit/miss counters back the
+    /// zero-allocation steady-state assertion).
+    pub fn arena(&self) -> &OutputArena {
+        &self.arena
     }
 
     /// The engine planner (present only under `EnginePolicy::Auto`).
@@ -632,6 +649,7 @@ fn worker_loop(
     engine: EnginePolicy,
     pjrt: Option<PjrtHandle>,
     planner: Option<Arc<Planner>>,
+    arena: Arc<OutputArena>,
 ) {
     loop {
         let job = {
@@ -639,7 +657,7 @@ fn worker_loop(
             guard.recv()
         };
         let Ok(job) = job else { break };
-        execute_job(job, &registry, &metrics, engine, pjrt.as_ref(), planner.as_deref());
+        execute_job(job, &registry, &metrics, engine, pjrt.as_ref(), planner.as_deref(), &arena);
     }
 }
 
@@ -650,6 +668,7 @@ fn execute_job(
     engine: EnginePolicy,
     pjrt: Option<&PjrtHandle>,
     planner: Option<&Planner>,
+    arena: &OutputArena,
 ) {
     let batch_size = job.reqs.len();
     let Some(entry) = registry.get(job.matrix) else {
@@ -667,8 +686,9 @@ fn execute_job(
     let good_cols: usize =
         job.reqs.iter().zip(&bad).filter(|(_, &b)| !b).map(|(r, _)| r.b.cols).sum();
 
-    // fuse B operands column-wise
-    let mut fused = Dense::zeros(entry.cols, good_cols.max(1));
+    // fuse B operands column-wise into an arena buffer (steady state: a
+    // reused allocation, zeroed in place)
+    let mut fused = arena.acquire(entry.cols, good_cols.max(1));
     let mut col = 0usize;
     for (req, &is_bad) in job.reqs.iter().zip(&bad) {
         if is_bad {
@@ -681,9 +701,10 @@ fn execute_job(
         col += req.b.cols;
     }
 
-    // execute (one launch per batch); `lane` tags the routing metrics and
-    // `predicted_s` is the planner's corrected estimate for this batch
-    // (0.0 when the route is unplanned).
+    // execute (one launch per batch) with `spmm_into` writing into an arena
+    // buffer — the native paths allocate nothing in steady state; `lane`
+    // tags the routing metrics and `predicted_s` is the planner's corrected
+    // estimate for this batch (0.0 when the route is unplanned).
     let t0 = Instant::now();
     let (c, engine_name, lane, predicted_s): (Dense, &'static str, Option<usize>, f64) =
         if good_cols == 0 {
@@ -693,20 +714,29 @@ fn execute_job(
             // the HRPB engine (see `Entry::engine`)
             let native =
                 || entry.engine.as_ref().expect("fixed-policy entry carries the HRPB engine");
+            let native_into = |out: &mut Dense| native().spmm_into(&fused, out);
             match engine {
                 EnginePolicy::PreferPjrt => {
-                    let via_pjrt =
-                        pjrt.and_then(|h| h.spmm(entry.hrpb.clone(), fused.clone()).ok());
+                    // the fused operand is cloned for the PJRT boundary only
+                    // when a handle actually exists; the handle-less
+                    // fallback goes straight to native with no copy
+                    let via_pjrt = match pjrt {
+                        Some(h) => h.spmm(entry.hrpb.clone(), fused.clone()).ok(),
+                        None => None,
+                    };
                     match via_pjrt {
                         Some(c) => (c, "pjrt", Some(PJRT_LANE), 0.0),
                         None => {
-                            (native().spmm(&fused), "cutespmm-native",
-                             Some(Algo::Hrpb.index()), 0.0)
+                            let mut c = arena.acquire(entry.rows, good_cols);
+                            native_into(&mut c);
+                            (c, "cutespmm-native", Some(Algo::Hrpb.index()), 0.0)
                         }
                     }
                 }
                 EnginePolicy::Native => {
-                    (native().spmm(&fused), "cutespmm-native", Some(Algo::Hrpb.index()), 0.0)
+                    let mut c = arena.acquire(entry.rows, good_cols);
+                    native_into(&mut c);
+                    (c, "cutespmm-native", Some(Algo::Hrpb.index()), 0.0)
                 }
                 EnginePolicy::Auto => {
                     let predicted = entry
@@ -719,7 +749,9 @@ fn execute_job(
                         .as_ref()
                         .map(|p| p.engine.index())
                         .unwrap_or(Algo::Hrpb.index());
-                    (entry.exec.spmm(&fused), entry.exec.name(), Some(lane), predicted)
+                    let mut c = arena.acquire(entry.rows, good_cols);
+                    entry.exec.spmm_into(&fused, &mut c);
+                    (c, entry.exec.name(), Some(lane), predicted)
                 }
             }
         };
@@ -766,6 +798,11 @@ fn execute_job(
             batch_size,
         }));
     }
+    // per-request outputs are copied out above; the batch buffers go back
+    // to the arena for the next batch
+    arena.release(fused);
+    arena.release(c);
+    metrics.sync_arena(arena.hits(), arena.misses());
 }
 
 #[cfg(test)]
@@ -831,6 +868,32 @@ mod tests {
         let fused = coord.metrics().batched_requests.load(Ordering::Relaxed);
         assert_eq!(fused, 4);
         assert!(batches <= 2, "4x16 wide requests should fuse (got {batches} batches)");
+        coord.shutdown();
+    }
+
+    /// Acceptance: `spmm_into` + arena makes steady-state serving
+    /// allocation-free on the output path — after the first batch warms the
+    /// two buffers (fused B + C), every later batch is an arena hit.
+    #[test]
+    fn steady_state_serving_does_zero_output_allocations() {
+        let coord = Coordinator::start(Config { workers: 1, ..Default::default() }, None);
+        let coo = Coo::random(128, 160, 0.05, &mut Rng::new(420));
+        let id = coord.register("m", &coo);
+        let dense = coo.to_dense();
+        for i in 0..12u64 {
+            let b = Dense::random(160, 8, &mut Rng::new(800 + i));
+            let want = dense.matmul(&b);
+            let resp = coord.call(id, b).unwrap();
+            assert!(resp.c.rel_fro_error(&want) < 1e-5);
+        }
+        let arena = coord.arena();
+        assert!(
+            arena.misses() <= 2,
+            "only batch-1 warmup may allocate (misses {})",
+            arena.misses()
+        );
+        assert!(arena.hits() >= 22, "later batches must reuse (hits {})", arena.hits());
+        assert!(coord.metrics().report().contains("arena=[hits="), "{}", coord.metrics().report());
         coord.shutdown();
     }
 

@@ -224,7 +224,13 @@ impl Registry {
                 (None, Arc::from(plan.engine.prepare(coo)))
             }
             _ => {
-                let e = Arc::new(HrpbEngine::from_shared_with_stats(hrpb.clone(), stats));
+                let mut native = HrpbEngine::from_shared_with_stats(hrpb.clone(), stats);
+                // the planner's calibrated column-slab width (0 = auto);
+                // round-trips through artifacts, so warm starts keep it
+                if let Some(plan) = &plan {
+                    native.set_slab_width(plan.slab_width);
+                }
+                let e = Arc::new(native);
                 (Some(e.clone()), e)
             }
         };
@@ -366,6 +372,37 @@ mod tests {
         let low2_id = reg.register_planned("low-again", &low, &planner);
         assert_ne!(low_id, low2_id);
         assert_eq!(planner.cache().stats().hits, hits_before + 1);
+    }
+
+    #[test]
+    fn planned_registration_installs_the_slab_width_knob() {
+        use crate::gpumodel::Machine;
+        use crate::planner::Calibration;
+        let planner = Planner::new(Machine::a100());
+        let mut cal = Calibration::identity();
+        cal.calibrated = true;
+        cal.machine = "A100".into();
+        cal.slab_width = 64;
+        planner.set_calibration(cal);
+
+        // high synergy (fully dense 16x16 blocks): the plan keeps the HRPB
+        // engine, so the knob must land on the prepared engine
+        let mut t = Vec::new();
+        for p in 0..256usize {
+            for r in 0..16 {
+                for c in 0..16 {
+                    t.push((p * 16 + r, (p % 4) * 16 + c, 1.0f32 + (r + c) as f32 * 0.01));
+                }
+            }
+        }
+        let coo = Coo::from_triplets(256 * 16, 64, &t);
+        let reg = Registry::new();
+        let id = reg.register_planned("high", &coo, &planner);
+        let e = reg.get(id).unwrap();
+        let plan = e.plan.as_ref().unwrap();
+        assert_eq!(plan.engine, Algo::Hrpb, "{}", plan.rationale);
+        assert_eq!(plan.slab_width, 64);
+        assert_eq!(e.engine.as_ref().unwrap().slab_width(), 64);
     }
 
     #[test]

@@ -39,7 +39,8 @@ use crate::util::bits::{ceil_div, round_up};
 pub const MAGIC: &[u8; 8] = b"CTSPHRPB";
 
 /// Layout version; bump on any format change to invalidate old artifacts.
-pub const VERSION: u32 = 1;
+/// v2: plans carry the execution runtime's column-slab width.
+pub const VERSION: u32 = 2;
 
 const FLAG_HAS_PLAN: u32 = 1;
 
@@ -188,6 +189,7 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
     if let Some(plan) = plan {
         put_str(&mut out, plan.engine.name());
         put_u64(&mut out, plan.width as u64);
+        put_u64(&mut out, plan.slab_width as u64);
         put_f64(&mut out, plan.predicted_s);
         put_f64(&mut out, plan.predicted_s_per_col);
         put_f64(&mut out, plan.alpha);
@@ -496,6 +498,7 @@ fn read_u16s(r: &mut Reader, n: usize) -> Result<Vec<u16>, String> {
 fn decode_plan(r: &mut Reader) -> Result<Plan, String> {
     let engine = parse_algo(&r.str()?)?;
     let width = r.usize64()?;
+    let slab_width = r.usize64()?;
     let predicted_s = r.f64()?;
     let predicted_s_per_col = r.f64()?;
     let alpha = r.f64()?;
@@ -524,6 +527,7 @@ fn decode_plan(r: &mut Reader) -> Result<Plan, String> {
         width,
         predicted_s,
         predicted_s_per_col,
+        slab_width,
         alpha,
         synergy,
         ranked,
@@ -585,12 +589,15 @@ mod tests {
     #[test]
     fn plan_roundtrips_exactly() {
         let coo = Coo::random(96, 96, 0.15, &mut Rng::new(31));
-        let (hrpb, s, digest, plan) = artifact_for(&coo, true);
+        let (hrpb, s, digest, mut plan) = artifact_for(&coo, true);
+        // a calibrated (non-auto) slab width must survive the round trip
+        plan.as_mut().unwrap().slab_width = 96;
         let want = plan.clone().unwrap();
         let art = decode(&encode(&hrpb, &s, digest, plan.as_ref())).unwrap();
         let got = art.plan.unwrap();
         assert_eq!(got.engine, want.engine);
         assert_eq!(got.width, want.width);
+        assert_eq!(got.slab_width, want.slab_width);
         assert_eq!(got.predicted_s, want.predicted_s);
         assert_eq!(got.predicted_s_per_col, want.predicted_s_per_col);
         assert_eq!(got.alpha, want.alpha);

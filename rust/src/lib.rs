@@ -20,7 +20,11 @@
 //!   Low/Medium/High TCU-Synergy classes (Table 1).
 //! * [`loadbalance`] — wave-aware virtual row-panel partitioning (§5).
 //! * [`spmm`] — executable engines: the native HRPB hot path (Algorithm 1 on
-//!   CPU) plus the scalar-core and TC-GNN-style baselines.
+//!   CPU) plus the scalar-core and TC-GNN-style baselines, all running on
+//!   the zero-allocation execution runtime ([`spmm::exec`]): a persistent
+//!   worker pool shared across calls, `spmm_into` with a reusable
+//!   output-buffer arena, and TN column-slab micro-kernels that keep the C
+//!   tile and hoisted B-row slices L1-resident at serving-scale widths.
 //! * [`gpumodel`] — analytical A100 / RTX-4090 cost models for all six
 //!   algorithms (regenerates the paper's figures and tables).
 //! * [`planner`] — synergy-driven adaptive engine selection: ranks every

@@ -175,20 +175,25 @@ fn split_by_ratio(loads: &[usize], ratio: impl Fn(usize) -> f64) -> Schedule {
     Schedule { units, atomic_units }
 }
 
-/// Simulated makespan of a schedule on `workers` equal workers using LPT-ish
+/// Simulated makespan of a schedule on `workers` equal workers using LPT
 /// greedy dispatch (largest remaining unit to the least-loaded worker) —
 /// a proxy for the wave argument in §5's 991-panel example, used by tests
-/// and the ablation bench.
+/// and the ablation bench. The least-loaded worker comes off a min-heap:
+/// O((units + workers) log workers) instead of the O(units × workers)
+/// linear scan.
 pub fn simulate_makespan(schedule: &Schedule, workers: usize) -> usize {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
     let mut lens: Vec<usize> =
         schedule.units.iter().map(|u| (u.end - u.start) as usize).collect();
-    lens.sort_unstable_by_key(|&l| std::cmp::Reverse(l));
-    let mut heap: Vec<usize> = vec![0; workers.max(1)];
+    lens.sort_unstable_by_key(|&l| Reverse(l));
+    let mut heap: BinaryHeap<Reverse<usize>> =
+        (0..workers.max(1)).map(|_| Reverse(0usize)).collect();
     for l in lens {
-        let i = (0..heap.len()).min_by_key(|&i| heap[i]).unwrap();
-        heap[i] += l;
+        let Reverse(load) = heap.pop().expect("heap holds one entry per worker");
+        heap.push(Reverse(load + l));
     }
-    heap.into_iter().max().unwrap_or(0)
+    heap.into_iter().map(|Reverse(load)| load).max().unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -283,6 +288,30 @@ mod tests {
         let none = simulate_makespan(&schedule_none(&hrpb), 20);
         let wave = simulate_makespan(&schedule_wave_aware(&hrpb, dev), 20);
         assert!(wave <= none);
+    }
+
+    #[test]
+    fn makespan_heap_matches_linear_scan_reference() {
+        // ties go to *a* least-loaded worker in both versions; workers are
+        // symmetric, so the load multiset (and the max) must be identical
+        let mut rng = Rng::new(41);
+        for trial in 0..4 {
+            let coo = Coo::random(640, 640, 0.01 + 0.01 * trial as f64, &mut rng);
+            let hrpb = build_from_coo(&coo);
+            let s = schedule_avg_split(&hrpb);
+            for workers in [1usize, 3, 8, 64] {
+                let mut lens: Vec<usize> =
+                    s.units.iter().map(|u| (u.end - u.start) as usize).collect();
+                lens.sort_unstable_by_key(|&l| std::cmp::Reverse(l));
+                let mut loads = vec![0usize; workers];
+                for l in lens {
+                    let i = (0..loads.len()).min_by_key(|&i| loads[i]).unwrap();
+                    loads[i] += l;
+                }
+                let want = loads.into_iter().max().unwrap();
+                assert_eq!(simulate_makespan(&s, workers), want, "workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //!               [--qos-deadline-ms MS]      # bounded admission + shedding
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|all> [--quick]
+//!                      qos|exec|all> [--quick]
+//!                                           # exec: pool + column-slab
+//!                                           # runtime A/B, emits
+//!                                           # results/BENCH_PR4.json
 //! cutespmm selfcheck                          # engines vs oracle + PJRT
 //! ```
 //!
@@ -611,6 +614,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "ablation-balance" => run("ablation-balance", experiments::ablation_loadbalance()),
         "auto" => run("auto", experiments::auto_policy(&records)),
         "qos" => run("qos", experiments::qos_saturation()),
+        "exec" => run("exec", experiments::exec(quick)),
         "all" => {
             run("table1", experiments::table1());
             run("table2", experiments::table2(&records));
@@ -626,6 +630,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             run("ablation-balance", experiments::ablation_loadbalance());
             run("auto", experiments::auto_policy(&records));
             run("qos", experiments::qos_saturation());
+            run("exec", experiments::exec(quick));
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }

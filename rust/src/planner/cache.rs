@@ -89,6 +89,7 @@ mod tests {
             width: 128,
             predicted_s: 1e-4,
             predicted_s_per_col: 1e-6,
+            slab_width: 0,
             alpha: 0.5,
             synergy: Synergy::High,
             ranked: Vec::new(),

@@ -32,6 +32,10 @@ pub struct Calibration {
     pub width: usize,
     /// Machine model the corrections were measured against.
     pub machine: String,
+    /// HRPB column-slab width the sweep measured fastest on this host
+    /// (`0` = unswept: the engine's cache model chooses per call). Recorded
+    /// into every [`crate::planner::Plan`] this calibration produces.
+    pub slab_width: usize,
 }
 
 impl Default for Calibration {
@@ -48,6 +52,7 @@ impl Calibration {
             calibrated: false,
             width: 0,
             machine: String::new(),
+            slab_width: 0,
         }
     }
 
@@ -64,6 +69,7 @@ impl Calibration {
             ("machine", Json::str(self.machine.clone())),
             ("width", Json::num(self.width as f64)),
             ("calibrated", Json::Bool(self.calibrated)),
+            ("slab_width", Json::num(self.slab_width as f64)),
             ("scale", Json::obj(scales)),
         ])
     }
@@ -76,6 +82,8 @@ impl Calibration {
             .to_string();
         let width = j.get("width").and_then(|w| w.as_usize()).unwrap_or(0);
         let calibrated = matches!(j.get("calibrated"), Some(Json::Bool(true)));
+        // profiles written before the exec runtime lack the field: 0 = auto
+        let slab_width = j.get("slab_width").and_then(|w| w.as_usize()).unwrap_or(0);
         let scales = j.get("scale").ok_or("calibration: missing scale")?;
         let mut scale = [1.0; Algo::COUNT];
         for a in Algo::all() {
@@ -85,7 +93,7 @@ impl Calibration {
                 }
             }
         }
-        Ok(Calibration { scale, calibrated, width, machine })
+        Ok(Calibration { scale, calibrated, width, machine, slab_width })
     }
 
     pub fn save(&self, path: &Path) -> Result<(), String> {
@@ -126,9 +134,38 @@ fn sample_specs(rows: usize) -> Vec<MatrixSpec> {
     ]
 }
 
+/// Slab widths the calibration sweep measures, plus `0` (the engine's
+/// auto/cache-model choice) as the baseline candidate.
+pub const SLAB_SWEEP: [usize; 5] = [0, 32, 64, 128, 256];
+
+/// Sweep [`SLAB_SWEEP`] on one sample matrix at `width` and return the
+/// fastest slab setting (`0` = auto). Timed through `spmm_into` with a
+/// reused output buffer so allocation noise never biases the pick.
+fn sweep_slab_width(coo: &Coo, width: usize) -> usize {
+    use crate::spmm::hrpb::{ExecOpts, HrpbEngine};
+    let engine = HrpbEngine::prepare(coo);
+    let b = Dense::from_vec(coo.cols, width, vec![0.5; coo.cols * width]);
+    let mut out = Dense::zeros(coo.rows, width);
+    let mut best = (f64::INFINITY, 0usize);
+    for ts in SLAB_SWEEP {
+        if ts > width {
+            continue; // indistinguishable from a single slab at this width
+        }
+        let meas = measure(1, 3, || {
+            engine.spmm_into_opts(&b, &mut out, ExecOpts { pooled: true, slab_width: ts });
+        });
+        if meas.median_s < best.0 {
+            best = (meas.median_s, ts);
+        }
+    }
+    best.1
+}
+
 /// Time `candidates` on sampled matrices at `width` and derive per-engine
 /// corrections against `machine`'s model. `rows` sizes the samples (the CLI
-/// uses ~16k; tests shrink it).
+/// uses ~16k; tests shrink it). When the HRPB engine is among the
+/// candidates, the pass also sweeps its column-slab widths ([`SLAB_SWEEP`])
+/// and records the host's fastest setting.
 pub fn microbenchmark(
     machine: &Machine,
     width: usize,
@@ -136,6 +173,8 @@ pub fn microbenchmark(
     candidates: &[Algo],
 ) -> Calibration {
     let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); Algo::COUNT];
+    let mut slab_width = 0usize;
+    let mut slab_swept = false;
     for spec in sample_specs(rows.max(256)) {
         let coo: Coo = spec.generate();
         if coo.nnz() == 0 {
@@ -143,16 +182,25 @@ pub fn microbenchmark(
         }
         let profile = MatrixProfile::compute(&coo);
         let b = Dense::from_vec(coo.cols, width, vec![0.5; coo.cols * width]);
+        let mut out = Dense::zeros(coo.rows, width);
         for &algo in candidates {
             let modeled = algos::predict(algo, &profile, width, machine).time_s;
             if !(modeled > 0.0) {
                 continue;
             }
             let engine: Box<dyn SpmmEngine> = algo.prepare(&coo);
+            // spmm_into with a reused buffer: time the kernel, not the
+            // allocator (the serving hot path is allocation-free too)
             let meas = measure(1, 3, || {
-                let _ = engine.spmm(&b);
+                engine.spmm_into(&b, &mut out);
             });
             ratios[algo.index()].push(meas.median_s / modeled);
+        }
+        // slab sweep on the first (FEM-regime) sample — the regime where
+        // the HRPB engine actually serves
+        if !slab_swept && candidates.contains(&Algo::Hrpb) {
+            slab_width = sweep_slab_width(&coo, width);
+            slab_swept = true;
         }
     }
     let mut scale = [1.0; Algo::COUNT];
@@ -167,6 +215,7 @@ pub fn microbenchmark(
         calibrated: true,
         width,
         machine: machine.name.to_string(),
+        slab_width,
     }
 }
 
@@ -191,10 +240,12 @@ mod tests {
         c.calibrated = true;
         c.width = 64;
         c.machine = "A100".to_string();
+        c.slab_width = 128;
         let back = Calibration::from_json(&c.to_json()).unwrap();
         assert!(back.calibrated);
         assert_eq!(back.width, 64);
         assert_eq!(back.machine, "A100");
+        assert_eq!(back.slab_width, 128);
         assert_eq!(back.scale_for(Algo::Hrpb), 123.5);
         assert_eq!(back.scale_for(Algo::Csr), 0.25);
         assert_eq!(back.scale_for(Algo::Coo), 1.0);
@@ -221,7 +272,19 @@ mod tests {
     }
 
     #[test]
-    fn microbenchmark_produces_positive_scales() {
+    fn pre_runtime_profiles_parse_with_auto_slab() {
+        // a profile written before the slab knob existed must still load
+        let mut c = Calibration::identity();
+        c.calibrated = true;
+        c.machine = "A100".into();
+        let Json::Obj(mut m) = c.to_json() else { panic!("object") };
+        m.remove("slab_width");
+        let back = Calibration::from_json(&Json::Obj(m)).unwrap();
+        assert_eq!(back.slab_width, 0, "missing field defaults to auto");
+    }
+
+    #[test]
+    fn microbenchmark_produces_positive_scales_and_a_swept_slab() {
         // tiny samples: this is a structure test, not a timing test
         let c = microbenchmark(&Machine::a100(), 16, 256, &[Algo::Csr, Algo::Hrpb]);
         assert!(c.calibrated);
@@ -229,5 +292,11 @@ mod tests {
         assert!(c.scale_for(Algo::Hrpb) > 0.0);
         // untimed engines keep the identity scale
         assert_eq!(c.scale_for(Algo::Dense), 1.0);
+        // the sweep ran and picked a setting from the candidate set
+        assert!(SLAB_SWEEP.contains(&c.slab_width), "slab {}", c.slab_width);
+
+        // without the HRPB candidate there is nothing to sweep
+        let no_hrpb = microbenchmark(&Machine::a100(), 16, 256, &[Algo::Csr]);
+        assert_eq!(no_hrpb.slab_width, 0);
     }
 }

@@ -77,6 +77,12 @@ pub struct Plan {
     /// the QoS admission layer scales it by a request's width for its
     /// cost-aware shedding and wait estimates (see [`crate::qos`]).
     pub predicted_s_per_col: f64,
+    /// Column-slab width for the HRPB engine's execution runtime
+    /// ([`crate::spmm::exec::slab`]): `0` = auto (the engine's cache model
+    /// chooses per call), otherwise the width the calibration sweep measured
+    /// fastest on this host. The registry installs it on the engine at
+    /// registration time; artifacts round-trip it.
+    pub slab_width: usize,
     /// Packed brick density of the matrix.
     pub alpha: f64,
     /// Table 1 class of `alpha`.
@@ -99,6 +105,7 @@ impl Plan {
             ("width", Json::num(self.width as f64)),
             ("predicted_s", Json::num(self.predicted_s)),
             ("predicted_s_per_col", Json::num(self.predicted_s_per_col)),
+            ("slab_width", Json::num(self.slab_width as f64)),
             ("alpha", Json::num(self.alpha)),
             ("synergy", Json::str(self.synergy.name())),
             ("rationale", Json::str(self.rationale.clone())),
@@ -339,6 +346,7 @@ impl Planner {
     pub fn plan_profile(&self, fingerprint: u64, profile: &MatrixProfile) -> Plan {
         let n = self.config.width;
         let calibration = self.calibration.read().unwrap();
+        let slab_width = calibration.slab_width;
         let mut ranked: Vec<RankedChoice> = CANDIDATES
             .iter()
             .map(|&algo| {
@@ -378,6 +386,7 @@ impl Planner {
             width: n,
             predicted_s,
             predicted_s_per_col: predicted_s / n.max(1) as f64,
+            slab_width,
             alpha,
             synergy,
             ranked,
@@ -539,6 +548,7 @@ mod tests {
         assert_eq!(doc.get("engine").unwrap().as_str(), Some(plan.engine.name()));
         assert_eq!(doc.get("synergy").unwrap().as_str(), Some(plan.synergy.name()));
         assert_eq!(doc.get("width").unwrap().as_usize(), Some(plan.width));
+        assert_eq!(doc.get("slab_width").unwrap().as_usize(), Some(plan.slab_width));
         let ranked = doc.get("ranked").unwrap().as_arr().unwrap();
         assert_eq!(ranked.len(), plan.ranked.len());
         let chosen = ranked

@@ -4,7 +4,9 @@
 //! GPU COO SpMM without its fine-grained atomics.
 
 use crate::formats::{Coo, Dense};
+use crate::spmm::exec::{self, SendPtr};
 use crate::spmm::{chunks, num_workers, SpmmEngine};
+use std::sync::Mutex;
 
 pub struct CooEngine {
     coo: Coo,
@@ -26,39 +28,47 @@ impl SpmmEngine for CooEngine {
     }
 
     fn spmm(&self, b: &Dense) -> Dense {
-        assert_eq!(b.rows, self.coo.cols, "B rows must equal A cols");
+        let mut c = Dense::zeros(self.coo.rows, b.cols);
+        self.spmm_into(b, &mut c);
+        c
+    }
+
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        crate::spmm::check_into_shapes(self, b, c);
         let n = b.cols;
+        c.data.fill(0.0);
         let nnz = self.coo.nnz();
         let workers = num_workers(nnz / 64 + 1);
         if workers <= 1 || nnz < 4096 {
-            let mut c = Dense::zeros(self.coo.rows, n);
-            scatter(&self.coo, b, 0..nnz, &mut c);
-            return c;
+            scatter(&self.coo, b, 0..nnz, &mut c.data, n);
+            return;
         }
-        // each worker owns a nonzero segment and a private output; private
-        // outputs are summed (the "consolidation" cost the paper's §5
-        // discussion attributes to K-split schemes, made explicit here)
+        // each worker owns a nonzero segment; segment 0 scatters straight
+        // into C (it is zeroed and no other part touches it during the
+        // run), the rest accumulate into private outputs summed afterwards
+        // (the "consolidation" cost the paper's §5 discussion attributes to
+        // K-split schemes, made explicit here)
         let segs = chunks(nnz, workers);
-        let partials: Vec<Dense> = std::thread::scope(|s| {
-            let handles: Vec<_> = segs
-                .into_iter()
-                .map(|seg| {
-                    s.spawn(move || {
-                        let mut part = Dense::zeros(self.coo.rows, n);
-                        scatter(&self.coo, b, seg, &mut part);
-                        part
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        let partials: Mutex<Vec<Dense>> = Mutex::new(Vec::new());
+        let cptr = SendPtr(c.data.as_mut_ptr());
+        let clen = c.data.len();
+        exec::WorkerPool::global().run(segs.len(), &|w| {
+            if w == 0 {
+                // SAFETY: part 0 is C's only writer until `run` returns;
+                // the merge below happens strictly afterwards.
+                let out = unsafe { std::slice::from_raw_parts_mut(cptr.get(), clen) };
+                scatter(&self.coo, b, segs[0].clone(), out, n);
+            } else {
+                let mut part = Dense::zeros(self.coo.rows, n);
+                scatter(&self.coo, b, segs[w].clone(), &mut part.data, n);
+                partials.lock().unwrap().push(part);
+            }
         });
-        let mut c = Dense::zeros(self.coo.rows, n);
-        for part in partials {
+        for part in partials.into_inner().unwrap() {
             for (cv, pv) in c.data.iter_mut().zip(&part.data) {
                 *cv += pv;
             }
         }
-        c
     }
 
     fn flops(&self, n: usize) -> f64 {
@@ -70,13 +80,13 @@ impl SpmmEngine for CooEngine {
     }
 }
 
-fn scatter(coo: &Coo, b: &Dense, seg: std::ops::Range<usize>, c: &mut Dense) {
+fn scatter(coo: &Coo, b: &Dense, seg: std::ops::Range<usize>, c: &mut [f32], n: usize) {
     for i in seg {
         let r = coo.row_idx[i] as usize;
         let col = coo.col_idx[i] as usize;
         let v = coo.values[i];
         let brow = b.row(col);
-        let crow = c.row_mut(r);
+        let crow = &mut c[r * n..(r + 1) * n];
         for (cv, bv) in crow.iter_mut().zip(brow) {
             *cv += v * bv;
         }
@@ -95,5 +105,18 @@ mod tests {
     #[test]
     fn empty_ok() {
         testutil::engine_handles_empty(Algo::Coo);
+    }
+
+    #[test]
+    fn parallel_segments_match_oracle_into_dirty_buffer() {
+        use crate::formats::{Coo, Dense};
+        use crate::util::rng::Rng;
+        // dense enough that nnz >= 4096: the segmented parallel path runs
+        let mut rng = Rng::new(63);
+        let coo = Coo::random(400, 200, 0.1, &mut rng);
+        assert!(coo.nnz() >= 4096, "test needs the parallel path");
+        let engine = Algo::Coo.prepare(&coo);
+        let b = Dense::random(200, 18, &mut rng);
+        testutil::spmm_into_matches_spmm(engine.as_ref(), &b);
     }
 }

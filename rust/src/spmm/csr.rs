@@ -3,6 +3,7 @@
 //! nonzeros — the canonical scalar-core SpMM the paper's Best-SC includes.
 
 use crate::formats::{Coo, Csr, Dense};
+use crate::spmm::exec::{self, SendPtr};
 use crate::spmm::{chunks, num_workers, SpmmEngine};
 
 pub struct CsrEngine {
@@ -20,7 +21,7 @@ impl CsrEngine {
 }
 
 /// Row-range kernel shared with the other CSR-based baselines: compute rows
-/// `range` of C into `out` (a `range.len() * n` slice).
+/// `range` of C into `out` (a zeroed `range.len() * n` slice).
 pub(crate) fn csr_rows_kernel(csr: &Csr, b: &Dense, range: std::ops::Range<usize>, out: &mut [f32]) {
     let n = b.cols;
     for (i, r) in range.clone().enumerate() {
@@ -34,35 +35,33 @@ pub(crate) fn csr_rows_kernel(csr: &Csr, b: &Dense, range: std::ops::Range<usize
     }
 }
 
-/// Parallel row-split driver shared by CSR-family engines.
-pub(crate) fn parallel_row_split(
+/// Parallel row-split driver shared by CSR-family engines: zero `c`, then
+/// run `kernel` over contiguous row ranges on the persistent worker pool
+/// (no per-call thread spawn, no per-call output allocation).
+pub(crate) fn parallel_row_split_into(
     csr: &Csr,
     b: &Dense,
+    c: &mut Dense,
     kernel: impl Fn(&Csr, &Dense, std::ops::Range<usize>, &mut [f32]) + Sync,
-) -> Dense {
+) {
     let n = b.cols;
-    let mut c = Dense::zeros(csr.rows, n);
+    c.data.fill(0.0);
     let workers = num_workers(csr.rows);
     if workers <= 1 || csr.rows < 128 {
         kernel(csr, b, 0..csr.rows, &mut c.data);
-        return c;
+        return;
     }
     let ranges = chunks(csr.rows, workers);
-    // split the output buffer to match the row ranges
-    let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
-    let mut rest: &mut [f32] = &mut c.data;
-    for r in &ranges {
-        let (head, tail) = rest.split_at_mut(r.len() * n);
-        slices.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|s| {
-        for (range, out) in ranges.into_iter().zip(slices) {
-            let kernel = &kernel;
-            s.spawn(move || kernel(csr, b, range, out));
-        }
+    let base = SendPtr(c.data.as_mut_ptr());
+    exec::WorkerPool::global().run(ranges.len(), &|w| {
+        let range = ranges[w].clone();
+        // SAFETY: `chunks` yields disjoint contiguous row ranges, so the
+        // per-part output slices never alias.
+        let out = unsafe {
+            std::slice::from_raw_parts_mut(base.get().add(range.start * n), range.len() * n)
+        };
+        kernel(csr, b, range, out);
     });
-    c
 }
 
 impl SpmmEngine for CsrEngine {
@@ -71,8 +70,14 @@ impl SpmmEngine for CsrEngine {
     }
 
     fn spmm(&self, b: &Dense) -> Dense {
-        assert_eq!(b.rows, self.csr.cols, "B rows must equal A cols");
-        parallel_row_split(&self.csr, b, csr_rows_kernel)
+        let mut c = Dense::zeros(self.csr.rows, b.cols);
+        self.spmm_into(b, &mut c);
+        c
+    }
+
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        crate::spmm::check_into_shapes(self, b, c);
+        parallel_row_split_into(&self.csr, b, c, csr_rows_kernel);
     }
 
     fn flops(&self, n: usize) -> f64 {
@@ -111,6 +116,15 @@ mod tests {
         let mut ser = Dense::zeros(1000, 40);
         csr_rows_kernel(&engine.csr, &b, 0..1000, &mut ser.data);
         assert_eq!(par.max_abs_diff(&ser), 0.0);
+    }
+
+    #[test]
+    fn spmm_into_reuses_a_dirty_buffer() {
+        let mut rng = Rng::new(52);
+        let coo = Coo::random(600, 200, 0.02, &mut rng);
+        let engine = CsrEngine::prepare(&coo);
+        let b = Dense::random(200, 24, &mut rng);
+        testutil::spmm_into_matches_spmm(&engine, &b);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Fixed-width FMA micro-kernels for the brick-row contraction.
+//!
+//! One brick row contributes 1–4 products `a_i · B[k_i, :]` to a single C
+//! row. The HRPB kernel fuses those into one pass over the C slab (the CPU
+//! analogue of the MMA's 4-deep contraction); these helpers run that pass
+//! over `chunks_exact(LANES)` bodies so the compiler sees a fixed trip
+//! count with no tail check and auto-vectorizes the 1–4-term FMA stream,
+//! with a short scalar loop for the slab remainder.
+//!
+//! Every `b` slice must be at least as long as `c` (the current slab width).
+
+/// Vector lane granularity: 8 f32s = one 256-bit register.
+pub const LANES: usize = 8;
+
+/// `c += a · b` (1-term brick row).
+#[inline]
+pub fn fma1(c: &mut [f32], a: f32, b: &[f32]) {
+    let n = c.len();
+    let main = n - n % LANES;
+    let (cm, ct) = c.split_at_mut(main);
+    let (bm, bt) = b[..n].split_at(main);
+    for (cv, v0) in cm.chunks_exact_mut(LANES).zip(bm.chunks_exact(LANES)) {
+        for (cl, v) in cv.iter_mut().zip(v0) {
+            *cl += a * v;
+        }
+    }
+    for (cl, v) in ct.iter_mut().zip(bt) {
+        *cl += a * v;
+    }
+}
+
+/// `c += a0·b0 + a1·b1` (2-term brick row).
+#[inline]
+pub fn fma2(c: &mut [f32], a: [f32; 2], b: [&[f32]; 2]) {
+    let n = c.len();
+    let main = n - n % LANES;
+    let (cm, ct) = c.split_at_mut(main);
+    let (b0m, b0t) = b[0][..n].split_at(main);
+    let (b1m, b1t) = b[1][..n].split_at(main);
+    for ((cv, v0), v1) in cm
+        .chunks_exact_mut(LANES)
+        .zip(b0m.chunks_exact(LANES))
+        .zip(b1m.chunks_exact(LANES))
+    {
+        for ((cl, v0), v1) in cv.iter_mut().zip(v0).zip(v1) {
+            *cl += a[0] * v0 + a[1] * v1;
+        }
+    }
+    for ((cl, v0), v1) in ct.iter_mut().zip(b0t).zip(b1t) {
+        *cl += a[0] * v0 + a[1] * v1;
+    }
+}
+
+/// `c += a0·b0 + a1·b1 + a2·b2` (3-term brick row).
+#[inline]
+pub fn fma3(c: &mut [f32], a: [f32; 3], b: [&[f32]; 3]) {
+    let n = c.len();
+    let main = n - n % LANES;
+    let (cm, ct) = c.split_at_mut(main);
+    let (b0m, b0t) = b[0][..n].split_at(main);
+    let (b1m, b1t) = b[1][..n].split_at(main);
+    let (b2m, b2t) = b[2][..n].split_at(main);
+    for (((cv, v0), v1), v2) in cm
+        .chunks_exact_mut(LANES)
+        .zip(b0m.chunks_exact(LANES))
+        .zip(b1m.chunks_exact(LANES))
+        .zip(b2m.chunks_exact(LANES))
+    {
+        for (((cl, v0), v1), v2) in cv.iter_mut().zip(v0).zip(v1).zip(v2) {
+            *cl += a[0] * v0 + a[1] * v1 + a[2] * v2;
+        }
+    }
+    for (((cl, v0), v1), v2) in ct.iter_mut().zip(b0t).zip(b1t).zip(b2t) {
+        *cl += a[0] * v0 + a[1] * v1 + a[2] * v2;
+    }
+}
+
+/// `c += a0·b0 + a1·b1 + a2·b2 + a3·b3` (the full 4-deep MMA contraction).
+#[inline]
+pub fn fma4(c: &mut [f32], a: [f32; 4], b: [&[f32]; 4]) {
+    let n = c.len();
+    let main = n - n % LANES;
+    let (cm, ct) = c.split_at_mut(main);
+    let (b0m, b0t) = b[0][..n].split_at(main);
+    let (b1m, b1t) = b[1][..n].split_at(main);
+    let (b2m, b2t) = b[2][..n].split_at(main);
+    let (b3m, b3t) = b[3][..n].split_at(main);
+    for ((((cv, v0), v1), v2), v3) in cm
+        .chunks_exact_mut(LANES)
+        .zip(b0m.chunks_exact(LANES))
+        .zip(b1m.chunks_exact(LANES))
+        .zip(b2m.chunks_exact(LANES))
+        .zip(b3m.chunks_exact(LANES))
+    {
+        for ((((cl, v0), v1), v2), v3) in cv.iter_mut().zip(v0).zip(v1).zip(v2).zip(v3) {
+            *cl += a[0] * v0 + a[1] * v1 + a[2] * v2 + a[3] * v3;
+        }
+    }
+    for ((((cl, v0), v1), v2), v3) in ct.iter_mut().zip(b0t).zip(b1t).zip(b2t).zip(b3t) {
+        *cl += a[0] * v0 + a[1] * v1 + a[2] * v2 + a[3] * v3;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(c: &mut [f32], a: &[f32], b: &[Vec<f32>]) {
+        for (i, cv) in c.iter_mut().enumerate() {
+            for (av, bv) in a.iter().zip(b) {
+                *cv += av * bv[i];
+            }
+        }
+    }
+
+    #[test]
+    fn all_term_counts_match_naive_across_lengths() {
+        let mut rng = Rng::new(0xF11A);
+        // lengths straddle the LANES boundary: empty, sub-lane, exact
+        // multiples, and ragged tails
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 24, 31, 33, 160, 161] {
+            for terms in 1..=4usize {
+                let a: Vec<f32> = (0..terms).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let b: Vec<Vec<f32>> = (0..terms)
+                    .map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                    .collect();
+                let mut want: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let mut got = want.clone();
+                naive(&mut want, &a, &b);
+                match terms {
+                    1 => fma1(&mut got, a[0], &b[0]),
+                    2 => fma2(&mut got, [a[0], a[1]], [&b[0], &b[1]]),
+                    3 => fma3(&mut got, [a[0], a[1], a[2]], [&b[0], &b[1], &b[2]]),
+                    _ => fma4(&mut got, [a[0], a[1], a[2], a[3]], [&b[0], &b[1], &b[2], &b[3]]),
+                }
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() <= 1e-5, "n={n} terms={terms}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn longer_b_than_c_is_allowed() {
+        // the kernel contract: b slices may exceed the slab (hoisted full
+        // rows); only the first c.len() entries participate
+        let b: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut c = vec![1.0f32; 5];
+        fma1(&mut c, 2.0, &b);
+        assert_eq!(c, vec![1.0, 3.0, 5.0, 7.0, 9.0]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Zero-allocation blocked execution runtime for the CPU engines.
+//!
+//! The paper's kernel owes its throughput to launching once and keeping
+//! operands resident; this module gives the CPU re-hosts the same shape:
+//!
+//! * [`pool`] — a lazily-initialized persistent worker pool shared by every
+//!   parallel engine, replacing the per-call `std::thread::scope` spawn.
+//! * [`slab`] — TN column-slab selection: process C in cache-sized column
+//!   slabs so the C tile and the hoisted B-row slices stay L1-resident
+//!   across a work unit's blocks.
+//! * [`microkernel`] — fixed-width (`chunks_exact`) 1–4-term FMA bodies the
+//!   slab kernel dispatches to; auto-vectorized.
+//! * [`OutputArena`] — a reusable output-buffer pool behind
+//!   `SpmmEngine::spmm_into`, so steady-state serving performs zero output
+//!   allocations (the coordinator asserts this via the hit counter).
+
+pub mod microkernel;
+pub mod pool;
+pub mod slab;
+
+pub use pool::WorkerPool;
+
+use crate::formats::Dense;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A `Send + Sync` raw output pointer for handing disjoint C regions to
+/// pool workers (each engine documents its disjointness argument at the
+/// `from_raw_parts_mut` site).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+
+// SAFETY: carriers only ever materialize disjoint subslices per worker.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Accessor so closures capture the whole `SendPtr` (Send + Sync) rather
+    /// than disjointly capturing the raw pointer field (2021 capture rules).
+    #[inline]
+    pub(crate) fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Reusable output-buffer pool for `spmm_into` callers.
+///
+/// `acquire` hands back a `rows × cols` [`Dense`] with **unspecified
+/// contents**, reusing a released buffer whose capacity fits (a *hit* — no
+/// allocation, and no redundant zero fill: `spmm_into` overwrites C anyway,
+/// and the coordinator overwrites every fused-B column it reads back);
+/// otherwise it allocates fresh (a *miss*). In steady state a serving
+/// worker cycles the same buffers batch after batch, so the miss counter
+/// stops moving after warmup — the zero-allocation property the coordinator
+/// tests assert.
+pub struct OutputArena {
+    free: Mutex<Vec<Vec<f32>>>,
+    max_buffers: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for OutputArena {
+    fn default() -> Self {
+        OutputArena::new()
+    }
+}
+
+impl OutputArena {
+    /// An arena retaining up to 8 buffers (2 per worker on the default
+    /// 4-worker coordinator: fused B + C).
+    pub fn new() -> OutputArena {
+        OutputArena::with_capacity(8)
+    }
+
+    /// An arena retaining up to `max_buffers` released buffers.
+    pub fn with_capacity(max_buffers: usize) -> OutputArena {
+        OutputArena {
+            free: Mutex::new(Vec::new()),
+            max_buffers: max_buffers.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A `rows × cols` matrix with unspecified contents (callers overwrite
+    /// — see the type docs), reusing a retained buffer when one is big
+    /// enough.
+    pub fn acquire(&self, rows: usize, cols: usize) -> Dense {
+        let need = rows * cols;
+        let reused = {
+            let mut free = self.free.lock().unwrap();
+            free.iter()
+                .position(|b| b.capacity() >= need)
+                .map(|i| free.swap_remove(i))
+        };
+        match reused {
+            Some(mut data) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // resize writes only the grown tail (len..need); the kept
+                // prefix stays dirty — the hot path's saved memset
+                data.truncate(need);
+                data.resize(need, 0.0);
+                Dense { rows, cols, data }
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Dense::zeros(rows, cols)
+            }
+        }
+    }
+
+    /// Return a buffer for reuse. Past the retention cap the smallest
+    /// retained buffer is displaced if this one is bigger (so the arena
+    /// converges on the largest shapes in play), otherwise the buffer is
+    /// dropped.
+    pub fn release(&self, d: Dense) {
+        if d.data.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_buffers {
+            free.push(d.data);
+            return;
+        }
+        if let Some((i, smallest)) = free
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, b)| (i, b.capacity()))
+        {
+            if smallest < d.data.capacity() {
+                free[i] = d.data;
+            }
+        }
+    }
+
+    /// Acquires served from a retained buffer (no allocation).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Acquires that had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently retained.
+    pub fn retained(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_reuses_dirty_buffers_at_the_right_shape() {
+        // the contract is "unspecified contents" — consumers (spmm_into,
+        // the coordinator's fused-B writer) overwrite, so acquire skips the
+        // memset; only shape and length are guaranteed
+        let arena = OutputArena::new();
+        let mut d = arena.acquire(4, 4);
+        d.data.iter_mut().for_each(|v| *v = f32::NAN);
+        arena.release(d);
+        let d = arena.acquire(2, 3);
+        assert_eq!(arena.hits(), 1);
+        assert_eq!((d.rows, d.cols), (2, 3));
+        assert_eq!(d.data.len(), 6);
+        // growing past the old length zero-fills only the new tail, so the
+        // buffer is still fully initialized memory
+        arena.release(d);
+        let d = arena.acquire(4, 4);
+        assert_eq!(d.data.len(), 16);
+    }
+
+    #[test]
+    fn steady_state_stops_allocating() {
+        let arena = OutputArena::new();
+        for _ in 0..16 {
+            let c = arena.acquire(32, 8);
+            arena.release(c);
+        }
+        assert_eq!(arena.misses(), 1, "only the first acquire allocates");
+        assert_eq!(arena.hits(), 15);
+    }
+
+    #[test]
+    fn smaller_request_reuses_bigger_buffer() {
+        let arena = OutputArena::new();
+        arena.release(Dense::zeros(100, 10));
+        let d = arena.acquire(5, 5);
+        assert_eq!(arena.hits(), 1);
+        assert_eq!(d.data.len(), 25);
+    }
+
+    #[test]
+    fn retention_cap_keeps_the_biggest() {
+        let arena = OutputArena::with_capacity(2);
+        arena.release(Dense::zeros(1, 8));
+        arena.release(Dense::zeros(1, 16));
+        arena.release(Dense::zeros(1, 64)); // displaces the 8-slot buffer
+        assert_eq!(arena.retained(), 2);
+        let d = arena.acquire(1, 64);
+        assert_eq!(arena.hits(), 1, "the big buffer survived the cap");
+        arena.release(d);
+        arena.release(Dense::zeros(1, 4)); // smaller than both: dropped
+        assert_eq!(arena.retained(), 2);
+        assert!(arena.acquire(1, 64).data.len() == 64);
+        assert_eq!(arena.hits(), 2);
+    }
+
+    #[test]
+    fn zero_width_buffers_are_not_retained() {
+        let arena = OutputArena::new();
+        arena.release(Dense::zeros(8, 0));
+        assert_eq!(arena.retained(), 0);
+    }
+}

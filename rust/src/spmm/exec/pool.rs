@@ -1,0 +1,310 @@
+//! Persistent worker pool — one set of threads for every SpMM call.
+//!
+//! The paper's kernel launches one grid and keeps operands resident; our CPU
+//! re-host used to pay a fresh `std::thread::scope` spawn (≈ tens of µs per
+//! worker) on *every* `spmm` call in every parallel engine. This pool is the
+//! launch-once analogue: threads are spawned lazily on first use and then
+//! shared across all engines and all calls for the life of the process.
+//!
+//! Dispatch model: a call submits one *job* with `parts` participants.
+//! Participant indices are claimed from a shared atomic counter (the same
+//! self-scheduling the HRPB engine uses for work units), so however many
+//! pool threads actually wake up, the work is covered — the caller itself
+//! participates, which also makes a zero-thread pool (single-core host)
+//! correct with no special casing. The caller blocks until every claimed
+//! part has finished, which is what makes lending stack-borrowed closures to
+//! the pool sound.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One submitted job: a lifetime-erased task plus claim/completion state.
+struct Job {
+    /// The caller's `&(dyn Fn(usize) + Sync)` with its lifetime erased.
+    /// SAFETY invariant: [`WorkerPool::run`] does not return until
+    /// `completed == parts`, so the borrow outlives every dereference.
+    task: *const (dyn Fn(usize) + Sync),
+    parts: usize,
+    /// Next participant index to claim.
+    next: AtomicUsize,
+    /// Participant indices fully executed.
+    completed: AtomicUsize,
+    /// First caught panic payload; re-raised on the caller once the job
+    /// drains, preserving the original message.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: the raw task pointer is only dereferenced while the submitting
+// caller is blocked inside `run` (see the invariant on `task`), and the
+// pointee is `Sync`, so concurrent calls from pool threads are sound.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run participant indices until none remain. Runs on pool
+    /// threads *and* on the submitting caller.
+    fn execute(&self) {
+        loop {
+            let p = self.next.fetch_add(1, Ordering::Relaxed);
+            if p >= self.parts {
+                break;
+            }
+            // SAFETY: see the invariant on `task`.
+            let task = unsafe { &*self.task };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(p))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.parts {
+                // take the latch lock so the notify cannot race a caller
+                // between its re-check and its wait
+                let _g = self.done.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Queue entries: work, or an exit marker consumed by exactly one worker
+/// (pushed by `Drop`, after all pending work).
+enum Ticket {
+    Work(Arc<Job>),
+    Exit,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Ticket>>,
+    available: Condvar,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let ticket = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match ticket {
+            Ticket::Work(job) => job.execute(),
+            Ticket::Exit => break,
+        }
+    }
+}
+
+/// A lazily-spawned, persistent worker pool. Engines share one process-wide
+/// instance via [`WorkerPool::global`]; tests may embed private instances
+/// (dropping a pool exits and joins its threads).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    jobs: AtomicU64,
+}
+
+impl WorkerPool {
+    /// A pool with exactly `threads` worker threads (0 is valid: every job
+    /// runs entirely on its caller).
+    pub fn with_threads(threads: usize) -> WorkerPool {
+        let shared =
+            Arc::new(Shared { queue: Mutex::new(VecDeque::new()), available: Condvar::new() });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cutespmm-exec-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn exec pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, jobs: AtomicU64::new(0) }
+    }
+
+    /// The process-wide pool, spawned on first use with
+    /// `available_parallelism - 1` threads (the calling thread is the final
+    /// participant, so caller + pool together saturate the machine without
+    /// oversubscribing it).
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            WorkerPool::with_threads(hw.saturating_sub(1))
+        })
+    }
+
+    /// Worker threads owned by this pool (excludes callers).
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Jobs submitted over the pool's lifetime (test/report hook: serving
+    /// steady state grows this while `threads` stays constant — no per-call
+    /// spawning).
+    pub fn jobs_run(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Run `task(p)` for every `p in 0..parts`, in parallel across the pool
+    /// threads and the calling thread. Returns once every part completed; a
+    /// panicking part is re-raised on the caller with its original payload.
+    pub fn run(&self, parts: usize, task: &(dyn Fn(usize) + Sync)) {
+        if parts == 0 {
+            return;
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if parts == 1 || self.handles.is_empty() {
+            for p in 0..parts {
+                task(p);
+            }
+            return;
+        }
+        // erase the borrow's lifetime; sound because this frame blocks on
+        // the completion latch below before the borrow can expire
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let job = Arc::new(Job {
+            task: erased as *const (dyn Fn(usize) + Sync),
+            parts,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        {
+            // one ticket per helper; the caller covers the final part slot
+            let tickets = (parts - 1).min(self.handles.len());
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..tickets {
+                q.push_back(Ticket::Work(job.clone()));
+            }
+        }
+        self.shared.available.notify_all();
+        job.execute();
+        let mut g = job.done.lock().unwrap();
+        while job.completed.load(Ordering::Acquire) < parts {
+            g = job.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // exit markers queue *behind* any pending work tickets, so dropped
+        // pools drain gracefully; then join so no thread outlives the pool
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..self.handles.len() {
+                q.push_back(Ticket::Exit);
+            }
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_part_exactly_once() {
+        let pool = WorkerPool::with_threads(3);
+        for parts in [1usize, 2, 7, 64] {
+            let counts: Vec<AtomicUsize> = (0..parts).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(parts, &|p| {
+                counts[p].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1), "parts={parts}");
+        }
+        assert_eq!(pool.jobs_run(), 4);
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_on_caller() {
+        let pool = WorkerPool::with_threads(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(5, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn reused_across_repeated_concurrent_calls() {
+        // the pool-reuse property the runtime exists for: many concurrent
+        // callers over many iterations, one thread set, correct sums
+        let pool = Arc::new(WorkerPool::with_threads(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let total = total.clone();
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        pool.run(8, &|p| {
+                            total.fetch_add(p + 1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        // 4 threads x 25 jobs x sum(1..=8)
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 36);
+        assert_eq!(pool.jobs_run(), 100);
+    }
+
+    #[test]
+    fn panicking_part_propagates_payload_and_pool_survives() {
+        let pool = WorkerPool::with_threads(1);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|p| {
+                if p == 2 {
+                    panic!("boom-42");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom-42", "the original payload survives the pool boundary");
+        // the pool is still usable afterwards
+        let ok = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn drop_joins_worker_threads() {
+        let pool = WorkerPool::with_threads(2);
+        let hits = AtomicUsize::new(0);
+        pool.run(6, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+        drop(pool); // must not hang: exit tickets wake and join both workers
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,105 @@
+//! TN column-slab selection — operand-residency blocking over the dense
+//! width.
+//!
+//! The GPU kernel's warp-coarsened `TN` keeps the C fragment in registers
+//! and the B fragment in shared memory for the whole panel. The CPU analogue:
+//! at serving-scale `N` a panel's `TM × N` C tile (and the B rows it re-reads
+//! per brick column) no longer fit L1, so every brick row streams C and B
+//! from L2. Processing C in column slabs restores residency: the slab of the
+//! C tile stays L1-hot across *all* blocks of a work unit while the packed
+//! A-side stream and B row slabs stream through.
+
+use crate::params::{BRICK_K, TM};
+use crate::spmm::exec::microkernel::LANES;
+
+/// L1 data budget the slab model targets (bytes): half of a typical 32 KiB
+/// L1d, leaving the rest for the packed block stream, metadata and B-row
+/// lookahead.
+const L1_TARGET_BYTES: usize = 16 * 1024;
+
+/// Narrowest slab worth the per-slab decode re-walk.
+pub const MIN_SLAB: usize = 32;
+
+/// Widest slab the model will pick (beyond this the C tile alone overflows
+/// the target on every cache geometry we care about).
+pub const MAX_SLAB: usize = 512;
+
+/// Choose a slab width for dense width `n` from the cache model: the
+/// resident working set per slab pass is the `TM`-row C tile plus the
+/// `BRICK_K` B rows of the brick column in flight (and one brick column of
+/// lookahead), all `f32`. Result is `LANES`-aligned, clamped to
+/// `[MIN_SLAB, MAX_SLAB]`, and collapses to a single slab when `n` already
+/// fits.
+pub fn choose(n: usize) -> usize {
+    if n == 0 {
+        return LANES;
+    }
+    let resident_rows = TM + 2 * BRICK_K;
+    let budget_cols = L1_TARGET_BYTES / (4 * resident_rows);
+    let ts = (budget_cols / LANES * LANES).clamp(MIN_SLAB, MAX_SLAB);
+    if ts >= n {
+        n
+    } else {
+        ts
+    }
+}
+
+/// Effective slab width for an engine-level override: `0` means "auto"
+/// (the cache model chooses per call); anything else is clamped to `[1, n]`.
+pub fn effective(requested: usize, n: usize) -> usize {
+    match requested {
+        0 => choose(n),
+        w if w >= n => n.max(1),
+        w => w,
+    }
+}
+
+/// The column slabs `[s0, s1)` covering `0..n` at width `ts`.
+pub fn slabs(n: usize, ts: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    let ts = ts.max(1);
+    (0..n).step_by(ts).map(move |s0| s0..(s0 + ts).min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_is_bounded_and_aligned() {
+        for n in [1usize, 8, 31, 32, 64, 128, 256, 512, 4096] {
+            let ts = choose(n);
+            assert!(ts >= 1 && ts <= n.max(MIN_SLAB), "n={n} ts={ts}");
+            if ts < n {
+                assert_eq!(ts % LANES, 0, "multi-slab widths are lane-aligned (n={n})");
+                assert!((MIN_SLAB..=MAX_SLAB).contains(&ts));
+            }
+        }
+        // small n collapses to one slab
+        assert_eq!(choose(32), 32);
+        assert_eq!(choose(1), 1);
+    }
+
+    #[test]
+    fn effective_handles_override_and_auto() {
+        assert_eq!(effective(0, 256), choose(256));
+        assert_eq!(effective(64, 256), 64);
+        assert_eq!(effective(usize::MAX, 256), 256, "MAX = unblocked single slab");
+        assert_eq!(effective(64, 16), 16, "override clamps to n");
+    }
+
+    #[test]
+    fn slabs_tile_exactly() {
+        for (n, ts) in [(0usize, 8usize), (7, 8), (8, 8), (100, 32), (256, 168), (512, 168)] {
+            let ranges: Vec<_> = slabs(n, ts).collect();
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} ts={ts}");
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+            }
+            if n > 0 {
+                assert_eq!(ranges[0].start, 0);
+                assert_eq!(ranges.last().unwrap().end, n);
+            }
+        }
+    }
+}

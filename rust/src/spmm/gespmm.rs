@@ -5,7 +5,7 @@
 //! covering the feature dimension.
 
 use crate::formats::{Coo, Csr, Dense};
-use crate::spmm::csr::parallel_row_split;
+use crate::spmm::csr::parallel_row_split_into;
 use crate::spmm::SpmmEngine;
 
 /// N-tile width: one row of B per tile fits comfortably in L1 alongside the
@@ -28,8 +28,14 @@ impl SpmmEngine for GeSpmmEngine {
     }
 
     fn spmm(&self, b: &Dense) -> Dense {
-        assert_eq!(b.rows, self.csr.cols, "B rows must equal A cols");
-        parallel_row_split(&self.csr, b, |csr, b, range, out| {
+        let mut c = Dense::zeros(self.csr.rows, b.cols);
+        self.spmm_into(b, &mut c);
+        c
+    }
+
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        crate::spmm::check_into_shapes(self, b, c);
+        parallel_row_split_into(&self.csr, b, c, |csr, b, range, out| {
             let n = b.cols;
             // staged sparse row (the "shared memory" buffer)
             let mut cols: Vec<u32> = Vec::new();

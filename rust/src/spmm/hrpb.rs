@@ -9,9 +9,15 @@
 //!   popcounts (lines 33-38, `util::bits`), and a dense `TM × N` accumulator
 //!   tile stays register/L1-stationary until the panel completes (c_frag,
 //!   line 46);
-//! * units run on a work-stealing worker pool in natural panel order
-//!   (consecutive panels share B rows — §5's cache argument); split panels
-//!   accumulate into private tiles merged once at the end — the CPU
+//! * C is processed in TN-style **column slabs** ([`exec::slab`]): the slab
+//!   of the C tile stays L1-resident across all blocks of a unit while the
+//!   hoisted B-row slab slices stream — the warp-coarsened `TN` loop of §4,
+//!   re-hosted against a cache model instead of a register file. The
+//!   1-4-term brick-row FMAs dispatch to the fixed-width
+//!   [`exec::microkernel`] bodies;
+//! * units run on the persistent [`exec::WorkerPool`] in natural panel
+//!   order (consecutive panels share B rows — §5's cache argument); split
+//!   panels accumulate into private tiles merged once at the end — the CPU
 //!   analogue of the atomic consolidation §5 prices in.
 //!
 //! The scalar FMA here skips the zero-fill the real TCU would execute;
@@ -22,9 +28,29 @@ use crate::formats::{Coo, Dense};
 use crate::hrpb::{self, pack, Hrpb};
 use crate::loadbalance::{self, Device, Schedule, WorkUnit};
 use crate::params::{BRICK_K, BRICK_M};
+use crate::spmm::exec::{self, microkernel, slab, SendPtr};
 use crate::spmm::SpmmEngine;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Execution controls, exposed for the `experiment exec` A/B measurement.
+/// Serving paths use [`ExecOpts::default`] (pooled dispatch, auto slab or
+/// the engine's planner-provided override).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOpts {
+    /// Dispatch units on the persistent worker pool; `false` spawns scoped
+    /// threads per call (the pre-runtime behavior, kept for the A/B).
+    pub pooled: bool,
+    /// Column-slab width: `0` = auto (cache model), `usize::MAX` =
+    /// unblocked (one slab spanning all of N).
+    pub slab_width: usize,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { pooled: true, slab_width: 0 }
+    }
+}
 
 pub struct HrpbEngine {
     /// Shared with the registry entry under serving — the engine never
@@ -35,6 +61,9 @@ pub struct HrpbEngine {
     /// Unit processing order, longest first (LPT dispatch).
     order: Vec<u32>,
     stats: hrpb::HrpbStats,
+    /// Column-slab width override; 0 = auto (the planner records a swept
+    /// width in its plan, the registry installs it here).
+    slab_width: usize,
 }
 
 impl HrpbEngine {
@@ -85,7 +114,7 @@ impl HrpbEngine {
         // way GPU waves do (heaviest-first LPT measured 10-20% slower on
         // banded matrices — EXPERIMENTS.md §Perf step 3).
         let order: Vec<u32> = (0..schedule.units.len() as u32).collect();
-        HrpbEngine { hrpb, schedule, order, stats }
+        HrpbEngine { hrpb, schedule, order, stats, slab_width: 0 }
     }
 
     pub fn hrpb(&self) -> &Hrpb {
@@ -100,138 +129,34 @@ impl HrpbEngine {
         &self.schedule
     }
 
-    /// Process one work unit, accumulating into `tile` (either a private
-    /// `TM × n` buffer or the panel's rows of C directly). The caller
-    /// guarantees `tile` starts zeroed.
-    #[inline]
-    fn run_unit(&self, unit: &WorkUnit, b: &Dense, tile: &mut [f32]) {
-        let n = b.cols;
-        let (tm, tk) = (self.hrpb.tm, self.hrpb.tk);
-        let brick_cols = tk / BRICK_K;
-        let panel_base = self.hrpb.blocked_row_ptr[unit.panel as usize] as usize;
-
-        for blk_idx in (panel_base + unit.start as usize)..(panel_base + unit.end as usize) {
-            // line 17-18: the packed block, read in place
-            let blk = pack::view(&self.hrpb, blk_idx);
-            let active = self.hrpb.block_active_cols(blk_idx);
-            debug_assert_eq!(active.len(), tk);
-
-            // lines 25-41: walk brick columns, decode patterns, FMA.
-            // Perf-shaped decode (EXPERIMENTS.md §Perf): B-row slices are
-            // hoisted once per brick column (the register reuse the GPU
-            // kernel gets from b_frag, lines 26-28) and the C-tile row slice
-            // once per brick row (c_frag), so the innermost loop is a pure
-            // 2-term FMA stream over N.
-            let mut vi = 0usize;
-            for bc in 0..brick_cols {
-                let (s, e) = (blk.col_ptr[bc] as usize, blk.col_ptr[bc + 1] as usize);
-                if s == e {
-                    continue;
-                }
-                // b_frag: the 4 B rows of this brick column, fetched once
-                let brows: [&[f32]; BRICK_K] = std::array::from_fn(|c| {
-                    b.row(active[bc * BRICK_K + c] as usize)
-                });
-                for j in s..e {
-                    let br = blk.rows[j] as usize * BRICK_M;
-                    let pattern = blk.patterns[j];
-                    // walk brick rows; each row's nibble of the pattern is
-                    // its nonzero mask (row-major bit order, Fig. 3(b))
-                    let mut rest = pattern;
-                    while rest != 0 {
-                        let r = rest.trailing_zeros() as usize / BRICK_K;
-                        let row_bits = (pattern >> (r * BRICK_K)) & 0xF;
-                        rest &= !(0xFu64 << (r * BRICK_K));
-                        let crow = &mut tile[(br + r) * n..(br + r + 1) * n];
-                        // the MMA (line 41), zero-skipped on CPU. The brick
-                        // row's 1-4 products fuse into ONE pass over crow —
-                        // the CPU analogue of the MMA's 4-deep contraction
-                        // (reads/writes crow once instead of per nonzero).
-                        let mut av = [0f32; BRICK_K];
-                        let mut bs: [&[f32]; BRICK_K] = [brows[0]; BRICK_K];
-                        let mut cnt = 0usize;
-                        let mut bits = row_bits;
-                        while bits != 0 {
-                            let c = bits.trailing_zeros() as usize;
-                            bits &= bits - 1;
-                            av[cnt] = blk.values[vi];
-                            bs[cnt] = brows[c];
-                            vi += 1;
-                            cnt += 1;
-                        }
-                        match cnt {
-                            1 => {
-                                let (a0, b0) = (av[0], &bs[0][..n]);
-                                for (cv, v0) in crow.iter_mut().zip(b0) {
-                                    *cv += a0 * v0;
-                                }
-                            }
-                            2 => {
-                                let (a0, b0) = (av[0], &bs[0][..n]);
-                                let (a1, b1) = (av[1], &bs[1][..n]);
-                                for ((cv, v0), v1) in crow.iter_mut().zip(b0).zip(b1) {
-                                    *cv += a0 * v0 + a1 * v1;
-                                }
-                            }
-                            3 => {
-                                let (a0, b0) = (av[0], &bs[0][..n]);
-                                let (a1, b1) = (av[1], &bs[1][..n]);
-                                let (a2, b2) = (av[2], &bs[2][..n]);
-                                for (((cv, v0), v1), v2) in
-                                    crow.iter_mut().zip(b0).zip(b1).zip(b2)
-                                {
-                                    *cv += a0 * v0 + a1 * v1 + a2 * v2;
-                                }
-                            }
-                            _ => {
-                                let (a0, b0) = (av[0], &bs[0][..n]);
-                                let (a1, b1) = (av[1], &bs[1][..n]);
-                                let (a2, b2) = (av[2], &bs[2][..n]);
-                                let (a3, b3) = (av[3], &bs[3][..n]);
-                                for ((((cv, v0), v1), v2), v3) in
-                                    crow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
-                                {
-                                    *cv += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-            let _ = tm;
-        }
-    }
-}
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    /// Accessor so closures capture the whole `SendPtr` (Send + Sync) rather
-    /// than disjointly capturing the raw pointer field (2021 capture rules).
-    #[inline]
-    fn get(self) -> *mut f32 {
-        self.0
-    }
-}
-
-impl SpmmEngine for HrpbEngine {
-    fn name(&self) -> &'static str {
-        "cutespmm"
+    /// The column-slab width override (0 = auto per call).
+    pub fn slab_width(&self) -> usize {
+        self.slab_width
     }
 
-    fn spmm(&self, b: &Dense) -> Dense {
-        assert_eq!(b.rows, self.hrpb.cols, "B rows must equal A cols");
+    /// Install a column-slab width (the planner knob; 0 restores auto).
+    pub fn set_slab_width(&mut self, width: usize) {
+        self.slab_width = width;
+    }
+
+    /// `C = A · B` with explicit execution controls (`experiment exec`).
+    pub fn spmm_opts(&self, b: &Dense, opts: ExecOpts) -> Dense {
+        let mut c = Dense::zeros(self.hrpb.rows, b.cols);
+        self.spmm_into_opts(b, &mut c, opts);
+        c
+    }
+
+    /// `spmm_into` with explicit execution controls.
+    pub fn spmm_into_opts(&self, b: &Dense, c: &mut Dense, opts: ExecOpts) {
+        crate::spmm::check_into_shapes(self, b, c);
         let n = b.cols;
         let tm = self.hrpb.tm;
-        let mut c = Dense::zeros(self.hrpb.rows, n);
+        c.data.fill(0.0);
         let units = &self.schedule.units;
-        if units.is_empty() {
-            return c;
+        if units.is_empty() || n == 0 {
+            return;
         }
-
+        let ts = slab::effective(opts.slab_width, n);
         let workers = crate::spmm::num_workers(self.hrpb.rows).min(units.len());
         let next = AtomicUsize::new(0);
         // partial tiles from atomic (split-panel) units, merged afterwards
@@ -240,7 +165,8 @@ impl SpmmEngine for HrpbEngine {
         let rows = self.hrpb.rows;
 
         let worker = |_: usize| {
-            let mut tile = vec![0f32; tm * n];
+            // private tile for atomic units only, reused across them
+            let mut tile: Vec<f32> = Vec::new();
             loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= self.order.len() {
@@ -250,26 +176,32 @@ impl SpmmEngine for HrpbEngine {
                 let r0 = unit.panel as usize * tm;
                 let rows_here = tm.min(rows - r0);
                 if unit.atomic {
-                    tile.fill(0.0);
-                    self.run_unit(unit, b, &mut tile);
-                    partials.lock().unwrap().push((unit.panel, tile[..].to_vec()));
+                    tile.clear();
+                    tile.resize(rows_here * n, 0.0);
+                    self.run_unit(unit, b, &mut tile, n, ts);
+                    // the copy covers only the ragged panel's real rows and
+                    // is built *before* taking the partials lock
+                    let copy = tile.clone();
+                    partials.lock().unwrap().push((unit.panel, copy));
                 } else {
                     // exclusive writer of this panel's rows: accumulate
                     // straight into C (the tile buffer + copy would double
-                    // the per-panel traffic — §Perf step 2).
+                    // the per-panel traffic — EXPERIMENTS.md §Perf step 2).
                     // SAFETY: non-atomic units own their panel exclusively
                     // (Schedule::validate guarantees exact tiling), and C
-                    // was allocated zeroed, matching run_unit's contract.
+                    // was zeroed above, matching run_unit's contract.
                     let out = unsafe {
                         std::slice::from_raw_parts_mut(cptr.get().add(r0 * n), rows_here * n)
                     };
-                    self.run_unit(unit, b, out);
+                    self.run_unit(unit, b, out, n, ts);
                 }
             }
         };
 
         if workers <= 1 {
             worker(0);
+        } else if opts.pooled {
+            exec::WorkerPool::global().run(workers, &worker);
         } else {
             std::thread::scope(|s| {
                 for w in 0..workers {
@@ -282,13 +214,104 @@ impl SpmmEngine for HrpbEngine {
         // consolidation of split panels (the atomic cost of §5)
         for (panel, tile) in partials.into_inner().unwrap() {
             let r0 = panel as usize * tm;
-            let rows_here = tm.min(rows - r0);
-            let out = &mut c.data[r0 * n..r0 * n + rows_here * n];
-            for (cv, tv) in out.iter_mut().zip(&tile[..rows_here * n]) {
+            let out = &mut c.data[r0 * n..r0 * n + tile.len()];
+            for (cv, tv) in out.iter_mut().zip(&tile) {
                 *cv += tv;
             }
         }
-        c
+    }
+
+    /// Process one work unit, accumulating into `tile` (either a private
+    /// `rows_here × n` buffer or the panel's rows of C directly). The caller
+    /// guarantees `tile` starts zeroed; `ts` is the column-slab width.
+    #[inline]
+    fn run_unit(&self, unit: &WorkUnit, b: &Dense, tile: &mut [f32], n: usize, ts: usize) {
+        let tk = self.hrpb.tk;
+        let brick_cols = tk / BRICK_K;
+        let panel_base = self.hrpb.blocked_row_ptr[unit.panel as usize] as usize;
+        let blocks = (panel_base + unit.start as usize)..(panel_base + unit.end as usize);
+
+        // TN loop (§4): one cache-sized column slab of the C tile at a time,
+        // held L1-resident across every block of the unit. The packed
+        // stream is re-decoded per slab — index arithmetic, cheap next to
+        // the slab's FMA volume.
+        for cols in slab::slabs(n, ts) {
+            let (s0, s1) = (cols.start, cols.end);
+            for blk_idx in blocks.clone() {
+                // line 17-18: the packed block, read in place
+                let blk = pack::view(&self.hrpb, blk_idx);
+                let active = self.hrpb.block_active_cols(blk_idx);
+                debug_assert_eq!(active.len(), tk);
+
+                // lines 25-41: walk brick columns, decode patterns, FMA
+                let mut vi = 0usize;
+                for bc in 0..brick_cols {
+                    let (s, e) = (blk.col_ptr[bc] as usize, blk.col_ptr[bc + 1] as usize);
+                    if s == e {
+                        continue;
+                    }
+                    // b_frag: the 4 B-row *slab slices* of this brick
+                    // column, hoisted once per slab (lines 26-28)
+                    let brows: [&[f32]; BRICK_K] = std::array::from_fn(|c| {
+                        &b.row(active[bc * BRICK_K + c] as usize)[s0..s1]
+                    });
+                    for j in s..e {
+                        let br = blk.rows[j] as usize * BRICK_M;
+                        let pattern = blk.patterns[j];
+                        // walk brick rows; each row's nibble of the pattern
+                        // is its nonzero mask (row-major bit order, Fig 3b)
+                        let mut rest = pattern;
+                        while rest != 0 {
+                            let r = rest.trailing_zeros() as usize / BRICK_K;
+                            let row_bits = (pattern >> (r * BRICK_K)) & 0xF;
+                            rest &= !(0xFu64 << (r * BRICK_K));
+                            let row0 = (br + r) * n;
+                            let crow = &mut tile[row0 + s0..row0 + s1];
+                            // the MMA (line 41), zero-skipped on CPU. The
+                            // brick row's 1-4 products fuse into ONE pass
+                            // over the C slab — the CPU analogue of the
+                            // MMA's 4-deep contraction.
+                            let mut av = [0f32; BRICK_K];
+                            let mut bs: [&[f32]; BRICK_K] = [brows[0]; BRICK_K];
+                            let mut cnt = 0usize;
+                            let mut bits = row_bits;
+                            while bits != 0 {
+                                let ci = bits.trailing_zeros() as usize;
+                                bits &= bits - 1;
+                                av[cnt] = blk.values[vi];
+                                bs[cnt] = brows[ci];
+                                vi += 1;
+                                cnt += 1;
+                            }
+                            match cnt {
+                                1 => microkernel::fma1(crow, av[0], bs[0]),
+                                2 => microkernel::fma2(crow, [av[0], av[1]], [bs[0], bs[1]]),
+                                3 => microkernel::fma3(
+                                    crow,
+                                    [av[0], av[1], av[2]],
+                                    [bs[0], bs[1], bs[2]],
+                                ),
+                                _ => microkernel::fma4(crow, av, bs),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl SpmmEngine for HrpbEngine {
+    fn name(&self) -> &'static str {
+        "cutespmm"
+    }
+
+    fn spmm(&self, b: &Dense) -> Dense {
+        self.spmm_opts(b, ExecOpts { pooled: true, slab_width: self.slab_width })
+    }
+
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        self.spmm_into_opts(b, c, ExecOpts { pooled: true, slab_width: self.slab_width });
     }
 
     fn flops(&self, n: usize) -> f64 {
@@ -379,5 +402,78 @@ mod tests {
         let want = coo.to_dense().matmul(&b);
         let got = HrpbEngine::prepare(&coo).spmm(&b);
         assert!(got.rel_fro_error(&want) < 1e-5);
+    }
+
+    /// Every (pooled, slab) combination must agree with the dense oracle,
+    /// including slab widths that do not divide N, exceed N, or force
+    /// remainder-only micro-kernel passes.
+    #[test]
+    fn slab_boundaries_match_oracle() {
+        let mut rng = Rng::new(94);
+        let coo = crate::formats::Coo::random(200, 160, 0.06, &mut rng);
+        let engine = HrpbEngine::prepare(&coo);
+        for n in [1usize, 7, 33, 40, 256] {
+            let b = Dense::random(160, n, &mut rng);
+            let want = coo.to_dense().matmul(&b);
+            for pooled in [true, false] {
+                for slab_width in [0usize, 1, 3, 16, 24, n, n + 13, usize::MAX] {
+                    let got = engine.spmm_opts(&b, ExecOpts { pooled, slab_width });
+                    let err = got.rel_fro_error(&want);
+                    assert!(err < 1e-5, "n={n} pooled={pooled} slab={slab_width}: err {err}");
+                }
+            }
+        }
+    }
+
+    /// Installed slab overrides survive and change nothing numerically.
+    #[test]
+    fn slab_width_knob_is_numerically_inert() {
+        let mut rng = Rng::new(95);
+        let coo = crate::formats::Coo::random(300, 256, 0.03, &mut rng);
+        let b = Dense::random(256, 200, &mut rng);
+        let auto = HrpbEngine::prepare(&coo);
+        assert_eq!(auto.slab_width(), 0);
+        let want = auto.spmm(&b);
+        let mut pinned = HrpbEngine::prepare(&coo);
+        pinned.set_slab_width(48);
+        assert_eq!(pinned.slab_width(), 48);
+        assert!(pinned.spmm(&b).rel_fro_error(&want) < 1e-6);
+    }
+
+    /// The pool-reuse property: many threads issuing many calls against
+    /// shared engines stay correct and never spawn per call (the global
+    /// pool's thread count is fixed; its job counter grows).
+    #[test]
+    fn pooled_execution_is_correct_across_repeated_concurrent_calls() {
+        let mut rng = Rng::new(96);
+        let coo = crate::formats::Coo::random(512, 256, 0.04, &mut rng);
+        let engine = std::sync::Arc::new(HrpbEngine::prepare(&coo));
+        let dense = std::sync::Arc::new(coo.to_dense());
+        let jobs_before = exec::WorkerPool::global().jobs_run();
+        let threads_before = exec::WorkerPool::global().threads();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let engine = engine.clone();
+                let dense = dense.clone();
+                s.spawn(move || {
+                    let mut c = Dense::zeros(512, 16);
+                    for i in 0..6 {
+                        let b = Dense::random(256, 16, &mut Rng::new(t * 100 + i));
+                        let want = dense.matmul(&b);
+                        engine.spmm_into(&b, &mut c);
+                        assert!(c.rel_fro_error(&want) < 1e-5, "thread {t} iter {i}");
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            exec::WorkerPool::global().threads(),
+            threads_before,
+            "no per-call thread creation"
+        );
+        // single-core hosts run the workers<=1 fast path and skip the pool
+        if crate::spmm::num_workers(512) > 1 {
+            assert!(exec::WorkerPool::global().jobs_run() >= jobs_before + 24);
+        }
     }
 }

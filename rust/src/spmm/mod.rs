@@ -14,6 +14,7 @@
 pub mod coo;
 pub mod csr;
 pub mod dense;
+pub mod exec;
 pub mod gespmm;
 pub mod hrpb;
 pub mod sputnik;
@@ -29,6 +30,20 @@ pub trait SpmmEngine: Send + Sync {
     fn name(&self) -> &'static str;
     /// `C = A · B`; `B.rows` must equal the sparse matrix's column count.
     fn spmm(&self, b: &Dense) -> Dense;
+    /// `C = A · B` into a caller-owned output (the zero-allocation serving
+    /// path; pair with [`exec::OutputArena`]). `c` must already be shaped
+    /// `rows × b.cols`; its prior contents are overwritten, so a reused
+    /// dirty buffer is fine. The parallel engines override this to write in
+    /// place; the default delegates to [`SpmmEngine::spmm`] and copies.
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        let out = self.spmm(b);
+        assert_eq!(
+            (c.rows, c.cols),
+            (out.rows, out.cols),
+            "C shape must be rows x B cols"
+        );
+        c.data.copy_from_slice(&out.data);
+    }
     /// Useful FLOPs per invocation at width `n`: `2 · nnz · n`.
     fn flops(&self, n: usize) -> f64;
     /// FLOPs the hardware would *execute* per invocation, including
@@ -126,6 +141,14 @@ impl Algo {
     }
 }
 
+/// Shared `spmm_into` precondition: B matches the sparse shape and C is
+/// already `rows × B.cols` (the panic strings match the `spmm` asserts).
+pub(crate) fn check_into_shapes(engine: &dyn SpmmEngine, b: &Dense, c: &Dense) {
+    let (rows, cols) = engine.shape();
+    assert_eq!(b.rows, cols, "B rows must equal A cols");
+    assert_eq!((c.rows, c.cols), (rows, b.cols), "C shape must be rows x B cols");
+}
+
 /// Worker count for the parallel engines (capped so test machines with many
 /// cores don't oversubscribe tiny matrices).
 pub(crate) fn num_workers(rows: usize) -> usize {
@@ -182,6 +205,17 @@ pub(crate) mod testutil {
         let got = algo.prepare(&coo).spmm(&b);
         assert_eq!(got.data.iter().filter(|&&v| v != 0.0).count(), 0);
     }
+
+    /// `spmm_into` must agree with `spmm` — including into a dirty (NaN)
+    /// reused buffer, which catches any path that forgets to overwrite C.
+    pub fn spmm_into_matches_spmm(engine: &dyn SpmmEngine, b: &Dense) {
+        let want = engine.spmm(b);
+        let (rows, _) = engine.shape();
+        let mut c = Dense::from_vec(rows, b.cols, vec![f32::NAN; rows * b.cols]);
+        engine.spmm_into(b, &mut c);
+        let err = c.rel_fro_error(&want);
+        assert!(err < 1e-6, "{}: spmm_into diverged from spmm (rel err {err})", engine.name());
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +240,35 @@ mod tests {
             seen[algo.index()] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn prop_spmm_into_matches_spmm_for_every_algo() {
+        use crate::util::proptest::{check, SparseGen};
+        use crate::util::rng::Rng;
+        let g = SparseGen { max_m: 64, max_k: 96, max_density: 0.2 };
+        check("spmm_into == spmm (all engines)", 10, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            // n = 33: odd width, exercises the micro-kernel lane remainder
+            let b = Dense::random(case.k, 33, &mut Rng::new(case.m as u64 * 7 + 1));
+            for algo in Algo::all() {
+                testutil::spmm_into_matches_spmm(algo.prepare(&coo).as_ref(), &b);
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn spmm_into_matches_on_large_parallel_shapes() {
+        use crate::util::rng::Rng;
+        // rows large enough that every engine takes its parallel (pooled)
+        // path, plus a serving-scale width that spans multiple slabs
+        let mut rng = Rng::new(0xEC0);
+        let coo = Coo::random(1024, 512, 0.01, &mut rng);
+        let b = Dense::random(512, 256, &mut rng);
+        for algo in Algo::all() {
+            testutil::spmm_into_matches_spmm(algo.prepare(&coo).as_ref(), &b);
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! irregular matrices.
 
 use crate::formats::{Coo, Csr, Dense};
+use crate::spmm::exec::{self, SendPtr};
 use crate::spmm::{num_workers, SpmmEngine};
 
 pub struct SputnikEngine {
@@ -39,41 +40,39 @@ impl SpmmEngine for SputnikEngine {
     }
 
     fn spmm(&self, b: &Dense) -> Dense {
-        assert_eq!(b.rows, self.csr.cols, "B rows must equal A cols");
+        let mut c = Dense::zeros(self.csr.rows, b.cols);
+        self.spmm_into(b, &mut c);
+        c
+    }
+
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        crate::spmm::check_into_shapes(self, b, c);
         let n = b.cols;
-        let mut c = Dense::zeros(self.csr.rows, n);
+        c.data.fill(0.0);
         let workers = num_workers(self.csr.rows);
         if workers <= 1 || self.csr.rows < 128 {
             for &r in &self.swizzle {
                 row_kernel(&self.csr, b, r as usize, c.row_mut(r as usize));
             }
-            return c;
+            return;
         }
         // round-robin deal of the swizzled order: worker w takes rows
         // swizzle[w], swizzle[w + workers], ... — balanced nnz by
         // construction. Output rows are disjoint; hand out raw row pointers.
         let cptr = SendPtr(c.data.as_mut_ptr());
-        std::thread::scope(|s| {
-            for w in 0..workers {
-                let swizzle = &self.swizzle;
-                let csr = &self.csr;
-                let cptr = cptr;
-                s.spawn(move || {
-                    let mut i = w;
-                    while i < swizzle.len() {
-                        let r = swizzle[i] as usize;
-                        // SAFETY: each row index appears exactly once in the
-                        // swizzle, so row slices are disjoint across workers.
-                        let crow = unsafe {
-                            std::slice::from_raw_parts_mut(cptr.get().add(r * n), n)
-                        };
-                        row_kernel(csr, b, r, crow);
-                        i += workers;
-                    }
-                });
+        let swizzle = &self.swizzle;
+        let csr = &self.csr;
+        exec::WorkerPool::global().run(workers, &|w| {
+            let mut i = w;
+            while i < swizzle.len() {
+                let r = swizzle[i] as usize;
+                // SAFETY: each row index appears exactly once in the
+                // swizzle, so row slices are disjoint across workers.
+                let crow = unsafe { std::slice::from_raw_parts_mut(cptr.get().add(r * n), n) };
+                row_kernel(csr, b, r, crow);
+                i += workers;
             }
         });
-        c
     }
 
     fn flops(&self, n: usize) -> f64 {
@@ -82,20 +81,6 @@ impl SpmmEngine for SputnikEngine {
 
     fn shape(&self) -> (usize, usize) {
         (self.csr.rows, self.csr.cols)
-    }
-}
-
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    /// Accessor so closures capture the whole `SendPtr` (Send + Sync) rather
-    /// than disjointly capturing the raw pointer field (2021 capture rules).
-    #[inline]
-    fn get(self) -> *mut f32 {
-        self.0
     }
 }
 
@@ -123,6 +108,15 @@ mod tests {
     #[test]
     fn empty_ok() {
         testutil::engine_handles_empty(Algo::Sputnik);
+    }
+
+    #[test]
+    fn spmm_into_reuses_a_dirty_buffer() {
+        let mut rng = Rng::new(62);
+        let coo = Coo::random(700, 300, 0.02, &mut rng);
+        let engine = SputnikEngine::prepare(&coo);
+        let b = Dense::random(300, 20, &mut rng);
+        testutil::spmm_into_matches_spmm(&engine, &b);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! against cuTeSpMM.
 
 use crate::formats::{Coo, Dense};
+use crate::spmm::exec::{self, SendPtr};
 use crate::spmm::{chunks, num_workers, SpmmEngine};
 
 const WIN_H: usize = 16; // row-window height = TC block rows
@@ -93,10 +94,16 @@ impl SpmmEngine for TcGnnEngine {
     }
 
     fn spmm(&self, b: &Dense) -> Dense {
-        assert_eq!(b.rows, self.cols, "B rows must equal A cols");
+        let mut c = Dense::zeros(self.rows, b.cols);
+        self.spmm_into(b, &mut c);
+        c
+    }
+
+    fn spmm_into(&self, b: &Dense, c: &mut Dense) {
+        crate::spmm::check_into_shapes(self, b, c);
         let n = b.cols;
         let num_windows = self.win_ptr.len() - 1;
-        let mut c = Dense::zeros(self.rows, n);
+        c.data.fill(0.0);
 
         let run = |win_range: std::ops::Range<usize>, out: &mut [f32]| {
             let base_row = win_range.start * WIN_H;
@@ -131,25 +138,24 @@ impl SpmmEngine for TcGnnEngine {
         let workers = num_workers(self.rows);
         if workers <= 1 || num_windows < 8 {
             run(0..num_windows, &mut c.data);
-            return c;
+            return;
         }
         let ranges = chunks(num_windows, workers);
-        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(ranges.len());
-        let mut rest: &mut [f32] = &mut c.data;
-        for rg in &ranges {
-            let rows_here = (rg.end.min(self.rows.div_ceil(WIN_H)) * WIN_H).min(self.rows)
-                - (rg.start * WIN_H).min(self.rows);
-            let (head, tail) = rest.split_at_mut(rows_here * n);
-            slices.push(head);
-            rest = tail;
-        }
-        std::thread::scope(|s| {
-            for (rg, out) in ranges.into_iter().zip(slices) {
-                let run = &run;
-                s.spawn(move || run(rg, out));
-            }
+        let cptr = SendPtr(c.data.as_mut_ptr());
+        exec::WorkerPool::global().run(ranges.len(), &|w| {
+            let rg = ranges[w].clone();
+            let row_start = (rg.start * WIN_H).min(self.rows);
+            let row_end = (rg.end * WIN_H).min(self.rows);
+            // SAFETY: window ranges are disjoint and contiguous, so the
+            // per-part row slices never alias.
+            let out = unsafe {
+                std::slice::from_raw_parts_mut(
+                    cptr.get().add(row_start * n),
+                    (row_end - row_start) * n,
+                )
+            };
+            run(rg, out);
         });
-        c
     }
 
     fn flops(&self, n: usize) -> f64 {
