@@ -656,6 +656,11 @@ pub struct PrepOutcome {
     pub parallel_build_s: f64,
     /// Parallel output byte-identical to serial?
     pub parallel_identical: bool,
+    /// One-time reorder proposal cost (signatures + clustering + pricing,
+    /// [`crate::reorder::propose`]) — the cold-build report now splits
+    /// build vs. reorder so the activation gate's cost side is measured,
+    /// not assumed.
+    pub reorder_s: f64,
     /// Cold registration (build + stats + persist) through a store-backed
     /// registry.
     pub cold_register_s: f64,
@@ -689,6 +694,7 @@ pub fn prep_outcomes(dir: &std::path::Path) -> Vec<PrepOutcome> {
         let (serial, serial_build_s) = time_once(|| builder::build_with(&csr, TM, TK));
         let (parallel, parallel_build_s) =
             time_once(|| builder::build_with_parallel(&csr, TM, TK, threads));
+        let (_proposal, reorder_s) = time_once(|| crate::reorder::propose(&csr, TM, TK));
         let parallel_identical = serial.packed == parallel.packed
             && serial.size_ptr == parallel.size_ptr
             && serial.blocked_row_ptr == parallel.blocked_row_ptr
@@ -718,6 +724,7 @@ pub fn prep_outcomes(dir: &std::path::Path) -> Vec<PrepOutcome> {
             serial_build_s,
             parallel_build_s,
             parallel_identical,
+            reorder_s,
             cold_register_s,
             warm_register_s,
             warm_hit,
@@ -757,6 +764,7 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
             format!("{:.2}", o.parallel_build_s * 1e3),
             format!("{:.2}x", o.serial_build_s / o.parallel_build_s.max(1e-12)),
             if o.parallel_identical { "yes".into() } else { "NO".into() },
+            format!("{:.2}", o.reorder_s * 1e3),
             format!("{:.2}", o.cold_register_s * 1e3),
             format!("{:.2}", o.warm_register_s * 1e3),
             format!("{:.1}x", o.cold_register_s / o.warm_register_s.max(1e-12)),
@@ -768,6 +776,7 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
             format!("{}", o.serial_build_s),
             format!("{}", o.parallel_build_s),
             o.parallel_identical.to_string(),
+            format!("{}", o.reorder_s),
             format!("{}", o.cold_register_s),
             format!("{}", o.warm_register_s),
             o.warm_hit.to_string(),
@@ -782,6 +791,7 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
             "parallel(ms)",
             "build speedup",
             "identical",
+            "reorder(ms)",
             "cold reg(ms)",
             "warm reg(ms)",
             "warm speedup",
@@ -799,7 +809,9 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
     out.push_str(
         "expected shape: warm start skips the entire build+plan pass (file read + near-memcpy \
          decode), and the parallel build scales with panels across cores while staying \
-         byte-identical to the serial result.\n",
+         byte-identical to the serial result. The reorder column is the one-time similarity \
+         pass the activation gate weighs against its predicted gain — the cold-build cost now \
+         reports its build vs. reorder split.\n",
     );
     let _ = render::write_csv(
         &results_dir().join("prep.csv"),
@@ -809,6 +821,7 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
             "serial_build_s",
             "parallel_build_s",
             "parallel_identical",
+            "reorder_s",
             "cold_register_s",
             "warm_register_s",
             "warm_hit",
@@ -1073,6 +1086,335 @@ pub fn exec_report(outcomes: &[ExecOutcome]) -> String {
         &csv,
     );
     let json_path = write_exec_json(outcomes, geomean_256);
+    out.push_str(&format!("machine-readable record -> {}\n", json_path.display()));
+    out
+}
+
+/// The reorder-corpus families: structured matrices whose *arrival row
+/// order hides the structure* (generated clustered, then row-shuffled
+/// deterministically), plus a genuinely scattered power-law control. The
+/// shuffle is what makes the A/B honest — reordering can only win by
+/// *recovering* latent similarity, and the rmat control shows the gate
+/// declining when there is none to recover.
+fn reorder_specs(quick: bool) -> Vec<(&'static str, MatrixSpec, bool)> {
+    let s = if quick { 1usize } else { 3 };
+    vec![
+        (
+            "scattered",
+            MatrixSpec {
+                name: "reorder-scattered".into(),
+                rows: 4096 * s,
+                family: Family::BlockDiag { unit: 16, unit_density: 0.7 },
+                seed: 0x5E0D0,
+            },
+            true,
+        ),
+        (
+            "community",
+            MatrixSpec {
+                name: "reorder-community".into(),
+                rows: 4096 * s,
+                family: Family::Community {
+                    communities: 256 * s,
+                    intra_degree: 12,
+                    inter_frac: 0.05,
+                },
+                seed: 0x5E0D1,
+            },
+            true,
+        ),
+        (
+            "banded",
+            MatrixSpec {
+                name: "reorder-banded".into(),
+                rows: 4096 * s,
+                family: Family::Banded { bandwidth: 16, band_fill: 0.55, noise: 0.01 },
+                seed: 0x5E0D2,
+            },
+            true,
+        ),
+        (
+            "rmat",
+            MatrixSpec {
+                name: "reorder-rmat".into(),
+                rows: 3072 * s,
+                family: Family::Rmat { edge_factor: 8, skew: 0.57 },
+                seed: 0x5E0D3,
+            },
+            false,
+        ),
+    ]
+}
+
+/// One (family, matrix) cell of the reorder A/B: the same HRPB engine in
+/// arrival order vs. similarity-clustered order, with the planner's
+/// activation verdict and the measured α/β lift.
+#[derive(Clone, Debug)]
+pub struct ReorderOutcome {
+    pub family: String,
+    pub matrix: String,
+    pub nnz: usize,
+    pub n: usize,
+    /// The planner gate's verdict ([`crate::planner::Planner::gate_reorder`]).
+    pub activated: bool,
+    pub alpha_before: f64,
+    pub alpha_after: f64,
+    pub beta_before: f64,
+    pub beta_after: f64,
+    /// One-time proposal cost (signatures + clustering + pricing).
+    pub reorder_s: f64,
+    /// `spmm_into` median, arrival order.
+    pub original_s: f64,
+    /// `spmm_into` median, reordered (equals `original_s` when the gate
+    /// declined — the A/B charges no phantom win).
+    pub reordered_s: f64,
+    /// Worst relative error of either order against the CSR reference.
+    pub max_rel_err: f64,
+}
+
+impl ReorderOutcome {
+    /// The headline ratio: arrival order vs. similarity-clustered order.
+    pub fn speedup(&self) -> f64 {
+        self.original_s / self.reordered_s.max(1e-12)
+    }
+}
+
+/// Run the reorder A/B at the default scale. `quick` shrinks the matrices
+/// and sample counts (CI smoke).
+pub fn reorder_outcomes(quick: bool) -> Vec<ReorderOutcome> {
+    reorder_outcomes_for(&reorder_specs(quick), 128, if quick { 3 } else { 5 })
+}
+
+/// Measurement core, parameterized so debug-mode tests can afford a tiny
+/// grid.
+pub fn reorder_outcomes_for(
+    specs: &[(&'static str, MatrixSpec, bool)],
+    n: usize,
+    samples: usize,
+) -> Vec<ReorderOutcome> {
+    use crate::formats::Csr;
+    use crate::params::{TK, TM};
+    use crate::planner::Planner;
+    use crate::reorder::{self, RowPermutation};
+    use crate::spmm::hrpb::HrpbEngine;
+    use crate::util::rng::Rng;
+    use crate::util::timer::{measure, time_once};
+
+    let planner = Planner::new(Machine::a100());
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut out = Vec::new();
+    for (family, spec, shuffle) in specs {
+        let mut coo = spec.generate();
+        if coo.nnz() == 0 {
+            continue;
+        }
+        if *shuffle {
+            coo = RowPermutation::random(coo.rows, &mut Rng::new(spec.seed ^ 0x51))
+                .apply_coo(&coo);
+        }
+        let csr = Csr::from_coo(&coo);
+        let (proposal, reorder_s) = time_once(|| reorder::propose(&csr, TM, TK));
+        let activated = planner.gate_reorder(&proposal);
+
+        let engine_orig =
+            HrpbEngine::from_hrpb(crate::hrpb::builder::build_with_parallel(&csr, TM, TK, threads));
+        let reference = Algo::Csr.prepare(&coo);
+        let b = Dense::from_vec(coo.cols, n, vec![0.25; coo.cols * n]);
+        let want = reference.spmm(&b);
+        let mut reused = Dense::zeros(coo.rows, n);
+        let mut max_rel_err = engine_orig.spmm(&b).rel_fro_error(&want);
+        let original_s = measure(1, samples, || {
+            engine_orig.spmm_into(&b, &mut reused);
+        })
+        .median_s;
+        let (alpha_after, beta_after, reordered_s) = if activated {
+            let engine_reord = HrpbEngine::from_hrpb(reorder::build_reordered(
+                &csr,
+                proposal.perm.clone(),
+                TM,
+                TK,
+                threads,
+            ));
+            max_rel_err = max_rel_err.max(engine_reord.spmm(&b).rel_fro_error(&want));
+            let t = measure(1, samples, || {
+                engine_reord.spmm_into(&b, &mut reused);
+            })
+            .median_s;
+            (proposal.after.alpha, proposal.after.beta, t)
+        } else {
+            (proposal.before.alpha, proposal.before.beta, original_s)
+        };
+        out.push(ReorderOutcome {
+            family: family.to_string(),
+            matrix: spec.name.clone(),
+            nnz: coo.nnz(),
+            n,
+            activated,
+            alpha_before: proposal.before.alpha,
+            alpha_after,
+            beta_before: proposal.before.beta,
+            beta_after,
+            reorder_s,
+            original_s,
+            reordered_s,
+            max_rel_err,
+        });
+    }
+    out
+}
+
+/// Write the machine-readable perf-trajectory record the CI uploads.
+fn write_reorder_json(outcomes: &[ReorderOutcome], geomean_lowmed: f64) -> std::path::PathBuf {
+    use crate::util::json::Json;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("reorder")),
+        ("pr", Json::num(5.0)),
+        ("host_threads", Json::num(threads as f64)),
+        // a run with no scattered/community cells has no headline; 0.0
+        // keeps the JSON valid (NaN is not JSON)
+        (
+            "geomean_speedup_lowmed",
+            Json::num(if geomean_lowmed.is_finite() { geomean_lowmed } else { 0.0 }),
+        ),
+        ("acceptance_floor_lowmed", Json::num(1.2)),
+        (
+            "cases",
+            Json::arr(outcomes.iter().map(|o| {
+                Json::obj(vec![
+                    ("family", Json::str(o.family.clone())),
+                    ("matrix", Json::str(o.matrix.clone())),
+                    ("nnz", Json::num(o.nnz as f64)),
+                    ("n", Json::num(o.n as f64)),
+                    ("activated", Json::Bool(o.activated)),
+                    ("alpha_before", Json::num(o.alpha_before)),
+                    ("alpha_after", Json::num(o.alpha_after)),
+                    ("beta_before", Json::num(o.beta_before)),
+                    ("beta_after", Json::num(o.beta_after)),
+                    ("reorder_s", Json::num(o.reorder_s)),
+                    ("original_s", Json::num(o.original_s)),
+                    ("reordered_s", Json::num(o.reordered_s)),
+                    ("speedup", Json::num(o.speedup())),
+                    ("max_rel_err", Json::num(o.max_rel_err)),
+                ])
+            })),
+        ),
+    ]);
+    let path = results_dir().join("BENCH_PR5.json");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(&path, doc.to_string());
+    path
+}
+
+/// Reorder experiment — {original, reordered} × {scattered, community,
+/// banded, rmat}, emitting `BENCH_PR5.json`.
+pub fn reorder(quick: bool) -> String {
+    let outcomes = reorder_outcomes(quick);
+    reorder_report(&outcomes)
+}
+
+/// Render the reorder experiment (split so tests measure once and reuse).
+pub fn reorder_report(outcomes: &[ReorderOutcome]) -> String {
+    let mut out = String::from(
+        "== reorder: similarity-clustered HRPB packing — arrival order vs reordered ==\n",
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut lowmed_speedups = Vec::new();
+    for o in outcomes {
+        if o.family == "scattered" || o.family == "community" {
+            lowmed_speedups.push(o.speedup());
+        }
+        rows.push(vec![
+            o.family.clone(),
+            o.matrix.clone(),
+            o.n.to_string(),
+            if o.activated { "yes".into() } else { "no".into() },
+            format!("{:.4}", o.alpha_before),
+            format!("{:.4}", o.alpha_after),
+            format!("{:.2}", o.beta_before),
+            format!("{:.2}", o.beta_after),
+            format!("{:.2}", o.reorder_s * 1e3),
+            format!("{:.3}", o.original_s * 1e3),
+            format!("{:.3}", o.reordered_s * 1e3),
+            format!("{:.2}x", o.speedup()),
+            format!("{:.1e}", o.max_rel_err),
+        ]);
+        csv.push(vec![
+            o.family.clone(),
+            o.matrix.clone(),
+            o.nnz.to_string(),
+            o.n.to_string(),
+            o.activated.to_string(),
+            format!("{}", o.alpha_before),
+            format!("{}", o.alpha_after),
+            format!("{}", o.beta_before),
+            format!("{}", o.beta_after),
+            format!("{}", o.reorder_s),
+            format!("{}", o.original_s),
+            format!("{}", o.reordered_s),
+            format!("{:.4}", o.speedup()),
+            format!("{:.2e}", o.max_rel_err),
+        ]);
+    }
+    out.push_str(&render::table(
+        &[
+            "family",
+            "matrix",
+            "N",
+            "reorder",
+            "alpha_pre",
+            "alpha_post",
+            "beta_pre",
+            "beta_post",
+            "reorder(ms)",
+            "orig(ms)",
+            "reord(ms)",
+            "speedup",
+            "max_rel_err",
+        ],
+        &rows,
+    ));
+    let geomean_lowmed = if lowmed_speedups.is_empty() {
+        f64::NAN
+    } else {
+        stats::geomean(&lowmed_speedups)
+    };
+    out.push_str(&format!(
+        "\nreordered vs arrival order on the scattered/community (low/medium-synergy) \
+         families: geomean {:.2}x (acceptance floor: 1.2x)\n",
+        geomean_lowmed
+    ));
+    out.push_str(
+        "expected shape: the shuffled families recover their latent clustering (α rises \
+         several-fold, brick count — and with it decode + C-row traffic — drops), the rmat \
+         control either declines activation or gains little, results stay within 1e-5 of the \
+         CSR reference in both orders, and output rows always come back in original order \
+         (the scatter epilogue, not a post-pass).\n",
+    );
+    let _ = render::write_csv(
+        &results_dir().join("reorder.csv"),
+        &[
+            "family",
+            "matrix",
+            "nnz",
+            "n",
+            "activated",
+            "alpha_before",
+            "alpha_after",
+            "beta_before",
+            "beta_after",
+            "reorder_s",
+            "original_s",
+            "reordered_s",
+            "speedup",
+            "max_rel_err",
+        ],
+        &csv,
+    );
+    let json_path = write_reorder_json(outcomes, geomean_lowmed);
     out.push_str(&format!("machine-readable record -> {}\n", json_path.display()));
     out
 }
@@ -1523,6 +1865,7 @@ mod tests {
             assert!(o.parallel_identical, "{}: parallel build diverged from serial", o.matrix);
             assert!(o.warm_hit, "{}: warm registration missed the store", o.matrix);
             assert!(o.artifact_bytes > 0, "{}: artifact not persisted", o.matrix);
+            assert!(o.reorder_s > 0.0, "{}: reorder split not measured", o.matrix);
             cold += o.cold_register_s;
             warm += o.warm_register_s;
         }
@@ -1539,6 +1882,98 @@ mod tests {
         assert!(report.contains("warm registration"), "{report}");
         assert!(report.contains("acceptance floor: 5x"), "{report}");
         assert!(report.contains("identical"), "{report}");
+        assert!(report.contains("reorder(ms)"), "{report}");
+    }
+
+    /// Acceptance for the reorder A/B: both orders match the CSR reference
+    /// on every cell, the shuffled low/medium-synergy families actually
+    /// activate with a real α lift, declined cells never report a phantom
+    /// speedup, and BENCH_PR5.json lands with the headline geomean.
+    /// The 1.2x floor itself is printed by the release-mode `experiment
+    /// reorder` (perf figures are measured on real hosts, not asserted on
+    /// loaded debug CI runners — the exec/prep experiments set the
+    /// precedent).
+    #[test]
+    fn reorder_outcomes_are_correct_and_json_lands() {
+        let specs: Vec<(&'static str, MatrixSpec, bool)> = vec![
+            (
+                "scattered",
+                MatrixSpec {
+                    name: "reorder-test-scattered".into(),
+                    rows: 512,
+                    family: Family::BlockDiag { unit: 16, unit_density: 0.7 },
+                    seed: 0x5E0D7,
+                },
+                true,
+            ),
+            (
+                "community",
+                MatrixSpec {
+                    name: "reorder-test-community".into(),
+                    rows: 512,
+                    family: Family::Community {
+                        communities: 32,
+                        intra_degree: 12,
+                        inter_frac: 0.05,
+                    },
+                    seed: 0x5E0D8,
+                },
+                true,
+            ),
+            (
+                "rmat",
+                MatrixSpec {
+                    name: "reorder-test-rmat".into(),
+                    rows: 512,
+                    family: Family::Rmat { edge_factor: 6, skew: 0.57 },
+                    seed: 0x5E0D9,
+                },
+                false,
+            ),
+        ];
+        let outcomes = reorder_outcomes_for(&specs, 32, 1);
+        assert_eq!(outcomes.len(), specs.len());
+        for o in &outcomes {
+            assert!(
+                o.max_rel_err < 1e-5,
+                "{}: an order diverged from the CSR reference (rel err {})",
+                o.matrix,
+                o.max_rel_err
+            );
+            assert!(o.original_s > 0.0 && o.reordered_s > 0.0);
+            assert!(o.reorder_s > 0.0);
+            if o.activated {
+                assert!(
+                    o.alpha_after > o.alpha_before,
+                    "{}: activation without α lift ({} -> {})",
+                    o.matrix,
+                    o.alpha_before,
+                    o.alpha_after
+                );
+            } else {
+                assert_eq!(o.reordered_s, o.original_s, "declined cells charge no win");
+                assert_eq!(o.alpha_after, o.alpha_before);
+            }
+        }
+        // the shuffled structured families must activate — that is the
+        // entire point of the subsystem
+        for fam in ["scattered", "community"] {
+            assert!(
+                outcomes.iter().any(|o| o.family == fam && o.activated),
+                "{fam} family failed to activate"
+            );
+        }
+
+        let report = reorder_report(&outcomes);
+        assert!(report.contains("== reorder:"), "{report}");
+        assert!(report.contains("acceptance floor: 1.2x"), "{report}");
+        assert!(report.contains("BENCH_PR5.json"), "{report}");
+        let path = results_dir().join("BENCH_PR5.json");
+        let text = std::fs::read_to_string(&path).expect("BENCH_PR5.json written");
+        let doc = crate::util::json::parse(&text).expect("BENCH_PR5.json parses");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("reorder"));
+        assert!(doc.get("geomean_speedup_lowmed").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(doc.get("cases").unwrap().as_arr().unwrap().len(), outcomes.len());
     }
 
     #[test]

@@ -149,6 +149,34 @@ impl QosLane {
     }
 }
 
+/// Aggregate row-reorder gains mirrored from the registry at registration
+/// time (absolute snapshot, like the artifact counters: the registry owns
+/// the truth, the report displays it).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReorderSnapshot {
+    /// Entries serving through a similarity-clustered permutation.
+    pub matrices: u64,
+    /// Sums over those entries (the report prints the means).
+    pub alpha_before: f64,
+    pub alpha_after: f64,
+    pub beta_before: f64,
+    pub beta_after: f64,
+    /// Total one-time reorder preprocessing seconds.
+    pub seconds: f64,
+}
+
+impl ReorderSnapshot {
+    /// Fold one entry's gains into the aggregate.
+    pub fn add(&mut self, g: crate::reorder::Gains) {
+        self.matrices += 1;
+        self.alpha_before += g.alpha_before;
+        self.alpha_after += g.alpha_after;
+        self.beta_before += g.beta_before;
+        self.beta_after += g.beta_after;
+        self.seconds += g.seconds;
+    }
+}
+
 /// Aggregate serving metrics.
 #[derive(Default)]
 pub struct Metrics {
@@ -189,6 +217,10 @@ pub struct Metrics {
     /// `arena_misses` stops moving (zero output allocations per batch).
     pub arena_hits: AtomicU64,
     pub arena_misses: AtomicU64,
+    /// Row-reorder gains mirrored from the registry entries at
+    /// registration time; silent until a planner-gated permutation
+    /// activates.
+    pub reorder: Mutex<ReorderSnapshot>,
 }
 
 /// Predicted-cost seconds → the µs unit the downstream gauge accumulates.
@@ -271,6 +303,11 @@ impl Metrics {
     pub fn sync_arena(&self, hits: u64, misses: u64) {
         self.arena_hits.store(hits, Ordering::Relaxed);
         self.arena_misses.store(misses, Ordering::Relaxed);
+    }
+
+    /// Mirror the registry's aggregate reorder gains (absolute snapshot).
+    pub fn sync_reorder(&self, s: ReorderSnapshot) {
+        *self.reorder.lock().unwrap() = s;
     }
 
     /// Requests served by `algo`'s lane (test + report convenience).
@@ -356,6 +393,19 @@ impl Metrics {
         );
         if b_hits + b_misses > 0 {
             out.push_str(&format!(" arena=[hits={b_hits} misses={b_misses}]"));
+        }
+        let rs = *self.reorder.lock().unwrap();
+        if rs.matrices > 0 {
+            let m = rs.matrices as f64;
+            out.push_str(&format!(
+                " reorder=[matrices={} alpha={:.4}->{:.4} beta={:.2}->{:.2} prep_s={:.3}]",
+                rs.matrices,
+                rs.alpha_before / m,
+                rs.alpha_after / m,
+                rs.beta_before / m,
+                rs.beta_after / m,
+                rs.seconds,
+            ));
         }
         let qos_active = self
             .qos
@@ -508,6 +558,34 @@ mod tests {
         // absolute mirror: a later snapshot replaces, not accumulates
         m.sync_artifacts(crate::hrpb::StoreStats { hits: 4, misses: 1, invalidated: 2 });
         assert!(m.report().contains("hits=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn reorder_section_reports_means_and_stays_silent_otherwise() {
+        let m = Metrics::default();
+        assert!(!m.report().contains("reorder=["));
+        let mut snap = ReorderSnapshot::default();
+        snap.add(crate::reorder::Gains {
+            alpha_before: 0.04,
+            alpha_after: 0.20,
+            beta_before: 1.0,
+            beta_after: 1.0,
+            seconds: 0.5,
+        });
+        snap.add(crate::reorder::Gains {
+            alpha_before: 0.06,
+            alpha_after: 0.40,
+            beta_before: 1.0,
+            beta_after: 1.0,
+            seconds: 0.25,
+        });
+        m.sync_reorder(snap);
+        let r = m.report();
+        assert!(r.contains("reorder=[matrices=2 alpha=0.0500->0.3000"), "{r}");
+        assert!(r.contains("prep_s=0.750"), "{r}");
+        // absolute mirror: a later snapshot replaces, not accumulates
+        m.sync_reorder(ReorderSnapshot::default());
+        assert!(!m.report().contains("reorder=["));
     }
 
     #[test]

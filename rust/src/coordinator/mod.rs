@@ -307,6 +307,15 @@ impl Coordinator {
         if let Some(store) = self.registry.store() {
             self.metrics.sync_artifacts(store.stats());
         }
+        // mirror reorder gains (planner-gated row permutations) from every
+        // registered entry into the report's `reorder=[...]` section
+        let mut snap = metrics::ReorderSnapshot::default();
+        for e in self.registry.entries() {
+            if let Some(g) = e.reorder {
+                snap.add(g);
+            }
+        }
+        self.metrics.sync_reorder(snap);
         id
     }
 
@@ -1009,6 +1018,38 @@ mod tests {
         assert!(m.engine_requests(Algo::Hrpb) >= 1, "{}", m.report());
         assert!(m.engine_requests(low_plan.engine) >= 1, "{}", m.report());
         assert!(m.report().contains("routing="));
+        coord.shutdown();
+    }
+
+    /// Auto registration of a structure-hiding row order activates the
+    /// planner-gated reorder, mirrors the gains into the report, and still
+    /// serves results in original row order.
+    #[test]
+    fn auto_registration_mirrors_reorder_gains_and_serves_in_original_order() {
+        use crate::reorder::RowPermutation;
+        let coord = Coordinator::start(
+            Config { workers: 2, engine: EnginePolicy::Auto, ..Default::default() },
+            None,
+        );
+        let spec = crate::gen::MatrixSpec {
+            name: "hidden".into(),
+            rows: 512,
+            family: crate::gen::Family::BlockDiag { unit: 16, unit_density: 0.75 },
+            seed: 0xAB5,
+        };
+        let base = spec.generate();
+        let coo = RowPermutation::random(base.rows, &mut Rng::new(0xAB6)).apply_coo(&base);
+        let id = coord.register("hidden", &coo);
+        let e = coord.registry().get(id).unwrap();
+        let gains = e.reorder.expect("hidden block structure must activate reordering");
+        assert!(gains.alpha_after > gains.alpha_before);
+        let report = coord.metrics().report();
+        assert!(report.contains("reorder=[matrices=1"), "{report}");
+
+        let b = Dense::random(coo.cols, 8, &mut Rng::new(0xAB7));
+        let want = coo.to_dense().matmul(&b);
+        let resp = coord.call(id, b).unwrap();
+        assert!(resp.c.rel_fro_error(&want) < 1e-5, "rows come back in original order");
         coord.shutdown();
     }
 

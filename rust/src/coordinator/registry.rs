@@ -50,6 +50,12 @@ pub struct Entry {
     pub preprocess_time: Duration,
     /// The planner's decision for this matrix (`None` under fixed policies).
     pub plan: Option<Arc<Plan>>,
+    /// Row-reorder gains when this entry serves through a
+    /// similarity-clustered permutation ([`crate::reorder`]): α/β
+    /// before/after plus the one-time preprocessing seconds. Mirrored into
+    /// the metrics report's `reorder=[...]` section. `None` = natural
+    /// order (always, under fixed policies — activation is planner-gated).
+    pub reorder: Option<crate::reorder::Gains>,
     /// Predicted execution cost per fused B column (seconds) — the QoS
     /// admission layer's cost signal. Planned entries reuse the plan's
     /// prediction; unplanned entries fall back to the analytical A100 model
@@ -197,12 +203,56 @@ impl Registry {
             .as_ref()
             .and_then(|s| s.load_matching(fp, coo.rows, coo.cols, coo.nnz(), digest));
         let from_store = loaded.is_some();
-        let (hrpb, stats, stored_plan) = match loaded {
-            Some(a) => (Arc::new(a.hrpb), a.stats, a.plan.map(Arc::new)),
+        let (hrpb, stats, stored_plan, reorder_gains) = match loaded {
+            Some(a) => {
+                let stored = a.plan.map(Arc::new);
+                // warm start: the permutation rides in on the artifact and
+                // the gains (for reporting) on the stored plan
+                let gains = stored.as_ref().and_then(|p| p.reorder);
+                (Arc::new(a.hrpb), a.stats, stored, gains)
+            }
             None => {
-                let hrpb = Arc::new(hrpb::build_from_coo_parallel(coo));
+                let csr = crate::formats::Csr::from_coo(coo);
+                let threads =
+                    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+                // similarity-reorder pass ([`crate::reorder`]), planner-
+                // gated: the proposal is priced exactly from signatures +
+                // per-panel column unions BEFORE any build, so activation
+                // never pays for two HRPB builds
+                let mut gains = None;
+                let mut perm = None;
+                if let Some(p) = planner {
+                    let t_reorder = std::time::Instant::now();
+                    let proposal =
+                        crate::reorder::propose(&csr, crate::params::TM, crate::params::TK);
+                    if p.gate_reorder(&proposal) {
+                        gains = Some(proposal.gains(t_reorder.elapsed().as_secs_f64()));
+                        perm = Some(proposal.perm);
+                    }
+                }
+                let hrpb = Arc::new(match perm {
+                    Some(perm) => crate::reorder::build_reordered(
+                        &csr,
+                        perm,
+                        crate::params::TM,
+                        crate::params::TK,
+                        threads,
+                    ),
+                    None => hrpb::builder::build_with_parallel(
+                        &csr,
+                        crate::params::TM,
+                        crate::params::TK,
+                        threads,
+                    ),
+                });
                 let stats = hrpb::stats::compute(&hrpb);
-                (hrpb, stats, None)
+                // the built instance's exact numbers replace the estimate
+                // (identical at TM = BRICK_M, but keep them authoritative)
+                if let Some(g) = gains.as_mut() {
+                    g.alpha_after = stats.alpha;
+                    g.beta_after = stats.beta;
+                }
+                (hrpb, stats, None, gains)
             }
         };
         let plan = match (planner, stored_plan) {
@@ -216,7 +266,11 @@ impl Registry {
                 p.seed_plan(stored.clone());
                 Some(stored)
             }
-            (Some(p), _) => Some(p.plan_with_hrpb(coo, &hrpb)),
+            (Some(p), _) => {
+                let mut profile = crate::gpumodel::MatrixProfile::with_hrpb(coo, &hrpb);
+                profile.reorder = reorder_gains;
+                Some(p.plan_assembled(fp, &profile))
+            }
             (None, _) => None,
         };
         let (engine, exec): (Option<Arc<HrpbEngine>>, Arc<dyn SpmmEngine>) = match &plan {
@@ -262,6 +316,17 @@ impl Registry {
             let _ = store.save(fp, &hrpb, &stats, digest, plan.as_deref());
         }
         let preprocess_time = t0.elapsed();
+        // gains are attributed only when the HRPB engine actually serves
+        // this entry (`engine` is Some exactly then) — a plan that routed
+        // to a scalar engine executes the original COO, so reporting the
+        // permutation as active would overstate the `reorder=[...]`
+        // section. This registration's own measured gains win over gains
+        // riding a cached/stored plan from an earlier structurally-
+        // identical registration.
+        let reorder = engine
+            .is_some()
+            .then(|| reorder_gains.or_else(|| plan.as_ref().and_then(|p| p.reorder)))
+            .flatten();
         let id = MatrixId(self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
         let entry = Arc::new(Entry {
             id,
@@ -274,6 +339,7 @@ impl Registry {
             stats,
             synergy: synergy::Synergy::from_alpha(stats.alpha),
             preprocess_time,
+            reorder,
             plan,
             cost_s_per_col,
             exec,
@@ -467,6 +533,59 @@ mod tests {
         assert_eq!(reg.by_name("shared").unwrap().id, ids[0]);
     }
 
+    /// A structured matrix whose arrival row order hides the structure:
+    /// dense 16-node block-diagonal units, rows shuffled.
+    fn shuffled_blockdiag(rows: usize, seed: u64) -> Coo {
+        let spec = crate::gen::MatrixSpec {
+            name: "t".into(),
+            rows,
+            family: crate::gen::Family::BlockDiag { unit: 16, unit_density: 0.75 },
+            seed,
+        };
+        let coo = spec.generate();
+        crate::reorder::RowPermutation::random(coo.rows, &mut Rng::new(seed ^ 0x51))
+            .apply_coo(&coo)
+    }
+
+    #[test]
+    fn planned_registration_activates_reordering_and_serves_correctly() {
+        use crate::gpumodel::Machine;
+        let coo = shuffled_blockdiag(512, 70);
+        let planner = Planner::new(Machine::a100());
+        let reg = Registry::new();
+        let id = reg.register_planned("scrambled", &coo, &planner);
+        let e = reg.get(id).unwrap();
+
+        // the gate must fire on recoverable structure, and the gains must
+        // show a real α lift
+        let gains = e.reorder.expect("reorder must activate on hidden block structure");
+        assert!(
+            gains.alpha_after > gains.alpha_before * 1.5,
+            "α {} -> {}",
+            gains.alpha_before,
+            gains.alpha_after
+        );
+        assert_eq!(e.plan.as_ref().unwrap().reorder, Some(gains), "plan records the knob");
+        assert!(e.hrpb.perm.is_some(), "the built HRPB carries the permutation");
+        assert!((e.stats.alpha - gains.alpha_after).abs() < 1e-12);
+
+        // served results come back in ORIGINAL row order
+        let b = crate::formats::Dense::random(coo.cols, 16, &mut Rng::new(71));
+        let want = coo.to_dense().matmul(&b);
+        let got = e.exec.spmm(&b);
+        assert!(got.rel_fro_error(&want) < 1e-5, "scatter epilogue restores row order");
+    }
+
+    #[test]
+    fn unplanned_registration_never_reorders() {
+        let reg = Registry::new();
+        let coo = shuffled_blockdiag(512, 72);
+        let id = reg.register("plain", &coo);
+        let e = reg.get(id).unwrap();
+        assert!(e.reorder.is_none(), "activation is planner-gated");
+        assert!(e.hrpb.perm.is_none());
+    }
+
     fn tmp_store(tag: &str) -> Arc<crate::hrpb::ArtifactStore> {
         let dir = crate::hrpb::store::test_dir(&format!("registry_{tag}"));
         Arc::new(crate::hrpb::ArtifactStore::open(dir).unwrap())
@@ -524,6 +643,41 @@ mod tests {
         let cached = planner2.plan(&coo);
         assert_eq!(planner2.cache().stats().hits, hits_before + 1, "seeded plan must be cached");
         assert_eq!(cached.engine, warm_plan.engine);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn warm_start_restores_the_permutation_and_gains() {
+        use crate::gpumodel::Machine;
+        let store = tmp_store("reorder");
+        let coo = shuffled_blockdiag(512, 73);
+
+        // cold: activation builds the reordered HRPB and persists it
+        let planner1 = Planner::new(Machine::a100());
+        let reg1 = Registry::with_store(store.clone());
+        let id1 = reg1.register_planned("m", &coo, &planner1);
+        let cold = reg1.get(id1).unwrap();
+        let cold_gains = cold.reorder.expect("cold registration must activate");
+        let cold_perm = cold.hrpb.perm.clone().expect("permutation attached");
+
+        // warm: a restarted process loads permutation + gains from disk
+        let planner2 = Planner::new(Machine::a100());
+        let reg2 = Registry::with_store(store.clone());
+        let id2 = reg2.register_planned("m", &coo, &planner2);
+        let warm = reg2.get(id2).unwrap();
+        assert_eq!(store.stats().hits, 1, "warm start must hit the artifact");
+        assert_eq!(
+            warm.hrpb.perm.as_deref(),
+            Some(cold_perm.as_ref()),
+            "the permutation survives the restart byte-identically"
+        );
+        assert_eq!(warm.hrpb.packed, cold.hrpb.packed);
+        assert_eq!(warm.reorder, Some(cold_gains), "gains ride the stored plan");
+
+        // warm serving still lands in original row order
+        let b = crate::formats::Dense::random(coo.cols, 8, &mut Rng::new(74));
+        let want = coo.to_dense().matmul(&b);
+        assert!(warm.exec.spmm(&b).rel_fro_error(&want) < 1e-5);
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -27,6 +27,11 @@ pub struct MatrixProfile {
     pub panel_imbalance: f64,
     /// Number of HRPB row panels with at least one block.
     pub active_panels: usize,
+    /// Row-reorder gains when the profiled HRPB was built under a
+    /// similarity-clustered permutation ([`crate::reorder`]); the registry
+    /// annotates this before planning so the plan records the knob. `None`
+    /// everywhere else — the profile then describes the arrival order.
+    pub reorder: Option<crate::reorder::Gains>,
 }
 
 impl MatrixProfile {
@@ -69,6 +74,7 @@ impl MatrixProfile {
             row_max,
             panel_imbalance,
             active_panels: stats.active_panels,
+            reorder: None,
         }
     }
 
@@ -105,6 +111,7 @@ impl MatrixProfile {
             row_max: 0,
             panel_imbalance,
             active_panels: stats.active_panels,
+            reorder: None,
         }
     }
 
@@ -133,9 +140,13 @@ impl MatrixProfile {
         (self.hrpb.packed_bytes + self.hrpb.meta_bytes) as f64
     }
 
-    /// CSR byte footprint (scalar engines' A-traffic).
+    /// CSR byte footprint (scalar engines' A-traffic): `f32` value + `u32`
+    /// column id per nonzero plus the `u32` row pointer (the crate-wide
+    /// 4-byte index assumption, see [`HrpbStats::csr_bytes`]).
     pub fn csr_bytes(&self) -> f64 {
-        (self.nnz * 8 + (self.rows + 1) * 4) as f64
+        use std::mem::size_of;
+        (self.nnz * (size_of::<f32>() + size_of::<u32>())
+            + (self.rows + 1) * size_of::<u32>()) as f64
     }
 
     /// Shared memory per HRPB thread block at width `n` (Algorithm 1 line 3:

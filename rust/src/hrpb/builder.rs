@@ -170,6 +170,7 @@ fn finish(csr: &Csr, tm: usize, tk: usize, blocks: Vec<Block>, blocked_row_ptr: 
         packed: Vec::new(),
         size_ptr: Vec::new(),
         active_cols: Vec::new(),
+        perm: None,
     };
     pack::pack(&mut hrpb);
     hrpb

@@ -17,8 +17,11 @@ pub fn to_dense(hrpb: &Hrpb) -> Dense {
     coo.to_dense()
 }
 
-/// Reconstruct COO triplets from the structured blocks.
+/// Reconstruct COO triplets from the structured blocks. A build-time row
+/// permutation ([`Hrpb::perm`]) is inverted here, so the result is always
+/// in **original** row order regardless of how the HRPB was packed.
 pub fn to_coo(hrpb: &Hrpb) -> Coo {
+    let scatter = hrpb.perm.as_deref();
     let mut coo = Coo::new(hrpb.rows, hrpb.cols);
     for p in 0..hrpb.num_panels() {
         let r0 = p * hrpb.tm;
@@ -30,7 +33,9 @@ pub fn to_coo(hrpb: &Hrpb) -> Coo {
                 for j in s..e {
                     let br = block.rows[j] as usize;
                     for (r, c, idx) in pattern_iter(block.patterns[j]) {
-                        let row = r0 + br * BRICK_M + r;
+                        let structural = r0 + br * BRICK_M + r;
+                        let row = scatter
+                            .map_or(structural, |pm| pm.new_to_old[structural] as usize);
                         let slot = bc * BRICK_K + c;
                         let col = block.active_cols[slot] as usize;
                         coo.push(row, col, block.values[vi + idx]);
@@ -60,8 +65,19 @@ pub struct DenseBrickFeed {
     pub panel_ids: Vec<i32>,
 }
 
-/// Decode to the dense-brick feed form.
+/// Decode to the dense-brick feed form. The feed stays in *structural*
+/// (packed) row order and the PJRT artifact has no scatter stage, so a
+/// permuted HRPB must never reach it — enforced here rather than left as a
+/// comment-level invariant (in practice the PJRT policy registers
+/// unplanned, and only planner-gated registrations attach a permutation).
+///
+/// # Panics
+/// Panics when `hrpb` carries a build-time row permutation.
 pub fn to_feed(hrpb: &Hrpb) -> DenseBrickFeed {
+    assert!(
+        hrpb.perm.is_none(),
+        "to_feed cannot scatter rows: permuted HRPBs are not PJRT-servable"
+    );
     let (tm, tk) = (hrpb.tm, hrpb.tk);
     let nb = hrpb.num_blocks();
     let mut blocks = vec![0f32; nb * tm * tk];

@@ -128,6 +128,12 @@ pub struct Hrpb {
     /// padding slots repeat the block's last real column — they carry no
     /// values, so any in-range id is safe).
     pub active_cols: Vec<u32>,
+    /// Build-time row permutation ([`crate::reorder`]): structural row `i`
+    /// of this HRPB holds original matrix row `perm.new_to_old[i]`. `None`
+    /// = natural order. The native engine scatters its output through this
+    /// map in the kernel epilogue, so `spmm` results always come back in
+    /// original row order; [`decode`] honors it the same way.
+    pub perm: Option<std::sync::Arc<crate::reorder::RowPermutation>>,
 }
 
 impl Hrpb {
@@ -178,6 +184,16 @@ impl Hrpb {
         }
         if nnz != self.nnz {
             return Err(format!("nnz mismatch: blocks {nnz} vs header {}", self.nnz));
+        }
+        if let Some(perm) = &self.perm {
+            if perm.len() != self.rows {
+                return Err(format!(
+                    "permutation spans {} rows, matrix has {}",
+                    perm.len(),
+                    self.rows
+                ));
+            }
+            perm.validate()?;
         }
         pack::validate_packed(self)?;
         Ok(())

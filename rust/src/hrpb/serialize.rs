@@ -22,8 +22,12 @@
 //!   section length and re-derives block invariants. Any mismatch is a typed
 //!   `Err`, never a panic — callers treat a bad artifact as a cache miss and
 //!   rebuild (see the store's corruption-tolerant load).
-//! * **Versioned.** `VERSION` gates the layout; bumping it invalidates every
-//!   artifact on disk (decode returns `Err`, the store rebuilds).
+//! * **Versioned.** `VERSION` gates the layout. v3 adds the optional
+//!   build-time row permutation ([`crate::reorder`], flag bit 2) and the
+//!   plan's reorder-gains tail; v2 artifacts (no permutation, no reorder
+//!   fields) still load — decode accepts both, so a deploy does not
+//!   invalidate a warm artifact directory. Anything older or newer is a
+//!   typed `Err` and the store rebuilds.
 //!
 //! [`Block`]: crate::hrpb::Block
 
@@ -38,11 +42,17 @@ use crate::util::bits::{ceil_div, round_up};
 /// File magic (8 bytes).
 pub const MAGIC: &[u8; 8] = b"CTSPHRPB";
 
-/// Layout version; bump on any format change to invalidate old artifacts.
+/// Layout version; bump on any format change.
 /// v2: plans carry the execution runtime's column-slab width.
-pub const VERSION: u32 = 2;
+/// v3: optional row permutation section + plan reorder-gains tail.
+pub const VERSION: u32 = 3;
+
+/// Oldest version [`decode`] still accepts (v2 = v3 minus the permutation
+/// section and the plan's reorder tail).
+pub const MIN_VERSION: u32 = 2;
 
 const FLAG_HAS_PLAN: u32 = 1;
+const FLAG_HAS_PERM: u32 = 2;
 
 /// Header length in bytes; every section after it starts 8-aligned.
 const HEADER_LEN: usize = 104;
@@ -137,7 +147,14 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
     );
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
-    put_u32(&mut out, if plan.is_some() { FLAG_HAS_PLAN } else { 0 });
+    let mut flags = 0u32;
+    if plan.is_some() {
+        flags |= FLAG_HAS_PLAN;
+    }
+    if hrpb.perm.is_some() {
+        flags |= FLAG_HAS_PERM;
+    }
+    put_u32(&mut out, flags);
     put_u64(&mut out, 0); // checksum, patched below
     for v in [hrpb.rows, hrpb.cols, hrpb.tm, hrpb.tk, hrpb.nnz] {
         put_u64(&mut out, v as u64);
@@ -168,6 +185,16 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
     // exactly as `pack` keeps it 8-aligned in memory
     out.extend_from_slice(&hrpb.packed);
     pad8(&mut out);
+
+    // v3: build-time row permutation (forward map only; the inverse is
+    // re-derived — and re-validated — on load)
+    if let Some(perm) = &hrpb.perm {
+        debug_assert_eq!(perm.len(), hrpb.rows);
+        for &v in &perm.new_to_old {
+            put_u32(&mut out, v);
+        }
+        pad8(&mut out);
+    }
 
     // stats: 11 fixed 8-byte fields
     for v in [
@@ -203,6 +230,18 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
             put_f64(&mut out, c.calibrated_s);
             put_f64(&mut out, c.predicted_s);
             out.push(bound_index(c.bound));
+        }
+        // v3 tail: the reorder decision + gains. Appended LAST so a v2
+        // file is byte-identical to a v3 file truncated before this tail.
+        match plan.reorder {
+            Some(g) => {
+                out.push(1);
+                for v in [g.alpha_before, g.alpha_after, g.beta_before, g.beta_after, g.seconds]
+                {
+                    put_f64(&mut out, v);
+                }
+            }
+            None => out.push(0),
         }
     }
 
@@ -295,10 +334,15 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
     }
     let mut r = Reader { bytes, pos: 8 };
     let version = r.u32()?;
-    if version != VERSION {
-        return Err(format!("artifact version {version} != supported {VERSION}"));
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(format!(
+            "artifact version {version} outside supported {MIN_VERSION}..={VERSION}"
+        ));
     }
     let flags = r.u32()?;
+    if version < 3 && flags & FLAG_HAS_PERM != 0 {
+        return Err("artifact v2 cannot carry a permutation".into());
+    }
     let stored_ck = r.u64()?;
     if file_checksum(bytes) != stored_ck {
         return Err("artifact checksum mismatch".into());
@@ -345,6 +389,16 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
     let packed = r.take(packed_len)?.to_vec();
     r.align8()?;
 
+    let perm = if flags & FLAG_HAS_PERM != 0 {
+        let forward = read_u32s(&mut r, rows)?;
+        r.align8()?;
+        let p = crate::reorder::RowPermutation::from_new_to_old(forward)
+            .map_err(|e| format!("artifact permutation: {e}"))?;
+        Some(p)
+    } else {
+        None
+    };
+
     if *blocked_row_ptr.last().unwrap() as usize != num_blocks {
         return Err("artifact blocked_row_ptr tail != block count".into());
     }
@@ -375,7 +429,8 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
         fill_ratio: r.f64()?,
     };
 
-    let plan = if flags & FLAG_HAS_PLAN != 0 { Some(decode_plan(&mut r)?) } else { None };
+    let plan =
+        if flags & FLAG_HAS_PLAN != 0 { Some(decode_plan(&mut r, version)?) } else { None };
 
     // reconstruct the structured blocks from the packed stream — the
     // near-memcpy inverse of `pack::pack` (no sorting, no compaction);
@@ -398,6 +453,7 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
         packed,
         size_ptr,
         active_cols,
+        perm: perm.map(std::sync::Arc::new),
     };
     Ok(Artifact { hrpb, stats, digest, plan })
 }
@@ -495,7 +551,7 @@ fn read_u16s(r: &mut Reader, n: usize) -> Result<Vec<u16>, String> {
     Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
-fn decode_plan(r: &mut Reader) -> Result<Plan, String> {
+fn decode_plan(r: &mut Reader, version: u32) -> Result<Plan, String> {
     let engine = parse_algo(&r.str()?)?;
     let width = r.usize64()?;
     let slab_width = r.usize64()?;
@@ -522,6 +578,18 @@ fn decode_plan(r: &mut Reader) -> Result<Plan, String> {
             .ok_or("artifact bound index out of range")?;
         ranked.push(RankedChoice { algo, modeled_s, calibrated_s, predicted_s, bound });
     }
+    // v3 tail: reorder decision + gains (absent in v2 -> None)
+    let reorder = if version >= 3 && r.u8()? != 0 {
+        Some(crate::reorder::Gains {
+            alpha_before: r.f64()?,
+            alpha_after: r.f64()?,
+            beta_before: r.f64()?,
+            beta_after: r.f64()?,
+            seconds: r.f64()?,
+        })
+    } else {
+        None
+    };
     Ok(Plan {
         engine,
         width,
@@ -533,6 +601,7 @@ fn decode_plan(r: &mut Reader) -> Result<Plan, String> {
         ranked,
         rationale,
         fingerprint,
+        reorder,
     })
 }
 
@@ -649,6 +718,123 @@ mod tests {
                 && encode(&art.hrpb, &art.stats, art.digest, None) == bytes
                 && hrpb_decode::to_dense(&art.hrpb).max_abs_diff(&coo.to_dense()) == 0.0
         });
+    }
+
+    /// Patch an encoded artifact's version field and repair the checksum —
+    /// used to reconstruct genuine v2 files from v3 encodes (the v2 layout
+    /// is the v3 layout minus the permutation section and plan tail).
+    fn as_version(mut bytes: Vec<u8>, version: u32) -> Vec<u8> {
+        bytes[8..12].copy_from_slice(&version.to_le_bytes());
+        let ck = file_checksum(&bytes);
+        bytes[16..24].copy_from_slice(&ck.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn v2_planless_artifacts_still_load() {
+        let coo = Coo::random(64, 80, 0.1, &mut Rng::new(36));
+        let (hrpb, s, digest, _) = artifact_for(&coo, false);
+        let v2 = as_version(encode(&hrpb, &s, digest, None), 2);
+        let art = decode(&v2).expect("v2 artifact must load");
+        assert_hrpb_eq(&art.hrpb, &hrpb);
+        assert!(art.hrpb.perm.is_none());
+        assert!(art.plan.is_none());
+        assert_eq!(art.stats, s);
+    }
+
+    #[test]
+    fn v2_plan_bearing_artifacts_still_load() {
+        let coo = Coo::random(72, 72, 0.12, &mut Rng::new(37));
+        let (hrpb, s, digest, plan) = artifact_for(&coo, true);
+        assert!(plan.as_ref().unwrap().reorder.is_none(), "fixture premise");
+        let v3 = encode(&hrpb, &s, digest, plan.as_ref());
+        // the v3 reorder tail of a reorder-less plan is exactly one byte;
+        // dropping it reconstructs the v2 byte layout
+        let v2 = as_version(v3[..v3.len() - 1].to_vec(), 2);
+        let art = decode(&v2).expect("v2 plan-bearing artifact must load");
+        assert_hrpb_eq(&art.hrpb, &hrpb);
+        let got = art.plan.expect("plan survives");
+        let want = plan.unwrap();
+        assert_eq!(got.engine, want.engine);
+        assert_eq!(got.slab_width, want.slab_width);
+        assert!(got.reorder.is_none(), "v2 plans have no reorder decision");
+    }
+
+    #[test]
+    fn v2_with_a_permutation_flag_is_rejected() {
+        let coo = Coo::random(32, 32, 0.2, &mut Rng::new(38));
+        let (hrpb, s, digest, _) = artifact_for(&coo, false);
+        let mut bytes = encode(&hrpb, &s, digest, None);
+        bytes[12..16].copy_from_slice(&2u32.to_le_bytes()); // FLAG_HAS_PERM
+        let bytes = as_version(bytes, 2);
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.contains("permutation"), "{e}");
+    }
+
+    #[test]
+    fn permutation_roundtrips_with_gains() {
+        use crate::params::{TK, TM};
+        let spec = crate::gen::MatrixSpec {
+            name: "t".into(),
+            rows: 160,
+            family: crate::gen::Family::BlockDiag { unit: 16, unit_density: 0.7 },
+            seed: 40,
+        };
+        let coo = crate::reorder::RowPermutation::random(160, &mut Rng::new(41))
+            .apply_coo(&spec.generate());
+        let csr = crate::formats::Csr::from_coo(&coo);
+        let prop = crate::reorder::propose(&csr, TM, TK);
+        assert!(!prop.perm.is_identity(), "fixture premise: a real permutation");
+        let hrpb = crate::reorder::build_reordered(&csr, prop.perm.clone(), TM, TK, 2);
+        let s = stats::compute(&hrpb);
+        let mut plan = (*Planner::new(Machine::a100()).plan(&coo)).clone();
+        plan.reorder = Some(prop.gains(0.0125));
+        let digest = content_digest(&coo);
+
+        let bytes = encode(&hrpb, &s, digest, Some(&plan));
+        let art = decode(&bytes).unwrap();
+        assert_eq!(art.hrpb.perm.as_deref(), Some(&prop.perm), "permutation roundtrips");
+        art.hrpb.validate().unwrap();
+        let got = art.plan.unwrap().reorder.expect("gains roundtrip");
+        assert_eq!(got, prop.gains(0.0125));
+        // decode of the loaded artifact still lands in ORIGINAL row order
+        assert_eq!(
+            hrpb_decode::to_dense(&art.hrpb).max_abs_diff(&coo.to_dense()),
+            0.0,
+            "perm-bearing artifact decodes to the original matrix"
+        );
+        // re-encode reproduces the file exactly (incl. the perm section)
+        let again = encode(&art.hrpb, &art.stats, art.digest, art.plan.as_ref());
+        assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn corrupt_permutation_section_is_rejected() {
+        use crate::params::{TK, TM};
+        let coo = Coo::random(96, 64, 0.1, &mut Rng::new(42));
+        let csr = crate::formats::Csr::from_coo(&coo);
+        let prop = crate::reorder::propose(&csr, TM, TK);
+        let hrpb = crate::reorder::build_reordered(&csr, prop.perm, TM, TK, 2);
+        let s = stats::compute(&hrpb);
+        let mut bytes = encode(&hrpb, &s, content_digest(&coo), None);
+        // duplicate one forward-map entry: bijection check must fire even
+        // with a repaired checksum
+        let perm_off = {
+            // header + brp (+pad) + size_ptr + active_cols (+pad) + packed (+pad)
+            let brp = hrpb.blocked_row_ptr.len() * 4;
+            let mut off = HEADER_LEN + brp;
+            off = crate::util::bits::round_up(off, 8);
+            off += hrpb.size_ptr.len() * 8 + hrpb.active_cols.len() * 4;
+            off = crate::util::bits::round_up(off, 8);
+            off += hrpb.packed.len();
+            crate::util::bits::round_up(off, 8)
+        };
+        let first: [u8; 4] = bytes[perm_off..perm_off + 4].try_into().unwrap();
+        bytes[perm_off + 4..perm_off + 8].copy_from_slice(&first);
+        let ck = file_checksum(&bytes);
+        bytes[16..24].copy_from_slice(&ck.to_le_bytes());
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.contains("permutation"), "{e}");
     }
 
     #[test]

@@ -38,19 +38,70 @@ pub struct HrpbStats {
 }
 
 impl HrpbStats {
-    /// CSR storage of the same matrix (4-byte values + 4-byte col ids +
-    /// row ptr) for compression-ratio comparisons.
+    /// CSR storage of the same matrix for compression-ratio comparisons:
+    /// per nonzero an `f32` value plus a `u32` column id, plus the
+    /// `(rows + 1)`-entry `u32` row pointer. The 4-byte index width is the
+    /// crate-wide CSR assumption ([`crate::formats::Csr`] stores `u32`
+    /// indices), valid for matrices with fewer than 2³² rows/cols/nnz.
     pub fn csr_bytes(&self, rows: usize) -> usize {
-        self.nnz * 8 + (rows + 1) * 4
+        use std::mem::size_of;
+        self.nnz * (size_of::<f32>() + size_of::<u32>()) + (rows + 1) * size_of::<u32>()
     }
 }
 
-/// Compute statistics from a built instance.
+/// Blocks at/above which [`compute`] fans out over block ranges on the
+/// exec worker pool; below it the dispatch overhead exceeds the scan.
+const PARALLEL_MIN_BLOCKS: usize = 4096;
+
+/// Compute statistics from a built instance. Large instances scan their
+/// blocks in parallel on the persistent worker pool
+/// ([`crate::spmm::exec::WorkerPool`]) — the per-block quantities are
+/// associative counts, so the result is identical to [`compute_serial`]
+/// (equivalence-tested).
 pub fn compute(hrpb: &Hrpb) -> HrpbStats {
+    if hrpb.blocks.len() >= PARALLEL_MIN_BLOCKS {
+        compute_parallel(hrpb)
+    } else {
+        compute_serial(hrpb)
+    }
+}
+
+/// Single-threaded reference the parallel path is tested against.
+pub fn compute_serial(hrpb: &Hrpb) -> HrpbStats {
+    let (num_bricks, num_brick_cols) = scan_blocks(hrpb, 0, hrpb.blocks.len());
+    finish(hrpb, num_bricks, num_brick_cols)
+}
+
+/// Parallel block-range scan on the shared worker pool.
+pub fn compute_parallel(hrpb: &Hrpb) -> HrpbStats {
+    use crate::spmm::exec::WorkerPool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let nb = hrpb.blocks.len();
+    let pool = WorkerPool::global();
+    let parts = (pool.threads() + 1).clamp(1, nb.max(1));
+    let chunk = crate::util::bits::ceil_div(nb.max(1), parts);
+    let bricks = AtomicUsize::new(0);
+    let brick_cols = AtomicUsize::new(0);
+    pool.run(parts, &|p| {
+        let b0 = (p * chunk).min(nb);
+        let b1 = ((p + 1) * chunk).min(nb);
+        let (nb_part, nc_part) = scan_blocks(hrpb, b0, b1);
+        bricks.fetch_add(nb_part, Ordering::Relaxed);
+        brick_cols.fetch_add(nc_part, Ordering::Relaxed);
+    });
+    finish(
+        hrpb,
+        bricks.load(std::sync::atomic::Ordering::Relaxed),
+        brick_cols.load(std::sync::atomic::Ordering::Relaxed),
+    )
+}
+
+/// Brick / occupied-brick-column counts of blocks `[b0, b1)`.
+fn scan_blocks(hrpb: &Hrpb, b0: usize, b1: usize) -> (usize, usize) {
     let brick_cols_per_block = hrpb.tk / BRICK_K;
     let mut num_bricks = 0usize;
     let mut num_brick_cols = 0usize;
-    for block in &hrpb.blocks {
+    for block in &hrpb.blocks[b0..b1] {
         num_bricks += block.num_bricks();
         for c in 0..brick_cols_per_block {
             if block.col_ptr[c + 1] > block.col_ptr[c] {
@@ -58,6 +109,11 @@ pub fn compute(hrpb: &Hrpb) -> HrpbStats {
             }
         }
     }
+    (num_bricks, num_brick_cols)
+}
+
+/// Shared tail: panel activity scan (cheap, O(panels)) + derived ratios.
+fn finish(hrpb: &Hrpb, num_bricks: usize, num_brick_cols: usize) -> HrpbStats {
     let active_panels = (0..hrpb.num_panels())
         .filter(|&p| hrpb.blocked_row_ptr[p + 1] > hrpb.blocked_row_ptr[p])
         .count();
@@ -147,6 +203,38 @@ mod tests {
         assert_eq!(s.nnz, 0);
         assert_eq!(s.num_bricks, 0);
         assert_eq!(s.alpha, 0.0);
+    }
+
+    #[test]
+    fn parallel_compute_matches_serial_reference() {
+        // sizes straddle several pool-part boundaries (incl. a matrix big
+        // enough that `compute` itself takes the parallel path: > 4096
+        // panels of one block each)
+        for (rows, cols, density, seed) in
+            [(64usize, 64usize, 0.1, 70u64), (900, 300, 0.05, 71), (80_000, 64, 0.004, 72)]
+        {
+            let mut rng = Rng::new(seed);
+            let coo = Coo::random(rows, cols, density, &mut rng);
+            let hrpb = build_from_coo(&coo);
+            let serial = compute_serial(&hrpb);
+            let parallel = compute_parallel(&hrpb);
+            assert_eq!(serial, parallel, "{rows}x{cols}");
+            assert_eq!(compute(&hrpb), serial, "dispatching wrapper agrees");
+        }
+    }
+
+    #[test]
+    fn parallel_compute_handles_the_empty_instance() {
+        let hrpb = build_from_coo(&Coo::new(16, 16));
+        assert_eq!(compute_parallel(&hrpb), compute_serial(&hrpb));
+    }
+
+    #[test]
+    fn csr_bytes_is_derived_from_element_sizes() {
+        let coo = Coo::from_triplets(10, 10, &[(0, 0, 1.0), (5, 5, 2.0), (9, 9, 3.0)]);
+        let s = compute(&build_from_coo(&coo));
+        // 3 nnz x (4B value + 4B col id) + 11 x 4B row ptr
+        assert_eq!(s.csr_bytes(10), 3 * 8 + 11 * 4);
     }
 
     #[test]

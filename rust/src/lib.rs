@@ -16,6 +16,12 @@
 //!   ([`hrpb::serialize`] + [`hrpb::store`]) that makes §6.3's preprocessing
 //!   amortization survive process restarts: versioned, checksummed on-disk
 //!   artifacts keyed by matrix fingerprint, warm-starting registration.
+//! * [`reorder`] — synergy-raising row reordering: minhash/LSH column-block
+//!   signatures, greedy similarity clustering that packs overlapping rows
+//!   into the same `TM` panel, and exact pre-build pricing of the
+//!   candidate permutation. The planner gates activation on predicted α
+//!   gain; the native engine scatters output back to original row order in
+//!   its kernel epilogue; artifacts persist the permutation (format v3).
 //! * [`synergy`] — brick density α, `OI_shmem = 512·α` (Eq. 4) and the
 //!   Low/Medium/High TCU-Synergy classes (Table 1).
 //! * [`loadbalance`] — wave-aware virtual row-panel partitioning (§5).
@@ -54,6 +60,7 @@ pub mod hrpb;
 pub mod loadbalance;
 pub mod planner;
 pub mod qos;
+pub mod reorder;
 pub mod runtime;
 pub mod spmm;
 pub mod synergy;

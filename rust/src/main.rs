@@ -18,10 +18,13 @@
 //!               [--qos-deadline-ms MS]      # bounded admission + shedding
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|exec|all> [--quick]
+//!                      qos|exec|reorder|all> [--quick]
 //!                                           # exec: pool + column-slab
 //!                                           # runtime A/B, emits
 //!                                           # results/BENCH_PR4.json
+//!                                           # reorder: similarity-clustered
+//!                                           # row-packing A/B, emits
+//!                                           # results/BENCH_PR5.json
 //! cutespmm selfcheck                          # engines vs oracle + PJRT
 //! ```
 //!
@@ -314,8 +317,37 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
                 }
                 None => {
                     let ((hrpb, plan), t) = time_once(|| {
-                        let hrpb = cutespmm::hrpb::build_from_coo_parallel(&coo);
-                        let plan = planner.plan_with_hrpb(&coo, &hrpb);
+                        use cutespmm::params::{TK, TM};
+                        let threads = std::thread::available_parallelism()
+                            .map(|p| p.get())
+                            .unwrap_or(1);
+                        let csr = cutespmm::formats::Csr::from_coo(&coo);
+                        // the same planner-gated reorder decision the serving
+                        // registry makes — a plan-persisted artifact must
+                        // never pin the arrival order for later warm starts
+                        let t_reorder = std::time::Instant::now();
+                        let proposal = cutespmm::reorder::propose(&csr, TM, TK);
+                        let (hrpb, gains) = if planner.gate_reorder(&proposal) {
+                            let gains =
+                                proposal.gains(t_reorder.elapsed().as_secs_f64());
+                            let hrpb = cutespmm::reorder::build_reordered(
+                                &csr,
+                                proposal.perm,
+                                TM,
+                                TK,
+                                threads,
+                            );
+                            (hrpb, Some(gains))
+                        } else {
+                            (
+                                cutespmm::hrpb::build_with_parallel(&csr, TM, TK, threads),
+                                None,
+                            )
+                        };
+                        let mut profile =
+                            cutespmm::gpumodel::MatrixProfile::with_hrpb(&coo, &hrpb);
+                        profile.reorder = gains;
+                        let plan = planner.plan_assembled(fp, &profile);
                         (hrpb, plan)
                     });
                     let stats = cutespmm::hrpb::stats::compute(&hrpb);
@@ -376,6 +408,16 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
         render::table(&["rank", "engine", pred_header, "modeled(us)", "bound", ""], &rows)
     );
     println!("chosen: {} — {}", plan.engine.name(), plan.rationale);
+    if let Some(g) = plan.reorder {
+        println!(
+            "reorder: active — alpha {:.4}->{:.4} beta {:.2}->{:.2} (one-time {:.1} ms)",
+            g.alpha_before,
+            g.alpha_after,
+            g.beta_before,
+            g.beta_after,
+            g.seconds * 1e3
+        );
+    }
     let cache = planner.cache().stats();
     println!("plan cache: {} hits / {} misses / {} entries", cache.hits, cache.misses, cache.entries);
     Ok(())
@@ -615,6 +657,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "auto" => run("auto", experiments::auto_policy(&records)),
         "qos" => run("qos", experiments::qos_saturation()),
         "exec" => run("exec", experiments::exec(quick)),
+        "reorder" => run("reorder", experiments::reorder(quick)),
         "all" => {
             run("table1", experiments::table1());
             run("table2", experiments::table2(&records));
@@ -631,6 +674,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             run("auto", experiments::auto_policy(&records));
             run("qos", experiments::qos_saturation());
             run("exec", experiments::exec(quick));
+            run("reorder", experiments::reorder(quick));
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }

@@ -90,6 +90,7 @@ mod tests {
             predicted_s: 1e-4,
             predicted_s_per_col: 1e-6,
             slab_width: 0,
+            reorder: None,
             alpha: 0.5,
             synergy: Synergy::High,
             ranked: Vec::new(),

@@ -83,6 +83,12 @@ pub struct Plan {
     /// fastest on this host. The registry installs it on the engine at
     /// registration time; artifacts round-trip it.
     pub slab_width: usize,
+    /// Row-reorder knob ([`crate::reorder`]): `Some` when the
+    /// similarity-clustered permutation is active for this matrix, carrying
+    /// the α/β before/after and the one-time cost. When set, `alpha` and
+    /// `synergy` describe the *post-reorder* structure — the one the HRPB
+    /// engine actually executes. Artifacts round-trip it (format v3).
+    pub reorder: Option<crate::reorder::Gains>,
     /// Packed brick density of the matrix.
     pub alpha: f64,
     /// Table 1 class of `alpha`.
@@ -106,6 +112,20 @@ impl Plan {
             ("predicted_s", Json::num(self.predicted_s)),
             ("predicted_s_per_col", Json::num(self.predicted_s_per_col)),
             ("slab_width", Json::num(self.slab_width as f64)),
+            ("reorder", Json::Bool(self.reorder.is_some())),
+            (
+                "reorder_gains",
+                match self.reorder {
+                    Some(g) => Json::obj(vec![
+                        ("alpha_before", Json::num(g.alpha_before)),
+                        ("alpha_after", Json::num(g.alpha_after)),
+                        ("beta_before", Json::num(g.beta_before)),
+                        ("beta_after", Json::num(g.beta_after)),
+                        ("seconds", Json::num(g.seconds)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             ("alpha", Json::num(self.alpha)),
             ("synergy", Json::str(self.synergy.name())),
             ("rationale", Json::str(self.rationale.clone())),
@@ -142,6 +162,19 @@ pub struct PlannerConfig {
     /// Low synergy: route to scalar cores unless the model puts the TCU
     /// path below this fraction of the best scalar time.
     pub low_synergy_margin: f64,
+    /// Master switch for similarity-clustered row reordering
+    /// ([`crate::reorder`]); `false` never activates a permutation.
+    pub reorder_enabled: bool,
+    /// The reorder activation cost threshold: the predicted post-reorder α
+    /// must be at least this factor times the arrival-order α. Below it,
+    /// the per-call brick-work saving cannot pay back the one-time
+    /// signature + clustering + permuted-rebuild pass over the §6.3
+    /// amortization horizon (hundreds-to-thousands of SpMM calls), so the
+    /// planner leaves the row order alone.
+    pub reorder_min_gain: f64,
+    /// Matrices below this row count never reorder — the permutation would
+    /// span too few panels for the α estimate (or the win) to matter.
+    pub reorder_min_rows: usize,
 }
 
 impl Default for PlannerConfig {
@@ -151,6 +184,9 @@ impl Default for PlannerConfig {
             width: 128,
             high_synergy_slack: 1.10,
             low_synergy_margin: 0.77,
+            reorder_enabled: true,
+            reorder_min_gain: 1.10,
+            reorder_min_rows: 256,
         }
     }
 }
@@ -342,6 +378,46 @@ impl Planner {
         plan
     }
 
+    /// Plan from a caller-assembled profile, cached by fingerprint — the
+    /// registry's reorder path annotates the profile with the activation
+    /// gains ([`MatrixProfile::reorder`]) before planning, so the plan's
+    /// knob reflects what was actually built. A cached plan whose reorder
+    /// knob disagrees with the profile's annotation (e.g. `plan()` memoized
+    /// an arrival-order ranking before the registry activated the
+    /// permutation) is recomputed and replaces the cache entry — serving a
+    /// stale knob would mis-route the engine and mis-price QoS admission
+    /// against the structure that was not built.
+    pub fn plan_assembled(&self, fp: u64, profile: &MatrixProfile) -> Arc<Plan> {
+        if let Some(plan) = self.cache.get(fp, self.config.width) {
+            if plan.reorder.is_some() == profile.reorder.is_some() {
+                return plan;
+            }
+        }
+        let plan = Arc::new(self.plan_profile(fp, profile));
+        self.cache.insert(fp, self.config.width, plan.clone());
+        plan
+    }
+
+    /// The reorder activation gate — pure over a proposal's predicted
+    /// numbers so tests can drive it with synthetic signatures/stats. It
+    /// never activates when the predicted α gain is below the configured
+    /// cost threshold ([`PlannerConfig::reorder_min_gain`]), when the
+    /// permutation is trivial or strictly adds brick work, when the
+    /// matrix is too small to amortize the one-time pass, or when even the
+    /// post-reorder α stays in the Low synergy class — a permutation that
+    /// cannot lift the matrix out of Low can never flip serving onto the
+    /// TCU path, so it would pay the clustering and rebuild cost for a
+    /// structure no engine executes.
+    pub fn gate_reorder(&self, proposal: &crate::reorder::Proposal) -> bool {
+        let c = &self.config;
+        c.reorder_enabled
+            && proposal.rows() >= c.reorder_min_rows
+            && !proposal.perm.is_identity()
+            && proposal.after.num_bricks < proposal.before.num_bricks
+            && proposal.after.alpha >= proposal.before.alpha * c.reorder_min_gain
+            && Synergy::from_alpha(proposal.after.alpha) != Synergy::Low
+    }
+
     /// Rank + choose from a precomputed profile (no caching).
     pub fn plan_profile(&self, fingerprint: u64, profile: &MatrixProfile) -> Plan {
         let n = self.config.width;
@@ -387,6 +463,7 @@ impl Planner {
             predicted_s,
             predicted_s_per_col: predicted_s / n.max(1) as f64,
             slab_width,
+            reorder: profile.reorder,
             alpha,
             synergy,
             ranked,
@@ -556,6 +633,127 @@ mod tests {
             .filter(|r| r.get("chosen") == Some(&Json::Bool(true)))
             .count();
         assert_eq!(chosen, 1, "exactly one ranked row is marked chosen");
+    }
+
+    /// Synthetic proposal with controlled before/after α and brick counts
+    /// (built from signatures only indirectly — the gate is pure over the
+    /// priced numbers, which is exactly what it sees in production).
+    fn synthetic_proposal(
+        rows: usize,
+        identity: bool,
+        alpha_before: f64,
+        alpha_after: f64,
+        bricks_before: usize,
+        bricks_after: usize,
+    ) -> crate::reorder::Proposal {
+        use crate::reorder::{PanelStats, RowPermutation};
+        let perm = if identity || rows < 2 {
+            RowPermutation::identity(rows)
+        } else {
+            let mut fwd: Vec<u32> = (0..rows as u32).collect();
+            fwd.rotate_left(1);
+            RowPermutation::from_new_to_old(fwd).unwrap()
+        };
+        let stats = |alpha: f64, bricks: usize| PanelStats {
+            nnz: 1000,
+            num_blocks: bricks.div_ceil(4).max(1),
+            num_bricks: bricks,
+            num_brick_cols: bricks,
+            alpha,
+            beta: 1.0,
+        };
+        crate::reorder::Proposal {
+            perm,
+            before: stats(alpha_before, bricks_before),
+            after: stats(alpha_after, bricks_after),
+        }
+    }
+
+    /// The acceptance-criterion gate property: the planner NEVER activates
+    /// reordering when the predicted α gain is below its cost threshold —
+    /// and the other guards (trivial perm, added work, tiny matrices,
+    /// master switch) hold too.
+    #[test]
+    fn reorder_gate_never_activates_below_the_cost_threshold() {
+        let planner = Planner::new(Machine::a100());
+        let gain = planner.config.reorder_min_gain;
+        // clearly above the threshold, landing in Medium synergy: activates
+        let good = synthetic_proposal(1024, false, 0.15, 0.15 * (gain + 0.5), 4000, 800);
+        assert!(planner.gate_reorder(&good));
+        // sweep α gains straddling the threshold: below it must never fire
+        for below in [0.5, 0.9, 1.0, gain - 0.01] {
+            let p = synthetic_proposal(1024, false, 0.15, 0.15 * below, 4000, 3999);
+            assert!(!planner.gate_reorder(&p), "gain {below} is below the cost threshold");
+        }
+        // at/above threshold but with MORE brick work: still refused
+        let regress = synthetic_proposal(1024, false, 0.15, 0.15 * (gain + 0.5), 4000, 4001);
+        assert!(!planner.gate_reorder(&regress), "added brick work must veto");
+        // a big relative gain that still leaves the matrix in the Low
+        // class: the TCU path can never win there, so no activation
+        let still_low = synthetic_proposal(1024, false, 0.02, 0.08, 4000, 1000);
+        assert!(!planner.gate_reorder(&still_low), "post-reorder Low must veto");
+        // identity permutation: nothing to activate
+        let trivial = synthetic_proposal(1024, true, 0.15, 0.5, 4000, 800);
+        assert!(!planner.gate_reorder(&trivial));
+        // too small to amortize
+        let tiny = synthetic_proposal(64, false, 0.15, 0.5, 400, 80);
+        assert!(!planner.gate_reorder(&tiny));
+        // master switch off
+        let off = Planner::with_config(PlannerConfig {
+            reorder_enabled: false,
+            ..Default::default()
+        });
+        assert!(!off.gate_reorder(&good));
+    }
+
+    /// The cache-coherence rule of [`Planner::plan_assembled`]: a memoized
+    /// arrival-order plan must not be served for a reorder-annotated
+    /// profile (and vice versa) — the knob reflects what was built.
+    #[test]
+    fn plan_assembled_recomputes_on_reorder_knob_mismatch() {
+        let planner = Planner::new(Machine::a100());
+        let coo = full_brick_matrix(48);
+        let fp = fingerprint(&coo);
+        // memoize the arrival-order plan first (plan() path)
+        let stale = planner.plan(&coo);
+        assert!(stale.reorder.is_none());
+
+        let mut profile = MatrixProfile::compute(&coo);
+        profile.reorder = Some(crate::reorder::Gains {
+            alpha_before: 0.05,
+            alpha_after: 0.30,
+            beta_before: 1.0,
+            beta_after: 1.0,
+            seconds: 0.01,
+        });
+        let fresh = planner.plan_assembled(fp, &profile);
+        assert!(fresh.reorder.is_some(), "stale arrival-order plan must be replaced");
+        // the replacement is now the cached truth
+        let again = planner.plan_assembled(fp, &profile);
+        assert!(Arc::ptr_eq(&fresh, &again), "matching knob hits the cache");
+    }
+
+    #[test]
+    fn plan_json_carries_the_reorder_knob() {
+        use crate::util::json::parse;
+        let planner = Planner::new(Machine::a100());
+        let mut plan = (*planner.plan(&full_brick_matrix(32))).clone();
+        assert!(plan.reorder.is_none());
+        let doc = parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("reorder"), Some(&crate::util::json::Json::Bool(false)));
+
+        plan.reorder = Some(crate::reorder::Gains {
+            alpha_before: 0.04,
+            alpha_after: 0.31,
+            beta_before: 1.0,
+            beta_after: 1.0,
+            seconds: 0.02,
+        });
+        let doc = parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("reorder"), Some(&crate::util::json::Json::Bool(true)));
+        let g = doc.get("reorder_gains").unwrap();
+        assert_eq!(g.get("alpha_before").unwrap().as_f64(), Some(0.04));
+        assert_eq!(g.get("alpha_after").unwrap().as_f64(), Some(0.31));
     }
 
     #[test]

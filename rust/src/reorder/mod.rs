@@ -1,0 +1,355 @@
+//! Row reordering — similarity-clustered HRPB packing.
+//!
+//! The TCU-Synergy model says HRPB throughput is governed by brick density
+//! `α` and brick-column reuse `β` ([`crate::synergy`]), and both are fixed
+//! by whatever row order the input arrives in: a matrix whose similar rows
+//! are scattered across row panels lands in the low-synergy regime even
+//! when the latent structure is dense. This module recovers that structure
+//! *before* the kernel runs (the Acc-SpMM / FlashSparse data-affinity
+//! argument): rows with overlapping column supports are permuted into the
+//! same `TM`-row panel, so their nonzeros share bricks and `α` rises.
+//!
+//! Pipeline:
+//!
+//! 1. [`signature`] — a minhash signature per row over its column-block
+//!    (brick-column) support; estimated Jaccard similarity is the fraction
+//!    of agreeing components.
+//! 2. [`cluster`] — greedy packing over the LSH (lexicographic-signature)
+//!    ordering: each panel seeds with the next unassigned row and greedily
+//!    pulls the most similar rows from a bounded lookahead window. Empty
+//!    rows carry the max signature and sink to the tail, compacting all
+//!    real work into leading panels.
+//! 3. [`stats`] — exact post-permutation brick statistics straight from the
+//!    CSR + permutation (no HRPB build), pricing a proposal before anything
+//!    is rebuilt. The planner gates activation on the predicted α gain
+//!    ([`crate::planner::Planner::gate_reorder`]).
+//!
+//! An activated [`RowPermutation`] is attached to the built
+//! [`Hrpb`](crate::hrpb::Hrpb); the native engine fuses the inverse scatter
+//! into its kernel epilogue so `spmm` output always comes back in original
+//! row order with no extra pass over C, and artifacts persist the
+//! permutation (format v3, [`crate::hrpb::serialize`]).
+
+pub mod cluster;
+pub mod signature;
+pub mod stats;
+
+pub use cluster::pack;
+pub use signature::{row_signatures, Signature, SIG_HASHES};
+pub use stats::{panel_stats, PanelStats};
+
+use crate::formats::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// A row permutation in both directions. Position `n` of the reordered
+/// matrix holds original row `new_to_old[n]`; original row `o` moved to
+/// position `old_to_new[o]`. The two maps are mutual inverses
+/// (`forward ∘ inverse = id`, enforced by [`RowPermutation::validate`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowPermutation {
+    /// `new_to_old[n]` = original index of the row placed at position `n`.
+    pub new_to_old: Vec<u32>,
+    /// `old_to_new[o]` = position original row `o` was moved to.
+    pub old_to_new: Vec<u32>,
+}
+
+impl RowPermutation {
+    /// The identity permutation on `rows` rows.
+    pub fn identity(rows: usize) -> RowPermutation {
+        let id: Vec<u32> = (0..rows as u32).collect();
+        RowPermutation { new_to_old: id.clone(), old_to_new: id }
+    }
+
+    /// Build from the forward map, validating it is a bijection and
+    /// deriving the inverse.
+    pub fn from_new_to_old(new_to_old: Vec<u32>) -> Result<RowPermutation, String> {
+        let rows = new_to_old.len();
+        let mut old_to_new = vec![u32::MAX; rows];
+        for (n, &o) in new_to_old.iter().enumerate() {
+            let slot = old_to_new
+                .get_mut(o as usize)
+                .ok_or_else(|| format!("permutation target {o} out of range ({rows} rows)"))?;
+            if *slot != u32::MAX {
+                return Err(format!("permutation maps row {o} twice"));
+            }
+            *slot = n as u32;
+        }
+        Ok(RowPermutation { new_to_old, old_to_new })
+    }
+
+    /// A uniformly random permutation (deterministic per seed) — the bench
+    /// corpus uses this to *hide* structure that reordering then recovers.
+    pub fn random(rows: usize, rng: &mut Rng) -> RowPermutation {
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        rng.shuffle(&mut order);
+        RowPermutation::from_new_to_old(order).expect("shuffle emits a bijection")
+    }
+
+    /// Number of rows the permutation spans.
+    pub fn len(&self) -> usize {
+        self.new_to_old.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.new_to_old.is_empty()
+    }
+
+    /// `true` when the permutation moves nothing.
+    pub fn is_identity(&self) -> bool {
+        self.new_to_old.iter().enumerate().all(|(n, &o)| n as u32 == o)
+    }
+
+    /// Check the bijection invariants (artifact decode, property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.old_to_new.len() != self.new_to_old.len() {
+            return Err("permutation maps differ in length".into());
+        }
+        for (n, &o) in self.new_to_old.iter().enumerate() {
+            match self.old_to_new.get(o as usize) {
+                Some(&back) if back as usize == n => {}
+                Some(_) => return Err(format!("inverse disagrees at position {n}")),
+                None => return Err(format!("permutation target {o} out of range")),
+            }
+        }
+        Ok(())
+    }
+
+    /// The row-permuted CSR: new row `n` holds original row
+    /// `new_to_old[n]`'s entries (per-row column order is preserved).
+    pub fn apply_csr(&self, csr: &Csr) -> Csr {
+        assert_eq!(self.len(), csr.rows, "permutation rows != matrix rows");
+        let mut row_ptr = Vec::with_capacity(csr.rows + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::with_capacity(csr.nnz());
+        let mut values = Vec::with_capacity(csr.nnz());
+        for &old in &self.new_to_old {
+            let r = csr.row_range(old as usize);
+            col_idx.extend_from_slice(&csr.col_idx[r.clone()]);
+            values.extend_from_slice(&csr.values[r]);
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr { rows: csr.rows, cols: csr.cols, row_ptr, col_idx, values }
+    }
+
+    /// The row-permuted COO (normalized by construction).
+    pub fn apply_coo(&self, coo: &Coo) -> Coo {
+        self.apply_csr(&Csr::from_coo(coo)).to_coo()
+    }
+}
+
+/// Reorder outcome summary, threaded through plans, registry entries and
+/// the metrics report (`reorder=[...]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Gains {
+    /// Brick density in the arrival row order.
+    pub alpha_before: f64,
+    /// Brick density after similarity-clustered packing.
+    pub alpha_after: f64,
+    /// Brick-column reuse before (1.0 identically at TM = BRICK_M).
+    pub beta_before: f64,
+    /// Brick-column reuse after.
+    pub beta_after: f64,
+    /// One-time cost of the signature + clustering + pricing pass
+    /// (seconds). Zero when the permutation was warm-loaded from an
+    /// artifact.
+    pub seconds: f64,
+}
+
+/// A priced reorder candidate: the permutation plus exact pre/post brick
+/// statistics. Produced by [`propose`], gated by the planner.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    pub perm: RowPermutation,
+    /// Brick statistics in the arrival row order.
+    pub before: PanelStats,
+    /// Brick statistics under `perm`.
+    pub after: PanelStats,
+}
+
+impl Proposal {
+    /// Rows the proposal spans.
+    pub fn rows(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Predicted α improvement factor (1.0 when the matrix is empty).
+    pub fn alpha_gain(&self) -> f64 {
+        if self.before.alpha > 0.0 {
+            self.after.alpha / self.before.alpha
+        } else {
+            1.0
+        }
+    }
+
+    /// The reportable gains of activating this proposal, with `seconds`
+    /// recording the measured one-time cost.
+    pub fn gains(&self, seconds: f64) -> Gains {
+        Gains {
+            alpha_before: self.before.alpha,
+            alpha_after: self.after.alpha,
+            beta_before: self.before.beta,
+            beta_after: self.after.beta,
+            seconds,
+        }
+    }
+}
+
+/// Compute a reorder proposal for `csr` at tile sizes `(tm, tk)`:
+/// signatures, greedy clustering, and the exact before/after pricing the
+/// activation gate consumes.
+pub fn propose(csr: &Csr, tm: usize, tk: usize) -> Proposal {
+    let sigs = signature::row_signatures(csr);
+    let perm = cluster::pack(csr.rows, &sigs, tm);
+    let before = stats::panel_stats(csr, None, tm, tk);
+    let after = stats::panel_stats(csr, Some(&perm), tm, tk);
+    Proposal { perm, before, after }
+}
+
+/// Build the HRPB of `csr` under `perm` and attach the permutation: the
+/// registry's activation path. The native engine reads the attached
+/// permutation and scatters its output back to original row order.
+pub fn build_reordered(
+    csr: &Csr,
+    perm: RowPermutation,
+    tm: usize,
+    tk: usize,
+    threads: usize,
+) -> crate::hrpb::Hrpb {
+    let permuted = perm.apply_csr(csr);
+    let mut hrpb = crate::hrpb::builder::build_with_parallel(&permuted, tm, tk, threads);
+    hrpb.perm = Some(std::sync::Arc::new(perm));
+    hrpb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{TK, TM};
+    use crate::util::proptest::{check, SparseGen};
+
+    #[test]
+    fn identity_roundtrip_and_properties() {
+        let p = RowPermutation::identity(8);
+        assert!(p.is_identity());
+        assert_eq!(p.len(), 8);
+        p.validate().unwrap();
+        let coo = Coo::from_triplets(8, 8, &[(0, 1, 1.0), (7, 3, 2.0)]);
+        assert_eq!(p.apply_coo(&coo).to_dense(), coo.to_dense());
+    }
+
+    #[test]
+    fn prop_forward_compose_inverse_is_identity() {
+        let g = crate::util::proptest::UsizeGen { lo: 0, hi: 300 };
+        check("perm forward∘inverse = id", 60, &g, |&rows| {
+            let mut rng = Rng::new(rows as u64 * 7 + 1);
+            let p = RowPermutation::random(rows, &mut rng);
+            p.validate().is_ok()
+                && (0..rows).all(|o| p.new_to_old[p.old_to_new[o] as usize] as usize == o)
+                && (0..rows).all(|n| p.old_to_new[p.new_to_old[n] as usize] as usize == n)
+        });
+    }
+
+    #[test]
+    fn from_new_to_old_rejects_non_bijections() {
+        assert!(RowPermutation::from_new_to_old(vec![0, 0]).is_err(), "duplicate target");
+        assert!(RowPermutation::from_new_to_old(vec![2, 0]).is_err(), "out of range");
+        assert!(RowPermutation::from_new_to_old(vec![1, 0]).is_ok());
+    }
+
+    #[test]
+    fn apply_csr_permutes_rows_exactly() {
+        let coo = Coo::from_triplets(3, 4, &[(0, 1, 1.0), (1, 0, 2.0), (1, 3, 3.0), (2, 2, 4.0)]);
+        let csr = Csr::from_coo(&coo);
+        let p = RowPermutation::from_new_to_old(vec![2, 0, 1]).unwrap();
+        let r = p.apply_csr(&csr);
+        r.validate().unwrap();
+        let rows: Vec<Vec<(u32, f32)>> =
+            (0..3).map(|i| r.row_entries(i).collect()).collect();
+        assert_eq!(rows[0], vec![(2, 4.0)]);
+        assert_eq!(rows[1], vec![(1, 1.0)]);
+        assert_eq!(rows[2], vec![(0, 2.0), (3, 3.0)]);
+    }
+
+    #[test]
+    fn degenerate_single_row_and_all_empty() {
+        // single row: only one possible packing
+        let one = Csr::from_coo(&Coo::from_triplets(1, 8, &[(0, 3, 1.0)]));
+        let prop = propose(&one, TM, TK);
+        assert!(prop.perm.is_identity());
+        assert_eq!(prop.before, prop.after);
+
+        // all-empty rows: nothing to cluster, stats all zero
+        let empty = Csr::from_coo(&Coo::new(64, 32));
+        let prop = propose(&empty, TM, TK);
+        prop.perm.validate().unwrap();
+        assert_eq!(prop.after.nnz, 0);
+        assert_eq!(prop.after.num_bricks, 0);
+        assert_eq!(prop.after.alpha, 0.0);
+        assert_eq!(prop.alpha_gain(), 1.0);
+    }
+
+    #[test]
+    fn propose_recovers_shuffled_block_structure() {
+        // 16 dense 16-row units, rows shuffled: arrival order scatters every
+        // panel across ~16 units; clustering must reassemble them
+        let spec = crate::gen::MatrixSpec {
+            name: "t".into(),
+            rows: 256,
+            family: crate::gen::Family::BlockDiag { unit: 16, unit_density: 0.8 },
+            seed: 31,
+        };
+        let coo = spec.generate();
+        let shuffled = RowPermutation::random(coo.rows, &mut Rng::new(99)).apply_coo(&coo);
+        let csr = Csr::from_coo(&shuffled);
+        let prop = propose(&csr, TM, TK);
+        assert!(
+            prop.alpha_gain() > 2.0,
+            "clustering must recover the hidden units: α {} -> {}",
+            prop.before.alpha,
+            prop.after.alpha
+        );
+        assert!(prop.after.num_bricks < prop.before.num_bricks);
+    }
+
+    #[test]
+    fn prop_proposal_permutations_are_valid_and_priced() {
+        let g = SparseGen { max_m: 80, max_k: 100, max_density: 0.2 };
+        check("propose emits valid priced permutations", 30, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let csr = Csr::from_coo(&coo);
+            let prop = propose(&csr, TM, TK);
+            prop.perm.validate().is_ok()
+                && prop.perm.len() == case.m
+                && prop.before.nnz == coo.nnz()
+                && prop.after.nnz == coo.nnz()
+                && prop.after.alpha <= 1.0 + 1e-12
+        });
+    }
+
+    #[test]
+    fn build_reordered_attaches_the_permutation_and_decodes_back() {
+        let spec = crate::gen::MatrixSpec {
+            name: "t".into(),
+            rows: 128,
+            family: crate::gen::Family::Community {
+                communities: 8,
+                intra_degree: 10,
+                inter_frac: 0.05,
+            },
+            seed: 5,
+        };
+        let coo = spec.generate();
+        let shuffled = RowPermutation::random(coo.rows, &mut Rng::new(17)).apply_coo(&coo);
+        let csr = Csr::from_coo(&shuffled);
+        let prop = propose(&csr, TM, TK);
+        let hrpb = build_reordered(&csr, prop.perm.clone(), TM, TK, 3);
+        hrpb.validate().unwrap();
+        assert_eq!(hrpb.perm.as_deref(), Some(&prop.perm));
+        // decode scatters rows back: the dense form is the ORIGINAL matrix
+        assert_eq!(
+            crate::hrpb::decode::to_dense(&hrpb).max_abs_diff(&shuffled.to_dense()),
+            0.0,
+            "decode must honor the permutation"
+        );
+    }
+}

@@ -1,0 +1,132 @@
+//! Minhash column-block signatures — the similarity proxy behind the
+//! clustering pass.
+//!
+//! Two rows share a brick only when their nonzeros fall into the same
+//! 4-wide column block after panel compaction, so the natural similarity
+//! measure is the Jaccard overlap of their *column-block* supports
+//! (`col / BRICK_K`). A minhash signature estimates that overlap in O(1)
+//! per pair: component `i` is the minimum of hash `h_i` over the row's
+//! block ids, and `P[sig_a[i] == sig_b[i]] = J(a, b)` — so the fraction of
+//! agreeing components estimates the Jaccard similarity, and sorting rows
+//! lexicographically by signature is a multi-band LSH ordering that puts
+//! high-overlap rows next to each other.
+
+use crate::formats::Csr;
+use crate::params::BRICK_K;
+
+/// Signature width. 8 components estimate Jaccard at ±1/8 granularity —
+/// enough to separate "same support" from "disjoint support", which is
+/// what panel packing needs — at 32 bytes per row.
+pub const SIG_HASHES: usize = 8;
+
+/// A row's minhash signature over its column-block support.
+pub type Signature = [u32; SIG_HASHES];
+
+/// Signature of a row with no nonzeros: all-max, so empty rows sort after
+/// every real row and sink to the tail panels.
+pub const EMPTY_SIG: Signature = [u32::MAX; SIG_HASHES];
+
+/// Per-component hash seeds (distinct odd 64-bit constants; the SplitMix64
+/// increment spaced by multiplication keeps the streams independent).
+const SEEDS: [u64; SIG_HASHES] = [
+    0x9E3779B97F4A7C15,
+    0xBF58476D1CE4E5B9,
+    0x94D049BB133111EB,
+    0xD6E8FEB86659FD93,
+    0xA5A5A5A5A5A5A5A5 | 1,
+    0xC2B2AE3D27D4EB4F,
+    0x165667B19E3779F9,
+    0x27D4EB2F165667C5,
+];
+
+/// SplitMix64-style finalizer of `(block, seed)` truncated to 32 bits.
+#[inline]
+fn mix(block: u32, seed: u64) -> u32 {
+    let mut z = (block as u64).wrapping_add(seed);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    (z ^ (z >> 31)) as u32
+}
+
+/// Signature of one row given its (sorted) column ids.
+pub fn row_signature(cols: &[u32]) -> Signature {
+    if cols.is_empty() {
+        return EMPTY_SIG;
+    }
+    let mut sig = [u32::MAX; SIG_HASHES];
+    let mut last_block = u32::MAX;
+    for &c in cols {
+        let block = c / BRICK_K as u32;
+        if block == last_block {
+            continue; // cols are sorted: consecutive duplicates collapse
+        }
+        last_block = block;
+        for (s, seed) in sig.iter_mut().zip(SEEDS) {
+            *s = (*s).min(mix(block, seed));
+        }
+    }
+    sig
+}
+
+/// Signatures for every row of `csr`.
+pub fn row_signatures(csr: &Csr) -> Vec<Signature> {
+    (0..csr.rows)
+        .map(|r| row_signature(&csr.col_idx[csr.row_range(r)]))
+        .collect()
+}
+
+/// Number of agreeing components — `overlap / SIG_HASHES` estimates the
+/// Jaccard similarity of the two rows' column-block supports.
+#[inline]
+pub fn overlap(a: &Signature, b: &Signature) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+
+    #[test]
+    fn identical_supports_share_the_full_signature() {
+        let a = row_signature(&[0, 5, 9, 40]);
+        let b = row_signature(&[1, 4, 8, 41]); // same blocks {0, 1, 2, 10}
+        assert_eq!(a, b, "block-identical supports must collide exactly");
+        assert_eq!(overlap(&a, &b), SIG_HASHES);
+    }
+
+    #[test]
+    fn disjoint_supports_rarely_agree() {
+        let a = row_signature(&[0, 4, 8]);
+        let b = row_signature(&[400, 404, 408]);
+        assert!(overlap(&a, &b) <= 2, "disjoint blocks should almost never collide");
+    }
+
+    #[test]
+    fn empty_rows_sort_last() {
+        let real = row_signature(&[3]);
+        assert!(real < EMPTY_SIG);
+        assert_eq!(row_signature(&[]), EMPTY_SIG);
+    }
+
+    #[test]
+    fn partial_overlap_is_between() {
+        // half the blocks shared: expected overlap ~ SIG_HASHES/2
+        let a = row_signature(&[0, 4, 8, 12]);
+        let b = row_signature(&[0, 4, 100, 104]);
+        let o = overlap(&a, &b);
+        assert!(o >= 1 && o < SIG_HASHES, "overlap {o}");
+    }
+
+    #[test]
+    fn signatures_cover_every_row() {
+        let coo = Coo::from_triplets(4, 16, &[(0, 1, 1.0), (2, 8, 2.0), (2, 9, 3.0)]);
+        let sigs = row_signatures(&Csr::from_coo(&coo));
+        assert_eq!(sigs.len(), 4);
+        assert_eq!(sigs[1], EMPTY_SIG);
+        assert_eq!(sigs[3], EMPTY_SIG);
+        assert_ne!(sigs[0], EMPTY_SIG);
+        // cols 8 and 9 share block 2 -> single-block signature
+        assert_eq!(sigs[2], row_signature(&[8]));
+    }
+}

@@ -1,0 +1,188 @@
+//! Exact post-permutation HRPB brick statistics, computed from the CSR and
+//! a candidate permutation without building the HRPB.
+//!
+//! The builder compacts each panel's active columns to the left, so the
+//! panel's brick columns are exactly the 4-wide groups of the sorted
+//! column union, and every such group holds at least one nonzero. That
+//! makes the brick counts a pure function of per-panel column unions: no
+//! pattern encoding or value packing is needed to price a permutation.
+//! [`panel_stats`] is equivalence-tested against
+//! [`crate::hrpb::stats::compute`] on built instances — it is *exact*, not
+//! an approximation, which is what lets the planner gate activation on
+//! predicted α without ever paying for a speculative build.
+
+use crate::formats::Csr;
+use crate::params::{BRICK_K, BRICK_M};
+use crate::reorder::RowPermutation;
+use crate::util::bits::ceil_div;
+
+/// Brick statistics of an HRPB that *would be built* from a given row
+/// order (field meanings match [`crate::hrpb::HrpbStats`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PanelStats {
+    pub nnz: usize,
+    pub num_blocks: usize,
+    pub num_bricks: usize,
+    pub num_brick_cols: usize,
+    /// Brick density `nnz / (num_bricks · BRICK_M · BRICK_K)`.
+    pub alpha: f64,
+    /// Active bricks per occupied brick column (1.0 identically when
+    /// TM = BRICK_M).
+    pub beta: f64,
+}
+
+/// Compute the brick statistics of building `csr` at `(tm, tk)` under
+/// `perm` (`None` = arrival order).
+pub fn panel_stats(
+    csr: &Csr,
+    perm: Option<&RowPermutation>,
+    tm: usize,
+    tk: usize,
+) -> PanelStats {
+    assert!(tm % BRICK_M == 0 && tm > 0 && tm <= 256, "invalid TM {tm}");
+    assert!(tk % BRICK_K == 0 && tk > 0, "invalid TK {tk}");
+    if let Some(p) = perm {
+        assert_eq!(p.len(), csr.rows, "permutation rows != matrix rows");
+    }
+    let rows = csr.rows;
+    let num_panels = ceil_div(rows.max(1), tm);
+    let bricks_per_col = tm / BRICK_M;
+    let mut nnz = 0usize;
+    let mut num_blocks = 0usize;
+    let mut num_bricks = 0usize;
+    let mut num_brick_cols = 0usize;
+    // scratch reused across panels
+    let mut union: Vec<u32> = Vec::new();
+    let mut group: Vec<usize> = Vec::new();
+    for p in 0..num_panels {
+        let r0 = p * tm;
+        let r1 = ((p + 1) * tm).min(rows);
+        union.clear();
+        for n in r0..r1 {
+            let old = perm.map_or(n, |pm| pm.new_to_old[n] as usize);
+            union.extend_from_slice(&csr.col_idx[csr.row_range(old)]);
+        }
+        if union.is_empty() {
+            continue;
+        }
+        nnz += union.len();
+        union.sort_unstable();
+        union.dedup();
+        let l = union.len();
+        num_blocks += ceil_div(l, tk);
+        // compaction packs active columns left, so every 4-wide group of
+        // the union is an occupied brick column
+        num_brick_cols += ceil_div(l, BRICK_K);
+        if bricks_per_col == 1 {
+            // TM = BRICK_M: one brick row per panel — every occupied brick
+            // column holds exactly one brick
+            num_bricks += ceil_div(l, BRICK_K);
+        } else {
+            // taller panels: a brick is active iff its 16-row group touches
+            // its brick column; map each row's columns to compacted slots
+            // and count distinct (group, slot/4) pairs per group
+            for g in 0..bricks_per_col {
+                group.clear();
+                let g0 = r0 + g * BRICK_M;
+                let g1 = (g0 + BRICK_M).min(r1);
+                for n in g0..g1 {
+                    let old = perm.map_or(n, |pm| pm.new_to_old[n] as usize);
+                    for &c in &csr.col_idx[csr.row_range(old)] {
+                        let slot =
+                            union.binary_search(&c).expect("column is in the panel union");
+                        group.push(slot / BRICK_K);
+                    }
+                }
+                group.sort_unstable();
+                group.dedup();
+                num_bricks += group.len();
+            }
+        }
+    }
+    let brick_slots = (num_bricks * BRICK_M * BRICK_K) as f64;
+    let alpha = if num_bricks == 0 { 0.0 } else { nnz as f64 / brick_slots };
+    let beta = if num_brick_cols == 0 {
+        0.0
+    } else {
+        num_bricks as f64 / num_brick_cols as f64
+    };
+    PanelStats { nnz, num_blocks, num_bricks, num_brick_cols, alpha, beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Coo;
+    use crate::hrpb::{builder, stats as hstats};
+    use crate::util::proptest::{check, SparseGen};
+    use crate::util::rng::Rng;
+
+    fn assert_matches_built(csr: &Csr, perm: Option<&RowPermutation>, tm: usize, tk: usize) {
+        let predicted = panel_stats(csr, perm, tm, tk);
+        let built = match perm {
+            Some(p) => builder::build_with(&p.apply_csr(csr), tm, tk),
+            None => builder::build_with(csr, tm, tk),
+        };
+        let s = hstats::compute_serial(&built);
+        assert_eq!(predicted.nnz, s.nnz);
+        assert_eq!(predicted.num_blocks, s.num_blocks, "blocks at tm={tm} tk={tk}");
+        assert_eq!(predicted.num_bricks, s.num_bricks, "bricks at tm={tm} tk={tk}");
+        assert_eq!(predicted.num_brick_cols, s.num_brick_cols, "brick cols");
+        assert!((predicted.alpha - s.alpha).abs() < 1e-12);
+        assert!((predicted.beta - s.beta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_against_built_stats_at_default_tiles() {
+        let mut rng = Rng::new(60);
+        for density in [0.01, 0.05, 0.2] {
+            let coo = Coo::random(130, 170, density, &mut rng);
+            let csr = Csr::from_coo(&coo);
+            assert_matches_built(&csr, None, 16, 16);
+        }
+    }
+
+    #[test]
+    fn exact_for_taller_panels_and_other_tk() {
+        let mut rng = Rng::new(61);
+        let coo = Coo::random(200, 150, 0.08, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        assert_matches_built(&csr, None, 32, 16);
+        assert_matches_built(&csr, None, 16, 32);
+        assert_matches_built(&csr, None, 48, 8);
+    }
+
+    #[test]
+    fn exact_under_a_permutation() {
+        let mut rng = Rng::new(62);
+        let coo = Coo::random(96, 96, 0.1, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let perm = RowPermutation::random(96, &mut rng);
+        assert_matches_built(&csr, Some(&perm), 16, 16);
+        assert_matches_built(&csr, Some(&perm), 32, 16);
+    }
+
+    #[test]
+    fn prop_exactness_over_sparse_corpus() {
+        let g = SparseGen { max_m: 70, max_k: 90, max_density: 0.25 };
+        check("panel_stats == built stats", 25, &g, |case| {
+            let coo = Coo::from_triplets(case.m, case.k, &case.triplets);
+            let csr = Csr::from_coo(&coo);
+            let predicted = panel_stats(&csr, None, 16, 16);
+            let s = hstats::compute_serial(&builder::build_with(&csr, 16, 16));
+            predicted.num_bricks == s.num_bricks
+                && predicted.num_brick_cols == s.num_brick_cols
+                && predicted.num_blocks == s.num_blocks
+                && predicted.nnz == s.nnz
+        });
+    }
+
+    #[test]
+    fn empty_matrix_is_all_zero() {
+        let csr = Csr::from_coo(&Coo::new(32, 32));
+        let s = panel_stats(&csr, None, 16, 16);
+        assert_eq!(s.num_bricks, 0);
+        assert_eq!(s.alpha, 0.0);
+        assert_eq!(s.beta, 0.0);
+    }
+}

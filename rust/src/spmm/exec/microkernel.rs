@@ -8,6 +8,14 @@
 //! with a short scalar loop for the slab remainder.
 //!
 //! Every `b` slice must be at least as long as `c` (the current slab width).
+//!
+//! Association contract: every body folds its terms **left-to-right
+//! starting from the current C value** — `((c + a0·b0) + a1·b1) + …` — so
+//! splitting one ascending term sequence into consecutive fmaN calls
+//! produces bit-identical results. The row-reorder path relies on this: a
+//! permuted build regroups a row's (column-ordered) terms into different
+//! brick boundaries, and the left fold makes that regrouping numerically
+//! invisible (`spmm` on a reordered HRPB is bit-identical to unreordered).
 
 /// Vector lane granularity: 8 f32s = one 256-bit register.
 pub const LANES: usize = 8;
@@ -43,11 +51,11 @@ pub fn fma2(c: &mut [f32], a: [f32; 2], b: [&[f32]; 2]) {
         .zip(b1m.chunks_exact(LANES))
     {
         for ((cl, v0), v1) in cv.iter_mut().zip(v0).zip(v1) {
-            *cl += a[0] * v0 + a[1] * v1;
+            *cl = (*cl + a[0] * v0) + a[1] * v1;
         }
     }
     for ((cl, v0), v1) in ct.iter_mut().zip(b0t).zip(b1t) {
-        *cl += a[0] * v0 + a[1] * v1;
+        *cl = (*cl + a[0] * v0) + a[1] * v1;
     }
 }
 
@@ -67,11 +75,11 @@ pub fn fma3(c: &mut [f32], a: [f32; 3], b: [&[f32]; 3]) {
         .zip(b2m.chunks_exact(LANES))
     {
         for (((cl, v0), v1), v2) in cv.iter_mut().zip(v0).zip(v1).zip(v2) {
-            *cl += a[0] * v0 + a[1] * v1 + a[2] * v2;
+            *cl = ((*cl + a[0] * v0) + a[1] * v1) + a[2] * v2;
         }
     }
     for (((cl, v0), v1), v2) in ct.iter_mut().zip(b0t).zip(b1t).zip(b2t) {
-        *cl += a[0] * v0 + a[1] * v1 + a[2] * v2;
+        *cl = ((*cl + a[0] * v0) + a[1] * v1) + a[2] * v2;
     }
 }
 
@@ -93,11 +101,11 @@ pub fn fma4(c: &mut [f32], a: [f32; 4], b: [&[f32]; 4]) {
         .zip(b3m.chunks_exact(LANES))
     {
         for ((((cl, v0), v1), v2), v3) in cv.iter_mut().zip(v0).zip(v1).zip(v2).zip(v3) {
-            *cl += a[0] * v0 + a[1] * v1 + a[2] * v2 + a[3] * v3;
+            *cl = (((*cl + a[0] * v0) + a[1] * v1) + a[2] * v2) + a[3] * v3;
         }
     }
     for ((((cl, v0), v1), v2), v3) in ct.iter_mut().zip(b0t).zip(b1t).zip(b2t).zip(b3t) {
-        *cl += a[0] * v0 + a[1] * v1 + a[2] * v2 + a[3] * v3;
+        *cl = (((*cl + a[0] * v0) + a[1] * v1) + a[2] * v2) + a[3] * v3;
     }
 }
 
@@ -138,6 +146,44 @@ mod tests {
                     assert!((g - w).abs() <= 1e-5, "n={n} terms={terms}: {g} vs {w}");
                 }
             }
+        }
+    }
+
+    /// The association contract behind reorder bit-identity: any split of
+    /// one term sequence into consecutive fmaN calls is bit-identical.
+    #[test]
+    fn consecutive_splits_are_bit_identical() {
+        let mut rng = Rng::new(0xF11B);
+        for n in [1usize, 7, 8, 9, 33] {
+            let a: Vec<f32> = (0..4).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let b: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+
+            let mut fused = base.clone();
+            fma4(&mut fused, [a[0], a[1], a[2], a[3]], [&b[0], &b[1], &b[2], &b[3]]);
+
+            // 1+3, 2+2, 3+1, 1+1+1+1 — all must match the fused pass exactly
+            let mut split13 = base.clone();
+            fma1(&mut split13, a[0], &b[0]);
+            fma3(&mut split13, [a[1], a[2], a[3]], [&b[1], &b[2], &b[3]]);
+            assert_eq!(fused, split13, "n={n} 1+3");
+
+            let mut split22 = base.clone();
+            fma2(&mut split22, [a[0], a[1]], [&b[0], &b[1]]);
+            fma2(&mut split22, [a[2], a[3]], [&b[2], &b[3]]);
+            assert_eq!(fused, split22, "n={n} 2+2");
+
+            let mut split31 = base.clone();
+            fma3(&mut split31, [a[0], a[1], a[2]], [&b[0], &b[1], &b[2]]);
+            fma1(&mut split31, a[3], &b[3]);
+            assert_eq!(fused, split31, "n={n} 3+1");
+
+            let mut ones = base.clone();
+            for t in 0..4 {
+                fma1(&mut ones, a[t], &b[t]);
+            }
+            assert_eq!(fused, ones, "n={n} 1x4");
         }
     }
 

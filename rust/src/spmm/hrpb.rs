@@ -163,6 +163,11 @@ impl HrpbEngine {
         let partials: Mutex<Vec<(u32, Vec<f32>)>> = Mutex::new(Vec::new());
         let cptr = SendPtr(c.data.as_mut_ptr());
         let rows = self.hrpb.rows;
+        // inverse scatter ([`crate::reorder`]): with a build-time row
+        // permutation, unit-local row r of panel p lands in C row
+        // new_to_old[p·tm + r], so output comes back in original row order
+        // with no extra pass over C
+        let scatter: Option<&[u32]> = self.hrpb.perm.as_deref().map(|p| p.new_to_old.as_slice());
 
         let worker = |_: usize| {
             // private tile for atomic units only, reused across them
@@ -178,7 +183,10 @@ impl HrpbEngine {
                 if unit.atomic {
                     tile.clear();
                     tile.resize(rows_here * n, 0.0);
-                    self.run_unit(unit, b, &mut tile, n, ts);
+                    let tptr = SendPtr(tile.as_mut_ptr());
+                    // SAFETY: local rows index this worker's private
+                    // rows_here × n tile, zeroed just above.
+                    self.run_unit(unit, b, &|r| unsafe { tptr.get().add(r * n) }, n, ts);
                     // the copy covers only the ragged panel's real rows and
                     // is built *before* taking the partials lock
                     let copy = tile.clone();
@@ -188,12 +196,23 @@ impl HrpbEngine {
                     // straight into C (the tile buffer + copy would double
                     // the per-panel traffic — EXPERIMENTS.md §Perf step 2).
                     // SAFETY: non-atomic units own their panel exclusively
-                    // (Schedule::validate guarantees exact tiling), and C
-                    // was zeroed above, matching run_unit's contract.
-                    let out = unsafe {
-                        std::slice::from_raw_parts_mut(cptr.get().add(r0 * n), rows_here * n)
-                    };
-                    self.run_unit(unit, b, out, n, ts);
+                    // (Schedule::validate guarantees exact tiling), the
+                    // scatter map is a bijection so target rows stay
+                    // disjoint across units, and C was zeroed above,
+                    // matching run_unit's contract.
+                    self.run_unit(
+                        unit,
+                        b,
+                        &|r| {
+                            let row = match scatter {
+                                Some(s) => s[r0 + r] as usize,
+                                None => r0 + r,
+                            };
+                            unsafe { cptr.get().add(row * n) }
+                        },
+                        n,
+                        ts,
+                    );
                 }
             }
         };
@@ -211,21 +230,39 @@ impl HrpbEngine {
             });
         }
 
-        // consolidation of split panels (the atomic cost of §5)
+        // consolidation of split panels (the atomic cost of §5), routed
+        // through the same inverse scatter as the direct path
         for (panel, tile) in partials.into_inner().unwrap() {
             let r0 = panel as usize * tm;
-            let out = &mut c.data[r0 * n..r0 * n + tile.len()];
-            for (cv, tv) in out.iter_mut().zip(&tile) {
-                *cv += tv;
+            let rows_here = tile.len() / n;
+            for r in 0..rows_here {
+                let row = match scatter {
+                    Some(s) => s[r0 + r] as usize,
+                    None => r0 + r,
+                };
+                let out = &mut c.data[row * n..row * n + n];
+                for (cv, tv) in out.iter_mut().zip(&tile[r * n..(r + 1) * n]) {
+                    *cv += tv;
+                }
             }
         }
     }
 
-    /// Process one work unit, accumulating into `tile` (either a private
-    /// `rows_here × n` buffer or the panel's rows of C directly). The caller
-    /// guarantees `tile` starts zeroed; `ts` is the column-slab width.
+    /// Process one work unit. `row_ptr(r)` resolves unit-local row `r`
+    /// (0-based within the panel) to the start of its length-`n` output
+    /// row — a private tile row, or a (possibly permutation-scattered) row
+    /// of C itself. The caller guarantees every resolved row starts zeroed
+    /// and is owned exclusively by this unit; `ts` is the column-slab
+    /// width.
     #[inline]
-    fn run_unit(&self, unit: &WorkUnit, b: &Dense, tile: &mut [f32], n: usize, ts: usize) {
+    fn run_unit<F: Fn(usize) -> *mut f32>(
+        &self,
+        unit: &WorkUnit,
+        b: &Dense,
+        row_ptr: &F,
+        n: usize,
+        ts: usize,
+    ) {
         let tk = self.hrpb.tk;
         let brick_cols = tk / BRICK_K;
         let panel_base = self.hrpb.blocked_row_ptr[unit.panel as usize] as usize;
@@ -265,8 +302,12 @@ impl HrpbEngine {
                             let r = rest.trailing_zeros() as usize / BRICK_K;
                             let row_bits = (pattern >> (r * BRICK_K)) & 0xF;
                             rest &= !(0xFu64 << (r * BRICK_K));
-                            let row0 = (br + r) * n;
-                            let crow = &mut tile[row0 + s0..row0 + s1];
+                            // SAFETY: the caller owns local row `br + r`
+                            // exclusively (see the method contract), and
+                            // distinct local rows never alias.
+                            let crow = unsafe {
+                                std::slice::from_raw_parts_mut(row_ptr(br + r).add(s0), s1 - s0)
+                            };
                             // the MMA (line 41), zero-skipped on CPU. The
                             // brick row's 1-4 products fuse into ONE pass
                             // over the C slab — the CPU analogue of the
@@ -438,6 +479,109 @@ mod tests {
         pinned.set_slab_width(48);
         assert_eq!(pinned.slab_width(), 48);
         assert!(pinned.spmm(&b).rel_fro_error(&want) < 1e-6);
+    }
+
+    /// Build the (unreordered, reordered) HRPB pair for a matrix; the
+    /// reordered side always gets a non-trivial permutation.
+    fn reorder_pair(coo: &crate::formats::Coo) -> (crate::hrpb::Hrpb, crate::hrpb::Hrpb) {
+        use crate::params::{TK, TM};
+        let csr = crate::formats::Csr::from_coo(coo);
+        let orig = crate::hrpb::builder::build_with(&csr, TM, TK);
+        let prop = crate::reorder::propose(&csr, TM, TK);
+        let reord = crate::reorder::build_reordered(&csr, prop.perm, TM, TK, 3);
+        (orig, reord)
+    }
+
+    /// The reorder contract: output rows come back in original order, and
+    /// (on split-free schedules) the result is BIT-identical to the
+    /// unreordered engine — a row permutation does not change per-row
+    /// accumulation order, and the micro-kernels fold terms left-to-right
+    /// so regrouped brick boundaries are numerically invisible.
+    #[test]
+    fn reordered_spmm_is_bit_identical_to_unreordered() {
+        let spec = crate::gen::MatrixSpec {
+            name: "t".into(),
+            rows: 384,
+            family: crate::gen::Family::Community {
+                communities: 24,
+                intra_degree: 10,
+                inter_frac: 0.08,
+            },
+            seed: 0x5EED,
+        };
+        let coo = crate::reorder::RowPermutation::random(384, &mut Rng::new(7))
+            .apply_coo(&spec.generate());
+        let (orig, reord) = reorder_pair(&coo);
+        assert!(reord.perm.as_ref().is_some_and(|p| !p.is_identity()), "needs a real perm");
+        let e_orig = HrpbEngine::with_schedule(orig.clone(), loadbalance::schedule_none(&orig));
+        let e_reord = HrpbEngine::with_schedule(reord.clone(), loadbalance::schedule_none(&reord));
+        let b = Dense::random(coo.cols, 40, &mut Rng::new(8));
+        let want = e_orig.spmm(&b);
+        assert_eq!(e_reord.spmm(&b).max_abs_diff(&want), 0.0, "spmm must be bit-identical");
+        // spmm_into into a NaN-dirty buffer: the scatter epilogue must
+        // overwrite every row
+        let mut dirty = Dense::from_vec(coo.rows, 40, vec![f32::NAN; coo.rows * 40]);
+        e_reord.spmm_into(&b, &mut dirty);
+        assert_eq!(dirty.max_abs_diff(&want), 0.0, "spmm_into must be bit-identical");
+    }
+
+    #[test]
+    fn prop_reordered_engine_is_bit_identical_on_random_sparse() {
+        let g = SparseGen { max_m: 90, max_k: 110, max_density: 0.2 };
+        check("reordered == unreordered (bit exact)", 25, &g, |case| {
+            let coo = crate::formats::Coo::from_triplets(case.m, case.k, &case.triplets);
+            let (orig, reord) = reorder_pair(&coo);
+            let e_o = HrpbEngine::with_schedule(orig.clone(), loadbalance::schedule_none(&orig));
+            let e_r =
+                HrpbEngine::with_schedule(reord.clone(), loadbalance::schedule_none(&reord));
+            let b = Dense::random(case.k, 17, &mut Rng::new(case.m as u64 * 13 + 5));
+            let want = e_o.spmm(&b);
+            let mut dirty =
+                Dense::from_vec(case.m, 17, vec![f32::NAN; case.m * 17]);
+            e_r.spmm_into(&b, &mut dirty);
+            e_r.spmm(&b).max_abs_diff(&want) == 0.0 && dirty.max_abs_diff(&want) == 0.0
+        });
+    }
+
+    /// The default (wave-aware, pooled) path on a reordered build still
+    /// matches the dense oracle — covering scattered direct writes, the
+    /// atomic-unit merge epilogue, and ragged last panels.
+    #[test]
+    fn reordered_default_engine_matches_oracle_including_ragged_rows() {
+        let mut rng = Rng::new(97);
+        let coo = crate::formats::Coo::random(275, 160, 0.07, &mut rng);
+        let (_, reord) = reorder_pair(&coo);
+        let engine = HrpbEngine::from_hrpb(reord);
+        let b = Dense::random(160, 33, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        assert!(engine.spmm(&b).rel_fro_error(&want) < 1e-5, "rows scatter to original order");
+        let mut c = Dense::from_vec(275, 33, vec![f32::NAN; 275 * 33]);
+        engine.spmm_into(&b, &mut c);
+        assert!(c.rel_fro_error(&want) < 1e-5);
+    }
+
+    /// Split (atomic) schedules on a reordered build merge partial tiles
+    /// through the scatter map.
+    #[test]
+    fn reordered_split_schedule_merges_through_the_scatter() {
+        let mut rng = Rng::new(98);
+        let mut t = Vec::new();
+        for c in 0..220usize {
+            t.push((c % 16, c * 2, rng.nz_value()));
+        }
+        for r in 16..128 {
+            t.push((r, (r * 7) % 440, rng.nz_value()));
+        }
+        let coo = crate::formats::Coo::from_triplets(128, 440, &t);
+        let (_, reord) = reorder_pair(&coo);
+        let split = HrpbEngine::with_schedule(
+            reord.clone(),
+            loadbalance::schedule_avg_split(&reord),
+        );
+        assert!(split.schedule().atomic_units > 0, "test needs real splitting");
+        let b = Dense::random(440, 24, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        assert!(split.spmm(&b).rel_fro_error(&want) < 1e-5);
     }
 
     /// The pool-reuse property: many threads issuing many calls against
