@@ -46,6 +46,7 @@ fn drive(engine_policy: EnginePolicy, pjrt: Option<cutespmm::runtime::PjrtHandle
             engine: engine_policy,
             qos: None,
             artifact_dir: None,
+            ..Default::default()
         },
         pjrt,
     ));
@@ -92,7 +93,7 @@ fn drive(engine_policy: EnginePolicy, pjrt: Option<cutespmm::runtime::PjrtHandle
         wall_s,
         p50_us: m.request_latency.percentile_us(50.0),
         p95_us: m.request_latency.percentile_us(95.0),
-        served_gflop: *m.flops.lock().unwrap() / 1e9,
+        served_gflop: m.flops() / 1e9,
     };
     if let Ok(coord) = Arc::try_unwrap(coord) {
         coord.shutdown();

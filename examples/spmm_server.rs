@@ -35,6 +35,7 @@ fn main() {
             engine,
             qos: None,
             artifact_dir: None,
+            ..Default::default()
         },
         pjrt_svc.as_ref().map(|s| s.handle()),
     ));

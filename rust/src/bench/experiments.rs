@@ -1692,6 +1692,288 @@ pub fn qos_saturation() -> String {
     out
 }
 
+/// One tracing mode's outcome over the shared serving workload: closed-loop
+/// QoS submission waves against a live coordinator, with tracing off,
+/// sampled, or full.
+#[derive(Clone, Debug)]
+pub struct TraceOutcome {
+    pub mode: &'static str,
+    pub requests: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub wall_s: f64,
+    pub req_per_s: f64,
+    /// Spans drained after the run (0 for the disabled modes).
+    pub spans: usize,
+    /// Spans lost to ring overflow.
+    pub dropped: u64,
+    /// Summed `exec` span duration — reconciled against `observed_us`.
+    pub exec_span_us: u64,
+    /// Engine-lane observed time over the same run (the metrics side of
+    /// the reconciliation).
+    pub observed_us: u64,
+}
+
+/// Run the trace-overhead experiment measurements. `quick` shrinks the
+/// matrix and request count (CI smoke).
+pub fn trace_outcomes(quick: bool) -> Vec<TraceOutcome> {
+    if quick {
+        trace_outcomes_for(600, 192)
+    } else {
+        trace_outcomes_for(3000, 768)
+    }
+}
+
+/// Measurement core: the same QoS serving workload under four trace modes —
+/// `baseline` and `off` are both untraced (their delta is run-to-run
+/// noise; `off` vs `baseline` is the disabled-gate cost the ≤ 2%
+/// acceptance budget bounds), `sampled` records 10% of request trees, and
+/// `full` records everything including kernel spans and writes the
+/// Perfetto-loadable sample export.
+pub fn trace_outcomes_for(rows: usize, requests: usize) -> Vec<TraceOutcome> {
+    use crate::coordinator::{Config, Coordinator};
+    use crate::trace::{self, TraceConfig};
+    use crate::util::rng::Rng;
+    use std::time::Instant;
+
+    // tracing state is process-global: one session at a time
+    let _session = trace::session_guard();
+
+    let spec = MatrixSpec {
+        name: "trace-banded".into(),
+        rows,
+        family: Family::Banded { bandwidth: 24, band_fill: 0.65, noise: 0.01 },
+        seed: 0x72ACE,
+    };
+    let coo = spec.generate();
+    let off = TraceConfig::default();
+    let modes: [(&'static str, TraceConfig); 4] = [
+        ("baseline", off),
+        ("off", off),
+        (
+            "sampled",
+            TraceConfig { enabled: true, sample_rate: 0.1, kernel: false, ring_capacity: 1 << 16 },
+        ),
+        (
+            "full",
+            TraceConfig { enabled: true, sample_rate: 1.0, kernel: true, ring_capacity: 1 << 16 },
+        ),
+    ];
+
+    let mut out = Vec::new();
+    for (mode, tcfg) in modes {
+        // leftover spans from a previous mode must not leak into this one
+        trace::disable();
+        let _ = trace::drain();
+        let coord = Coordinator::start(
+            Config {
+                workers: 2,
+                qos: Some(qos::QosConfig {
+                    queue_capacity: 512,
+                    watermark_s: 0.0,
+                    default_deadline: None,
+                }),
+                trace: tcfg,
+                ..Default::default()
+            },
+            None,
+        );
+        let id = coord.register(&spec.name, &coo);
+        let mut rng = Rng::new(0x72ACE2);
+        let b = Dense::random(coo.cols, 16, &mut rng);
+        let mut served = 0usize;
+        let mut shed = 0usize;
+        let mut sent = 0usize;
+        let t_wall = Instant::now();
+        while sent < requests {
+            let wave = 64.min(requests - sent);
+            let mut pending = Vec::with_capacity(wave);
+            for i in 0..wave {
+                let priority =
+                    if (sent + i) % 4 == 0 { Priority::High } else { Priority::Normal };
+                match coord.submit_qos(id, b.clone(), priority, None) {
+                    Ok(rx) => pending.push(rx),
+                    Err(_) => shed += 1,
+                }
+            }
+            sent += wave;
+            for rx in pending {
+                if matches!(rx.recv(), Ok(Ok(_))) {
+                    served += 1;
+                }
+            }
+        }
+        let wall_s = t_wall.elapsed().as_secs_f64();
+        let observed_us: u64 =
+            coord.metrics().engine_snapshot().iter().map(|l| l.observed_us).sum();
+        coord.shutdown();
+        let tr = trace::drain();
+        trace::disable();
+        if mode == "full" {
+            let _ = tr.write_chrome(&results_dir().join("sample.trace.json"));
+        }
+        out.push(TraceOutcome {
+            mode,
+            requests,
+            served,
+            shed,
+            wall_s,
+            req_per_s: served as f64 / wall_s.max(1e-9),
+            spans: tr.spans.len(),
+            dropped: tr.dropped,
+            exec_span_us: tr.sum_dur_us("exec"),
+            observed_us,
+        });
+    }
+    out
+}
+
+/// Write the machine-readable overhead record the CI uploads.
+fn write_trace_json(
+    outcomes: &[TraceOutcome],
+    overhead: &[(&'static str, f64)],
+    reconcile_pct: f64,
+) -> std::path::PathBuf {
+    use crate::util::json::Json;
+    let mut doc = vec![("bench", Json::str("trace_overhead")), ("pr", Json::num(6.0))];
+    for (mode, pct) in overhead {
+        let key: &'static str = match *mode {
+            "off" => "overhead_off_pct",
+            "sampled" => "overhead_sampled_pct",
+            "full" => "overhead_full_pct",
+            _ => continue,
+        };
+        doc.push((key, Json::num(*pct)));
+    }
+    doc.push(("exec_reconcile_pct", Json::num(reconcile_pct)));
+    doc.push(("acceptance_overhead_off_pct", Json::num(2.0)));
+    doc.push(("acceptance_reconcile_pct", Json::num(5.0)));
+    doc.push((
+        "cases",
+        Json::arr(outcomes.iter().map(|o| {
+            Json::obj(vec![
+                ("mode", Json::str(o.mode)),
+                ("requests", Json::num(o.requests as f64)),
+                ("served", Json::num(o.served as f64)),
+                ("shed", Json::num(o.shed as f64)),
+                ("wall_s", Json::num(o.wall_s)),
+                ("req_per_s", Json::num(o.req_per_s)),
+                ("spans", Json::num(o.spans as f64)),
+                ("dropped", Json::num(o.dropped as f64)),
+                ("exec_span_us", Json::num(o.exec_span_us as f64)),
+                ("observed_us", Json::num(o.observed_us as f64)),
+            ])
+        })),
+    ));
+    let path = results_dir().join("BENCH_PR6.json");
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(&path, Json::obj(doc).to_string());
+    path
+}
+
+/// Trace-overhead experiment — the QoS serving workload with tracing off /
+/// sampled / full, emitting `BENCH_PR6.json` and a Perfetto-loadable
+/// `sample.trace.json`.
+pub fn trace_overhead(quick: bool) -> String {
+    let outcomes = trace_outcomes(quick);
+    trace_report(&outcomes)
+}
+
+/// Render the trace experiment (split so tests measure once and reuse).
+pub fn trace_report(outcomes: &[TraceOutcome]) -> String {
+    let mut out = String::from(
+        "== trace: observability overhead — off / sampled / full vs untraced baseline ==\n",
+    );
+    let baseline_rps = outcomes
+        .iter()
+        .find(|o| o.mode == "baseline")
+        .map(|o| o.req_per_s)
+        .unwrap_or(f64::NAN);
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut overhead: Vec<(&'static str, f64)> = Vec::new();
+    let mut reconcile_pct = 0.0;
+    for o in outcomes {
+        let oh_pct = 100.0 * (baseline_rps - o.req_per_s) / baseline_rps.max(1e-9);
+        if o.mode != "baseline" {
+            overhead.push((o.mode, oh_pct));
+        }
+        if o.mode == "full" && o.observed_us > 0 {
+            reconcile_pct = 100.0 * (o.exec_span_us as f64 - o.observed_us as f64).abs()
+                / o.observed_us as f64;
+        }
+        rows.push(vec![
+            o.mode.to_string(),
+            format!("{}/{}", o.served, o.requests),
+            o.shed.to_string(),
+            format!("{:.1}", o.wall_s * 1e3),
+            format!("{:.0}", o.req_per_s),
+            if o.mode == "baseline" { "-".into() } else { format!("{oh_pct:+.1}%") },
+            o.spans.to_string(),
+            o.dropped.to_string(),
+        ]);
+        csv.push(vec![
+            o.mode.to_string(),
+            o.requests.to_string(),
+            o.served.to_string(),
+            o.shed.to_string(),
+            format!("{}", o.wall_s),
+            format!("{:.2}", o.req_per_s),
+            o.spans.to_string(),
+            o.dropped.to_string(),
+            o.exec_span_us.to_string(),
+            o.observed_us.to_string(),
+        ]);
+    }
+    out.push_str(&render::table(
+        &["mode", "served", "shed", "wall(ms)", "req/s", "overhead", "spans", "dropped"],
+        &rows,
+    ));
+    if let Some((_, off_pct)) = overhead.iter().find(|(m, _)| *m == "off") {
+        out.push_str(&format!(
+            "\ndisabled-tracing overhead: {off_pct:+.1}% (acceptance budget: 2.0%; \
+             `off` differs from `baseline` only by run-to-run noise — both run the \
+             same one-relaxed-load gates)\n"
+        ));
+    }
+    out.push_str(&format!(
+        "exec-span reconciliation (full mode): summed exec spans vs engine-lane \
+         observed_us differ by {reconcile_pct:.1}% (acceptance: 5%; equal by \
+         construction — both read the same batch timestamps)\n",
+    ));
+    out.push_str(
+        "methodology: same closed-loop QoS workload per mode (fresh coordinator, same \
+         matrix, 64-deep submission waves); overhead is the req/s delta vs the untraced \
+         baseline run, so it includes sampling hashes, span recording, and ring resets \
+         — everything a production deployment would pay.\n",
+    );
+    let _ = render::write_csv(
+        &results_dir().join("trace.csv"),
+        &[
+            "mode",
+            "requests",
+            "served",
+            "shed",
+            "wall_s",
+            "req_per_s",
+            "spans",
+            "dropped",
+            "exec_span_us",
+            "observed_us",
+        ],
+        &csv,
+    );
+    let json_path = write_trace_json(outcomes, &overhead, reconcile_pct);
+    out.push_str(&format!("machine-readable record -> {}\n", json_path.display()));
+    out.push_str(&format!(
+        "perfetto sample -> {} (open at https://ui.perfetto.dev)\n",
+        results_dir().join("sample.trace.json").display()
+    ));
+    out
+}
+
 /// Run the corpus once at the scale implied by `quick` for the corpus-wide
 /// experiments (fig2/7/9/10, table2).
 pub fn corpus_records(quick: bool) -> Vec<Record> {
@@ -1780,6 +2062,48 @@ mod tests {
         assert_eq!(doc.get("bench").unwrap().as_str(), Some("exec_runtime"));
         assert!(doc.get("geomean_speedup_n256").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(doc.get("cases").unwrap().as_arr().unwrap().len(), outcomes.len());
+    }
+
+    /// Acceptance for the trace experiment: all four modes serve the full
+    /// workload, the full mode actually records spans, and both
+    /// machine-readable artifacts (BENCH_PR6.json, sample.trace.json) land
+    /// and parse. The ≤ 2% overhead figure itself is printed by the
+    /// release-mode `experiment trace` — a perf figure measured on real
+    /// hosts, not asserted in debug-mode CI (the exec experiment set this
+    /// precedent).
+    #[test]
+    fn trace_modes_run_and_emit_valid_json() {
+        let outcomes = trace_outcomes_for(96, 32);
+        assert_eq!(outcomes.len(), 4);
+        for o in &outcomes {
+            assert_eq!(o.served + o.shed, o.requests, "{}: every request resolves", o.mode);
+            assert!(o.served > 0, "{}: at least some requests served", o.mode);
+        }
+        let full = outcomes.iter().find(|o| o.mode == "full").expect("full mode present");
+        assert!(full.spans > 0, "full tracing records spans");
+        assert!(full.exec_span_us > 0, "exec spans carry duration");
+        for o in outcomes.iter().filter(|o| o.mode == "baseline" || o.mode == "off") {
+            assert_eq!(o.spans, 0, "{}: disabled tracing records nothing", o.mode);
+        }
+
+        let report = trace_report(&outcomes);
+        assert!(report.contains("== trace:"), "{report}");
+        assert!(report.contains("acceptance budget: 2.0%"), "{report}");
+        assert!(report.contains("BENCH_PR6.json"), "{report}");
+        let text = std::fs::read_to_string(results_dir().join("BENCH_PR6.json"))
+            .expect("BENCH_PR6.json written");
+        let doc = crate::util::json::parse(&text).expect("BENCH_PR6.json parses");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("trace_overhead"));
+        assert_eq!(doc.get("pr").unwrap().as_usize(), Some(6));
+        assert!(doc.get("overhead_full_pct").unwrap().as_f64().is_some());
+        assert_eq!(doc.get("cases").unwrap().as_arr().unwrap().len(), 4);
+        let sample = std::fs::read_to_string(results_dir().join("sample.trace.json"))
+            .expect("sample.trace.json written");
+        let chrome = crate::util::json::parse(&sample).expect("sample.trace.json parses");
+        assert!(
+            !chrome.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+            "the Perfetto sample carries events"
+        );
     }
 
     /// Acceptance for the QoS saturation run: the bounded-queue policy holds

@@ -2,9 +2,18 @@
 //! per-engine routing lanes (which engine served what, and how far the
 //! observed latency drifts from the planner's prediction), and per-lane QoS
 //! admission counters (admitted / shed-by-reason / depth / queue wait).
+//!
+//! Export model: [`Metrics::snapshot`] produces a [`MetricsSnapshot`] — the
+//! structured, machine-readable view (full histogram buckets, p999,
+//! per-lane QoS, artifact/arena/reorder sections) with a
+//! [`MetricsSnapshot::to_json`] serialization for scrapers
+//! (`cutespmm metrics`, `serve --metrics-out`). The human-readable
+//! [`Metrics::report`] string is *rendered from* that snapshot, so every
+//! report field has a structured source of truth.
 
 use crate::qos::{Priority, RejectReason};
 use crate::spmm::Algo;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -55,20 +64,27 @@ impl LatencyHistogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// Approximate percentile from the log-2 buckets (upper bound of the
-    /// bucket containing the p-quantile).
+    /// Approximate percentile from the log-2 buckets, linearly interpolated
+    /// within the bucket containing the p-quantile (midpoint rank
+    /// convention: a single-sample bucket reports the bucket *center*).
+    /// The old implementation returned the bucket's upper bound, which
+    /// overstated p50 by up to 2×. Clamped to the observed maximum.
     pub fn percentile_us(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let want = ((p / 100.0) * total as f64).ceil() as u64;
+        let want = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= want {
-                return 1u64 << (i + 1);
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 && seen + c >= want {
+                let lo = (1u64 << i) as f64;
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = ((want - seen) as f64 - 0.5) / c as f64;
+                return ((lo + frac * (hi - lo)).round() as u64).min(self.max_us());
             }
+            seen += c;
         }
         self.max_us()
     }
@@ -81,6 +97,65 @@ impl LatencyHistogram {
             .map(|(i, b)| (1u64 << (i + 1), b.load(Ordering::Relaxed)))
             .filter(|&(_, c)| c > 0)
             .collect()
+    }
+
+    /// Full structured view: summary statistics, tail percentiles
+    /// (including p999), and every non-empty bucket with its bounds.
+    pub fn summarize(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            max_us: self.max_us(),
+            p50_us: self.percentile_us(50.0),
+            p95_us: self.percentile_us(95.0),
+            p99_us: self.percentile_us(99.0),
+            p999_us: self.percentile_us(99.9),
+            buckets: self
+                .buckets
+                .iter()
+                .enumerate()
+                .map(|(i, b)| (1u64 << i, 1u64 << (i + 1), b.load(Ordering::Relaxed)))
+                .filter(|&(_, _, c)| c > 0)
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time structured view of a [`LatencyHistogram`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    /// Non-empty log-2 buckets as (lower bound µs, upper bound µs, count).
+    pub buckets: Vec<(u64, u64, u64)>,
+}
+
+impl HistogramSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("max_us", Json::num(self.max_us as f64)),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p95_us", Json::num(self.p95_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+            ("p999_us", Json::num(self.p999_us as f64)),
+            (
+                "buckets",
+                Json::arr(self.buckets.iter().map(|&(lo, hi, c)| {
+                    Json::obj(vec![
+                        ("lo_us", Json::num(lo as f64)),
+                        ("hi_us", Json::num(hi as f64)),
+                        ("count", Json::num(c as f64)),
+                    ])
+                })),
+            ),
+        ])
     }
 }
 
@@ -193,8 +268,10 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub rejected: AtomicU64,
     pub queue_depth: AtomicUsize,
-    /// FLOPs served (useful, 2·nnz·n per request).
-    pub flops: Mutex<f64>,
+    /// FLOPs served (useful, 2·nnz·n per request), stored as `f64` bits and
+    /// accumulated with a CAS loop — this was the only lock taken on the
+    /// per-request hot path. Read through [`Metrics::flops`].
+    pub flops: AtomicU64,
     /// Per-engine routing lanes ([`Algo::index`] + [`PJRT_LANE`]).
     pub engines: [EngineLane; ENGINE_LANES],
     /// QoS admission lanes ([`Priority::index`]); silent until the
@@ -231,8 +308,24 @@ fn qos_cost_us(cost_s: f64) -> u64 {
 }
 
 impl Metrics {
+    /// Accumulate served FLOPs lock-free: a compare-exchange loop over the
+    /// f64 bit pattern (contention is rare — one update per reply — so the
+    /// loop almost always succeeds on the first attempt).
     pub fn add_flops(&self, f: f64) {
-        *self.flops.lock().unwrap() += f;
+        let mut cur = self.flops.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + f).to_bits();
+            match self.flops.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total FLOPs served.
+    pub fn flops(&self) -> f64 {
+        f64::from_bits(self.flops.load(Ordering::Relaxed))
     }
 
     /// Record one executed batch on a routing lane. `predicted_s` is the
@@ -342,30 +435,212 @@ impl Metrics {
             .collect()
     }
 
+    /// Capture the full structured snapshot: every counter, both latency
+    /// histograms with buckets and tail percentiles, routing lanes,
+    /// artifact/arena/reorder mirrors, and (when active) per-lane QoS.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let qos_active = self
+            .qos
+            .iter()
+            .any(|l| l.admitted.load(Ordering::Relaxed) > 0 || l.shed_total() > 0);
+        let qos = qos_active.then(|| {
+            Priority::all()
+                .into_iter()
+                .map(|p| {
+                    let l = &self.qos[p.index()];
+                    QosLaneSnapshot {
+                        lane: p.name(),
+                        admitted: l.admitted.load(Ordering::Relaxed),
+                        depth: l.depth.load(Ordering::Relaxed),
+                        shed: RejectReason::all()
+                            .into_iter()
+                            .map(|r| (r.name(), l.shed[r.index()].load(Ordering::Relaxed)))
+                            .collect(),
+                        queue_wait: l.queue_wait.summarize(),
+                    }
+                })
+                .collect()
+        });
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            avg_batch: self.batched_requests.load(Ordering::Relaxed) as f64
+                / batches.max(1) as f64,
+            request_latency: self.request_latency.summarize(),
+            exec_latency: self.exec_latency.summarize(),
+            served_gflop: self.flops() / 1e9,
+            engines: self.engine_snapshot(),
+            artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
+            artifact_misses: self.artifact_misses.load(Ordering::Relaxed),
+            artifact_invalidated: self.artifact_invalidated.load(Ordering::Relaxed),
+            arena_hits: self.arena_hits.load(Ordering::Relaxed),
+            arena_misses: self.arena_misses.load(Ordering::Relaxed),
+            reorder: *self.reorder.lock().unwrap(),
+            qos,
+            qos_downstream_cost_s: self.qos_downstream_cost_s(),
+        }
+    }
+
+    /// Human-readable one-line report, rendered from [`Metrics::snapshot`]
+    /// so every field here has a structured, scrapable source of truth.
     pub fn report(&self) -> String {
+        self.snapshot().render()
+    }
+}
+
+/// One QoS admission lane in a [`MetricsSnapshot`].
+#[derive(Clone, Debug)]
+pub struct QosLaneSnapshot {
+    pub lane: &'static str,
+    pub admitted: u64,
+    pub depth: usize,
+    /// Shed counts per [`RejectReason`], *all* reasons including zeros —
+    /// scrapers should not need the enum to see a zero.
+    pub shed: Vec<(&'static str, u64)>,
+    pub queue_wait: HistogramSnapshot,
+}
+
+/// Structured point-in-time export of every serving metric — the
+/// machine-readable replacement for string-grepping [`Metrics::report`]
+/// (which is rendered from this snapshot).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub failures: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub queue_depth: usize,
+    pub avg_batch: f64,
+    pub request_latency: HistogramSnapshot,
+    pub exec_latency: HistogramSnapshot,
+    pub served_gflop: f64,
+    /// Routing lanes that served at least one batch.
+    pub engines: Vec<EngineLaneSnapshot>,
+    pub artifact_hits: u64,
+    pub artifact_misses: u64,
+    pub artifact_invalidated: u64,
+    pub arena_hits: u64,
+    pub arena_misses: u64,
+    pub reorder: ReorderSnapshot,
+    /// Per-priority admission lanes; `None` until the QoS layer saw
+    /// activity (keeps the report section silent, as before).
+    pub qos: Option<Vec<QosLaneSnapshot>>,
+    pub qos_downstream_cost_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Serialize for scrapers (`cutespmm metrics`, `serve --metrics-out`).
+    /// `qos` is an empty array when the admission layer never engaged, so
+    /// the key set is stable.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("responses", Json::num(self.responses as f64)),
+            ("failures", Json::num(self.failures as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batched_requests", Json::num(self.batched_requests as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("avg_batch", Json::num(self.avg_batch)),
+            ("request_latency", self.request_latency.to_json()),
+            ("exec_latency", self.exec_latency.to_json()),
+            ("served_gflop", Json::num(self.served_gflop)),
+            (
+                "engines",
+                Json::arr(self.engines.iter().map(|l| {
+                    Json::obj(vec![
+                        ("engine", Json::str(l.engine)),
+                        ("requests", Json::num(l.requests as f64)),
+                        ("batches", Json::num(l.batches as f64)),
+                        ("observed_us", Json::num(l.observed_us as f64)),
+                        ("predicted_us", Json::num(l.predicted_us as f64)),
+                        ("drift", Json::num(l.drift)),
+                    ])
+                })),
+            ),
+            (
+                "artifacts",
+                Json::obj(vec![
+                    ("hits", Json::num(self.artifact_hits as f64)),
+                    ("misses", Json::num(self.artifact_misses as f64)),
+                    ("invalidated", Json::num(self.artifact_invalidated as f64)),
+                ]),
+            ),
+            (
+                "arena",
+                Json::obj(vec![
+                    ("hits", Json::num(self.arena_hits as f64)),
+                    ("misses", Json::num(self.arena_misses as f64)),
+                ]),
+            ),
+            (
+                "reorder",
+                Json::obj(vec![
+                    ("matrices", Json::num(self.reorder.matrices as f64)),
+                    ("alpha_before", Json::num(self.reorder.alpha_before)),
+                    ("alpha_after", Json::num(self.reorder.alpha_after)),
+                    ("beta_before", Json::num(self.reorder.beta_before)),
+                    ("beta_after", Json::num(self.reorder.beta_after)),
+                    ("prep_s", Json::num(self.reorder.seconds)),
+                ]),
+            ),
+            (
+                "qos",
+                Json::arr(self.qos.iter().flatten().map(|l| {
+                    Json::obj(vec![
+                        ("lane", Json::str(l.lane)),
+                        ("admitted", Json::num(l.admitted as f64)),
+                        ("depth", Json::num(l.depth as f64)),
+                        (
+                            "shed",
+                            Json::obj(
+                                l.shed
+                                    .iter()
+                                    .map(|&(name, c)| (name, Json::num(c as f64)))
+                                    .collect(),
+                            ),
+                        ),
+                        ("queue_wait", l.queue_wait.to_json()),
+                    ])
+                })),
+            ),
+            ("qos_downstream_cost_s", Json::num(self.qos_downstream_cost_s)),
+        ])
+    }
+
+    /// The human-readable report line. Formats are stable against earlier
+    /// releases except the latency header, which now includes p999.
+    pub fn render(&self) -> String {
         let lat = &self.request_latency;
         let mut out = format!(
             "requests={} responses={} failures={} rejected={} batches={} \
-             avg_batch={:.2} latency(mean/p50/p95/p99/max µs)={:.0}/{}/{}/{}/{} \
+             avg_batch={:.2} latency(mean/p50/p95/p99/p999/max µs)={:.0}/{}/{}/{}/{}/{} \
              served_gflop={:.3}",
-            self.requests.load(Ordering::Relaxed),
-            self.responses.load(Ordering::Relaxed),
-            self.failures.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.batched_requests.load(Ordering::Relaxed) as f64
-                / self.batches.load(Ordering::Relaxed).max(1) as f64,
-            lat.mean_us(),
-            lat.percentile_us(50.0),
-            lat.percentile_us(95.0),
-            lat.percentile_us(99.0),
-            lat.max_us(),
-            *self.flops.lock().unwrap() / 1e9,
+            self.requests,
+            self.responses,
+            self.failures,
+            self.rejected,
+            self.batches,
+            self.avg_batch,
+            lat.mean_us,
+            lat.p50_us,
+            lat.p95_us,
+            lat.p99_us,
+            lat.p999_us,
+            lat.max_us,
+            self.served_gflop,
         );
-        let lanes = self.engine_snapshot();
-        if !lanes.is_empty() {
+        if !self.engines.is_empty() {
             out.push_str(" routing=[");
-            for (i, l) in lanes.iter().enumerate() {
+            for (i, l) in self.engines.iter().enumerate() {
                 if i > 0 {
                     out.push(' ');
                 }
@@ -377,25 +652,20 @@ impl Metrics {
             }
             out.push(']');
         }
-        let (a_hits, a_misses, a_inv) = (
-            self.artifact_hits.load(Ordering::Relaxed),
-            self.artifact_misses.load(Ordering::Relaxed),
-            self.artifact_invalidated.load(Ordering::Relaxed),
-        );
-        if a_hits + a_misses + a_inv > 0 {
+        if self.artifact_hits + self.artifact_misses + self.artifact_invalidated > 0 {
             out.push_str(&format!(
-                " artifacts=[hits={a_hits} misses={a_misses} invalidated={a_inv}]"
+                " artifacts=[hits={} misses={} invalidated={}]",
+                self.artifact_hits, self.artifact_misses, self.artifact_invalidated
             ));
         }
-        let (b_hits, b_misses) = (
-            self.arena_hits.load(Ordering::Relaxed),
-            self.arena_misses.load(Ordering::Relaxed),
-        );
-        if b_hits + b_misses > 0 {
-            out.push_str(&format!(" arena=[hits={b_hits} misses={b_misses}]"));
+        if self.arena_hits + self.arena_misses > 0 {
+            out.push_str(&format!(
+                " arena=[hits={} misses={}]",
+                self.arena_hits, self.arena_misses
+            ));
         }
-        let rs = *self.reorder.lock().unwrap();
-        if rs.matrices > 0 {
+        if self.reorder.matrices > 0 {
+            let rs = &self.reorder;
             let m = rs.matrices as f64;
             out.push_str(&format!(
                 " reorder=[matrices={} alpha={:.4}->{:.4} beta={:.2}->{:.2} prep_s={:.3}]",
@@ -407,28 +677,19 @@ impl Metrics {
                 rs.seconds,
             ));
         }
-        let qos_active = self
-            .qos
-            .iter()
-            .any(|l| l.admitted.load(Ordering::Relaxed) > 0 || l.shed_total() > 0);
-        if qos_active {
+        if let Some(qos) = &self.qos {
             out.push_str(" qos=[");
-            for (i, p) in Priority::all().into_iter().enumerate() {
+            for (i, l) in qos.iter().enumerate() {
                 if i > 0 {
                     out.push_str(" | ");
                 }
-                let l = &self.qos[p.index()];
                 out.push_str(&format!(
                     "{}: admitted={} depth={} wait_p99us={}",
-                    p.name(),
-                    l.admitted.load(Ordering::Relaxed),
-                    l.depth.load(Ordering::Relaxed),
-                    l.queue_wait.percentile_us(99.0),
+                    l.lane, l.admitted, l.depth, l.queue_wait.p99_us,
                 ));
-                for r in RejectReason::all() {
-                    let c = l.shed[r.index()].load(Ordering::Relaxed);
+                for &(name, c) in &l.shed {
                     if c > 0 {
-                        out.push_str(&format!(" shed_{}={}", r.name(), c));
+                        out.push_str(&format!(" shed_{name}={c}"));
                     }
                 }
             }
@@ -449,9 +710,70 @@ mod tests {
             h.record(Duration::from_micros(us));
         }
         assert_eq!(h.count(), 10);
-        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
-        assert!(h.percentile_us(95.0) <= h.percentile_us(99.9).max(h.max_us()));
+        let (p50, p95, p99, p999) = (
+            h.percentile_us(50.0),
+            h.percentile_us(95.0),
+            h.percentile_us(99.0),
+            h.percentile_us(99.9),
+        );
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= p999 && p999 <= h.max_us());
+        // interpolation keeps the estimate inside the true bucket instead
+        // of returning its upper bound: the 5th of 10 samples is 160µs,
+        // which lives in [128, 256) — the old code reported 256
+        assert!((128..256).contains(&p50), "p50 {p50} escaped its bucket");
+        // the tail lands in the 100_000µs sample's bucket [65536, 131072),
+        // clamped to the observed max
+        assert!((65536..=100_000).contains(&p999), "p999 {p999}");
         assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_within_bucket() {
+        // one sample: midpoint convention clamps to the observed max
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(160));
+        assert_eq!(h.percentile_us(50.0), 160, "single sample reports itself, not 256");
+        // two samples in the same [128, 256) bucket: quartile interpolation
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(130));
+        h.record(Duration::from_micros(250));
+        assert_eq!(h.percentile_us(50.0), 160, "rank 1 of 2 -> lo + 0.25 * width");
+        assert_eq!(h.percentile_us(99.0), 224, "rank 2 of 2 -> lo + 0.75 * width");
+    }
+
+    #[test]
+    fn histogram_summarize_carries_buckets_and_p999() {
+        let h = LatencyHistogram::default();
+        for us in [100u64, 100, 3000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.summarize();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.max_us, 3000);
+        assert_eq!(s.p999_us, h.percentile_us(99.9));
+        assert_eq!(s.buckets.len(), 2);
+        assert_eq!(s.buckets[0], (64, 128, 2));
+        assert_eq!(s.buckets[1], (2048, 4096, 1));
+        let doc = crate::util::json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("count").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("buckets").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn flops_accumulate_concurrently() {
+        let m = Metrics::default();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.add_flops(1.5);
+                    }
+                });
+            }
+        });
+        // 1.5 sums exactly in f64 at this magnitude, so the CAS loop must
+        // lose no update
+        assert_eq!(m.flops(), 8.0 * 1000.0 * 1.5);
     }
 
     #[test]
@@ -479,7 +801,94 @@ mod tests {
         let r = m.report();
         assert!(r.contains("requests=3"));
         assert!(r.contains("served_gflop=1.000"));
+        assert!(r.contains("p999"), "tail percentile joined the latency header");
         assert!(!r.contains("routing="), "no lanes used -> no routing section");
+    }
+
+    /// Exercise every section, then check that report() is exactly the
+    /// snapshot rendering and that each report field traces back to a
+    /// snapshot field — the "no side-channel metrics" guarantee.
+    #[test]
+    fn report_is_rendered_from_snapshot() {
+        let m = Metrics::default();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        m.responses.fetch_add(6, Ordering::Relaxed);
+        m.failures.fetch_add(1, Ordering::Relaxed);
+        m.rejected.fetch_add(2, Ordering::Relaxed);
+        m.batches.fetch_add(3, Ordering::Relaxed);
+        m.batched_requests.fetch_add(6, Ordering::Relaxed);
+        m.add_flops(2.5e9);
+        for us in [50u64, 400, 900, 12_000] {
+            m.request_latency.record(Duration::from_micros(us));
+            m.exec_latency.record(Duration::from_micros(us / 2));
+        }
+        m.record_route(Algo::Hrpb.index(), 6, Duration::from_micros(300), 150e-6);
+        m.record_admitted(Priority::High);
+        m.record_shed(Priority::Normal, RejectReason::Overload);
+        m.record_queue_wait(Priority::High, Duration::from_micros(75));
+        m.set_qos_depth(Priority::High, 2);
+        m.add_qos_downstream(1e-3);
+        m.sync_artifacts(crate::hrpb::StoreStats { hits: 2, misses: 1, invalidated: 0 });
+        m.sync_arena(9, 3);
+        let mut rs = ReorderSnapshot::default();
+        rs.add(crate::reorder::Gains {
+            alpha_before: 0.05,
+            alpha_after: 0.3,
+            beta_before: 1.0,
+            beta_after: 1.0,
+            seconds: 0.25,
+        });
+        m.sync_reorder(rs);
+
+        let s = m.snapshot();
+        let r = m.report();
+        assert_eq!(r, s.render(), "report must be the snapshot rendering");
+        // spot-check that rendered values come from snapshot fields
+        assert!(r.contains(&format!("requests={}", s.requests)));
+        assert!(r.contains(&format!("avg_batch={:.2}", s.avg_batch)));
+        assert!(r.contains(&format!("served_gflop={:.3}", s.served_gflop)));
+        assert!(r.contains(&format!(
+            "={:.0}/{}/{}/{}/{}/{}",
+            s.request_latency.mean_us,
+            s.request_latency.p50_us,
+            s.request_latency.p95_us,
+            s.request_latency.p99_us,
+            s.request_latency.p999_us,
+            s.request_latency.max_us
+        )));
+        let l0 = &s.engines[0];
+        assert!(r.contains(&format!("{}:{}(drift={:.2}x)", l0.engine, l0.requests, l0.drift)));
+        let qos = s.qos.as_ref().expect("qos active");
+        let high = qos.iter().find(|l| l.lane == "high").unwrap();
+        assert!(r.contains(&format!(
+            "high: admitted={} depth={} wait_p99us={}",
+            high.admitted, high.depth, high.queue_wait.p99_us
+        )));
+        assert!(high.shed.iter().any(|&(_, c)| c == 0), "zero shed reasons stay visible");
+        assert!((s.qos_downstream_cost_s - 1e-3).abs() < 1e-9);
+
+        // the JSON export parses with the in-repo parser and mirrors the
+        // snapshot (the scrape contract for `cutespmm metrics`)
+        let doc = crate::util::json::parse(&s.to_json().to_string()).expect("snapshot JSON parses");
+        assert_eq!(doc.get("requests").unwrap().as_usize(), Some(s.requests as usize));
+        assert_eq!(
+            doc.get("request_latency").unwrap().get("p999_us").unwrap().as_usize(),
+            Some(s.request_latency.p999_us as usize)
+        );
+        assert_eq!(doc.get("engines").unwrap().as_arr().unwrap().len(), s.engines.len());
+        assert_eq!(doc.get("qos").unwrap().as_arr().unwrap().len(), qos.len());
+        assert_eq!(
+            doc.get("qos").unwrap().as_arr().unwrap()[0]
+                .get("shed")
+                .unwrap()
+                .get("overload")
+                .unwrap()
+                .as_usize(),
+            Some(0),
+            "high lane shed nothing but the key is present"
+        );
+        assert_eq!(doc.get("arena").unwrap().get("hits").unwrap().as_usize(), Some(9));
+        assert_eq!(doc.get("reorder").unwrap().get("matrices").unwrap().as_usize(), Some(1));
     }
 
     #[test]

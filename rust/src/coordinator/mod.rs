@@ -29,7 +29,7 @@ pub mod metrics;
 pub mod registry;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{Entry, MatrixId, Registry};
 
 use crate::formats::Dense;
@@ -39,6 +39,7 @@ use crate::runtime::PjrtHandle;
 use crate::spmm::exec::OutputArena;
 use crate::spmm::{Algo, SpmmEngine};
 use crate::synergy::Synergy;
+use crate::trace::{self, SpanArgs, TraceConfig};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -99,6 +100,12 @@ pub struct Config {
     /// ([`crate::hrpb::ArtifactStore`]); hit/miss/invalidated counters show
     /// up in the metrics report. `None` keeps registration in-memory only.
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// Runtime tracing ([`crate::trace`]): per-request span trees
+    /// (admit → queue_wait → batch → exec → scatter) plus kernel profiling
+    /// spans, with per-request sampling. Enabling installs the
+    /// process-global trace session at startup; hold
+    /// [`crate::trace::session_guard`] across start → drain.
+    pub trace: TraceConfig,
 }
 
 impl Default for Config {
@@ -110,6 +117,7 @@ impl Default for Config {
             engine: EnginePolicy::Native,
             qos: None,
             artifact_dir: None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -137,6 +145,12 @@ struct Request {
     /// Planner-predicted execution cost (seconds); 0.0 on the legacy
     /// channel path. Drives the QoS downstream-backlog gauge.
     cost_s: f64,
+    /// Whether this request records trace spans (the per-request sampling
+    /// decision, made once at submit).
+    traced: bool,
+    /// When the request entered the batcher; set by the router only for
+    /// traced requests, backs the `batch` span.
+    batched_at: Option<Instant>,
     reply: Sender<Result<Response, String>>,
 }
 
@@ -195,6 +209,11 @@ impl Coordinator {
             EnginePolicy::Auto => planner,
             _ => None,
         };
+        // tracing is process-global; only an *enabled* config installs (so
+        // concurrent untraced coordinators never reset someone's session)
+        if config.trace.enabled {
+            trace::install(&config.trace);
+        }
         // artifact warm start: an unopenable directory degrades to
         // in-memory registration rather than failing startup
         let registry = match &config.artifact_dir {
@@ -382,13 +401,18 @@ impl Coordinator {
         ticket.deadline = deadline;
         ticket.expensive = expensive;
         let (reply, rx) = channel();
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let traced = trace::sample(token);
+        let submitted = Instant::now();
         let req = Request {
-            token: self.next_token.fetch_add(1, Ordering::Relaxed),
+            token,
             matrix,
             b,
-            submitted: Instant::now(),
+            submitted,
             priority,
             cost_s,
+            traced,
+            batched_at: None,
             reply,
         };
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -399,12 +423,30 @@ impl Coordinator {
             Ok(()) => {
                 self.metrics.record_admitted(priority);
                 self.metrics.set_qos_depth(priority, queue.depth(priority));
+                if traced {
+                    trace::record(
+                        trace::Kind::Request,
+                        "admit",
+                        submitted,
+                        token,
+                        SpanArgs::new().with("admitted", 1).with("lane", priority.index() as u64),
+                    );
+                }
                 Ok(rx)
             }
             Err((rejected, req)) => {
                 self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 self.metrics.record_shed(priority, rejected.reason);
+                if traced {
+                    trace::record(
+                        trace::Kind::Request,
+                        "admit",
+                        submitted,
+                        token,
+                        SpanArgs::new().with("admitted", 0).with("lane", priority.index() as u64),
+                    );
+                }
                 Err((rejected, req.b))
             }
         }
@@ -415,19 +457,34 @@ impl Coordinator {
             unreachable!("submit_channel is only called on the channel path");
         };
         let (reply, rx) = channel();
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let traced = trace::sample(token);
+        let submitted = Instant::now();
         let req = Request {
-            token: self.next_token.fetch_add(1, Ordering::Relaxed),
+            token,
             matrix,
             b,
-            submitted: Instant::now(),
+            submitted,
             priority: Priority::Normal,
             cost_s: 0.0,
+            traced,
+            batched_at: None,
             reply,
         };
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        if tx.send(Ingress::Req(req)).is_err() {
+        let admitted = tx.send(Ingress::Req(req)).is_ok();
+        if !admitted {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        if traced {
+            trace::record(
+                trace::Kind::Request,
+                "admit",
+                submitted,
+                token,
+                SpanArgs::new().with("admitted", admitted as u64),
+            );
         }
         rx
     }
@@ -448,19 +505,24 @@ impl Coordinator {
             }
         };
         let (reply, rx) = channel();
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let traced = trace::sample(token);
+        let submitted = Instant::now();
         let req = Request {
-            token: self.next_token.fetch_add(1, Ordering::Relaxed),
+            token,
             matrix,
             b,
-            submitted: Instant::now(),
+            submitted,
             priority: Priority::Normal,
             cost_s: 0.0,
+            traced,
+            batched_at: None,
             reply,
         };
         // `requests` counts everything offered (matching the QoS path and
         // the blocking submit), whether or not it is accepted
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        match tx.try_send(Ingress::Req(req)) {
+        let outcome = match tx.try_send(Ingress::Req(req)) {
             Ok(()) => {
                 self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
                 Ok(rx)
@@ -470,7 +532,17 @@ impl Coordinator {
                 Err(r.b)
             }
             Err(_) => panic!("coordinator stopped"),
+        };
+        if traced {
+            trace::record(
+                trace::Kind::Request,
+                "admit",
+                submitted,
+                token,
+                SpanArgs::new().with("admitted", outcome.is_ok() as u64),
+            );
         }
+        outcome
     }
 
     /// Convenience: submit and wait.
@@ -531,6 +603,21 @@ fn flush_batch(
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+    for req in &reqs {
+        // batcher dwell time per traced request: entered (batched_at) →
+        // flushed into a job (now)
+        if let Some(t) = req.batched_at {
+            trace::record(
+                trace::Kind::Request,
+                "batch",
+                t,
+                req.token,
+                SpanArgs::new()
+                    .with("reqs", reqs.len() as u64)
+                    .with("cols", batch.total_cols as u64),
+            );
+        }
+    }
     let _ = job_tx.send(Job { matrix: batch.matrix, reqs });
 }
 
@@ -538,13 +625,16 @@ fn flush_batch(
 /// triggers (width/count trigger plus any deadline-expired groups) — the
 /// shared per-item step of both router loops.
 fn feed_batcher(
-    req: Request,
+    mut req: Request,
     batcher: &mut Batcher,
     held: &mut HashMap<u64, Request>,
     job_tx: &SyncSender<Job>,
     metrics: &Metrics,
 ) {
     let now = Instant::now();
+    if req.traced {
+        req.batched_at = Some(now);
+    }
     let pending = batcher::Pending { token: req.token, matrix: req.matrix, cols: req.b.cols };
     held.insert(req.token, req);
     if let Some(batch) = batcher.push(pending, now) {
@@ -586,6 +676,16 @@ fn router_loop(
             .unwrap_or(Duration::from_millis(50));
         match ingress.recv_timeout(timeout) {
             Ok(Ingress::Req(req)) => {
+                if req.traced {
+                    // channel dwell: submit → router pickup
+                    trace::record(
+                        trace::Kind::Request,
+                        "queue_wait",
+                        req.submitted,
+                        req.token,
+                        SpanArgs::new(),
+                    );
+                }
                 feed_batcher(req, &mut batcher, &mut held, &job_tx, &metrics);
             }
             Ok(Ingress::Shutdown) => break,
@@ -626,6 +726,17 @@ fn qos_router_loop(
             qos::Pop::Item(ticket, req) => {
                 metrics.record_queue_wait(ticket.priority, ticket.enqueued.elapsed());
                 metrics.set_qos_depth(ticket.priority, queue.depth(ticket.priority));
+                if req.traced {
+                    // admission-queue dwell: the same enqueued → drained
+                    // interval the per-lane wait histogram records
+                    trace::record(
+                        trace::Kind::Request,
+                        "queue_wait",
+                        ticket.enqueued,
+                        req.token,
+                        SpanArgs::new().with("lane", ticket.priority.index() as u64),
+                    );
+                }
                 // from here until the worker replies this request's cost is
                 // downstream backlog the admission estimator must still see
                 metrics.add_qos_downstream(req.cost_s);
@@ -766,6 +877,21 @@ fn execute_job(
         };
     let exec_elapsed = t0.elapsed();
     metrics.exec_latency.record(exec_elapsed);
+    // the exec span shares t0 with `exec_latency` / `record_route`, so the
+    // trace experiment can reconcile summed exec spans against the
+    // engine-lane observed_us counters by construction
+    if job.reqs.iter().any(|r| r.traced) {
+        let token = job.reqs.first().map(|r| r.token).unwrap_or(trace::NO_TOKEN);
+        trace::record(
+            trace::Kind::Request,
+            "exec",
+            t0,
+            token,
+            SpanArgs::engine(engine_name)
+                .with("reqs", batch_size as u64)
+                .with("cols", good_cols as u64),
+        );
+    }
     if let Some(lane) = lane {
         let good_reqs = bad.iter().filter(|&&b| !b).count() as u64;
         metrics.record_route(lane, good_reqs, exec_elapsed, predicted_s);
@@ -790,6 +916,7 @@ fn execute_job(
             )));
             continue;
         }
+        let t_scatter = if req.traced { Some((Instant::now(), req.b.cols)) } else { None };
         let mut out = Dense::zeros(entry.rows, req.b.cols);
         for r in 0..entry.rows {
             out.row_mut(r)
@@ -800,12 +927,23 @@ fn execute_job(
         metrics.request_latency.record(latency);
         metrics.responses.fetch_add(1, Ordering::Relaxed);
         metrics.add_flops(2.0 * entry.nnz as f64 * req.b.cols as f64);
+        let token = req.token;
         let _ = req.reply.send(Ok(Response {
             c: out,
             engine: engine_name,
             latency,
             batch_size,
         }));
+        if let Some((t, cols)) = t_scatter {
+            // split-C copy + reply epilogue per request
+            trace::record(
+                trace::Kind::Request,
+                "scatter",
+                t,
+                token,
+                SpanArgs::new().with("cols", cols as u64),
+            );
+        }
     }
     // per-request outputs are copied out above; the batch buffers go back
     // to the arena for the next batch

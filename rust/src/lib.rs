@@ -47,8 +47,14 @@
 //!   typed `Rejected{est_wait}` error. Surfaces as `Config::qos`,
 //!   `serve --qos` and `experiment qos`.
 //! * [`runtime`] — PJRT artifact registry + executor (the AOT path).
+//! * [`trace`] — runtime-gated observability: per-thread span ring buffers
+//!   recording a span tree per request (admit → queue_wait → batch → exec →
+//!   scatter) plus kernel profiling spans (pool workers, HRPB work units),
+//!   exported as Chrome `trace_event` JSON for Perfetto. Surfaces as
+//!   `Config::trace`, `serve --trace-out` and `experiment trace`.
 //! * [`coordinator`] — the L3 serving layer: matrix registry, router,
-//!   dynamic batcher, worker pool, metrics.
+//!   dynamic batcher, worker pool, metrics (with a structured
+//!   `MetricsSnapshot` JSON export behind `cutespmm metrics`).
 //! * [`bench`] — the experiment harness behind `benches/` and the CLI.
 
 pub mod bench;
@@ -64,6 +70,7 @@ pub mod reorder;
 pub mod runtime;
 pub mod spmm;
 pub mod synergy;
+pub mod trace;
 pub mod util;
 
 /// Paper-fixed tile constants (§3.1, §4): row-panel height `TM`, block width

@@ -16,15 +16,24 @@
 //!               [--artifact-dir DIR]        # warm-start registration
 //!               [--qos] [--qos-capacity N] [--qos-watermark-ms MS]
 //!               [--qos-deadline-ms MS]      # bounded admission + shedding
+//!               [--trace-out t.trace.json]  # Chrome/Perfetto span export
+//!               [--trace-sample RATE] [--trace-ring N] [--no-trace-kernel]
+//!               [--metrics-out m.json]      # structured MetricsSnapshot
+//!               [--metrics-every N]         # rewrite every N responses
+//! cutespmm metrics [--from m.json] [--json]  # validate + summarize a
+//!                                            # snapshot dump
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|exec|reorder|all> [--quick]
+//!                      qos|exec|reorder|trace|all> [--quick]
 //!                                           # exec: pool + column-slab
 //!                                           # runtime A/B, emits
 //!                                           # results/BENCH_PR4.json
 //!                                           # reorder: similarity-clustered
 //!                                           # row-packing A/B, emits
 //!                                           # results/BENCH_PR5.json
+//!                                           # trace: observability overhead
+//!                                           # off/sampled/full, emits
+//!                                           # results/BENCH_PR6.json
 //! cutespmm selfcheck                          # engines vs oracle + PJRT
 //! ```
 //!
@@ -499,6 +508,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     // --artifact-dir: registration warm-starts from persisted artifacts
     let artifact_dir = args.get("artifact-dir").map(PathBuf::from);
+    // --trace-out enables request + kernel tracing for this run; the trace
+    // session is process-global, so hold the guard across start → drain
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let trace_cfg = cutespmm::trace::TraceConfig {
+        enabled: trace_out.is_some(),
+        sample_rate: args.get("trace-sample").and_then(|v| v.parse().ok()).unwrap_or(1.0),
+        kernel: !args.has("no-trace-kernel"),
+        ring_capacity: args.usize_or("trace-ring", 1 << 16),
+    };
+    let _trace_session = trace_out.as_ref().map(|_| cutespmm::trace::session_guard());
+    // --metrics-out dumps the structured MetricsSnapshot as JSON; with
+    // --metrics-every N it is rewritten every N responses (a poor man's
+    // scrape endpoint), and always once more at the end of the run
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let metrics_every = args.usize_or("metrics-every", 0);
     let coord = Coordinator::start_with_planner(
         Config {
             workers,
@@ -506,6 +530,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             batch: BatchPolicy::default(),
             qos,
             artifact_dir,
+            trace: trace_cfg,
             ..Default::default()
         },
         pjrt_svc.as_ref().map(|s| s.handle()),
@@ -561,10 +586,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             rxs.push(coord.submit(id, b));
         }
     }
+    let dump_metrics = |path: &PathBuf| -> Result<(), String> {
+        std::fs::write(path, coord.metrics().snapshot().to_json().to_string())
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))
+    };
     let mut ok = 0usize;
     for rx in rxs {
         if rx.recv().map_err(|e| e.to_string())?.is_ok() {
             ok += 1;
+        }
+        if metrics_every > 0 && ok > 0 && ok % metrics_every == 0 {
+            if let Some(path) = &metrics_out {
+                dump_metrics(path)?;
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -575,11 +609,84 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         ok as f64 / wall
     );
     println!("{}", coord.metrics().report());
+    if let Some(path) = &metrics_out {
+        dump_metrics(path)?;
+        println!("metrics snapshot -> {}", path.display());
+    }
     // shutdown ordering: coordinator first (workers hold PJRT handles),
     // then the PJRT service
     coord.shutdown();
+    if let Some(path) = &trace_out {
+        let tr = cutespmm::trace::drain();
+        cutespmm::trace::disable();
+        tr.write_chrome(path).map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+        println!(
+            "trace -> {} ({} spans, {} dropped; open at https://ui.perfetto.dev)",
+            path.display(),
+            tr.spans.len(),
+            tr.dropped
+        );
+    }
     if let Some(svc) = pjrt_svc {
         svc.shutdown();
+    }
+    Ok(())
+}
+
+/// `cutespmm metrics`: validate and summarize a [`MetricsSnapshot`] JSON
+/// dump produced by `serve --metrics-out`. `--json` re-emits the validated
+/// document (the CI smoke uses the nonzero exit on parse failure as its
+/// snapshot-validity assertion).
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    let path = args
+        .get("from")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| experiments::results_dir().join("metrics.json"));
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        format!(
+            "cannot read {} ({e}); produce one with `cutespmm serve --metrics-out <path>`",
+            path.display()
+        )
+    })?;
+    let doc = cutespmm::util::json::parse(&text)
+        .map_err(|e| format!("{} is not a valid metrics snapshot: {e}", path.display()))?;
+    if args.has("json") {
+        println!("{}", doc.to_string());
+        return Ok(());
+    }
+    let num = |key: &str| doc.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!("metrics snapshot {}:", path.display());
+    println!(
+        "  requests={} responses={} failures={} rejected={} batches={}",
+        num("requests"),
+        num("responses"),
+        num("failures"),
+        num("rejected"),
+        num("batches"),
+    );
+    if let Some(lat) = doc.get("request_latency") {
+        let l = |k: &str| lat.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!(
+            "  request latency(us): mean={:.0} p50={:.0} p95={:.0} p99={:.0} p999={:.0} max={:.0}",
+            l("mean_us"),
+            l("p50_us"),
+            l("p95_us"),
+            l("p99_us"),
+            l("p999_us"),
+            l("max_us"),
+        );
+    }
+    println!("  served_gflop={:.3}", num("served_gflop"));
+    if let Some(engines) = doc.get("engines").and_then(|v| v.as_arr()) {
+        for e in engines {
+            println!(
+                "  engine {}: requests={} batches={} observed_us={}",
+                e.get("engine").and_then(|v| v.as_str()).unwrap_or("?"),
+                e.get("requests").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                e.get("batches").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                e.get("observed_us").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
     }
     Ok(())
 }
@@ -658,6 +765,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "qos" => run("qos", experiments::qos_saturation()),
         "exec" => run("exec", experiments::exec(quick)),
         "reorder" => run("reorder", experiments::reorder(quick)),
+        "trace" => run("trace", experiments::trace_overhead(quick)),
         "all" => {
             run("table1", experiments::table1());
             run("table2", experiments::table2(&records));
@@ -675,6 +783,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             run("qos", experiments::qos_saturation());
             run("exec", experiments::exec(quick));
             run("reorder", experiments::reorder(quick));
+            run("trace", experiments::trace_overhead(quick));
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }
@@ -682,7 +791,8 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
 }
 
 fn usage() -> &'static str {
-    "usage: cutespmm <gen|preprocess|prep|spmm|synergy|plan|serve|experiment|selfcheck> [flags]\n\
+    "usage: cutespmm <gen|preprocess|prep|spmm|synergy|plan|serve|metrics|experiment|selfcheck> \
+     [flags]\n\
      see the module docs at the top of rust/src/main.rs for flag details"
 }
 
@@ -698,6 +808,7 @@ fn main() -> ExitCode {
         "synergy" => cmd_synergy(&args),
         "plan" => cmd_plan(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "experiment" => cmd_experiment(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "" | "help" | "-h" => {

@@ -54,6 +54,7 @@ impl Job {
             if p >= self.parts {
                 break;
             }
+            let t0 = crate::trace::kernel_enabled().then(std::time::Instant::now);
             // SAFETY: see the invariant on `task`.
             let task = unsafe { &*self.task };
             if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(p))) {
@@ -61,6 +62,20 @@ impl Job {
                 if slot.is_none() {
                     *slot = Some(payload);
                 }
+            }
+            if let Some(t0) = t0 {
+                // per-part worker span: which thread claimed which part,
+                // for how long — pool utilization and self-scheduling
+                // imbalance become visible in the trace
+                crate::trace::record(
+                    crate::trace::Kind::Kernel,
+                    "worker",
+                    t0,
+                    crate::trace::NO_TOKEN,
+                    crate::trace::SpanArgs::new()
+                        .with("part", p as u64)
+                        .with("parts", self.parts as u64),
+                );
             }
             if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.parts {
                 // take the latch lock so the notify cannot race a caller
@@ -163,7 +178,19 @@ impl WorkerPool {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         if parts == 1 || self.handles.is_empty() {
             for p in 0..parts {
+                let t0 = crate::trace::kernel_enabled().then(std::time::Instant::now);
                 task(p);
+                if let Some(t0) = t0 {
+                    crate::trace::record(
+                        crate::trace::Kind::Kernel,
+                        "worker",
+                        t0,
+                        crate::trace::NO_TOKEN,
+                        crate::trace::SpanArgs::new()
+                            .with("part", p as u64)
+                            .with("parts", parts as u64),
+                    );
+                }
             }
             return;
         }

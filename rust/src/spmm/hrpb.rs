@@ -267,6 +267,10 @@ impl HrpbEngine {
         let brick_cols = tk / BRICK_K;
         let panel_base = self.hrpb.blocked_row_ptr[unit.panel as usize] as usize;
         let blocks = (panel_base + unit.start as usize)..(panel_base + unit.end as usize);
+        // unit-granularity profiling span (the GPU analogue: one thread
+        // block). Gated on one relaxed load; the clock and the brick-count
+        // walk below run only while kernel tracing is on.
+        let trace_t0 = crate::trace::kernel_enabled().then(std::time::Instant::now);
 
         // TN loop (§4): one cache-sized column slab of the C tile at a time,
         // held L1-resident across every block of the unit. The packed
@@ -338,6 +342,24 @@ impl HrpbEngine {
                     }
                 }
             }
+        }
+        if let Some(t0) = trace_t0 {
+            // brick volume of this unit: one col_ptr tail load per block
+            // (num_bricks = col_ptr[brick_cols], see hrpb::pack)
+            let bricks: u64 = blocks
+                .clone()
+                .map(|blk_idx| pack::view(&self.hrpb, blk_idx).col_ptr[brick_cols] as u64)
+                .sum();
+            crate::trace::record(
+                crate::trace::Kind::Kernel,
+                "unit",
+                t0,
+                crate::trace::NO_TOKEN,
+                crate::trace::SpanArgs::new()
+                    .with("panel", unit.panel as u64)
+                    .with("bricks", bricks)
+                    .with("slab", ts as u64),
+            );
         }
     }
 }

@@ -1,0 +1,168 @@
+//! Drained-trace container and Chrome `trace_event` export.
+//!
+//! The export is the JSON Object Format of the Trace Event spec: complete
+//! (`ph:"X"`) duration events plus `thread_name` metadata, loadable in
+//! `chrome://tracing` and <https://ui.perfetto.dev>. Written with
+//! [`crate::util::json`] (serde is unavailable offline).
+
+use super::ring::{Span, NO_TOKEN};
+use super::Kind;
+use crate::util::json::Json;
+use std::io;
+use std::path::Path;
+
+/// A thread that contributed spans (names come from the OS thread name —
+/// `cutespmm-exec-{i}` for pool workers, `coord-worker-{i}` for the
+/// coordinator pool, etc.).
+#[derive(Clone, Debug)]
+pub struct TraceThread {
+    pub tid: u64,
+    pub name: String,
+}
+
+/// One span attributed to its recording thread.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpan {
+    pub tid: u64,
+    pub kind: Kind,
+    pub span: Span,
+}
+
+/// Everything [`super::drain`] collected: spans across all threads, sorted
+/// by start time, plus the exact number of spans lost to ring overflow.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub threads: Vec<TraceThread>,
+    pub spans: Vec<TraceSpan>,
+    /// Spans evicted by drop-oldest before this drain.
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Spans with the given stage name.
+    pub fn count(&self, name: &str) -> usize {
+        self.spans.iter().filter(|s| s.span.name == name).count()
+    }
+
+    /// Total duration across spans with the given stage name (µs).
+    pub fn sum_dur_us(&self, name: &str) -> u64 {
+        self.spans.iter().filter(|s| s.span.name == name).map(|s| s.span.dur_us).sum()
+    }
+
+    /// The Chrome `trace_event` JSON document.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::with_capacity(self.threads.len() + self.spans.len());
+        for t in &self.threads {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(t.tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(t.name.clone()))])),
+            ]));
+        }
+        for s in &self.spans {
+            let mut args = vec![("seq", Json::num(s.span.seq as f64))];
+            if s.span.token != NO_TOKEN {
+                args.push(("token", Json::num(s.span.token as f64)));
+            }
+            if let Some(engine) = s.span.args.engine {
+                args.push(("engine", Json::str(engine)));
+            }
+            for (k, v) in s.span.args.pairs() {
+                args.push((k, Json::num(v as f64)));
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.span.name)),
+                ("cat", Json::str(s.kind.name())),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(s.tid as f64)),
+                ("ts", Json::num(s.span.start_us as f64)),
+                ("dur", Json::num(s.span.dur_us as f64)),
+                ("args", Json::obj(args)),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("otherData", Json::obj(vec![("dropped_spans", Json::num(self.dropped as f64))])),
+        ])
+    }
+
+    /// Write the Chrome export, creating parent directories.
+    pub fn write_chrome(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ring::SpanArgs;
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> Trace {
+        Trace {
+            threads: vec![TraceThread { tid: 1, name: "router".into() }],
+            spans: vec![
+                TraceSpan {
+                    tid: 1,
+                    kind: Kind::Request,
+                    span: Span {
+                        seq: 0,
+                        name: "exec",
+                        start_us: 10,
+                        dur_us: 40,
+                        token: 7,
+                        args: SpanArgs::engine("cutespmm").with("reqs", 3),
+                    },
+                },
+                TraceSpan {
+                    tid: 1,
+                    kind: Kind::Kernel,
+                    span: Span {
+                        seq: 1,
+                        name: "unit",
+                        start_us: 12,
+                        dur_us: 9,
+                        token: NO_TOKEN,
+                        args: SpanArgs::new().with("panel", 4).with("bricks", 128),
+                    },
+                },
+            ],
+            dropped: 5,
+        }
+    }
+
+    #[test]
+    fn chrome_export_parses_and_carries_metadata() {
+        let t = sample();
+        let doc = json::parse(&t.to_chrome_json().to_string()).expect("valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3, "thread_name metadata + 2 spans");
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let exec = &events[1];
+        assert_eq!(exec.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(exec.get("name").unwrap().as_str(), Some("exec"));
+        assert_eq!(exec.get("dur").unwrap().as_usize(), Some(40));
+        assert_eq!(exec.get("args").unwrap().get("engine").unwrap().as_str(), Some("cutespmm"));
+        let unit = &events[2];
+        assert_eq!(unit.get("cat").unwrap().as_str(), Some("kernel"));
+        assert_eq!(unit.get("args").unwrap().get("token"), None, "NO_TOKEN is omitted");
+        assert_eq!(unit.get("args").unwrap().get("bricks").unwrap().as_usize(), Some(128));
+        assert_eq!(doc.get("otherData").unwrap().get("dropped_spans").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn count_and_sum_helpers() {
+        let t = sample();
+        assert_eq!(t.count("exec"), 1);
+        assert_eq!(t.count("unit"), 1);
+        assert_eq!(t.count("missing"), 0);
+        assert_eq!(t.sum_dur_us("exec"), 40);
+    }
+}

@@ -1,0 +1,203 @@
+//! Fixed-capacity span storage: a preallocated drop-oldest ring.
+//!
+//! One ring never reallocates after construction — the hot path writes a
+//! `Copy` span into a preallocated slot under a short uncontended lock
+//! (rings are per thread; the only cross-thread access is the drain).
+//! Overflow evicts the *oldest* span and counts the eviction, so a drained
+//! trace can report exactly how much history it lost.
+
+/// Token value for spans not tied to a request (kernel/worker spans).
+pub const NO_TOKEN: u64 = u64::MAX;
+
+/// Bounded key/value payload carried by a span — sized so recording stays
+/// allocation-free. Keys are static names; an empty key marks a free slot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanArgs {
+    /// Engine lane name for exec spans (`None` elsewhere).
+    pub engine: Option<&'static str>,
+    kv: [(&'static str, u64); 3],
+}
+
+impl SpanArgs {
+    pub fn new() -> SpanArgs {
+        SpanArgs::default()
+    }
+
+    pub fn engine(name: &'static str) -> SpanArgs {
+        SpanArgs { engine: Some(name), ..SpanArgs::default() }
+    }
+
+    /// Attach a key/value pair; silently dropped once all slots are taken
+    /// (the bounded payload is part of the no-allocation contract).
+    pub fn with(mut self, key: &'static str, value: u64) -> SpanArgs {
+        for slot in self.kv.iter_mut() {
+            if slot.0.is_empty() {
+                *slot = (key, value);
+                break;
+            }
+        }
+        self
+    }
+
+    /// The occupied key/value pairs, in insertion order.
+    pub fn pairs(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.kv.iter().copied().filter(|(k, _)| !k.is_empty())
+    }
+}
+
+/// One completed span. Timestamps are µs since the process trace epoch
+/// ([`super::install`] pins it), matching Chrome `trace_event`'s `ts`/`dur`.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Per-ring sequence number (assigned by [`SpanRing::push`]); gaps at
+    /// the front of a drained ring are the evicted history.
+    pub seq: u64,
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Request token, or [`NO_TOKEN`] for kernel-side spans.
+    pub token: u64,
+    pub args: SpanArgs,
+}
+
+/// Fixed-capacity, sequence-numbered, drop-oldest span ring.
+pub struct SpanRing {
+    buf: Vec<Span>,
+    capacity: usize,
+    /// Index of the oldest span once the ring is full.
+    head: usize,
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> SpanRing {
+        let capacity = capacity.max(1);
+        SpanRing { buf: Vec::with_capacity(capacity), capacity, head: 0, next_seq: 0, dropped: 0 }
+    }
+
+    /// Record a span, stamping its sequence number. Beyond capacity the
+    /// oldest span is overwritten in place — never a reallocation.
+    pub fn push(&mut self, mut span: Span) {
+        span.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(span);
+        } else {
+            self.buf[self.head] = span;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Configured span capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Heap slots actually allocated — the overflow test pins this to the
+    /// construction-time value (drop-oldest must never reallocate).
+    pub fn allocated(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Spans evicted by overflow since construction or the last drain.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Spans ever pushed (monotonic across drains).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Remove and return every stored span, oldest first. Keeps the
+    /// allocation and the monotonic sequence counter; resets the overflow
+    /// counter (each drain reports only its own losses).
+    pub fn drain_ordered(&mut self) -> Vec<Span> {
+        let n = self.buf.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(self.buf[(self.head + i) % n]);
+        }
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+        out
+    }
+
+    /// Clear contents and counters and adopt a new capacity (a new trace
+    /// session installing).
+    pub fn reset(&mut self, capacity: usize) {
+        *self = SpanRing::new(capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(tag: u64) -> Span {
+        Span { seq: 0, name: "t", start_us: tag, dur_us: 1, token: tag, args: SpanArgs::new() }
+    }
+
+    #[test]
+    fn ring_drops_oldest_counts_exactly_and_never_reallocates() {
+        let mut r = SpanRing::new(8);
+        let alloc0 = r.allocated();
+        for i in 0..25 {
+            r.push(span(i));
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.dropped(), 17, "25 pushes into 8 slots evict exactly 17");
+        assert_eq!(r.recorded(), 25);
+        assert_eq!(r.allocated(), alloc0, "overflow must overwrite in place");
+        let spans = r.drain_ordered();
+        assert_eq!(spans.len(), 8);
+        // survivors are exactly the newest 8, oldest first, densely numbered
+        assert_eq!(spans.first().unwrap().seq, 17);
+        assert_eq!(spans.last().unwrap().seq, 24);
+        assert!(spans.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+        assert_eq!(r.dropped(), 0, "drain resets the overflow counter");
+        assert_eq!(r.recorded(), 25, "the sequence counter stays monotonic");
+        assert_eq!(r.allocated(), alloc0);
+    }
+
+    #[test]
+    fn partial_ring_drains_in_insertion_order() {
+        let mut r = SpanRing::new(16);
+        for i in 0..5 {
+            r.push(span(i));
+        }
+        let spans = r.drain_ordered();
+        assert_eq!(spans.iter().map(|s| s.seq).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn args_hold_three_pairs_then_drop() {
+        let a = SpanArgs::engine("cutespmm").with("a", 1).with("b", 2).with("c", 3).with("d", 4);
+        let pairs: Vec<_> = a.pairs().collect();
+        assert_eq!(pairs, vec![("a", 1), ("b", 2), ("c", 3)]);
+        assert_eq!(a.engine, Some("cutespmm"));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = SpanRing::new(0);
+        r.push(span(0));
+        r.push(span(1));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.drain_ordered()[0].seq, 1);
+    }
+}

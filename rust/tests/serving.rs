@@ -22,6 +22,7 @@ fn coordinator(workers: usize, queue: usize) -> Coordinator {
             engine: EnginePolicy::Native,
             qos: None,
             artifact_dir: None,
+            ..Default::default()
         },
         None,
     )
@@ -80,6 +81,7 @@ fn try_submit_backpressure() {
             engine: EnginePolicy::Native,
             qos: None,
             artifact_dir: None,
+            ..Default::default()
         },
         None,
     );
@@ -209,6 +211,7 @@ fn qos_shutdown_rejects_queued_work_with_typed_errors() {
                 default_deadline: None,
             }),
             artifact_dir: None,
+            ..Default::default()
         },
         None,
     );
@@ -252,6 +255,7 @@ fn qos_high_priority_lane_is_served_and_counted() {
                 default_deadline: Some(Duration::from_secs(30)),
             }),
             artifact_dir: None,
+            ..Default::default()
         },
         None,
     );
@@ -283,6 +287,71 @@ fn qos_high_priority_lane_is_served_and_counted() {
     coord.shutdown();
     // unused reason indices stay accessible for reporting tools
     assert_eq!(RejectReason::all().len(), RejectReason::COUNT);
+}
+
+#[test]
+fn tracing_captures_request_span_tree_and_chrome_export() {
+    use cutespmm::trace::{self, TraceConfig};
+    // the trace session is process-global: serialize against any other
+    // tracing test in this binary
+    let _session = trace::session_guard();
+    let _ = trace::drain();
+    let coord = Coordinator::start(
+        Config {
+            workers: 2,
+            queue_capacity: 1024,
+            batch: BatchPolicy::default(),
+            engine: EnginePolicy::Native,
+            qos: Some(QosConfig {
+                queue_capacity: 256,
+                watermark_s: 0.0,
+                default_deadline: None,
+            }),
+            artifact_dir: None,
+            trace: TraceConfig {
+                enabled: true,
+                sample_rate: 1.0,
+                kernel: true,
+                ring_capacity: 1 << 14,
+            },
+        },
+        None,
+    );
+    let mut rng = Rng::new(30);
+    let coo = Coo::random(400, 300, 0.03, &mut rng);
+    let id = coord.register("traced", &coo);
+    let mut rxs = Vec::new();
+    for i in 0..16 {
+        let b = Dense::random(300, 8, &mut rng);
+        let pr = if i % 4 == 0 { Priority::High } else { Priority::Normal };
+        rxs.push(coord.submit_qos(id, b, pr, None).expect("capacity 256 never fills here"));
+    }
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    coord.shutdown();
+    let tr = trace::drain();
+    trace::disable();
+
+    // the full request span tree is present: every request admits and
+    // scatters; queue_wait/batch/exec cover the pipeline in between.
+    // (>= because concurrent serving tests also record while the global
+    // gate is on)
+    assert!(tr.count("admit") >= 16, "sample_rate 1.0 traces every request");
+    assert!(tr.count("scatter") >= 16);
+    for stage in ["queue_wait", "batch", "exec"] {
+        assert!(tr.count(stage) >= 1, "missing {stage} spans");
+    }
+    // kernel profiling spans from the HRPB engine's work units
+    assert!(tr.count("unit") >= 1, "kernel tracing records HRPB unit spans");
+    assert_eq!(tr.dropped, 0, "16 requests cannot overflow a 16k ring");
+
+    // the Chrome export is valid JSON with one event per span plus
+    // thread_name metadata
+    let doc = cutespmm::util::json::parse(&tr.to_chrome_json().to_string())
+        .expect("chrome export parses");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), tr.spans.len() + tr.threads.len());
 }
 
 #[test]
