@@ -11,14 +11,51 @@ use crate::qos::{self, BoundedDualQueue, Priority, RejectReason, ShedPolicy, Tic
 use crate::spmm::{Algo, SpmmEngine};
 use crate::synergy::Synergy;
 use crate::util::stats;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::Duration;
 
-/// Where CSVs land.
+/// CLI-set results-dir override (`--out-dir`); beats the environment.
+static RESULTS_DIR_OVERRIDE: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Route every driver's CSV/JSON output to `dir` for the rest of the
+/// process (the `--out-dir` flag). Drivers print the paths they write, so
+/// the override keeps what is printed and what is written in agreement.
+pub fn set_results_dir(dir: PathBuf) {
+    *RESULTS_DIR_OVERRIDE.lock().unwrap() = Some(dir);
+}
+
+/// Where CSVs and machine-readable records land. Precedence: the
+/// `--out-dir` flag, then `CUTESPMM_RESULTS_DIR`, then the legacy
+/// `CUTESPMM_RESULTS` name, then `<crate>/results`.
 pub fn results_dir() -> PathBuf {
-    std::env::var_os("CUTESPMM_RESULTS")
+    if let Some(dir) = RESULTS_DIR_OVERRIDE.lock().unwrap().clone() {
+        return dir;
+    }
+    std::env::var_os("CUTESPMM_RESULTS_DIR")
+        .or_else(|| std::env::var_os("CUTESPMM_RESULTS"))
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"))
+}
+
+/// Write a CSV under [`results_dir`], warning on stderr instead of failing
+/// silently (several drivers used to print `results/` paths whose writes
+/// had been dropped on the floor).
+fn write_csv_or_warn(path: &Path, headers: &[&str], rows: &[Vec<String>]) {
+    if let Err(e) = render::write_csv(path, headers, rows) {
+        eprintln!("warning: cannot write {}: {e}", path.display());
+    }
+}
+
+/// Write a machine-readable record, warning on stderr on failure (stdout
+/// stays byte-identical either way).
+fn write_json_or_warn(path: &Path, text: &str) {
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("warning: cannot write {}: {e}", path.display());
+    }
 }
 
 const MACHINES: [&str; 2] = ["A100", "RTX-4090"];
@@ -52,7 +89,7 @@ pub fn fig2(records: &[Record]) -> String {
         out.push_str(&render::scatter(&pts, 56, 16, "Best-SC TFLOPs", "TC-GNN TFLOPs"));
     }
     out.push_str("\npaper shape: TC-GNN loses on (almost) every matrix; on the A100 it wins none.\n");
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("fig2.csv"),
         &["matrix", "machine", "tcgnn_gflops", "best_sc_gflops"],
         &csv,
@@ -95,7 +132,7 @@ pub fn fig7(records: &[Record]) -> String {
         }
     }
     out.push_str("\npaper shape: OI_shmem strongly correlated with achieved GFLOPs.\n");
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("fig7.csv"),
         &["matrix", "machine", "n", "oi_shmem", "cutespmm_gflops"],
         &csv,
@@ -144,7 +181,7 @@ pub fn fig9(records: &[Record]) -> String {
         "\npaper shape: cuTeSpMM > TC-GNN at every percentile everywhere; \
          cuTeSpMM > Best-SC decisively on High synergy, competitive on Medium/Low.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("fig9.csv"),
         &["machine", "n", "synergy", "algo", "q1", "median", "q3"],
         &csv,
@@ -201,7 +238,7 @@ pub fn fig10(records: &[Record]) -> String {
         "\npaper shape: cuTeSpMM speedup grows with synergy and with row count; \
          TC-GNN stays below 0.5x everywhere.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("fig10.csv"),
         &["machine", "algo", "row_bin", "synergy", "geomean_speedup"],
         &csv,
@@ -231,7 +268,7 @@ pub fn table2(records: &[Record]) -> String {
         .map(|&(s, c)| vec![s.name().to_string(), c.to_string()])
         .collect();
     rows.push(vec!["Total".into(), total.to_string()]);
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("table2.csv"),
         &["synergy", "count"],
         &rows,
@@ -286,7 +323,7 @@ pub fn table34(table: usize) -> String {
     headers.extend(labels.iter().map(|s| s.as_str()));
     out.push_str(&render::table(&headers, &rows));
     out.push_str("\npaper shape: cuTeSpMM >> TC-GNN on every row; cuTeSpMM vs Best-SC mixed at n=32, ahead for most rows at n=128.\n");
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join(format!("table{table}.csv")),
         &["matrix", "n", "cutespmm", "tcgnn", "best_sc"],
         &csv,
@@ -339,7 +376,7 @@ pub fn preprocessing() -> String {
     out.push_str(
         "\npaper shape: preprocessing ~1-2 orders above one SpMM (N=128) but below matrix read time.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("preprocessing.csv"),
         &["matrix", "nnz", "prep_s", "spmm_s", "read_s"],
         &csv,
@@ -395,7 +432,7 @@ pub fn ablation_tiles() -> String {
         "\npaper choice: TM=16, TK=16, TN=32 (balances A/B shared traffic; larger TM drops alpha).\nmachine ref: {}\n",
         machine.name
     ));
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("ablation_tiles.csv"),
         &["matrix", "tm", "tk", "alpha_or_tn", "beta_or_ratio", "oi"],
         &rows.iter().map(|r| r.clone()).collect::<Vec<_>>(),
@@ -461,7 +498,7 @@ pub fn ablation_loadbalance() -> String {
         "\npaper shape: wave-aware splits only what waves cannot absorb — fewer atomic \
          units than avg-split at comparable or better makespan.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("ablation_loadbalance.csv"),
         &["scheme", "units", "atomic_units", "critical_path", "time_ms", "gflops"],
         &rows,
@@ -606,7 +643,7 @@ pub fn auto_policy(records: &[Record]) -> String {
          pays for its losing regime: TCU-always loses on Low synergy, Best-SC-always \
          loses on High.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("auto_policy.csv"),
         &["machine", "n", "policy", "agg_gflops", "vs_oracle"],
         &csv,
@@ -616,7 +653,7 @@ pub fn auto_policy(records: &[Record]) -> String {
 
 /// Generator-corpus recipes for the artifact prep experiment — one per
 /// structural regime, sized so the HRPB build dominates fixed overheads.
-fn prep_specs() -> Vec<MatrixSpec> {
+pub(crate) fn prep_specs() -> Vec<MatrixSpec> {
     vec![
         MatrixSpec {
             name: "prep-fem".into(),
@@ -813,7 +850,7 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
          pass the activation gate weighs against its predicted gain — the cold-build cost now \
          reports its build vs. reorder split.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("prep.csv"),
         &[
             "matrix",
@@ -834,7 +871,7 @@ pub fn prep_report(outcomes: &[PrepOutcome]) -> String {
 
 /// Matrices for the exec-runtime experiment: one per structural regime,
 /// sized so the SpMM hot loop (not fixed overheads) dominates.
-fn exec_specs(quick: bool) -> Vec<MatrixSpec> {
+pub(crate) fn exec_specs(quick: bool) -> Vec<MatrixSpec> {
     let scale = if quick { 1usize } else { 4 };
     vec![
         MatrixSpec {
@@ -991,10 +1028,7 @@ fn write_exec_json(outcomes: &[ExecOutcome], geomean_256: f64) -> std::path::Pat
         ),
     ]);
     let path = results_dir().join("BENCH_PR4.json");
-    if let Some(dir) = path.parent() {
-        let _ = std::fs::create_dir_all(dir);
-    }
-    let _ = std::fs::write(&path, doc.to_string());
+    write_json_or_warn(&path, &doc.to_string());
     path
 }
 
@@ -1069,7 +1103,7 @@ pub fn exec_report(outcomes: &[ExecOutcome]) -> String {
          and spmm_into makes the steady state allocation-free; every mode stays within 1e-5 \
          of the CSR reference.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("exec.csv"),
         &[
             "matrix",
@@ -1096,7 +1130,7 @@ pub fn exec_report(outcomes: &[ExecOutcome]) -> String {
 /// shuffle is what makes the A/B honest — reordering can only win by
 /// *recovering* latent similarity, and the rmat control shows the gate
 /// declining when there is none to recover.
-fn reorder_specs(quick: bool) -> Vec<(&'static str, MatrixSpec, bool)> {
+pub(crate) fn reorder_specs(quick: bool) -> Vec<(&'static str, MatrixSpec, bool)> {
     let s = if quick { 1usize } else { 3 };
     vec![
         (
@@ -1301,10 +1335,7 @@ fn write_reorder_json(outcomes: &[ReorderOutcome], geomean_lowmed: f64) -> std::
         ),
     ]);
     let path = results_dir().join("BENCH_PR5.json");
-    if let Some(dir) = path.parent() {
-        let _ = std::fs::create_dir_all(dir);
-    }
-    let _ = std::fs::write(&path, doc.to_string());
+    write_json_or_warn(&path, &doc.to_string());
     path
 }
 
@@ -1394,7 +1425,7 @@ pub fn reorder_report(outcomes: &[ReorderOutcome]) -> String {
          CSR reference in both orders, and output rows always come back in original order \
          (the scatter epilogue, not a post-pass).\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("reorder.csv"),
         &[
             "family",
@@ -1604,12 +1635,18 @@ pub fn qos_saturation_outcomes() -> Vec<QosOutcome> {
 /// deterministically against the three admission policies.
 pub fn qos_saturation() -> String {
     let outcomes = qos_saturation_outcomes();
+    qos_report(&outcomes)
+}
+
+/// Render the QoS saturation report (split from [`qos_saturation`] so the
+/// harness and tests can run the simulation once and reuse the outcomes).
+pub fn qos_report(outcomes: &[QosOutcome]) -> String {
     let mut out = String::from(
         "== QoS saturation: bounded priority admission vs baselines (1.3x offered load) ==\n",
     );
     let mut rows = Vec::new();
     let mut csv = Vec::new();
-    for o in &outcomes {
+    for o in outcomes {
         let cap = if o.capacity == usize::MAX {
             "inf".to_string()
         } else {
@@ -1670,7 +1707,7 @@ pub fn qos_saturation() -> String {
          sheds cost-aware (normal-lane, low-synergy first) with typed rejections, and keeps \
          p99 queue wait lowest — high lane lowest of all.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("qos_saturation.csv"),
         &[
             "policy",
@@ -1810,7 +1847,10 @@ pub fn trace_outcomes_for(rows: usize, requests: usize) -> Vec<TraceOutcome> {
         let tr = trace::drain();
         trace::disable();
         if mode == "full" {
-            let _ = tr.write_chrome(&results_dir().join("sample.trace.json"));
+            let sample = results_dir().join("sample.trace.json");
+            if let Err(e) = tr.write_chrome(&sample) {
+                eprintln!("warning: cannot write {}: {e}", sample.display());
+            }
         }
         out.push(TraceOutcome {
             mode,
@@ -1866,10 +1906,7 @@ fn write_trace_json(
         })),
     ));
     let path = results_dir().join("BENCH_PR6.json");
-    if let Some(dir) = path.parent() {
-        let _ = std::fs::create_dir_all(dir);
-    }
-    let _ = std::fs::write(&path, Json::obj(doc).to_string());
+    write_json_or_warn(&path, &Json::obj(doc).to_string());
     path
 }
 
@@ -1949,7 +1986,7 @@ pub fn trace_report(outcomes: &[TraceOutcome]) -> String {
          baseline run, so it includes sampling hashes, span recording, and ring resets \
          — everything a production deployment would pay.\n",
     );
-    let _ = render::write_csv(
+    write_csv_or_warn(
         &results_dir().join("trace.csv"),
         &[
             "mode",

@@ -1,0 +1,637 @@
+//! The diff engine: compare a run against a baseline per accepted headline
+//! (with per-headline slip thresholds) plus an informational per-cell
+//! timing geomean.
+//!
+//! Only headlines gate — they are geomeans/percentiles the drivers already
+//! defend with acceptance floors, so a >slip move is signal. Individual
+//! cell timings are noisy on shared runners; their geomean ratio is
+//! reported but never fails the gate.
+
+use super::results::{CellResult, Direction, ResultsFile, Slip, SuiteResult};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Guard for relative math near zero.
+const EPS: f64 = 1e-12;
+
+/// Outcome of one headline comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within the slip threshold in both directions.
+    Pass,
+    /// Moved beyond the threshold in the good direction.
+    Improved,
+    /// Moved beyond the threshold in the bad direction — gates.
+    Regressed,
+    /// The baseline has no such headline (new suite/metric) — never gates.
+    Missing,
+    /// A value was non-finite or a relative base was ~zero — never gates,
+    /// but is visibly flagged.
+    Incomparable,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Improved => "improved",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::Missing => "missing",
+            Verdict::Incomparable => "incomparable",
+        }
+    }
+}
+
+/// Percent change of `cur` vs `base`, when both are finite and the base is
+/// meaningfully nonzero. Shared with `cutespmm metrics --diff`.
+pub fn pct_change(base: f64, cur: f64) -> Option<f64> {
+    if !base.is_finite() || !cur.is_finite() || base.abs() < EPS {
+        return None;
+    }
+    Some(100.0 * (cur - base) / base.abs())
+}
+
+/// Judge one headline move against its direction and slip threshold.
+/// `slip_override` (the `--slip` flag) replaces relative thresholds only —
+/// absolute-points budgets (overhead %) keep their configured width.
+pub fn judge(
+    direction: Direction,
+    slip: Slip,
+    base: Option<f64>,
+    cur: f64,
+    slip_override: Option<f64>,
+) -> Verdict {
+    let Some(base) = base else {
+        return Verdict::Missing;
+    };
+    if !base.is_finite() || !cur.is_finite() {
+        return Verdict::Incomparable;
+    }
+    // the sanitize() sentinel: 0.0 means "no measurement", not a timing
+    match slip {
+        Slip::RelativePct(t) => {
+            let t = slip_override.unwrap_or(t);
+            if base.abs() < EPS {
+                return Verdict::Incomparable;
+            }
+            let slip_frac = match direction {
+                Direction::HigherIsBetter => {
+                    if base <= 0.0 {
+                        return Verdict::Incomparable;
+                    }
+                    (base - cur) / base
+                }
+                Direction::LowerIsBetter => (cur - base) / base.abs(),
+            };
+            if slip_frac > t / 100.0 {
+                Verdict::Regressed
+            } else if slip_frac < -t / 100.0 {
+                Verdict::Improved
+            } else {
+                Verdict::Pass
+            }
+        }
+        Slip::AbsolutePoints(t) => {
+            let delta = match direction {
+                Direction::HigherIsBetter => base - cur,
+                Direction::LowerIsBetter => cur - base,
+            };
+            if delta > t {
+                Verdict::Regressed
+            } else if delta < -t {
+                Verdict::Improved
+            } else {
+                Verdict::Pass
+            }
+        }
+    }
+}
+
+/// One headline's comparison.
+#[derive(Clone, Debug)]
+pub struct HeadlineDiff {
+    pub key: String,
+    pub unit: String,
+    pub base: Option<f64>,
+    pub current: f64,
+    /// Display-only percent change (None when incomparable/missing).
+    pub change_pct: Option<f64>,
+    pub verdict: Verdict,
+}
+
+/// One suite's comparison: gated headlines plus informational cell stats.
+#[derive(Clone, Debug)]
+pub struct SuiteDiff {
+    pub suite: String,
+    pub headlines: Vec<HeadlineDiff>,
+    /// Cells present (with a comparable timing) in both runs.
+    pub cell_overlap: usize,
+    pub cells_only_base: usize,
+    pub cells_only_cur: usize,
+    /// Geomean of base/current time ratios over the overlap (>1 = current
+    /// faster). Informational only — cell noise never gates.
+    pub cell_geomean_speedup: Option<f64>,
+}
+
+/// The whole run comparison.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    pub baseline_id: String,
+    pub current_id: String,
+    /// Quick and full runs measure different grids; flagged, not fatal.
+    pub quick_mismatch: bool,
+    pub suites: Vec<SuiteDiff>,
+}
+
+/// Geomean of base/current timing ratios over cells matched by key where
+/// both timings are finite and positive. Returns (overlap, only_base,
+/// only_cur, geomean).
+pub fn cell_geomean(base: &[CellResult], cur: &[CellResult]) -> (usize, usize, usize, Option<f64>) {
+    let comparable = |c: &&CellResult| c.time_s.is_finite() && c.time_s > 0.0;
+    let base_map: BTreeMap<&str, f64> = base
+        .iter()
+        .filter(comparable)
+        .map(|c| (c.key.as_str(), c.time_s))
+        .collect();
+    let cur_map: BTreeMap<&str, f64> = cur
+        .iter()
+        .filter(comparable)
+        .map(|c| (c.key.as_str(), c.time_s))
+        .collect();
+    let mut log_sum = 0.0f64;
+    let mut overlap = 0usize;
+    for (key, b) in &base_map {
+        if let Some(c) = cur_map.get(key) {
+            log_sum += (b / c).ln();
+            overlap += 1;
+        }
+    }
+    let geomean = if overlap > 0 {
+        let g = (log_sum / overlap as f64).exp();
+        g.is_finite().then_some(g)
+    } else {
+        None
+    };
+    (overlap, base_map.len() - overlap, cur_map.len() - overlap, geomean)
+}
+
+/// Compare `cur` against `base`, suite by suite (matched by name).
+pub fn diff(base: &ResultsFile, cur: &ResultsFile, slip_override: Option<f64>) -> DiffReport {
+    let suites = cur
+        .suites
+        .iter()
+        .map(|cs| diff_suite(base.suite(&cs.suite), cs, slip_override))
+        .collect();
+    DiffReport {
+        baseline_id: base.run_id.clone(),
+        current_id: cur.run_id.clone(),
+        quick_mismatch: base.quick != cur.quick,
+        suites,
+    }
+}
+
+fn diff_suite(
+    base: Option<&SuiteResult>,
+    cur: &SuiteResult,
+    slip_override: Option<f64>,
+) -> SuiteDiff {
+    let empty: &[CellResult] = &[];
+    let base_cells = base.map(|b| b.cells.as_slice()).unwrap_or(empty);
+    let (cell_overlap, cells_only_base, cells_only_cur, cell_geomean_speedup) =
+        cell_geomean(base_cells, &cur.cells);
+    let headlines = cur
+        .headlines
+        .iter()
+        .map(|h| {
+            let base_value = base
+                .and_then(|b| b.headlines.iter().find(|bh| bh.key == h.key))
+                .map(|bh| bh.value);
+            let verdict = judge(h.direction, h.slip, base_value, h.value, slip_override);
+            HeadlineDiff {
+                key: h.key.clone(),
+                unit: h.unit.clone(),
+                base: base_value,
+                current: h.value,
+                change_pct: base_value.and_then(|b| pct_change(b, h.value)),
+                verdict,
+            }
+        })
+        .collect();
+    SuiteDiff {
+        suite: cur.suite.clone(),
+        headlines,
+        cell_overlap,
+        cells_only_base,
+        cells_only_cur,
+        cell_geomean_speedup,
+    }
+}
+
+impl DiffReport {
+    /// Did any accepted headline regress beyond its slip threshold?
+    pub fn regressed(&self) -> bool {
+        self.suites
+            .iter()
+            .flat_map(|s| s.headlines.iter())
+            .any(|h| h.verdict == Verdict::Regressed)
+    }
+
+    /// Human-readable comparison table.
+    pub fn render(&self) -> String {
+        use crate::bench::render;
+        let mut out = format!(
+            "== experiment diff: {} (current) vs {} (baseline) ==\n",
+            self.current_id, self.baseline_id
+        );
+        if self.quick_mismatch {
+            out.push_str(
+                "note: quick/full mismatch between runs — grids differ, compare with care\n",
+            );
+        }
+        let mut rows = Vec::new();
+        for s in &self.suites {
+            for h in &s.headlines {
+                rows.push(vec![
+                    s.suite.clone(),
+                    h.key.clone(),
+                    match h.base {
+                        Some(b) => format!("{b:.3}{}", h.unit),
+                        None => "-".to_string(),
+                    },
+                    format!("{:.3}{}", h.current, h.unit),
+                    match h.change_pct {
+                        Some(p) => format!("{p:+.1}%"),
+                        None => "-".to_string(),
+                    },
+                    h.verdict.name().to_string(),
+                ]);
+            }
+        }
+        out.push_str(&render::table(
+            &["suite", "headline", "baseline", "current", "change", "verdict"],
+            &rows,
+        ));
+        for s in &self.suites {
+            let geo = match s.cell_geomean_speedup {
+                Some(g) => format!("{g:.3}x"),
+                None => "n/a".to_string(),
+            };
+            out.push_str(&format!(
+                "cells[{}]: overlap={} only_baseline={} only_current={} \
+                 timing geomean (baseline/current)={geo} (informational)\n",
+                s.suite, s.cell_overlap, s.cells_only_base, s.cells_only_cur
+            ));
+        }
+        out.push_str(if self.regressed() {
+            "verdict: REGRESSED — at least one accepted headline slipped beyond its threshold\n"
+        } else {
+            "verdict: pass — every accepted headline within its slip threshold\n"
+        });
+        out
+    }
+
+    /// Machine-readable comparison (`experiment diff --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("cutespmm_diff")),
+            ("baseline_id", Json::str(self.baseline_id.clone())),
+            ("current_id", Json::str(self.current_id.clone())),
+            ("quick_mismatch", Json::Bool(self.quick_mismatch)),
+            ("regressed", Json::Bool(self.regressed())),
+            (
+                "suites",
+                Json::arr(self.suites.iter().map(|s| {
+                    Json::obj(vec![
+                        ("suite", Json::str(s.suite.clone())),
+                        (
+                            "headlines",
+                            Json::arr(s.headlines.iter().map(|h| {
+                                Json::obj(vec![
+                                    ("key", Json::str(h.key.clone())),
+                                    ("unit", Json::str(h.unit.clone())),
+                                    (
+                                        "baseline",
+                                        match h.base {
+                                            Some(b) => Json::num(super::results::sanitize(b)),
+                                            None => Json::Null,
+                                        },
+                                    ),
+                                    ("current", Json::num(super::results::sanitize(h.current))),
+                                    (
+                                        "change_pct",
+                                        match h.change_pct {
+                                            Some(p) => Json::num(super::results::sanitize(p)),
+                                            None => Json::Null,
+                                        },
+                                    ),
+                                    ("verdict", Json::str(h.verdict.name())),
+                                ])
+                            })),
+                        ),
+                        ("cell_overlap", Json::num(s.cell_overlap as f64)),
+                        ("cells_only_baseline", Json::num(s.cells_only_base as f64)),
+                        ("cells_only_current", Json::num(s.cells_only_cur as f64)),
+                        (
+                            "cell_geomean_speedup",
+                            match s.cell_geomean_speedup {
+                                Some(g) => Json::num(super::results::sanitize(g)),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Self-test mode (`experiment diff --inject-slip`): degrade every
+/// headline and cell timing of a run by `pct` percent against its
+/// direction, so diffing the degraded copy against the original MUST go
+/// red — proof the gate can fire.
+pub fn inject_slip(run: &ResultsFile, pct: f64) -> ResultsFile {
+    let mut out = run.clone();
+    out.run_id = format!("{}+slip{}", run.run_id, pct);
+    for suite in &mut out.suites {
+        for h in &mut suite.headlines {
+            match (h.direction, h.slip) {
+                (Direction::HigherIsBetter, _) => h.value *= 1.0 - pct / 100.0,
+                (Direction::LowerIsBetter, Slip::AbsolutePoints(_)) => h.value += pct,
+                (Direction::LowerIsBetter, Slip::RelativePct(_)) => {
+                    h.value *= 1.0 + pct / 100.0
+                }
+            }
+        }
+        for c in &mut suite.cells {
+            c.time_s *= 1.0 + pct / 100.0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::results::{Headline, SCHEMA_VERSION};
+    use crate::util::json::Json;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn headline(key: &str, value: f64, direction: Direction, slip: Slip) -> Headline {
+        Headline {
+            key: key.to_string(),
+            value,
+            unit: "x".to_string(),
+            direction,
+            slip,
+            floor: None,
+        }
+    }
+
+    fn cell(key: &str, time_s: f64) -> CellResult {
+        CellResult { key: key.to_string(), time_s, value: 1.0 }
+    }
+
+    fn run_with(headlines: Vec<Headline>, cells: Vec<CellResult>) -> ResultsFile {
+        ResultsFile {
+            schema: SCHEMA_VERSION,
+            run_id: "r0000000001-00001".to_string(),
+            created_unix: 1,
+            git_rev: "test".to_string(),
+            flags: Vec::new(),
+            quick: true,
+            host_threads: 1,
+            suites: vec![SuiteResult {
+                suite: "exec".to_string(),
+                title: "t".to_string(),
+                wall_s: 0.0,
+                spec: Json::Null,
+                headlines,
+                cells,
+                metrics: Json::Null,
+            }],
+        }
+    }
+
+    #[test]
+    fn missing_baseline_never_gates() {
+        let v = judge(
+            Direction::HigherIsBetter,
+            Slip::RelativePct(10.0),
+            None,
+            1.0,
+            None,
+        );
+        assert_eq!(v, Verdict::Missing);
+    }
+
+    #[test]
+    fn zero_and_non_finite_inputs_are_incomparable() {
+        let rel = Slip::RelativePct(10.0);
+        for (dir, base, cur) in [
+            (Direction::HigherIsBetter, 0.0, 1.0),
+            (Direction::HigherIsBetter, -2.0, 1.0),
+            (Direction::HigherIsBetter, f64::NAN, 1.0),
+            (Direction::HigherIsBetter, 2.0, f64::NAN),
+            (Direction::LowerIsBetter, 0.0, 1.0),
+            (Direction::LowerIsBetter, f64::INFINITY, 1.0),
+        ] {
+            assert_eq!(
+                judge(dir, rel, Some(base), cur, None),
+                Verdict::Incomparable,
+                "dir={dir:?} base={base} cur={cur}"
+            );
+        }
+        // absolute budgets tolerate a zero base (overhead can be ~0%)
+        assert_eq!(
+            judge(Direction::LowerIsBetter, Slip::AbsolutePoints(2.0), Some(0.0), 1.0, None),
+            Verdict::Pass
+        );
+    }
+
+    #[test]
+    fn relative_and_absolute_thresholds_cut_where_configured() {
+        let hi = Direction::HigherIsBetter;
+        let rel = Slip::RelativePct(10.0);
+        assert_eq!(judge(hi, rel, Some(2.0), 1.7, None), Verdict::Regressed); // -15%
+        assert_eq!(judge(hi, rel, Some(2.0), 1.9, None), Verdict::Pass); // -5%
+        assert_eq!(judge(hi, rel, Some(2.0), 2.5, None), Verdict::Improved); // +25%
+        // --slip override tightens the same move into a regression
+        assert_eq!(judge(hi, rel, Some(2.0), 1.9, Some(2.0)), Verdict::Regressed);
+        let lo = Direction::LowerIsBetter;
+        let abs = Slip::AbsolutePoints(2.0);
+        assert_eq!(judge(lo, abs, Some(1.0), 3.1, None), Verdict::Regressed); // +2.1 points
+        assert_eq!(judge(lo, abs, Some(1.0), 2.9, None), Verdict::Pass); // +1.9 points
+        // the override only applies to relative thresholds
+        assert_eq!(judge(lo, abs, Some(1.0), 2.9, Some(1.0)), Verdict::Pass);
+    }
+
+    #[test]
+    fn cell_geomean_uses_only_the_comparable_overlap() {
+        let base = vec![cell("k0", 1.0), cell("k1", 1.0), cell("k2", 1.0), cell("bad", 0.0)];
+        let cur = vec![cell("k1", 0.5), cell("k2", 0.25), cell("k3", 8.0), cell("bad", 1.0)];
+        let (overlap, only_base, only_cur, g) = cell_geomean(&base, &cur);
+        assert_eq!((overlap, only_base, only_cur), (2, 1, 2));
+        // sqrt((1/0.5) * (1/0.25)) = sqrt(8)
+        assert!((g.unwrap() - 8.0f64.sqrt()).abs() < 1e-12);
+        let (overlap, _, _, g) = cell_geomean(&base, &[]);
+        assert_eq!(overlap, 0);
+        assert!(g.is_none());
+    }
+
+    #[test]
+    fn self_diff_is_clean_and_inject_slip_goes_red() {
+        let run = run_with(
+            vec![
+                headline("geo", 1.62, Direction::HigherIsBetter, Slip::RelativePct(10.0)),
+                headline("p99", 4.2, Direction::LowerIsBetter, Slip::RelativePct(10.0)),
+                headline("oh", 0.4, Direction::LowerIsBetter, Slip::AbsolutePoints(2.0)),
+            ],
+            vec![cell("a", 0.01), cell("b", 0.02)],
+        );
+        let clean = diff(&run, &run, None);
+        assert!(!clean.regressed());
+        for h in clean.suites.iter().flat_map(|s| s.headlines.iter()) {
+            assert_eq!(h.verdict, Verdict::Pass, "{}", h.key);
+        }
+        assert!((clean.suites[0].cell_geomean_speedup.unwrap() - 1.0).abs() < 1e-12);
+        assert!(clean.render().contains("verdict: pass"));
+
+        let slipped = inject_slip(&run, 15.0);
+        assert!(slipped.run_id.contains("+slip"));
+        let red = diff(&run, &slipped, None);
+        assert!(red.regressed());
+        for h in red.suites.iter().flat_map(|s| s.headlines.iter()) {
+            assert_eq!(h.verdict, Verdict::Regressed, "{}", h.key);
+        }
+        assert!(red.render().contains("verdict: REGRESSED"));
+        assert_eq!(
+            red.to_json().get("regressed").and_then(|b| b.as_bool()),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn diff_against_a_baseline_without_the_suite_reports_missing() {
+        let base = run_with(vec![], vec![]);
+        let mut cur = run_with(
+            vec![headline("geo", 1.5, Direction::HigherIsBetter, Slip::RelativePct(10.0))],
+            vec![],
+        );
+        cur.suites[0].suite = "brand-new".to_string();
+        let d = diff(&base, &cur, None);
+        assert!(!d.regressed());
+        assert_eq!(d.suites[0].headlines[0].verdict, Verdict::Missing);
+    }
+
+    /// Random runs built only from headline shapes the harness emits, with
+    /// strictly positive finite values — the domain where the gate's two
+    /// invariants must hold unconditionally.
+    struct RunGen;
+
+    impl Gen for RunGen {
+        type Value = ResultsFile;
+        fn gen(&self, rng: &mut Rng) -> ResultsFile {
+            let shapes = [
+                (Direction::HigherIsBetter, Slip::RelativePct(10.0)),
+                (Direction::LowerIsBetter, Slip::RelativePct(10.0)),
+                (Direction::LowerIsBetter, Slip::AbsolutePoints(2.0)),
+            ];
+            let headlines = (0..rng.range(1, 4))
+                .map(|i| {
+                    let (d, s) = shapes[rng.below(shapes.len())];
+                    headline(&format!("h{i}"), 0.1 + 10.0 * rng.f64(), d, s)
+                })
+                .collect();
+            let cells =
+                (0..rng.range(0, 6)).map(|i| cell(&format!("c{i}"), 0.05 + rng.f64())).collect();
+            run_with(headlines, cells)
+        }
+    }
+
+    #[test]
+    fn prop_self_diff_always_clean_and_slip_always_flags() {
+        check("diff gate invariants", 150, &RunGen, |run| {
+            let clean = diff(run, run, None);
+            let red = diff(run, &inject_slip(run, 15.0), None);
+            !clean.regressed()
+                && red.regressed()
+                && red
+                    .suites
+                    .iter()
+                    .flat_map(|s| s.headlines.iter())
+                    .all(|h| h.verdict == Verdict::Regressed)
+        });
+    }
+
+    #[test]
+    fn prop_missing_baseline_never_regresses() {
+        check("missing baseline", 100, &RunGen, |run| {
+            run.suites.iter().flat_map(|s| s.headlines.iter()).all(|h| {
+                judge(h.direction, h.slip, None, h.value, None) == Verdict::Missing
+            })
+        });
+    }
+
+    /// Cell lists drawn from a shared key universe with random membership,
+    /// so overlap / only-base / only-cur all occur.
+    struct CellsGen;
+
+    impl Gen for CellsGen {
+        type Value = (Vec<CellResult>, Vec<CellResult>);
+        fn gen(&self, rng: &mut Rng) -> Self::Value {
+            let mut base = Vec::new();
+            let mut cur = Vec::new();
+            for k in 0..8usize {
+                if rng.f64() < 0.5 {
+                    base.push(cell(&format!("k{k}"), 0.1 + 9.9 * rng.f64()));
+                }
+                if rng.f64() < 0.5 {
+                    cur.push(cell(&format!("k{k}"), 0.1 + 9.9 * rng.f64()));
+                }
+            }
+            (base, cur)
+        }
+    }
+
+    #[test]
+    fn prop_cell_geomean_over_partial_overlap() {
+        check("cell geomean", 200, &CellsGen, |(base, cur)| {
+            let expected_overlap = base
+                .iter()
+                .filter(|b| cur.iter().any(|c| c.key == b.key))
+                .count();
+            let (overlap, only_base, only_cur, g) = cell_geomean(base, cur);
+            overlap == expected_overlap
+                && only_base == base.len() - overlap
+                && only_cur == cur.len() - overlap
+                && match g {
+                    Some(g) => overlap > 0 && g.is_finite() && g > 0.0,
+                    None => overlap == 0,
+                }
+        });
+    }
+
+    #[test]
+    fn prop_cell_geomean_identity_on_unchanged_timings() {
+        check("cell geomean identity", 100, &CellsGen, |(base, _)| {
+            match cell_geomean(base, base).3 {
+                Some(g) => (g - 1.0).abs() < 1e-9,
+                None => base.is_empty(),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_pct_change_guards_and_sign() {
+        check("pct_change", 200, &CellsGen, |(base, _)| {
+            base.iter().all(|c| {
+                pct_change(f64::NAN, c.time_s).is_none()
+                    && pct_change(0.0, c.time_s).is_none()
+                    && pct_change(c.time_s, f64::NAN).is_none()
+                    && pct_change(c.time_s, c.time_s) == Some(0.0)
+                    && pct_change(c.time_s, c.time_s * 2.0).map(|p| p > 0.0) == Some(true)
+            })
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Append-only run history under `results/history/`, plus the accepted
+//! baseline pointer the CI regression gate diffs against.
+//!
+//! Layout:
+//!
+//! ```text
+//! results/history/
+//!   r1754650000-01234.json   one ResultsFile per run (never rewritten)
+//!   r1754653600-01240.json
+//!   ACCEPTED                 run id of the accepted baseline (one line)
+//! ```
+//!
+//! Run ids sort lexicographically by creation time (zero-padded unix
+//! seconds), so "latest" and "previous" are just neighbors in the sorted
+//! listing. [`baseline_for`] prefers the explicitly accepted run, falling
+//! back to the entry immediately before the current one.
+
+use super::results::{parse_results, ResultsFile};
+use crate::bench::experiments;
+use std::path::{Path, PathBuf};
+
+/// Name of the accepted-baseline pointer file inside the history dir.
+const ACCEPTED_FILE: &str = "ACCEPTED";
+
+/// Where history entries live (under the active results dir, so
+/// `--out-dir`/`CUTESPMM_RESULTS_DIR` relocate the history too).
+pub fn history_dir() -> PathBuf {
+    experiments::results_dir().join("history")
+}
+
+/// Sortable run id: zero-padded unix seconds plus the pid as a same-second
+/// tiebreaker.
+pub fn make_run_id(created_unix: u64) -> String {
+    format!("r{created_unix:010}-{:05}", std::process::id() % 100_000)
+}
+
+/// Persist a run as a new history entry. Append-only: refuses to overwrite
+/// an existing entry for the same run id.
+pub fn append(file: &ResultsFile) -> Result<PathBuf, String> {
+    let dir = history_dir();
+    std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    let path = dir.join(format!("{}.json", file.run_id));
+    if path.exists() {
+        return Err(format!("history entry {} already exists (append-only)", path.display()));
+    }
+    std::fs::write(&path, file.to_json().to_string())
+        .map_err(|e| format!("write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// All run ids in the history, sorted ascending (oldest first).
+pub fn list() -> Vec<String> {
+    let mut ids = Vec::new();
+    let Ok(entries) = std::fs::read_dir(history_dir()) else {
+        return ids;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(id) = name.strip_suffix(".json") {
+            ids.push(id.to_string());
+        }
+    }
+    ids.sort();
+    ids
+}
+
+/// The most recent run id, if any.
+pub fn latest() -> Option<String> {
+    list().pop()
+}
+
+/// Load a run by id.
+pub fn load(id: &str) -> Result<ResultsFile, String> {
+    load_path(&history_dir().join(format!("{id}.json")))
+}
+
+/// Load a results document from an arbitrary path (schema-v1 or a legacy
+/// `BENCH_PR*.json` record wrapped as a one-suite run).
+pub fn load_path(path: &Path) -> Result<ResultsFile, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse_results(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// The accepted baseline's run id, if one was recorded and still exists.
+pub fn accepted_id() -> Option<String> {
+    let id = std::fs::read_to_string(history_dir().join(ACCEPTED_FILE)).ok()?;
+    let id = id.trim().to_string();
+    if id.is_empty() {
+        return None;
+    }
+    Some(id)
+}
+
+/// Record `id` as the accepted baseline. The entry must exist.
+pub fn accept(id: &str) -> Result<PathBuf, String> {
+    let entry = history_dir().join(format!("{id}.json"));
+    if !entry.exists() {
+        return Err(format!("no history entry {}", entry.display()));
+    }
+    let path = history_dir().join(ACCEPTED_FILE);
+    std::fs::write(&path, format!("{id}\n")).map_err(|e| format!("write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// The baseline to diff `current_id` against: the accepted run when one is
+/// recorded (diffing a run against itself is the deterministic clean pass
+/// CI relies on), else the history entry immediately before `current_id`,
+/// else none (first run ever — nothing to gate against).
+pub fn baseline_for(current_id: &str) -> Option<String> {
+    if let Some(id) = accepted_id() {
+        return Some(id);
+    }
+    list().into_iter().rev().find(|id| id.as_str() < current_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ids_sort_lexicographically_by_creation_time() {
+        let early = make_run_id(5);
+        let late = make_run_id(1_754_650_000);
+        assert!(early < late, "{early} vs {late}");
+        assert!(early.starts_with("r0000000005-"));
+        // same-second ids from the same process collide by design (one
+        // entry per run id is what append-only enforces)
+        assert_eq!(make_run_id(7), make_run_id(7));
+    }
+}

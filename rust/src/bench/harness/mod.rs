@@ -1,0 +1,34 @@
+//! Perf observatory: declarative experiment harness with persistent
+//! results history and regression gating.
+//!
+//! Pieces, in dependency order:
+//!
+//! - [`spec`] — declarative suite grids (engines × families × widths ×
+//!   reps), echoed verbatim into every result so runs are self-describing.
+//! - [`results`] — the versioned on-disk model ([`results::ResultsFile`],
+//!   schema v1) plus a legacy loader that lifts the pre-harness
+//!   `BENCH_PR*.json` records into one-suite runs.
+//! - [`suites`] — adapters that run the existing experiment drivers'
+//!   measurement cores, keep their reports and `BENCH_*.json` artifacts
+//!   byte-identical, and project the outcomes into the model with a
+//!   `MetricsSnapshot` per suite.
+//! - [`runner`] — stamps executed suites with run id / git rev / flags.
+//! - [`history`] — append-only entries under `results/history/` and the
+//!   `ACCEPTED` baseline pointer.
+//! - [`diff`] — compares a run against a baseline per accepted headline
+//!   with configurable slip thresholds; powers `cutespmm experiment
+//!   diff` and the CI regression gate (including the `--inject-slip`
+//!   gate self-test).
+
+pub mod diff;
+pub mod history;
+pub mod results;
+pub mod runner;
+pub mod spec;
+pub mod suites;
+
+pub use diff::{diff, inject_slip, DiffReport};
+pub use results::{parse_results, ResultsFile, SuiteResult};
+pub use runner::collect;
+pub use spec::{suite_spec, SUITES};
+pub use suites::{run_suite, SuiteRun};

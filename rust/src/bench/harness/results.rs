@@ -1,0 +1,558 @@
+//! The versioned results model: what one harness run records, and how it
+//! round-trips through `util::json`.
+//!
+//! Schema `v1` is one JSON document per run: run identity (id, creation
+//! time, git revision, CLI flags), then one [`SuiteResult`] per suite with
+//! its declarative spec echo, headline metrics (each carrying its
+//! comparison direction and slip threshold, so the diff engine needs no
+//! out-of-band table), per-cell timings, and the suite's
+//! [`crate::coordinator::metrics::MetricsSnapshot`] JSON.
+//!
+//! Pre-harness `BENCH_PR4/5/6.json` records load through
+//! [`suite_from_legacy`], so `experiment diff` can baseline against
+//! history written before the observatory existed.
+
+use crate::util::json::{parse, Json};
+
+/// Results-file schema version; bump on incompatible shape changes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Document discriminator, so a stray JSON file is rejected with a clear
+/// error instead of a missing-key cascade.
+pub const KIND: &str = "cutespmm_results";
+
+/// Non-finite timings would serialize as invalid JSON (`NaN` has no JSON
+/// spelling); 0.0 is the model's "not comparable" sentinel throughout.
+pub fn sanitize(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Which way a headline metric improves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+}
+
+impl Direction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher",
+            Direction::LowerIsBetter => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "higher" => Some(Direction::HigherIsBetter),
+            "lower" => Some(Direction::LowerIsBetter),
+            _ => None,
+        }
+    }
+}
+
+/// How much a headline may move against its direction before the diff
+/// engine calls it a regression.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Slip {
+    /// Relative threshold in percent (the CI gate's >10% geomean slip).
+    RelativePct(f64),
+    /// Absolute threshold in the headline's own unit — for metrics that
+    /// live near zero (overhead %), where a relative threshold is noise.
+    AbsolutePoints(f64),
+}
+
+impl Slip {
+    pub fn to_json(&self) -> Json {
+        let (kind, value) = match self {
+            Slip::RelativePct(v) => ("relative_pct", *v),
+            Slip::AbsolutePoints(v) => ("absolute_points", *v),
+        };
+        Json::obj(vec![("kind", Json::str(kind)), ("value", Json::num(sanitize(value)))])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Slip> {
+        let value = j.get("value")?.as_f64()?;
+        match j.get("kind")?.as_str()? {
+            "relative_pct" => Some(Slip::RelativePct(value)),
+            "absolute_points" => Some(Slip::AbsolutePoints(value)),
+            _ => None,
+        }
+    }
+}
+
+/// One accepted headline metric of a suite — the numbers the regression
+/// gate defends.
+#[derive(Clone, Debug)]
+pub struct Headline {
+    pub key: String,
+    pub value: f64,
+    /// Display unit ("x", "%", "ms").
+    pub unit: String,
+    pub direction: Direction,
+    pub slip: Slip,
+    /// The driver's printed acceptance bound, when it has one (a floor for
+    /// higher-is-better headlines, a ceiling for lower-is-better ones).
+    pub floor: Option<f64>,
+}
+
+impl Headline {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(self.key.clone())),
+            ("value", Json::num(sanitize(self.value))),
+            ("unit", Json::str(self.unit.clone())),
+            ("direction", Json::str(self.direction.name())),
+            ("slip", self.slip.to_json()),
+            (
+                "floor",
+                match self.floor {
+                    Some(f) => Json::num(sanitize(f)),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Headline> {
+        Some(Headline {
+            key: j.get("key")?.as_str()?.to_string(),
+            value: j.get("value")?.as_f64()?,
+            unit: j.get("unit")?.as_str()?.to_string(),
+            direction: Direction::parse(j.get("direction")?.as_str()?)?,
+            slip: Slip::from_json(j.get("slip")?)?,
+            floor: j.get("floor").and_then(|f| f.as_f64()),
+        })
+    }
+}
+
+/// One cell of a suite's grid: a stable key (matrix/width/mode) plus its
+/// primary lower-is-better timing and the driver's headline value for the
+/// cell. `time_s == 0.0` marks a cell with no comparable timing (modeled
+/// throughput, declined activation) — the diff engine skips it.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub key: String,
+    pub time_s: f64,
+    pub value: f64,
+}
+
+impl CellResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(self.key.clone())),
+            ("time_s", Json::num(sanitize(self.time_s))),
+            ("value", Json::num(sanitize(self.value))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<CellResult> {
+        Some(CellResult {
+            key: j.get("key")?.as_str()?.to_string(),
+            time_s: j.get("time_s")?.as_f64()?,
+            value: j.get("value")?.as_f64()?,
+        })
+    }
+}
+
+/// One suite's results inside a run.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub suite: String,
+    pub title: String,
+    /// Wall time the whole suite took (measure + render).
+    pub wall_s: f64,
+    /// Echo of the declarative spec the suite ran under.
+    pub spec: Json,
+    pub headlines: Vec<Headline>,
+    pub cells: Vec<CellResult>,
+    /// The suite's `MetricsSnapshot` JSON (latency percentiles over the
+    /// cell timings, engine lanes, trace counters).
+    pub metrics: Json,
+}
+
+impl SuiteResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("title", Json::str(self.title.clone())),
+            ("wall_s", Json::num(sanitize(self.wall_s))),
+            ("spec", self.spec.clone()),
+            ("headlines", Json::arr(self.headlines.iter().map(|h| h.to_json()))),
+            ("cells", Json::arr(self.cells.iter().map(|c| c.to_json()))),
+            ("metrics", self.metrics.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<SuiteResult> {
+        let headlines =
+            j.get("headlines")?.as_arr()?.iter().map(Headline::from_json).collect::<Option<_>>()?;
+        let cells =
+            j.get("cells")?.as_arr()?.iter().map(CellResult::from_json).collect::<Option<_>>()?;
+        Some(SuiteResult {
+            suite: j.get("suite")?.as_str()?.to_string(),
+            title: j.get("title")?.as_str()?.to_string(),
+            wall_s: j.get("wall_s")?.as_f64()?,
+            spec: j.get("spec").cloned().unwrap_or(Json::Null),
+            headlines,
+            cells,
+            metrics: j.get("metrics").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+/// One run of the harness: identity plus every suite's results. Persisted
+/// append-only under `results/history/<run_id>.json`.
+#[derive(Clone, Debug)]
+pub struct ResultsFile {
+    pub schema: u64,
+    pub run_id: String,
+    /// Unix seconds at collection time.
+    pub created_unix: u64,
+    /// `git rev-parse --short HEAD`, or "unknown" outside a checkout.
+    pub git_rev: String,
+    /// The CLI argv the run was invoked with.
+    pub flags: Vec<String>,
+    pub quick: bool,
+    pub host_threads: usize,
+    pub suites: Vec<SuiteResult>,
+}
+
+impl ResultsFile {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(KIND)),
+            ("schema", Json::num(self.schema as f64)),
+            ("run_id", Json::str(self.run_id.clone())),
+            ("created_unix", Json::num(self.created_unix as f64)),
+            ("git_rev", Json::str(self.git_rev.clone())),
+            ("flags", Json::arr(self.flags.iter().map(|f| Json::str(f.clone())))),
+            ("quick", Json::Bool(self.quick)),
+            ("host_threads", Json::num(self.host_threads as f64)),
+            ("suites", Json::arr(self.suites.iter().map(|s| s.to_json()))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ResultsFile, String> {
+        if j.get("kind").and_then(|k| k.as_str()) != Some(KIND) {
+            return Err(format!("not a {KIND} document"));
+        }
+        let schema = j
+            .get("schema")
+            .and_then(|s| s.as_f64())
+            .ok_or_else(|| "missing schema version".to_string())? as u64;
+        if schema > SCHEMA_VERSION {
+            return Err(format!("schema v{schema} is newer than this binary (v{SCHEMA_VERSION})"));
+        }
+        let suites = j
+            .get("suites")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| "missing suites".to_string())?
+            .iter()
+            .map(SuiteResult::from_json)
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| "malformed suite entry".to_string())?;
+        Ok(ResultsFile {
+            schema,
+            run_id: j
+                .get("run_id")
+                .and_then(|s| s.as_str())
+                .ok_or_else(|| "missing run_id".to_string())?
+                .to_string(),
+            created_unix: j.get("created_unix").and_then(|n| n.as_f64()).unwrap_or(0.0) as u64,
+            git_rev: j
+                .get("git_rev")
+                .and_then(|s| s.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            flags: j
+                .get("flags")
+                .and_then(|f| f.as_arr())
+                .map(|a| a.iter().filter_map(|f| f.as_str().map(str::to_string)).collect())
+                .unwrap_or_default(),
+            quick: j.get("quick").and_then(|b| b.as_bool()).unwrap_or(false),
+            host_threads: j.get("host_threads").and_then(|n| n.as_usize()).unwrap_or(0),
+            suites,
+        })
+    }
+
+    /// Find a suite by name.
+    pub fn suite(&self, name: &str) -> Option<&SuiteResult> {
+        self.suites.iter().find(|s| s.suite == name)
+    }
+}
+
+/// Parse a results document from text: schema-v1 first, else a single
+/// legacy `BENCH_PR*.json` record wrapped as a one-suite run.
+pub fn parse_results(text: &str) -> Result<ResultsFile, String> {
+    let doc = parse(text)?;
+    if doc.get("kind").and_then(|k| k.as_str()) == Some(KIND) {
+        return ResultsFile::from_json(&doc);
+    }
+    let suite = suite_from_legacy(&doc)
+        .ok_or_else(|| format!("neither a {KIND} document nor a known BENCH_PR* shape"))?;
+    Ok(ResultsFile {
+        schema: 0,
+        run_id: format!("legacy-{}", suite.suite),
+        created_unix: 0,
+        git_rev: "unknown".to_string(),
+        flags: Vec::new(),
+        quick: false,
+        host_threads: doc.get("host_threads").and_then(|n| n.as_usize()).unwrap_or(0),
+        suites: vec![suite],
+    })
+}
+
+/// Forward-compat loader for the pre-harness perf-trajectory records:
+/// `BENCH_PR4.json` (exec), `BENCH_PR5.json` (reorder), `BENCH_PR6.json`
+/// (trace overhead). Maps each onto the same suite/headline/cell shapes
+/// the harness emits, so old records diff against new runs.
+pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
+    let bench = doc.get("bench")?.as_str()?;
+    let cases = doc.get("cases").and_then(|c| c.as_arr()).unwrap_or(&[]);
+    let f = |j: &Json, key: &str| j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let s = |j: &Json, key: &str| -> String {
+        j.get(key).and_then(|v| v.as_str()).unwrap_or("?").to_string()
+    };
+    match bench {
+        "exec_runtime" => Some(SuiteResult {
+            suite: "exec".to_string(),
+            title: "zero-allocation blocked runtime".to_string(),
+            wall_s: 0.0,
+            spec: Json::Null,
+            headlines: vec![Headline {
+                key: "geomean_speedup_n256".to_string(),
+                value: f(doc, "geomean_speedup_n256"),
+                unit: "x".to_string(),
+                direction: Direction::HigherIsBetter,
+                slip: Slip::RelativePct(10.0),
+                floor: doc.get("acceptance_floor_n256").and_then(|v| v.as_f64()),
+            }],
+            cells: cases
+                .iter()
+                .map(|c| CellResult {
+                    key: format!("{}/N={}", s(c, "matrix"), f(c, "n") as usize),
+                    time_s: f(c, "pooled_blocked_s"),
+                    value: f(c, "speedup"),
+                })
+                .collect(),
+            metrics: Json::Null,
+        }),
+        "reorder" => Some(SuiteResult {
+            suite: "reorder".to_string(),
+            title: "similarity-clustered HRPB packing".to_string(),
+            wall_s: 0.0,
+            spec: Json::Null,
+            headlines: vec![Headline {
+                key: "geomean_speedup_lowmed".to_string(),
+                value: f(doc, "geomean_speedup_lowmed"),
+                unit: "x".to_string(),
+                direction: Direction::HigherIsBetter,
+                slip: Slip::RelativePct(10.0),
+                floor: doc.get("acceptance_floor_lowmed").and_then(|v| v.as_f64()),
+            }],
+            cells: cases
+                .iter()
+                .map(|c| CellResult {
+                    key: format!("{}/{}", s(c, "family"), s(c, "matrix")),
+                    time_s: f(c, "reordered_s"),
+                    value: f(c, "speedup"),
+                })
+                .collect(),
+            metrics: Json::Null,
+        }),
+        "trace_overhead" => Some(SuiteResult {
+            suite: "trace".to_string(),
+            title: "observability overhead".to_string(),
+            wall_s: 0.0,
+            spec: Json::Null,
+            headlines: vec![
+                Headline {
+                    key: "overhead_off_pct".to_string(),
+                    value: f(doc, "overhead_off_pct"),
+                    unit: "%".to_string(),
+                    direction: Direction::LowerIsBetter,
+                    slip: Slip::AbsolutePoints(2.0),
+                    floor: doc.get("acceptance_overhead_off_pct").and_then(|v| v.as_f64()),
+                },
+                Headline {
+                    key: "exec_reconcile_pct".to_string(),
+                    value: f(doc, "exec_reconcile_pct"),
+                    unit: "%".to_string(),
+                    direction: Direction::LowerIsBetter,
+                    slip: Slip::AbsolutePoints(5.0),
+                    floor: doc.get("acceptance_reconcile_pct").and_then(|v| v.as_f64()),
+                },
+            ],
+            cells: cases
+                .iter()
+                .map(|c| CellResult {
+                    key: s(c, "mode"),
+                    time_s: f(c, "wall_s"),
+                    value: f(c, "req_per_s"),
+                })
+                .collect(),
+            metrics: Json::Null,
+        }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_run() -> ResultsFile {
+        ResultsFile {
+            schema: SCHEMA_VERSION,
+            run_id: "r0000000042-00007".to_string(),
+            created_unix: 42,
+            git_rev: "abc1234".to_string(),
+            flags: vec!["experiment".to_string(), "all".to_string(), "--quick".to_string()],
+            quick: true,
+            host_threads: 8,
+            suites: vec![
+                SuiteResult {
+                    suite: "exec".to_string(),
+                    title: "zero-allocation blocked runtime".to_string(),
+                    wall_s: 1.5,
+                    spec: Json::obj(vec![("reps", Json::num(3.0))]),
+                    headlines: vec![Headline {
+                        key: "geomean_speedup_n256".to_string(),
+                        value: 1.62,
+                        unit: "x".to_string(),
+                        direction: Direction::HigherIsBetter,
+                        slip: Slip::RelativePct(10.0),
+                        floor: Some(1.3),
+                    }],
+                    cells: vec![CellResult {
+                        key: "exec-fem/N=256".to_string(),
+                        time_s: 0.0125,
+                        value: 1.7,
+                    }],
+                    metrics: Json::obj(vec![("requests", Json::num(15.0))]),
+                },
+                SuiteResult {
+                    suite: "trace".to_string(),
+                    title: "observability overhead".to_string(),
+                    wall_s: 0.4,
+                    spec: Json::Null,
+                    headlines: vec![Headline {
+                        key: "overhead_off_pct".to_string(),
+                        value: 0.3,
+                        unit: "%".to_string(),
+                        direction: Direction::LowerIsBetter,
+                        slip: Slip::AbsolutePoints(2.0),
+                        floor: None,
+                    }],
+                    cells: Vec::new(),
+                    metrics: Json::Null,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn v1_round_trip_preserves_every_field() {
+        let run = sample_run();
+        let text = run.to_json().to_string();
+        let back = parse_results(&text).expect("own serialization must load");
+        assert_eq!(back.schema, run.schema);
+        assert_eq!(back.run_id, run.run_id);
+        assert_eq!(back.created_unix, run.created_unix);
+        assert_eq!(back.git_rev, run.git_rev);
+        assert_eq!(back.flags, run.flags);
+        assert_eq!(back.quick, run.quick);
+        assert_eq!(back.host_threads, run.host_threads);
+        assert_eq!(back.suites.len(), run.suites.len());
+        // field-exact: re-serializing the loaded document is byte-identical
+        assert_eq!(back.to_json().to_string(), text);
+        // the lookup helper finds suites by name
+        assert_eq!(back.suite("trace").map(|s| s.headlines.len()), Some(1));
+        assert!(back.suite("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_documents() {
+        assert!(parse_results("{\"hello\": 1}").is_err());
+        assert!(parse_results("not json at all").is_err());
+        let mut future = sample_run();
+        future.schema = SCHEMA_VERSION + 1;
+        let err = ResultsFile::from_json(&future.to_json()).unwrap_err();
+        assert!(err.contains("newer"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_values_serialize_as_the_zero_sentinel() {
+        let mut run = sample_run();
+        run.suites[0].cells[0].time_s = f64::NAN;
+        run.suites[0].headlines[0].value = f64::INFINITY;
+        let back = parse_results(&run.to_json().to_string()).unwrap();
+        assert_eq!(back.suites[0].cells[0].time_s, 0.0);
+        assert_eq!(back.suites[0].headlines[0].value, 0.0);
+    }
+
+    #[test]
+    fn legacy_bench_pr4_loads_as_an_exec_suite() {
+        let text = r#"{"bench": "exec_runtime", "pr": 4, "host_threads": 8,
+            "widths": [32, 256],
+            "geomean_speedup_n256": 1.62, "acceptance_floor_n256": 1.3,
+            "cases": [{"matrix": "exec-fem", "nnz": 1000, "n": 256,
+                "slab_width": 64, "pooled_blocked_s": 0.01, "speedup": 2.0}]}"#;
+        let run = parse_results(text).expect("legacy PR4 record must load");
+        assert_eq!(run.schema, 0);
+        assert_eq!(run.run_id, "legacy-exec");
+        assert_eq!(run.host_threads, 8);
+        let suite = run.suite("exec").unwrap();
+        assert_eq!(suite.headlines[0].key, "geomean_speedup_n256");
+        assert_eq!(suite.headlines[0].value, 1.62);
+        assert_eq!(suite.headlines[0].floor, Some(1.3));
+        assert_eq!(suite.headlines[0].direction, Direction::HigherIsBetter);
+        assert_eq!(suite.cells[0].key, "exec-fem/N=256");
+        assert_eq!(suite.cells[0].time_s, 0.01);
+        assert_eq!(suite.cells[0].value, 2.0);
+    }
+
+    #[test]
+    fn legacy_bench_pr5_loads_as_a_reorder_suite() {
+        let text = r#"{"bench": "reorder", "pr": 5,
+            "geomean_speedup_lowmed": 1.31, "acceptance_floor_lowmed": 1.2,
+            "cases": [{"family": "scattered", "matrix": "scattered-0",
+                "reordered_s": 0.004, "speedup": 1.4}]}"#;
+        let run = parse_results(text).expect("legacy PR5 record must load");
+        let suite = run.suite("reorder").unwrap();
+        assert_eq!(suite.headlines[0].key, "geomean_speedup_lowmed");
+        assert_eq!(suite.headlines[0].floor, Some(1.2));
+        assert_eq!(suite.cells[0].key, "scattered/scattered-0");
+        assert_eq!(suite.cells[0].time_s, 0.004);
+    }
+
+    #[test]
+    fn legacy_bench_pr6_loads_as_a_trace_suite_with_two_headlines() {
+        let text = r#"{"bench": "trace_overhead", "pr": 6,
+            "overhead_off_pct": 0.4, "overhead_full_pct": 2.1,
+            "exec_reconcile_pct": 0.0,
+            "acceptance_overhead_off_pct": 2.0, "acceptance_reconcile_pct": 5.0,
+            "cases": [{"mode": "baseline", "wall_s": 0.5, "req_per_s": 384.0},
+                      {"mode": "full", "wall_s": 0.52, "req_per_s": 369.0}]}"#;
+        let run = parse_results(text).expect("legacy PR6 record must load");
+        let suite = run.suite("trace").unwrap();
+        assert_eq!(suite.headlines.len(), 2);
+        assert_eq!(suite.headlines[0].key, "overhead_off_pct");
+        assert_eq!(suite.headlines[0].slip, Slip::AbsolutePoints(2.0));
+        assert_eq!(suite.headlines[0].direction, Direction::LowerIsBetter);
+        assert_eq!(suite.headlines[1].key, "exec_reconcile_pct");
+        assert_eq!(suite.headlines[1].floor, Some(5.0));
+        assert_eq!(suite.cells[1].key, "full");
+        assert_eq!(suite.cells[1].value, 369.0);
+    }
+
+    #[test]
+    fn unknown_legacy_bench_kind_is_rejected() {
+        assert!(parse_results(r#"{"bench": "mystery", "cases": []}"#).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! Run assembly: stamp a set of executed suites with the provenance a
+//! future reader needs to trust (or rerun) the numbers — schema version,
+//! sortable run id, git revision, invoking flags, host parallelism.
+
+use super::history;
+use super::results::{ResultsFile, SCHEMA_VERSION};
+use super::suites::SuiteRun;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// `git rev-parse --short HEAD` of the crate checkout, falling back to
+/// `CUTESPMM_GIT_REV` (CI tarballs without `.git`), then "unknown".
+pub fn git_rev() -> String {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output();
+    if let Ok(out) = out {
+        if out.status.success() {
+            let rev = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !rev.is_empty() {
+                return rev;
+            }
+        }
+    }
+    std::env::var("CUTESPMM_GIT_REV").unwrap_or_else(|_| "unknown".to_string())
+}
+
+/// Assemble executed suites into one versioned [`ResultsFile`], ready for
+/// [`history::append`].
+pub fn collect(quick: bool, flags: &[String], runs: Vec<SuiteRun>) -> ResultsFile {
+    let created_unix = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    ResultsFile {
+        schema: SCHEMA_VERSION,
+        run_id: history::make_run_id(created_unix),
+        created_unix,
+        git_rev: git_rev(),
+        flags: flags.to_vec(),
+        quick,
+        host_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        suites: runs.into_iter().map(|r| r.result).collect(),
+    }
+}

@@ -1,0 +1,115 @@
+//! Declarative experiment specs: each suite states its engines, corpus
+//! families, dense widths, and repetition counts up front. The runner
+//! echoes the spec into every history entry so a result is always
+//! reproducible from its own record.
+//!
+//! The grids are pinned to what the original drivers in
+//! [`crate::bench::experiments`] measure — the harness adapters reuse the
+//! drivers' measurement cores, so the spec is documentation-with-teeth:
+//! it is serialized with the results, not a second source of truth that
+//! can drift silently.
+
+use crate::bench::experiments;
+use crate::util::json::Json;
+
+/// Static description of one experiment suite's grid.
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub title: &'static str,
+    /// Engine/policy/mode axis (what each cell's timing compares).
+    pub engines: &'static [&'static str],
+    /// Corpus family axis (matrix generators, machines for `auto`).
+    pub families: &'static [&'static str],
+    /// Dense-side width axis (empty where width is not a variable).
+    pub widths: &'static [usize],
+    pub reps_full: usize,
+    pub reps_quick: usize,
+}
+
+impl SuiteSpec {
+    /// Repetitions (or request count, for the trace suite) at this tier.
+    pub fn reps(&self, quick: bool) -> usize {
+        if quick {
+            self.reps_quick
+        } else {
+            self.reps_full
+        }
+    }
+
+    /// Spec echo serialized into the suite's history entry.
+    pub fn to_json(&self, quick: bool) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("title", Json::str(self.title)),
+            ("engines", Json::arr(self.engines.iter().map(|e| Json::str(*e)))),
+            ("families", Json::arr(self.families.iter().map(|f| Json::str(*f)))),
+            ("widths", Json::arr(self.widths.iter().map(|w| Json::num(*w as f64)))),
+            ("reps", Json::num(self.reps(quick) as f64)),
+            ("quick", Json::Bool(quick)),
+        ])
+    }
+}
+
+/// Every suite the harness can run, in `experiment all` execution order.
+pub static SUITES: [SuiteSpec; 6] = [
+    SuiteSpec {
+        name: "exec",
+        title: "zero-allocation blocked runtime vs spawn-per-call",
+        engines: &["spawn-unblocked", "spawn-blocked", "pooled-unblocked", "pooled-blocked"],
+        families: &["exec-fem", "exec-mesh", "exec-rmat"],
+        widths: &experiments::EXEC_WIDTHS,
+        reps_full: 5,
+        reps_quick: 3,
+    },
+    SuiteSpec {
+        name: "reorder",
+        title: "similarity-clustered HRPB packing vs arrival order",
+        engines: &["original", "reordered"],
+        families: &["scattered", "community", "banded", "rmat"],
+        widths: &[128],
+        reps_full: 5,
+        reps_quick: 3,
+    },
+    SuiteSpec {
+        name: "qos",
+        title: "bounded priority admission vs baselines under saturation",
+        engines: &["unbounded", "reject-on-full", "qos"],
+        families: &["sim-trace"],
+        widths: &[],
+        reps_full: 4000,
+        reps_quick: 4000,
+    },
+    SuiteSpec {
+        name: "trace",
+        title: "observability overhead: off / sampled / full vs untraced",
+        engines: &["baseline", "off", "sampled", "full"],
+        families: &["trace-banded"],
+        widths: &[16],
+        reps_full: 768,
+        reps_quick: 192,
+    },
+    SuiteSpec {
+        name: "prep",
+        title: "persistent HRPB artifacts: cold vs warm registration",
+        engines: &["serial", "parallel", "cold", "warm"],
+        families: &["prep-fem", "prep-mesh", "prep-rmat", "prep-banded-sparse"],
+        widths: &[],
+        reps_full: 1,
+        reps_quick: 1,
+    },
+    SuiteSpec {
+        name: "auto",
+        title: "synergy-driven engine selection vs fixed policies (modeled)",
+        engines: &["auto", "oracle", "hrpb-always", "best-sc-always", "tcgnn-always"],
+        families: &["A100", "RTX-4090"],
+        widths: &[32, 128, 512],
+        reps_full: 1,
+        reps_quick: 1,
+    },
+];
+
+/// Look up a suite spec by name.
+pub fn suite_spec(name: &str) -> Option<&'static SuiteSpec> {
+    SUITES.iter().find(|s| s.name == name)
+}

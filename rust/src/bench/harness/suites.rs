@@ -1,0 +1,318 @@
+//! Suite adapters: run each experiment driver's measurement core, render
+//! the *existing* report (byte-identical stdout and `BENCH_*.json`
+//! side-effects — the drivers keep writing those), and additionally
+//! project the outcomes into the harness's [`SuiteResult`] model with a
+//! fresh [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) folded
+//! over the cell timings.
+//!
+//! The headline values recomputed here use the same formulas as the
+//! report renderers (geomean over the same subset, same guards), so the
+//! number printed in the report and the number the regression gate
+//! defends cannot disagree.
+
+use super::results::{CellResult, Direction, Headline, Slip, SuiteResult};
+use super::spec::{suite_spec, SuiteSpec};
+use crate::bench::corpus_run::Record;
+use crate::bench::experiments;
+use crate::coordinator::Metrics;
+use crate::spmm::Algo;
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// One executed suite: the harness-model result plus the driver's
+/// rendered report (printed by the CLI exactly as before).
+pub struct SuiteRun {
+    pub result: SuiteResult,
+    pub report: String,
+}
+
+/// Relative slip threshold (percent) for geomean-style headlines — the
+/// CI gate's ">10% geomean slip" contract.
+pub const DEFAULT_SLIP_PCT: f64 = 10.0;
+
+/// Run one suite by name. `records` feeds the `auto` suite (so
+/// `experiment all` shares one corpus run across consumers); the other
+/// suites ignore it.
+pub fn run_suite(name: &str, quick: bool, records: Option<&[Record]>) -> Result<SuiteRun, String> {
+    let spec = suite_spec(name).ok_or_else(|| format!("unknown suite '{name}'"))?;
+    match name {
+        "exec" => Ok(run_exec(spec, quick)),
+        "reorder" => Ok(run_reorder(spec, quick)),
+        "qos" => Ok(run_qos(spec, quick)),
+        "trace" => Ok(run_trace(spec, quick)),
+        "prep" => Ok(run_prep(spec, quick)),
+        "auto" => {
+            let records = records.ok_or("the auto suite needs corpus records")?;
+            Ok(run_auto(spec, quick, records))
+        }
+        other => Err(format!("suite '{other}' has no harness adapter")),
+    }
+}
+
+/// Geomean with the report renderers' convention: NAN on an empty set
+/// (the results model then sanitizes NAN to 0.0 on serialization).
+fn geomean_or_nan(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        crate::util::stats::geomean(xs)
+    }
+}
+
+/// Fold the suite's comparable cell timings through a fresh [`Metrics`]
+/// so every history entry carries the same latency/lane snapshot shape
+/// the serve path exports.
+fn fold_metrics(cells: &[CellResult], route: bool) -> Json {
+    let m = Metrics::default();
+    for c in cells {
+        if !c.time_s.is_finite() || c.time_s <= 0.0 {
+            continue;
+        }
+        let dur = Duration::from_secs_f64(c.time_s);
+        m.request_latency.record(dur);
+        m.exec_latency.record(dur);
+        m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        m.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if route {
+            m.record_route(Algo::Hrpb.index(), 1, dur, 0.0);
+        }
+    }
+    m.snapshot().to_json()
+}
+
+fn make_result(
+    spec: &SuiteSpec,
+    quick: bool,
+    wall_s: f64,
+    headlines: Vec<Headline>,
+    cells: Vec<CellResult>,
+    route: bool,
+) -> SuiteResult {
+    let metrics = fold_metrics(&cells, route);
+    SuiteResult {
+        suite: spec.name.to_string(),
+        title: spec.title.to_string(),
+        wall_s,
+        spec: spec.to_json(quick),
+        headlines,
+        cells,
+        metrics,
+    }
+}
+
+fn run_exec(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let specs = experiments::exec_specs(quick);
+    let outcomes = experiments::exec_outcomes_for(&specs, spec.widths, spec.reps(quick));
+    let report = experiments::exec_report(&outcomes);
+    let speedups_256: Vec<f64> =
+        outcomes.iter().filter(|o| o.n == 256).map(|o| o.speedup()).collect();
+    let headlines = vec![Headline {
+        key: "geomean_speedup_n256".to_string(),
+        value: geomean_or_nan(&speedups_256),
+        unit: "x".to_string(),
+        direction: Direction::HigherIsBetter,
+        slip: Slip::RelativePct(DEFAULT_SLIP_PCT),
+        floor: Some(1.3),
+    }];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: format!("{}/N={}", o.matrix, o.n),
+            time_s: o.pooled_blocked_s,
+            value: o.speedup(),
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, true),
+        report,
+    }
+}
+
+fn run_reorder(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let outcomes = experiments::reorder_outcomes_for(
+        &experiments::reorder_specs(quick),
+        spec.widths[0],
+        spec.reps(quick),
+    );
+    let report = experiments::reorder_report(&outcomes);
+    let lowmed: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.family == "scattered" || o.family == "community")
+        .map(|o| o.speedup())
+        .collect();
+    let headlines = vec![Headline {
+        key: "geomean_speedup_lowmed".to_string(),
+        value: geomean_or_nan(&lowmed),
+        unit: "x".to_string(),
+        direction: Direction::HigherIsBetter,
+        slip: Slip::RelativePct(DEFAULT_SLIP_PCT),
+        floor: Some(1.2),
+    }];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: format!("{}/{}", o.family, o.matrix),
+            time_s: o.reordered_s,
+            value: o.speedup(),
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, true),
+        report,
+    }
+}
+
+fn run_qos(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let outcomes = experiments::qos_saturation_outcomes();
+    let report = experiments::qos_report(&outcomes);
+    let qos_p99 = outcomes
+        .iter()
+        .find(|o| o.policy == "qos")
+        .map(|o| o.p99_wait_ms)
+        .unwrap_or(f64::NAN);
+    let headlines = vec![Headline {
+        key: "qos_p99_wait_ms".to_string(),
+        value: qos_p99,
+        unit: "ms".to_string(),
+        direction: Direction::LowerIsBetter,
+        slip: Slip::RelativePct(DEFAULT_SLIP_PCT),
+        floor: None,
+    }];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: o.policy.to_string(),
+            time_s: o.p99_wait_ms / 1e3,
+            value: o.completed as f64,
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, false),
+        report,
+    }
+}
+
+fn run_trace(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let outcomes = experiments::trace_outcomes(quick);
+    let report = experiments::trace_report(&outcomes);
+    // Same formulas as trace_report: off-mode overhead vs the untraced
+    // baseline, full-mode span-vs-engine-lane reconciliation.
+    let baseline_rps = outcomes
+        .iter()
+        .find(|o| o.mode == "baseline")
+        .map(|o| o.req_per_s)
+        .unwrap_or(f64::NAN);
+    let overhead_off_pct = outcomes
+        .iter()
+        .find(|o| o.mode == "off")
+        .map(|o| 100.0 * (baseline_rps - o.req_per_s) / baseline_rps.max(1e-9))
+        .unwrap_or(f64::NAN);
+    let reconcile_pct = outcomes
+        .iter()
+        .find(|o| o.mode == "full" && o.observed_us > 0)
+        .map(|o| {
+            100.0 * (o.exec_span_us as f64 - o.observed_us as f64).abs() / o.observed_us as f64
+        })
+        .unwrap_or(0.0);
+    let headlines = vec![
+        Headline {
+            key: "overhead_off_pct".to_string(),
+            value: overhead_off_pct,
+            unit: "%".to_string(),
+            direction: Direction::LowerIsBetter,
+            slip: Slip::AbsolutePoints(2.0),
+            floor: Some(2.0),
+        },
+        Headline {
+            key: "exec_reconcile_pct".to_string(),
+            value: reconcile_pct,
+            unit: "%".to_string(),
+            direction: Direction::LowerIsBetter,
+            slip: Slip::AbsolutePoints(5.0),
+            floor: Some(5.0),
+        },
+    ];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: o.mode.to_string(),
+            time_s: o.wall_s,
+            value: o.req_per_s,
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, false),
+        report,
+    }
+}
+
+fn run_prep(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let dir = std::env::temp_dir().join(format!("cutespmm_harness_prep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let outcomes = experiments::prep_outcomes(&dir);
+    let report = experiments::prep_report(&outcomes);
+    let _ = std::fs::remove_dir_all(&dir);
+    let cold: f64 = outcomes.iter().map(|o| o.cold_register_s).sum();
+    let warm: f64 = outcomes.iter().map(|o| o.warm_register_s).sum();
+    let headlines = vec![Headline {
+        key: "warm_speedup".to_string(),
+        value: cold / warm.max(1e-12),
+        unit: "x".to_string(),
+        direction: Direction::HigherIsBetter,
+        // Warm-path timings are tiny (µs scale) and noisy on shared
+        // runners; gate with a generous relative band.
+        slip: Slip::RelativePct(50.0),
+        floor: Some(5.0),
+    }];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: o.matrix.clone(),
+            time_s: o.warm_register_s,
+            value: o.cold_register_s / o.warm_register_s.max(1e-12),
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, false),
+        report,
+    }
+}
+
+fn run_auto(spec: &SuiteSpec, quick: bool, records: &[Record]) -> SuiteRun {
+    let t0 = Instant::now();
+    let report = experiments::auto_policy(records);
+    let headline_summary = experiments::auto_policy_summary(records, "A100", 128);
+    let headlines = vec![Headline {
+        key: "auto_vs_oracle".to_string(),
+        value: headline_summary
+            .map(|s| s.auto_gflops / s.oracle_gflops.max(1e-12))
+            .unwrap_or(0.0),
+        unit: "x".to_string(),
+        direction: Direction::HigherIsBetter,
+        slip: Slip::RelativePct(DEFAULT_SLIP_PCT),
+        floor: None,
+    }];
+    let mut cells = Vec::new();
+    for machine in spec.families {
+        for &n in spec.widths {
+            if let Some(s) = experiments::auto_policy_summary(records, machine, n) {
+                cells.push(CellResult {
+                    key: format!("{machine}/N={n}"),
+                    // Modeled throughput, not a wall-clock measurement —
+                    // 0.0 keeps it out of the timing geomean.
+                    time_s: 0.0,
+                    value: s.auto_gflops,
+                });
+            }
+        }
+    }
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, false),
+        report,
+    }
+}

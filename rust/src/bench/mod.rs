@@ -1,10 +1,13 @@
 //! Experiment harness — shared by `benches/*.rs` and the CLI's `experiment`
 //! subcommand. `corpus_run` produces the per-matrix prediction records;
 //! `experiments` renders each paper table/figure; `render` provides the
-//! ASCII tables/box plots/heatmaps and CSV output.
+//! ASCII tables/box plots/heatmaps and CSV output; `harness` is the perf
+//! observatory: declarative suite specs, versioned results history under
+//! `results/history/`, and the diff engine behind the CI regression gate.
 
 pub mod corpus_run;
 pub mod experiments;
+pub mod harness;
 pub mod render;
 
 pub use corpus_run::{Cell, Record};

@@ -298,6 +298,12 @@ pub struct Metrics {
     /// registration time; silent until a planner-gated permutation
     /// activates.
     pub reorder: Mutex<ReorderSnapshot>,
+    /// Trace-ring totals mirrored from [`crate::trace::ring_totals`] after
+    /// each batch when tracing is on: session-lifetime spans recorded and
+    /// spans lost to ring overflow. Silent until a span records — their
+    /// visibility is what makes silent span loss observable.
+    pub trace_spans_recorded: AtomicU64,
+    pub trace_spans_dropped: AtomicU64,
 }
 
 /// Predicted-cost seconds → the µs unit the downstream gauge accumulates.
@@ -403,6 +409,13 @@ impl Metrics {
         *self.reorder.lock().unwrap() = s;
     }
 
+    /// Mirror the trace rings' monotonic recorded/dropped totals (absolute
+    /// values — the rings own the counts, the report only displays them).
+    pub fn sync_trace(&self, recorded: u64, dropped: u64) {
+        self.trace_spans_recorded.store(recorded, Ordering::Relaxed);
+        self.trace_spans_dropped.store(dropped, Ordering::Relaxed);
+    }
+
     /// Requests served by `algo`'s lane (test + report convenience).
     pub fn engine_requests(&self, algo: Algo) -> u64 {
         self.engines[algo.index()].requests.load(Ordering::Relaxed)
@@ -484,6 +497,8 @@ impl Metrics {
             reorder: *self.reorder.lock().unwrap(),
             qos,
             qos_downstream_cost_s: self.qos_downstream_cost_s(),
+            trace_spans_recorded: self.trace_spans_recorded.load(Ordering::Relaxed),
+            trace_spans_dropped: self.trace_spans_dropped.load(Ordering::Relaxed),
         }
     }
 
@@ -534,6 +549,10 @@ pub struct MetricsSnapshot {
     /// activity (keeps the report section silent, as before).
     pub qos: Option<Vec<QosLaneSnapshot>>,
     pub qos_downstream_cost_s: f64,
+    /// Session-lifetime trace-ring totals (spans recorded / spans lost to
+    /// ring overflow); both zero until a trace session records.
+    pub trace_spans_recorded: u64,
+    pub trace_spans_dropped: u64,
 }
 
 impl MetricsSnapshot {
@@ -613,6 +632,13 @@ impl MetricsSnapshot {
                 })),
             ),
             ("qos_downstream_cost_s", Json::num(self.qos_downstream_cost_s)),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("spans_recorded", Json::num(self.trace_spans_recorded as f64)),
+                    ("spans_dropped", Json::num(self.trace_spans_dropped as f64)),
+                ]),
+            ),
         ])
     }
 
@@ -694,6 +720,12 @@ impl MetricsSnapshot {
                 }
             }
             out.push(']');
+        }
+        if self.trace_spans_recorded + self.trace_spans_dropped > 0 {
+            out.push_str(&format!(
+                " trace=[spans={} dropped={}]",
+                self.trace_spans_recorded, self.trace_spans_dropped
+            ));
         }
         out
     }
@@ -1006,6 +1038,23 @@ mod tests {
         // absolute mirror: a later snapshot replaces, not accumulates
         m.sync_arena(11, 2);
         assert!(m.report().contains("arena=[hits=11 misses=2]"), "{}", m.report());
+    }
+
+    #[test]
+    fn trace_counters_report_when_active_and_stay_silent_otherwise() {
+        let m = Metrics::default();
+        assert!(!m.report().contains("trace=["));
+        m.sync_trace(120, 7);
+        let r = m.report();
+        assert!(r.contains("trace=[spans=120 dropped=7]"), "{r}");
+        let s = m.snapshot();
+        assert_eq!(r, s.render());
+        let doc = crate::util::json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("trace").unwrap().get("spans_recorded").unwrap().as_usize(), Some(120));
+        assert_eq!(doc.get("trace").unwrap().get("spans_dropped").unwrap().as_usize(), Some(7));
+        // absolute mirror: a later snapshot replaces, not accumulates
+        m.sync_trace(240, 7);
+        assert!(m.report().contains("trace=[spans=240 dropped=7]"), "{}", m.report());
     }
 
     #[test]

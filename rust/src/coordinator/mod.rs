@@ -950,6 +950,10 @@ fn execute_job(
     arena.release(fused);
     arena.release(c);
     metrics.sync_arena(arena.hits(), arena.misses());
+    if trace::enabled() {
+        let totals = trace::ring_totals();
+        metrics.sync_trace(totals.recorded, totals.dropped);
+    }
 }
 
 #[cfg(test)]

@@ -55,7 +55,10 @@
 //! * [`coordinator`] — the L3 serving layer: matrix registry, router,
 //!   dynamic batcher, worker pool, metrics (with a structured
 //!   `MetricsSnapshot` JSON export behind `cutespmm metrics`).
-//! * [`bench`] — the experiment harness behind `benches/` and the CLI.
+//! * [`bench`] — the experiment harness behind `benches/` and the CLI,
+//!   including the perf observatory (`bench::harness`): declarative suite
+//!   specs, a versioned results history under `results/history/`, and the
+//!   `experiment diff` regression gate CI runs on every push.
 
 pub mod bench;
 pub mod coordinator;

@@ -22,9 +22,12 @@
 //!               [--metrics-every N]         # rewrite every N responses
 //! cutespmm metrics [--from m.json] [--json]  # validate + summarize a
 //!                                            # snapshot dump
+//! cutespmm metrics --diff a.json b.json [--json]
+//!                                           # per-counter/lane/engine delta
+//!                                           # report between two snapshots
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|exec|reorder|trace|all> [--quick]
+//!                      qos|exec|reorder|trace|all> [--quick] [--out-dir DIR]
 //!                                           # exec: pool + column-slab
 //!                                           # runtime A/B, emits
 //!                                           # results/BENCH_PR4.json
@@ -34,12 +37,22 @@
 //!                                           # trace: observability overhead
 //!                                           # off/sampled/full, emits
 //!                                           # results/BENCH_PR6.json
+//!                                           # prep/qos/auto/exec/reorder/
+//!                                           # trace also append a schema-v1
+//!                                           # entry to results/history/
+//! cutespmm experiment diff [--against ID|FILE] [--slip PCT] [--json]
+//!                          [--inject-slip [PCT]]
+//!                                           # compare the latest history
+//!                                           # entry against the accepted
+//!                                           # (or previous) baseline; exits
+//!                                           # nonzero on a regression
+//! cutespmm experiment accept [run-id]       # pin the accepted baseline
 //! cutespmm selfcheck                          # engines vs oracle + PJRT
 //! ```
 //!
 //! Arguments are parsed by hand: the offline image has no clap (DESIGN.md §9).
 
-use cutespmm::bench::{experiments, render};
+use cutespmm::bench::{experiments, harness, render};
 use cutespmm::coordinator::{BatchPolicy, Config, Coordinator, EnginePolicy};
 use cutespmm::formats::{mtx, Coo, Dense};
 use cutespmm::gen::named;
@@ -638,6 +651,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// document (the CI smoke uses the nonzero exit on parse failure as its
 /// snapshot-validity assertion).
 fn cmd_metrics(args: &Args) -> Result<(), String> {
+    if let Some(a_path) = args.get("diff") {
+        let b_path = args
+            .positional
+            .get(1)
+            .ok_or("usage: cutespmm metrics --diff <baseline.json> <current.json>")?;
+        return metrics_diff(Path::new(a_path), Path::new(b_path), args.has("json"));
+    }
     let path = args
         .get("from")
         .map(PathBuf::from)
@@ -688,6 +708,162 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
             );
         }
     }
+    if let Some(trace) = doc.get("trace") {
+        let t = |k: &str| trace.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let (recorded, dropped) = (t("spans_recorded"), t("spans_dropped"));
+        if recorded + dropped > 0.0 {
+            println!("  trace: spans_recorded={recorded} spans_dropped={dropped}");
+        }
+    }
+    Ok(())
+}
+
+/// `cutespmm metrics --diff a.json b.json`: per-counter, per-engine-lane and
+/// per-QoS-lane delta report between two snapshot dumps, using the same
+/// percent-change math as the experiment regression gate.
+fn metrics_diff(a_path: &Path, b_path: &Path, json: bool) -> Result<(), String> {
+    use harness::diff::pct_change;
+
+    let load = |p: &Path| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| format!("cannot read {}: {e}", p.display()))?;
+        cutespmm::util::json::parse(&text)
+            .map_err(|e| format!("{} is not a valid metrics snapshot: {e}", p.display()))
+    };
+    let a = load(a_path)?;
+    let b = load(b_path)?;
+    let at = |d: &Json, path: &[&str]| -> f64 {
+        let mut cur = d;
+        for key in path {
+            match cur.get(key) {
+                Some(next) => cur = next,
+                None => return 0.0,
+            }
+        }
+        cur.as_f64().unwrap_or(0.0)
+    };
+
+    // (section, metric, json path) — the scalar counters and percentiles a
+    // lane-level comparison cares about
+    let mut entries: Vec<(String, String, Vec<String>)> = Vec::new();
+    let own = |path: &[&str]| path.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    for key in ["requests", "responses", "failures", "rejected", "batches", "served_gflop"] {
+        entries.push(("counters".to_string(), key.to_string(), own(&[key])));
+    }
+    for hist in ["request_latency", "exec_latency"] {
+        for q in ["p50_us", "p99_us", "p999_us", "mean_us"] {
+            entries.push((hist.to_string(), q.to_string(), own(&[hist, q])));
+        }
+    }
+    for key in ["spans_recorded", "spans_dropped"] {
+        entries.push(("trace".to_string(), key.to_string(), own(&["trace", key])));
+    }
+    // engine lanes present in either snapshot, matched by name
+    let lane_rows = |doc: &Json, section: &str| -> Vec<String> {
+        doc.get(section)
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|l| {
+                        l.get(if section == "engines" { "engine" } else { "lane" })
+                            .and_then(|v| v.as_str())
+                            .map(str::to_string)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let lane_value = |doc: &Json, section: &str, lane: &str, path: &[&str]| -> f64 {
+        let key = if section == "engines" { "engine" } else { "lane" };
+        doc.get(section)
+            .and_then(|v| v.as_arr())
+            .and_then(|arr| {
+                arr.iter().find(|l| l.get(key).and_then(|v| v.as_str()) == Some(lane))
+            })
+            .map(|l| at(l, path))
+            .unwrap_or(0.0)
+    };
+    let mut lanes: Vec<(String, String)> = Vec::new();
+    for section in ["engines", "qos"] {
+        let mut names = lane_rows(&a, section);
+        for n in lane_rows(&b, section) {
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+        for name in names {
+            lanes.push((section.to_string(), name));
+        }
+    }
+
+    let mut rows = Vec::new();
+    let mut json_entries = Vec::new();
+    let mut push = |section: &str, metric: &str, base: f64, cur: f64| {
+        if base == 0.0 && cur == 0.0 {
+            return; // idle sections stay out of the report
+        }
+        let change = pct_change(base, cur);
+        rows.push(vec![
+            section.to_string(),
+            metric.to_string(),
+            format!("{base}"),
+            format!("{cur}"),
+            change.map(|p| format!("{p:+.1}%")).unwrap_or_else(|| "-".to_string()),
+        ]);
+        json_entries.push(Json::obj(vec![
+            ("section", Json::str(section)),
+            ("metric", Json::str(metric)),
+            ("baseline", Json::num(base)),
+            ("current", Json::num(cur)),
+            (
+                "change_pct",
+                change.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ]));
+    };
+    for (section, metric, path) in &entries {
+        let path: Vec<&str> = path.iter().map(String::as_str).collect();
+        push(section, metric, at(&a, &path), at(&b, &path));
+    }
+    for (section, lane) in &lanes {
+        let metrics: &[(&str, &[&str])] = if section == "engines" {
+            &[
+                ("requests", &["requests"]),
+                ("observed_us", &["observed_us"]),
+                ("drift", &["drift"]),
+            ]
+        } else {
+            &[
+                ("admitted", &["admitted"]),
+                ("p99_wait_us", &["queue_wait", "p99_us"]),
+            ]
+        };
+        for (metric, path) in metrics {
+            push(
+                &format!("{section}/{lane}"),
+                metric,
+                lane_value(&a, section, lane, path),
+                lane_value(&b, section, lane, path),
+            );
+        }
+    }
+
+    if json {
+        let doc = Json::obj(vec![
+            ("kind", Json::str("cutespmm_metrics_diff")),
+            ("baseline", Json::str(a_path.display().to_string())),
+            ("current", Json::str(b_path.display().to_string())),
+            ("entries", Json::Arr(json_entries)),
+        ]);
+        println!("{}", doc.to_string());
+        return Ok(());
+    }
+    println!("metrics diff: {} (baseline) vs {} (current)", a_path.display(), b_path.display());
+    if rows.is_empty() {
+        println!("both snapshots are empty — nothing to compare");
+        return Ok(());
+    }
+    println!("{}", render::table(&["section", "metric", "baseline", "current", "change"], &rows));
     Ok(())
 }
 
@@ -728,8 +904,24 @@ fn cmd_selfcheck(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The six suites the perf observatory tracks: they run through
+/// [`harness::run_suite`] (same reports, same `BENCH_*.json` artifacts)
+/// and additionally append to `results/history/`.
+const HARNESS_SUITES: [&str; 6] = ["prep", "auto", "qos", "exec", "reorder", "trace"];
+
 fn cmd_experiment(args: &Args) -> Result<(), String> {
+    // --out-dir relocates every CSV/JSON artifact, including the history
+    // dir, before anything runs
+    if let Some(dir) = args.get("out-dir") {
+        experiments::set_results_dir(PathBuf::from(dir));
+    }
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    if which == "diff" {
+        return cmd_experiment_diff(args);
+    }
+    if which == "accept" {
+        return cmd_experiment_accept(args);
+    }
     let quick = args.has("quick");
     let needs_corpus =
         matches!(which, "fig2" | "fig7" | "fig9" | "fig10" | "table2" | "auto" | "all");
@@ -742,12 +934,17 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     } else {
         Vec::new()
     };
-    let mut ran = false;
-    let mut run = |name: &str, report: String| {
+    let run = |name: &str, report: String| {
         println!("{report}");
         eprintln!("[{name}] csv -> {}", experiments::results_dir().display());
-        ran = true;
     };
+    let run_suite = |name: &str| -> Result<harness::SuiteRun, String> {
+        let recs = if name == "auto" { Some(records.as_slice()) } else { None };
+        let sr = harness::run_suite(name, quick, recs)?;
+        run(name, sr.report.clone());
+        Ok(sr)
+    };
+    let mut suite_runs: Vec<harness::SuiteRun> = Vec::new();
     match which {
         "fig2" => run("fig2", experiments::fig2(&records)),
         "fig7" => run("fig7", experiments::fig7(&records)),
@@ -758,14 +955,9 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "table3" => run("table3", experiments::table34(3)),
         "table4" => run("table4", experiments::table34(4)),
         "preproc" => run("preproc", experiments::preprocessing()),
-        "prep" => run("prep", experiments::prep()),
         "ablation-tiles" => run("ablation-tiles", experiments::ablation_tiles()),
         "ablation-balance" => run("ablation-balance", experiments::ablation_loadbalance()),
-        "auto" => run("auto", experiments::auto_policy(&records)),
-        "qos" => run("qos", experiments::qos_saturation()),
-        "exec" => run("exec", experiments::exec(quick)),
-        "reorder" => run("reorder", experiments::reorder(quick)),
-        "trace" => run("trace", experiments::trace_overhead(quick)),
+        name if HARNESS_SUITES.contains(&name) => suite_runs.push(run_suite(name)?),
         "all" => {
             run("table1", experiments::table1());
             run("table2", experiments::table2(&records));
@@ -776,23 +968,109 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             run("table3", experiments::table34(3));
             run("table4", experiments::table34(4));
             run("preproc", experiments::preprocessing());
-            run("prep", experiments::prep());
             run("ablation-tiles", experiments::ablation_tiles());
-            run("ablation-balance", experiments::ablation_loadbalance());
-            run("auto", experiments::auto_policy(&records));
-            run("qos", experiments::qos_saturation());
-            run("exec", experiments::exec(quick));
-            run("reorder", experiments::reorder(quick));
-            run("trace", experiments::trace_overhead(quick));
+            // the observatory suites run last, collected into ONE history
+            // entry for the whole invocation
+            for name in HARNESS_SUITES {
+                suite_runs.push(run_suite(name)?);
+            }
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }
+    if !suite_runs.is_empty() {
+        let flags: Vec<String> = std::env::args().skip(1).collect();
+        let file = harness::collect(quick, &flags, suite_runs);
+        match harness::history::append(&file) {
+            Ok(path) => eprintln!("[{which}] history -> {} (run {})", path.display(), file.run_id),
+            Err(e) => eprintln!("warning: could not record history entry: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// `cutespmm experiment diff`: compare the latest history entry against
+/// the accepted (or previous, or `--against`) baseline per headline.
+/// Exits nonzero when any headline slipped beyond its threshold — the CI
+/// regression gate. `--inject-slip [PCT]` self-tests the gate by diffing
+/// a synthetically degraded copy of the latest run against itself.
+fn cmd_experiment_diff(args: &Args) -> Result<(), String> {
+    use harness::{diff, history};
+
+    let slip_override = args.get("slip").and_then(|v| v.parse::<f64>().ok());
+    let current_id = history::latest().ok_or(
+        "no history entries yet; run `cutespmm experiment all --quick` (or any of \
+         prep/auto/qos/exec/reorder/trace) first",
+    )?;
+    let current = history::load(&current_id)?;
+    let (base, cur) = if args.has("inject-slip") {
+        let pct = args.get("inject-slip").and_then(|v| v.parse::<f64>().ok()).unwrap_or(15.0);
+        eprintln!(
+            "self-test: diffing run {current_id} against a copy degraded by {pct}% — \
+             the gate must go red"
+        );
+        let slipped = diff::inject_slip(&current, pct);
+        (current, slipped)
+    } else if let Some(id) = args.get("against") {
+        let as_path = Path::new(id);
+        let base = if as_path.is_file() {
+            // a file path baselines against an arbitrary results document,
+            // including pre-harness BENCH_PR*.json records
+            history::load_path(as_path)?
+        } else {
+            history::load(id)?
+        };
+        (base, current)
+    } else if let Some(id) = history::baseline_for(&current_id) {
+        let kind = if history::accepted_id().as_deref() == Some(id.as_str()) {
+            "accepted"
+        } else {
+            "previous entry"
+        };
+        eprintln!("baseline: {id} ({kind})");
+        (history::load(&id)?, current)
+    } else {
+        println!(
+            "no baseline to compare against (first recorded run is {current_id}); \
+             nothing to gate — pass"
+        );
+        return Ok(());
+    };
+    let report = diff::diff(&base, &cur, slip_override);
+    if args.has("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.render());
+    }
+    if report.regressed() {
+        return Err(format!(
+            "regression gate: run {} slipped beyond threshold vs baseline {}",
+            report.current_id, report.baseline_id
+        ));
+    }
+    Ok(())
+}
+
+/// `cutespmm experiment accept [run-id]`: pin the accepted baseline the
+/// regression gate diffs against (defaults to the latest entry).
+fn cmd_experiment_accept(args: &Args) -> Result<(), String> {
+    use harness::history;
+
+    let id = match args.positional.get(2) {
+        Some(id) => id.clone(),
+        None => history::latest().ok_or("no history entries to accept")?,
+    };
+    let path = history::accept(&id)?;
+    println!("accepted baseline {id} -> {}", path.display());
     Ok(())
 }
 
 fn usage() -> &'static str {
     "usage: cutespmm <gen|preprocess|prep|spmm|synergy|plan|serve|metrics|experiment|selfcheck> \
      [flags]\n\
+     perf observatory: `experiment all --quick` records a run under results/history/, \
+     `experiment diff [--against ID|FILE] [--slip PCT] [--inject-slip [PCT]] [--json]` \
+     gates on headline regressions, `experiment accept [run-id]` pins the baseline, \
+     `metrics --diff a.json b.json` compares two snapshot dumps\n\
      see the module docs at the top of rust/src/main.rs for flag details"
 }
 

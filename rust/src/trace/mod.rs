@@ -232,6 +232,34 @@ pub fn drain() -> Trace {
     trace
 }
 
+/// Session-lifetime ring totals, summed over every registered thread's
+/// request and kernel rings.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingTotals {
+    /// Spans ever pushed (monotonic; drains do not reset it).
+    pub recorded: u64,
+    /// Spans ever evicted by ring overflow (monotonic; drains do not reset
+    /// it — unlike [`Trace::dropped`], which reports per-drain losses).
+    pub dropped: u64,
+}
+
+/// Sum the monotonic recorded/dropped counters across all thread rings.
+/// Cheap enough to call after every batch: one registry lock plus two
+/// uncontended ring locks per thread.
+pub fn ring_totals() -> RingTotals {
+    let mut totals = RingTotals::default();
+    for ring in REGISTRY.lock().unwrap().iter() {
+        let req = ring.request.lock().unwrap();
+        totals.recorded += req.recorded();
+        totals.dropped += req.dropped_total();
+        drop(req);
+        let kern = ring.kernel.lock().unwrap();
+        totals.recorded += kern.recorded();
+        totals.dropped += kern.dropped_total();
+    }
+    totals
+}
+
 /// Serialize whole-process trace sessions. The gates and rings are global
 /// (pool threads outlive any coordinator), so concurrent sessions would
 /// interleave and steal each other's spans — hold this guard across

@@ -68,12 +68,20 @@ pub struct SpanRing {
     head: usize,
     next_seq: u64,
     dropped: u64,
+    dropped_total: u64,
 }
 
 impl SpanRing {
     pub fn new(capacity: usize) -> SpanRing {
         let capacity = capacity.max(1);
-        SpanRing { buf: Vec::with_capacity(capacity), capacity, head: 0, next_seq: 0, dropped: 0 }
+        SpanRing {
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            head: 0,
+            next_seq: 0,
+            dropped: 0,
+            dropped_total: 0,
+        }
     }
 
     /// Record a span, stamping its sequence number. Beyond capacity the
@@ -87,6 +95,7 @@ impl SpanRing {
             self.buf[self.head] = span;
             self.head = (self.head + 1) % self.capacity;
             self.dropped += 1;
+            self.dropped_total += 1;
         }
     }
 
@@ -117,6 +126,12 @@ impl SpanRing {
     /// Spans ever pushed (monotonic across drains).
     pub fn recorded(&self) -> u64 {
         self.next_seq
+    }
+
+    /// Spans ever evicted by overflow (monotonic across drains — the
+    /// session-lifetime loss counter behind `metrics`' trace section).
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped_total
     }
 
     /// Remove and return every stored span, oldest first. Keeps the
@@ -168,7 +183,12 @@ mod tests {
         assert!(spans.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
         assert_eq!(r.dropped(), 0, "drain resets the overflow counter");
         assert_eq!(r.recorded(), 25, "the sequence counter stays monotonic");
+        assert_eq!(r.dropped_total(), 17, "lifetime drop counter survives the drain");
         assert_eq!(r.allocated(), alloc0);
+        r.push(span(25));
+        assert_eq!(r.dropped_total(), 17, "non-evicting pushes leave it unchanged");
+        r.reset(8);
+        assert_eq!(r.dropped_total(), 0, "a new session starts the counter over");
     }
 
     #[test]
