@@ -721,8 +721,11 @@ pub fn prep_outcomes(dir: &std::path::Path) -> Vec<PrepOutcome> {
     use std::sync::Arc;
 
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let specs = prep_specs();
+    let progress = crate::bench::harness::Progress::start("prep", specs.len());
     let mut out = Vec::new();
-    for spec in prep_specs() {
+    for (i, spec) in specs.into_iter().enumerate() {
+        progress.cell(i, &spec.name);
         let coo = spec.generate();
         if coo.nnz() == 0 {
             continue;
@@ -945,8 +948,10 @@ pub fn exec_outcomes_for(
     use crate::spmm::hrpb::{ExecOpts, HrpbEngine};
     use crate::util::timer::measure;
 
+    let progress = crate::bench::harness::Progress::start("exec", specs.len());
     let mut out = Vec::new();
-    for spec in specs {
+    for (i, spec) in specs.iter().enumerate() {
+        progress.cell(i, &spec.name);
         let coo = spec.generate();
         if coo.nnz() == 0 {
             continue;
@@ -1236,8 +1241,10 @@ pub fn reorder_outcomes_for(
 
     let planner = Planner::new(Machine::a100());
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let progress = crate::bench::harness::Progress::start("reorder", specs.len());
     let mut out = Vec::new();
-    for (family, spec, shuffle) in specs {
+    for (i, (family, spec, shuffle)) in specs.iter().enumerate() {
+        progress.cell(i, &format!("{family}/{}", spec.name));
         let mut coo = spec.generate();
         if coo.nnz() == 0 {
             continue;
@@ -1446,6 +1453,339 @@ pub fn reorder_report(outcomes: &[ReorderOutcome]) -> String {
         &csv,
     );
     let json_path = write_reorder_json(outcomes, geomean_lowmed);
+    out.push_str(&format!("machine-readable record -> {}\n", json_path.display()));
+    out
+}
+
+/// The geometry-corpus families: unstructured/scattered matrices where
+/// most default-shape brick slots are zero-fill (the exact pricer should
+/// find a smaller catalog shape), plus a dense-block control whose slots
+/// price (near-)identically at every catalog shape — the chooser must stay
+/// at the default 16x4 there.
+pub(crate) fn geometry_specs(quick: bool) -> Vec<(&'static str, MatrixSpec)> {
+    let s = if quick { 1usize } else { 3 };
+    vec![
+        (
+            "scattered",
+            MatrixSpec {
+                name: "geometry-scattered".into(),
+                rows: 4096 * s,
+                family: Family::Random { avg_degree: 2 },
+                seed: 0x6E00,
+            },
+        ),
+        (
+            "powerlaw",
+            MatrixSpec {
+                name: "geometry-powerlaw".into(),
+                rows: 3072 * s,
+                family: Family::Rmat { edge_factor: 8, skew: 0.57 },
+                seed: 0x6E01,
+            },
+        ),
+        (
+            "blockdense",
+            MatrixSpec {
+                name: "geometry-blockdense".into(),
+                rows: 4096 * s,
+                family: Family::BlockDiag { unit: 16, unit_density: 0.7 },
+                seed: 0x6E02,
+            },
+        ),
+    ]
+}
+
+/// One (family, matrix) cell of the brick-geometry A/B: the same matrix
+/// served at the fixed default 16x4 shape vs. the planner-picked catalog
+/// shape, with the pre-build pricer slot counts that drove the choice.
+#[derive(Clone, Debug)]
+pub struct GeometryOutcome {
+    pub family: String,
+    pub matrix: String,
+    pub nnz: usize,
+    pub n: usize,
+    /// The planner's pick ([`crate::planner::Planner::choose_geometry`]).
+    pub chosen: crate::params::BrickGeometry,
+    /// Pre-build pricer work proxy (brick slots = bricks × pattern bits)
+    /// at the default shape…
+    pub slots_default: usize,
+    /// …and at the chosen shape.
+    pub slots_chosen: usize,
+    /// One-time cost of pricing the whole catalog from CSR.
+    pub price_s: f64,
+    /// `spmm_into` median at the fixed default geometry.
+    pub fixed_s: f64,
+    /// `spmm_into` median at the chosen geometry (equals `fixed_s` when
+    /// the chooser stayed at the default — the A/B charges no phantom win).
+    pub picked_s: f64,
+    /// Worst relative error of either shape against the CSR reference.
+    pub max_rel_err: f64,
+}
+
+impl GeometryOutcome {
+    /// Did the chooser deviate from the default shape?
+    pub fn activated(&self) -> bool {
+        !self.chosen.is_default()
+    }
+
+    /// Pricer-predicted work ratio (default slots over chosen slots).
+    pub fn predicted_gain(&self) -> f64 {
+        self.slots_default as f64 / self.slots_chosen.max(1) as f64
+    }
+
+    /// The headline ratio: fixed 16x4 vs. planner-picked shape.
+    pub fn speedup(&self) -> f64 {
+        self.fixed_s / self.picked_s.max(1e-12)
+    }
+}
+
+/// Run the geometry A/B at the default scale. `quick` shrinks the matrices
+/// and sample counts (CI smoke).
+pub fn geometry_outcomes(quick: bool) -> Vec<GeometryOutcome> {
+    let cache = crate::bench::harness::SuiteCache::open("geometry_driver");
+    geometry_outcomes_for(&geometry_specs(quick), 128, if quick { 3 } else { 5 }, cache.as_ref())
+}
+
+/// Measurement core, parameterized so debug-mode tests can afford a tiny
+/// grid. With a [`SuiteCache`](crate::bench::harness::SuiteCache), every
+/// engine build routes through the suite-run artifact store: the
+/// planner-picked cell of a matrix whose chosen shape is the default
+/// serves the already-built 16x4 artifact (a hit) instead of rebuilding,
+/// and its round-trip result is folded into the cell's correctness check.
+pub fn geometry_outcomes_for(
+    specs: &[(&'static str, MatrixSpec)],
+    n: usize,
+    samples: usize,
+    cache: Option<&crate::bench::harness::SuiteCache>,
+) -> Vec<GeometryOutcome> {
+    use crate::bench::harness::Progress;
+    use crate::formats::Csr;
+    use crate::params::{BrickGeometry, TK, TM};
+    use crate::planner::Planner;
+    use crate::spmm::hrpb::HrpbEngine;
+    use crate::util::timer::{measure, time_once};
+
+    let planner = Planner::new(Machine::a100());
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let progress = Progress::start("geometry", specs.len());
+    let mut out = Vec::new();
+    for (i, (family, spec)) in specs.iter().enumerate() {
+        progress.cell(i, &format!("{family}/{}", spec.name));
+        let coo = spec.generate();
+        if coo.nnz() == 0 {
+            continue;
+        }
+        let csr = Csr::from_coo(&coo);
+        let (priced, price_s) = time_once(|| crate::reorder::price_catalog(&csr, None, TM, TK));
+        let chosen = planner.choose_geometry(&priced);
+        let slots = |geo: BrickGeometry| {
+            priced.iter().find(|(g, _)| *g == geo).map(|(g, s)| s.brick_slots(*g)).unwrap_or(0)
+        };
+
+        let build = |geo: BrickGeometry| match cache {
+            Some(c) => c.engine(&coo, &csr, geo, threads),
+            None => HrpbEngine::from_hrpb(crate::hrpb::build_with_geometry_parallel(
+                &csr, geo, TM, TK, threads,
+            )),
+        };
+        let fixed = build(BrickGeometry::DEFAULT);
+        let reference = Algo::Csr.prepare(&coo);
+        let b = Dense::from_vec(coo.cols, n, vec![0.25; coo.cols * n]);
+        let want = reference.spmm(&b);
+        let mut reused = Dense::zeros(coo.rows, n);
+        let mut max_rel_err = fixed.spmm(&b).rel_fro_error(&want);
+        let fixed_s = measure(1, samples, || {
+            fixed.spmm_into(&b, &mut reused);
+        })
+        .median_s;
+        let picked_s = if chosen.is_default() {
+            // the planner-picked cell lands on the shape already built:
+            // with a cache, serve it from the artifact (a store hit — the
+            // "same matrix+geometry builds once" contract) and verify the
+            // round trip; either way charge no phantom win
+            if cache.is_some() {
+                let served = build(BrickGeometry::DEFAULT);
+                max_rel_err = max_rel_err.max(served.spmm(&b).rel_fro_error(&want));
+            }
+            fixed_s
+        } else {
+            let picked = build(chosen);
+            max_rel_err = max_rel_err.max(picked.spmm(&b).rel_fro_error(&want));
+            measure(1, samples, || {
+                picked.spmm_into(&b, &mut reused);
+            })
+            .median_s
+        };
+        out.push(GeometryOutcome {
+            family: family.to_string(),
+            matrix: spec.name.clone(),
+            nnz: coo.nnz(),
+            n,
+            chosen,
+            slots_default: slots(BrickGeometry::DEFAULT),
+            slots_chosen: slots(chosen),
+            price_s,
+            fixed_s,
+            picked_s,
+            max_rel_err,
+        });
+    }
+    out
+}
+
+/// Write the machine-readable perf-trajectory record the CI uploads.
+fn write_geometry_json(
+    outcomes: &[GeometryOutcome],
+    geomean_unstructured: f64,
+) -> std::path::PathBuf {
+    use crate::util::json::Json;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("geometry")),
+        ("pr", Json::num(8.0)),
+        ("host_threads", Json::num(threads as f64)),
+        // a run with no scattered/powerlaw cells has no headline; 0.0
+        // keeps the JSON valid (NaN is not JSON)
+        (
+            "geomean_speedup_unstructured",
+            Json::num(if geomean_unstructured.is_finite() { geomean_unstructured } else { 0.0 }),
+        ),
+        ("acceptance_floor_unstructured", Json::num(1.0)),
+        (
+            "cases",
+            Json::arr(outcomes.iter().map(|o| {
+                Json::obj(vec![
+                    ("family", Json::str(o.family.clone())),
+                    ("matrix", Json::str(o.matrix.clone())),
+                    ("nnz", Json::num(o.nnz as f64)),
+                    ("n", Json::num(o.n as f64)),
+                    ("chosen", Json::str(o.chosen.name())),
+                    ("activated", Json::Bool(o.activated())),
+                    ("slots_default", Json::num(o.slots_default as f64)),
+                    ("slots_chosen", Json::num(o.slots_chosen as f64)),
+                    ("predicted_gain", Json::num(o.predicted_gain())),
+                    ("price_s", Json::num(o.price_s)),
+                    ("fixed_s", Json::num(o.fixed_s)),
+                    ("picked_s", Json::num(o.picked_s)),
+                    ("speedup", Json::num(o.speedup())),
+                    ("max_rel_err", Json::num(o.max_rel_err)),
+                ])
+            })),
+        ),
+    ]);
+    let path = results_dir().join("BENCH_PR8.json");
+    write_json_or_warn(&path, &doc.to_string());
+    path
+}
+
+/// Brick-geometry experiment — planner-picked catalog shape vs. fixed 16x4
+/// across {scattered, powerlaw, blockdense}, emitting `BENCH_PR8.json`.
+pub fn geometry(quick: bool) -> String {
+    let outcomes = geometry_outcomes(quick);
+    geometry_report(&outcomes)
+}
+
+/// Render the geometry experiment (split so tests measure once and reuse).
+pub fn geometry_report(outcomes: &[GeometryOutcome]) -> String {
+    let mut out = String::from(
+        "== geometry: adaptive brick shape — planner-picked catalog geometry vs fixed 16x4 ==\n",
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut unstructured_speedups = Vec::new();
+    for o in outcomes {
+        if o.family == "scattered" || o.family == "powerlaw" {
+            unstructured_speedups.push(o.speedup());
+        }
+        rows.push(vec![
+            o.family.clone(),
+            o.matrix.clone(),
+            o.n.to_string(),
+            o.chosen.name(),
+            if o.activated() { "yes".into() } else { "no".into() },
+            o.slots_default.to_string(),
+            o.slots_chosen.to_string(),
+            format!("{:.2}x", o.predicted_gain()),
+            format!("{:.2}", o.price_s * 1e3),
+            format!("{:.3}", o.fixed_s * 1e3),
+            format!("{:.3}", o.picked_s * 1e3),
+            format!("{:.2}x", o.speedup()),
+            format!("{:.1e}", o.max_rel_err),
+        ]);
+        csv.push(vec![
+            o.family.clone(),
+            o.matrix.clone(),
+            o.nnz.to_string(),
+            o.n.to_string(),
+            o.chosen.name(),
+            o.activated().to_string(),
+            o.slots_default.to_string(),
+            o.slots_chosen.to_string(),
+            format!("{:.4}", o.predicted_gain()),
+            format!("{}", o.price_s),
+            format!("{}", o.fixed_s),
+            format!("{}", o.picked_s),
+            format!("{:.4}", o.speedup()),
+            format!("{:.2e}", o.max_rel_err),
+        ]);
+    }
+    out.push_str(&render::table(
+        &[
+            "family",
+            "matrix",
+            "N",
+            "chosen",
+            "adaptive",
+            "slots_16x4",
+            "slots_chosen",
+            "predicted",
+            "price(ms)",
+            "fixed(ms)",
+            "picked(ms)",
+            "speedup",
+            "max_rel_err",
+        ],
+        &rows,
+    ));
+    let geomean_unstructured = if unstructured_speedups.is_empty() {
+        f64::NAN
+    } else {
+        stats::geomean(&unstructured_speedups)
+    };
+    out.push_str(&format!(
+        "\nplanner-picked geometry vs fixed 16x4 on the scattered/powerlaw (unstructured) \
+         families: geomean {:.2}x (acceptance floor: 1.0x)\n",
+        geomean_unstructured
+    ));
+    out.push_str(
+        "expected shape: on the unstructured families most 16x4 brick slots are zero-fill, \
+         so the pre-build pricer finds a smaller catalog shape (typically the transposed \
+         8x1) with a large predicted slot reduction and the picked engine serves at least \
+         as fast; the dense-block control prices (near-)identically at every shape and the \
+         chooser stays at 16x4, charging no phantom win; both shapes stay within 1e-5 of \
+         the CSR reference on every cell.\n",
+    );
+    write_csv_or_warn(
+        &results_dir().join("geometry.csv"),
+        &[
+            "family",
+            "matrix",
+            "nnz",
+            "n",
+            "chosen",
+            "activated",
+            "slots_default",
+            "slots_chosen",
+            "predicted_gain",
+            "price_s",
+            "fixed_s",
+            "picked_s",
+            "speedup",
+            "max_rel_err",
+        ],
+        &csv,
+    );
+    let json_path = write_geometry_json(outcomes, geomean_unstructured);
     out.push_str(&format!("machine-readable record -> {}\n", json_path.display()));
     out
 }
@@ -2334,6 +2674,103 @@ mod tests {
         let doc = crate::util::json::parse(&text).expect("BENCH_PR5.json parses");
         assert_eq!(doc.get("bench").unwrap().as_str(), Some("reorder"));
         assert!(doc.get("geomean_speedup_lowmed").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(doc.get("cases").unwrap().as_arr().unwrap().len(), outcomes.len());
+    }
+
+    /// Acceptance for the geometry A/B: every shape matches the CSR
+    /// reference, the scattered family (the existence proof — most 16x4
+    /// slots are zero-fill there) picks a non-default shape with a real
+    /// predicted slot reduction, the dense-block control stays at 16x4 and
+    /// charges no phantom win, and BENCH_PR8.json lands with the headline
+    /// geomean. The 1.0x floor itself is printed by the release-mode
+    /// `experiment geometry` (perf figures are measured on real hosts, not
+    /// asserted on loaded debug CI runners — the reorder experiment sets
+    /// the precedent).
+    #[test]
+    fn geometry_outcomes_are_correct_and_json_lands() {
+        let specs: Vec<(&'static str, MatrixSpec)> = vec![
+            (
+                "scattered",
+                MatrixSpec {
+                    name: "geometry-test-scattered".into(),
+                    rows: 512,
+                    family: Family::Random { avg_degree: 2 },
+                    seed: 0x6E07,
+                },
+            ),
+            (
+                "powerlaw",
+                MatrixSpec {
+                    name: "geometry-test-powerlaw".into(),
+                    rows: 512,
+                    family: Family::Rmat { edge_factor: 6, skew: 0.57 },
+                    seed: 0x6E08,
+                },
+            ),
+            (
+                "blockdense",
+                MatrixSpec {
+                    name: "geometry-test-blockdense".into(),
+                    rows: 512,
+                    family: Family::BlockDiag { unit: 16, unit_density: 0.7 },
+                    seed: 0x6E09,
+                },
+            ),
+        ];
+        let cache = crate::bench::harness::SuiteCache::open("geometry_test")
+            .expect("temp dir must be creatable in tests");
+        let outcomes = geometry_outcomes_for(&specs, 32, 1, Some(&cache));
+        assert_eq!(outcomes.len(), specs.len());
+        for o in &outcomes {
+            assert!(
+                o.max_rel_err < 1e-5,
+                "{}: a shape diverged from the CSR reference (rel err {})",
+                o.matrix,
+                o.max_rel_err
+            );
+            assert!(o.fixed_s > 0.0 && o.picked_s > 0.0);
+            assert!(o.price_s > 0.0);
+            assert!(o.slots_default > 0 && o.slots_chosen > 0);
+            if o.activated() {
+                // the chooser's contract: never deviate from the default
+                // without predicted gain
+                assert!(
+                    o.predicted_gain() >= 1.05,
+                    "{}: picked {} on a predicted gain of only {:.3}x",
+                    o.matrix,
+                    o.chosen,
+                    o.predicted_gain()
+                );
+            } else {
+                assert_eq!(o.picked_s, o.fixed_s, "default cells charge no phantom win");
+                assert_eq!(o.slots_chosen, o.slots_default);
+            }
+        }
+        let scat = outcomes.iter().find(|o| o.family == "scattered").unwrap();
+        assert!(scat.activated(), "scattered family failed to pick a non-default shape");
+        let dense = outcomes.iter().find(|o| o.family == "blockdense").unwrap();
+        assert!(
+            !dense.activated(),
+            "blockdense control must stay at 16x4 (picked {})",
+            dense.chosen
+        );
+        // the suite-run cache absorbed every planner-picked cell whose
+        // chosen shape coincides with the already-built default
+        let not_activated = outcomes.iter().filter(|o| !o.activated()).count() as u64;
+        let st = cache.stats();
+        assert_eq!(st.hits, not_activated, "default-shape picks must serve from the artifact");
+        assert_eq!(st.invalidated, 0);
+
+        let report = geometry_report(&outcomes);
+        assert!(report.contains("== geometry:"), "{report}");
+        assert!(report.contains("acceptance floor: 1.0x"), "{report}");
+        assert!(report.contains("BENCH_PR8.json"), "{report}");
+        let path = results_dir().join("BENCH_PR8.json");
+        let text = std::fs::read_to_string(&path).expect("BENCH_PR8.json written");
+        let doc = crate::util::json::parse(&text).expect("BENCH_PR8.json parses");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("geometry"));
+        assert_eq!(doc.get("pr").unwrap().as_f64(), Some(8.0));
+        assert!(doc.get("geomean_speedup_unstructured").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(doc.get("cases").unwrap().as_arr().unwrap().len(), outcomes.len());
     }
 

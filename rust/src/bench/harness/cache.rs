@@ -1,0 +1,116 @@
+//! Per-suite-run preprocessing cache: one temporary
+//! [`ArtifactStore`](crate::hrpb::ArtifactStore) shared by every cell of a
+//! single suite run, so a grid that visits the same (matrix, geometry)
+//! twice — e.g. the geometry suite's `planner-picked` cell landing on the
+//! same shape the `fixed-16x4` cell already built — serves the second
+//! visit from the persisted artifact instead of rebuilding the HRPB.
+//!
+//! The store's hit/miss counters are folded into the suite's
+//! `MetricsSnapshot` ([`Metrics::sync_artifacts`]
+//! (crate::coordinator::Metrics::sync_artifacts)), so every history entry
+//! records how much preprocessing the cache absorbed.
+
+use crate::formats::{Coo, Csr};
+use crate::hrpb::{ArtifactStore, StoreStats};
+use crate::params::{BrickGeometry, TK, TM};
+use crate::spmm::hrpb::HrpbEngine;
+use std::path::PathBuf;
+
+/// A suite-run-scoped artifact cache. Dropping it removes the backing
+/// directory — the cache deliberately does not outlive the run (cross-run
+/// persistence is the registry's job, with its own invalidation story).
+pub struct SuiteCache {
+    store: ArtifactStore,
+    dir: PathBuf,
+}
+
+impl SuiteCache {
+    /// Open a cache under a unique temp directory; `None` when the
+    /// directory cannot be created (cells then build uncached).
+    pub fn open(tag: &str) -> Option<SuiteCache> {
+        let dir = std::env::temp_dir().join(format!(
+            "cutespmm_suite_cache_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ArtifactStore::open(&dir).ok()?;
+        Some(SuiteCache { store, dir })
+    }
+
+    /// Store key for (matrix, geometry): the planner fingerprint mixed
+    /// with the geometry's wire id, so each catalog shape of the same
+    /// matrix gets its own artifact.
+    fn key(coo: &Coo, geo: BrickGeometry) -> u64 {
+        (crate::planner::fingerprint(coo) ^ geo.id() as u64).wrapping_mul(0x100000001b3)
+    }
+
+    /// Serve the engine for (matrix, geometry): an artifact hit skips the
+    /// HRPB build entirely (and exercises the serialization round-trip on
+    /// real suite data); a miss builds at the default tiles and persists
+    /// the artifact for the rest of the suite run.
+    pub fn engine(&self, coo: &Coo, csr: &Csr, geo: BrickGeometry, threads: usize) -> HrpbEngine {
+        let key = Self::key(coo, geo);
+        let digest = crate::hrpb::serialize::content_digest(coo);
+        if let Some(a) = self.store.load_matching(key, coo.rows, coo.cols, coo.nnz(), digest) {
+            // a key collision across geometries is astronomically unlikely
+            // but cheap to guard: a wrong-shape artifact is rebuilt
+            if a.hrpb.geometry == geo {
+                return HrpbEngine::from_shared_with_stats(std::sync::Arc::new(a.hrpb), a.stats);
+            }
+        }
+        let hrpb = crate::hrpb::build_with_geometry_parallel(csr, geo, TM, TK, threads);
+        let stats = crate::hrpb::stats::compute(&hrpb);
+        let _ = self.store.save(key, &hrpb, &stats, digest, None);
+        HrpbEngine::from_shared_with_stats(std::sync::Arc::new(hrpb), stats)
+    }
+
+    /// Hit/miss/invalidated counters for the suite's `MetricsSnapshot`.
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+}
+
+impl Drop for SuiteCache {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Coo, Csr, Dense};
+    use crate::spmm::SpmmEngine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn same_matrix_and_geometry_builds_once_and_serves_identically() {
+        let Some(cache) = SuiteCache::open("test_reuse") else {
+            panic!("temp dir must be creatable in tests");
+        };
+        let mut rng = Rng::new(300);
+        let coo = Coo::random(96, 80, 0.08, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let b = Dense::random(80, 12, &mut rng);
+
+        let first = cache.engine(&coo, &csr, BrickGeometry::DEFAULT, 2);
+        assert_eq!(cache.stats(), StoreStats { hits: 0, misses: 1, invalidated: 0 });
+        let again = cache.engine(&coo, &csr, BrickGeometry::DEFAULT, 2);
+        assert_eq!(cache.stats().hits, 1, "second visit must hit the artifact");
+        assert_eq!(
+            again.spmm(&b).max_abs_diff(&first.spmm(&b)),
+            0.0,
+            "artifact-served engine must be bit-identical"
+        );
+
+        // a different catalog shape of the same matrix is its own entry
+        let other = cache.engine(&coo, &csr, BrickGeometry::CATALOG[3], 2);
+        assert_eq!(other.hrpb().geometry, BrickGeometry::CATALOG[3]);
+        assert_eq!(cache.stats().misses, 2);
+        assert!(other.spmm(&b).rel_fro_error(&first.spmm(&b)) < 1e-6);
+        let dir = cache.store.dir().to_path_buf();
+        drop(cache);
+        assert!(!dir.exists(), "dropping the cache must remove its directory");
+    }
+}

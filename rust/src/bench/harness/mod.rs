@@ -12,6 +12,11 @@
 //!   measurement cores, keep their reports and `BENCH_*.json` artifacts
 //!   byte-identical, and project the outcomes into the model with a
 //!   `MetricsSnapshot` per suite.
+//! - [`cache`] — per-suite-run artifact cache: cells that revisit a
+//!   (matrix, geometry) pair serve the HRPB from the store instead of
+//!   rebuilding; hit counters land in the suite's `MetricsSnapshot`.
+//! - [`progress`] — per-cell stderr progress lines (suite, cell index,
+//!   elapsed), keeping long runs observable without touching stdout.
 //! - [`runner`] — stamps executed suites with run id / git rev / flags.
 //! - [`history`] — append-only entries under `results/history/` and the
 //!   `ACCEPTED` baseline pointer.
@@ -20,14 +25,18 @@
 //!   diff` and the CI regression gate (including the `--inject-slip`
 //!   gate self-test).
 
+pub mod cache;
 pub mod diff;
 pub mod history;
+pub mod progress;
 pub mod results;
 pub mod runner;
 pub mod spec;
 pub mod suites;
 
+pub use cache::SuiteCache;
 pub use diff::{diff, inject_slip, DiffReport};
+pub use progress::Progress;
 pub use results::{parse_results, ResultsFile, SuiteResult};
 pub use runner::collect;
 pub use spec::{suite_spec, SUITES};

@@ -1,0 +1,32 @@
+//! Per-cell progress lines for long suite runs. The full-scale suites
+//! take minutes per cell; without progress, `experiment all` is a silent
+//! wall. Lines go to **stderr** — the drivers' stdout reports (and the
+//! `BENCH_*.json` side effects) stay byte-identical.
+
+use std::time::Instant;
+
+/// Suite-scoped progress reporter: created when a measurement core
+/// starts, announced once per cell as it begins.
+pub struct Progress {
+    suite: &'static str,
+    total: usize,
+    t0: Instant,
+}
+
+impl Progress {
+    pub fn start(suite: &'static str, total: usize) -> Progress {
+        Progress { suite, total, t0: Instant::now() }
+    }
+
+    /// Announce cell `i` (0-based) as it starts, with the suite's elapsed
+    /// wall time so a stalled cell is distinguishable from a slow one.
+    pub fn cell(&self, i: usize, key: &str) {
+        eprintln!(
+            "[{} {}/{}] {key} ({:.1}s elapsed)",
+            self.suite,
+            i + 1,
+            self.total,
+            self.t0.elapsed().as_secs_f64()
+        );
+    }
+}

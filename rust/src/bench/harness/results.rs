@@ -8,7 +8,7 @@
 //! out-of-band table), per-cell timings, and the suite's
 //! [`crate::coordinator::metrics::MetricsSnapshot`] JSON.
 //!
-//! Pre-harness `BENCH_PR4/5/6.json` records load through
+//! Pre-harness `BENCH_PR4/5/6/8.json` records load through
 //! [`suite_from_legacy`], so `experiment diff` can baseline against
 //! history written before the observatory existed.
 
@@ -309,8 +309,9 @@ pub fn parse_results(text: &str) -> Result<ResultsFile, String> {
 
 /// Forward-compat loader for the pre-harness perf-trajectory records:
 /// `BENCH_PR4.json` (exec), `BENCH_PR5.json` (reorder), `BENCH_PR6.json`
-/// (trace overhead). Maps each onto the same suite/headline/cell shapes
-/// the harness emits, so old records diff against new runs.
+/// (trace overhead), `BENCH_PR8.json` (geometry). Maps each onto the same
+/// suite/headline/cell shapes the harness emits, so old records diff
+/// against new runs.
 pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
     let bench = doc.get("bench")?.as_str()?;
     let cases = doc.get("cases").and_then(|c| c.as_arr()).unwrap_or(&[]);
@@ -360,6 +361,29 @@ pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
                 .map(|c| CellResult {
                     key: format!("{}/{}", s(c, "family"), s(c, "matrix")),
                     time_s: f(c, "reordered_s"),
+                    value: f(c, "speedup"),
+                })
+                .collect(),
+            metrics: Json::Null,
+        }),
+        "geometry" => Some(SuiteResult {
+            suite: "geometry".to_string(),
+            title: "planner-picked brick geometry".to_string(),
+            wall_s: 0.0,
+            spec: Json::Null,
+            headlines: vec![Headline {
+                key: "geomean_speedup_unstructured".to_string(),
+                value: f(doc, "geomean_speedup_unstructured"),
+                unit: "x".to_string(),
+                direction: Direction::HigherIsBetter,
+                slip: Slip::RelativePct(10.0),
+                floor: doc.get("acceptance_floor_unstructured").and_then(|v| v.as_f64()),
+            }],
+            cells: cases
+                .iter()
+                .map(|c| CellResult {
+                    key: format!("{}/{}", s(c, "family"), s(c, "matrix")),
+                    time_s: f(c, "picked_s"),
                     value: f(c, "speedup"),
                 })
                 .collect(),
@@ -529,6 +553,21 @@ mod tests {
         assert_eq!(suite.headlines[0].floor, Some(1.2));
         assert_eq!(suite.cells[0].key, "scattered/scattered-0");
         assert_eq!(suite.cells[0].time_s, 0.004);
+    }
+
+    #[test]
+    fn legacy_bench_pr8_loads_as_a_geometry_suite() {
+        let text = r#"{"bench": "geometry", "pr": 8,
+            "geomean_speedup_unstructured": 1.08, "acceptance_floor_unstructured": 1.0,
+            "cases": [{"family": "scattered", "matrix": "geometry-scattered",
+                "chosen": "8x1t", "picked_s": 0.003, "speedup": 1.12}]}"#;
+        let run = parse_results(text).expect("legacy PR8 record must load");
+        let suite = run.suite("geometry").unwrap();
+        assert_eq!(suite.headlines[0].key, "geomean_speedup_unstructured");
+        assert_eq!(suite.headlines[0].value, 1.08);
+        assert_eq!(suite.headlines[0].floor, Some(1.0));
+        assert_eq!(suite.cells[0].key, "scattered/geometry-scattered");
+        assert_eq!(suite.cells[0].time_s, 0.003);
     }
 
     #[test]

@@ -52,7 +52,7 @@ impl SuiteSpec {
 }
 
 /// Every suite the harness can run, in `experiment all` execution order.
-pub static SUITES: [SuiteSpec; 6] = [
+pub static SUITES: [SuiteSpec; 7] = [
     SuiteSpec {
         name: "exec",
         title: "zero-allocation blocked runtime vs spawn-per-call",
@@ -67,6 +67,15 @@ pub static SUITES: [SuiteSpec; 6] = [
         title: "similarity-clustered HRPB packing vs arrival order",
         engines: &["original", "reordered"],
         families: &["scattered", "community", "banded", "rmat"],
+        widths: &[128],
+        reps_full: 5,
+        reps_quick: 3,
+    },
+    SuiteSpec {
+        name: "geometry",
+        title: "planner-picked brick geometry vs fixed 16x4",
+        engines: &["fixed-16x4", "planner-picked"],
+        families: &["scattered", "powerlaw", "blockdense"],
         widths: &[128],
         reps_full: 5,
         reps_quick: 3,

@@ -38,6 +38,7 @@ pub fn run_suite(name: &str, quick: bool, records: Option<&[Record]>) -> Result<
     match name {
         "exec" => Ok(run_exec(spec, quick)),
         "reorder" => Ok(run_reorder(spec, quick)),
+        "geometry" => Ok(run_geometry(spec, quick)),
         "qos" => Ok(run_qos(spec, quick)),
         "trace" => Ok(run_trace(spec, quick)),
         "prep" => Ok(run_prep(spec, quick)),
@@ -61,8 +62,14 @@ fn geomean_or_nan(xs: &[f64]) -> f64 {
 
 /// Fold the suite's comparable cell timings through a fresh [`Metrics`]
 /// so every history entry carries the same latency/lane snapshot shape
-/// the serve path exports.
-fn fold_metrics(cells: &[CellResult], route: bool) -> Json {
+/// the serve path exports. `store` mirrors the suite-run preprocessing
+/// cache's hit counters ([`super::cache::SuiteCache`]) into the snapshot's
+/// `artifacts` section.
+fn fold_metrics(
+    cells: &[CellResult],
+    route: bool,
+    store: Option<crate::hrpb::StoreStats>,
+) -> Json {
     let m = Metrics::default();
     for c in cells {
         if !c.time_s.is_finite() || c.time_s <= 0.0 {
@@ -77,6 +84,9 @@ fn fold_metrics(cells: &[CellResult], route: bool) -> Json {
             m.record_route(Algo::Hrpb.index(), 1, dur, 0.0);
         }
     }
+    if let Some(s) = store {
+        m.sync_artifacts(s);
+    }
     m.snapshot().to_json()
 }
 
@@ -88,7 +98,19 @@ fn make_result(
     cells: Vec<CellResult>,
     route: bool,
 ) -> SuiteResult {
-    let metrics = fold_metrics(&cells, route);
+    make_result_with_store(spec, quick, wall_s, headlines, cells, route, None)
+}
+
+fn make_result_with_store(
+    spec: &SuiteSpec,
+    quick: bool,
+    wall_s: f64,
+    headlines: Vec<Headline>,
+    cells: Vec<CellResult>,
+    route: bool,
+    store: Option<crate::hrpb::StoreStats>,
+) -> SuiteResult {
+    let metrics = fold_metrics(&cells, route, store);
     SuiteResult {
         suite: spec.name.to_string(),
         title: spec.title.to_string(),
@@ -160,6 +182,54 @@ fn run_reorder(spec: &SuiteSpec, quick: bool) -> SuiteRun {
         .collect();
     SuiteRun {
         result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, true),
+        report,
+    }
+}
+
+fn run_geometry(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    // one preprocessing cache for the whole suite run: cells whose
+    // planner-picked shape coincides with the fixed 16x4 build serve the
+    // HRPB from the artifact instead of rebuilding
+    let cache = super::cache::SuiteCache::open("geometry");
+    let outcomes = experiments::geometry_outcomes_for(
+        &experiments::geometry_specs(quick),
+        spec.widths[0],
+        spec.reps(quick),
+        cache.as_ref(),
+    );
+    let report = experiments::geometry_report(&outcomes);
+    let unstructured: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.family == "scattered" || o.family == "powerlaw")
+        .map(|o| o.speedup())
+        .collect();
+    let headlines = vec![Headline {
+        key: "geomean_speedup_unstructured".to_string(),
+        value: geomean_or_nan(&unstructured),
+        unit: "x".to_string(),
+        direction: Direction::HigherIsBetter,
+        slip: Slip::RelativePct(DEFAULT_SLIP_PCT),
+        floor: Some(1.0),
+    }];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: format!("{}/{}", o.family, o.matrix),
+            time_s: o.picked_s,
+            value: o.speedup(),
+        })
+        .collect();
+    SuiteRun {
+        result: make_result_with_store(
+            spec,
+            quick,
+            t0.elapsed().as_secs_f64(),
+            headlines,
+            cells,
+            true,
+            cache.as_ref().map(|c| c.stats()),
+        ),
         report,
     }
 }

@@ -221,6 +221,7 @@ impl Registry {
                 // never pays for two HRPB builds
                 let mut gains = None;
                 let mut perm = None;
+                let mut geometry = crate::params::BrickGeometry::DEFAULT;
                 if let Some(p) = planner {
                     let t_reorder = std::time::Instant::now();
                     let proposal =
@@ -229,17 +230,29 @@ impl Registry {
                         gains = Some(proposal.gains(t_reorder.elapsed().as_secs_f64()));
                         perm = Some(proposal.perm);
                     }
+                    // brick-geometry choice, also priced exactly BEFORE any
+                    // build — under the row order that will actually be
+                    // built, so the winner is built exactly once
+                    let priced = crate::reorder::price_catalog(
+                        &csr,
+                        perm.as_ref(),
+                        crate::params::TM,
+                        crate::params::TK,
+                    );
+                    geometry = p.choose_geometry(&priced);
                 }
                 let hrpb = Arc::new(match perm {
-                    Some(perm) => crate::reorder::build_reordered(
+                    Some(perm) => crate::reorder::build_reordered_geo(
                         &csr,
                         perm,
+                        geometry,
                         crate::params::TM,
                         crate::params::TK,
                         threads,
                     ),
-                    None => hrpb::builder::build_with_parallel(
+                    None => hrpb::builder::build_with_geometry_parallel(
                         &csr,
+                        geometry,
                         crate::params::TM,
                         crate::params::TK,
                         threads,
@@ -247,7 +260,7 @@ impl Registry {
                 });
                 let stats = hrpb::stats::compute(&hrpb);
                 // the built instance's exact numbers replace the estimate
-                // (identical at TM = BRICK_M, but keep them authoritative)
+                // (the pricer is exact, but keep the built stats authoritative)
                 if let Some(g) = gains.as_mut() {
                     g.alpha_after = stats.alpha;
                     g.beta_after = stats.beta;
@@ -258,9 +271,12 @@ impl Registry {
         let plan = match (planner, stored_plan) {
             // the artifact's plan rides along only when it was evaluated at
             // this planner's width — otherwise engine choice and the QoS
-            // cost signal would come from the wrong operating point. A
-            // width mismatch re-plans off the loaded HRPB (still no build).
-            (Some(p), Some(stored)) if stored.width == p.width() => {
+            // cost signal would come from the wrong operating point — and
+            // when it describes the geometry the artifact's HRPB is actually
+            // built at. A mismatch re-plans off the loaded HRPB (no build).
+            (Some(p), Some(stored))
+                if stored.width == p.width() && stored.geometry == hrpb.geometry =>
+            {
                 // seed the planner's cache so repeat plans of the same
                 // structure stay free
                 p.seed_plan(stored.clone());
@@ -574,6 +590,50 @@ mod tests {
         let want = coo.to_dense().matmul(&b);
         let got = e.exec.spmm(&b);
         assert!(got.rel_fro_error(&want) < 1e-5, "scatter epilogue restores row order");
+    }
+
+    #[test]
+    fn planned_registration_picks_a_gainful_brick_geometry() {
+        use crate::gpumodel::Machine;
+        // scattered: one nonzero per row, all columns distinct within a
+        // panel. The exact pricer predicts 2x less brick-MMA work at 8x1t
+        // than at the default 16x4 (a lone nonzero fills 1/8 of its brick
+        // instead of 1/64), so the chooser must deviate.
+        let scattered: Vec<(usize, usize, f32)> =
+            (0..512).map(|r| (r, (r * 37) % 512, 1.0 + r as f32 * 0.01)).collect();
+        let coo = Coo::from_triplets(512, 512, &scattered);
+        let planner = Planner::new(Machine::a100());
+        let reg = Registry::new();
+        let id = reg.register_planned("scattered", &coo, &planner);
+        let e = reg.get(id).unwrap();
+        let chosen = e.hrpb.geometry;
+        assert!(!chosen.is_default(), "pricer predicts a 2x win; chose {chosen}");
+        assert_eq!(e.plan.as_ref().unwrap().geometry, chosen, "plan records the shape");
+        // serving at the chosen shape stays exact
+        let b = crate::formats::Dense::random(coo.cols, 8, &mut Rng::new(80));
+        let want = coo.to_dense().matmul(&b);
+        assert!(e.exec.spmm(&b).rel_fro_error(&want) < 1e-5);
+
+        // full dense 16x16 blocks: every catalog shape prices identical
+        // brick-MMA work -> the chooser must never leave the default
+        let mut t = Vec::new();
+        for p in 0..32usize {
+            for r in 0..16 {
+                for c in 0..16 {
+                    t.push((p * 16 + r, (p % 4) * 16 + c, 1.0f32));
+                }
+            }
+        }
+        let dense = Coo::from_triplets(32 * 16, 64, &t);
+        let id2 = reg.register_planned("denseblocks", &dense, &planner);
+        let e2 = reg.get(id2).unwrap();
+        assert!(e2.hrpb.geometry.is_default(), "no predicted gain must stay default");
+        assert!(e2.plan.as_ref().unwrap().geometry.is_default());
+
+        // unplanned registration never deviates: geometry choice is
+        // planner-gated exactly like reordering
+        let id3 = reg.register("scattered-unplanned", &coo);
+        assert!(reg.get(id3).unwrap().hrpb.geometry.is_default());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use crate::gpumodel::machine::Machine;
 use crate::gpumodel::profile::MatrixProfile;
-use crate::params::{BRICK_K, BRICK_M, TK, TM};
+use crate::params::{BrickGeometry, TK, TM, TN};
 use crate::spmm::Algo;
 use crate::synergy;
 
@@ -111,8 +111,22 @@ fn finish(p: &MatrixProfile, n: usize, m: &Machine, grid: usize, shmem_per_block
     }
 }
 
-/// cuTeSpMM (this paper): HRPB + Algorithm 1 with §5 wave-aware balancing.
+/// cuTeSpMM (this paper): HRPB + Algorithm 1 with §5 wave-aware balancing,
+/// at the default brick geometry.
 pub fn predict_cutespmm(p: &MatrixProfile, n: usize, m: &Machine) -> Prediction {
+    predict_cutespmm_geo(p, n, m, BrickGeometry::DEFAULT)
+}
+
+/// cuTeSpMM with an explicit brick geometry: the zero-filled MMA volume
+/// (bits per brick) and the shared-memory ledger both follow the geometry.
+/// `p.hrpb` must describe an HRPB built (or priced) at that geometry —
+/// brick counts are not transferable between shapes.
+pub fn predict_cutespmm_geo(
+    p: &MatrixProfile,
+    n: usize,
+    m: &Machine,
+    geo: BrickGeometry,
+) -> Prediction {
     let s = &p.hrpb;
     let nf = n as f64;
     let grid = p.hrpb_grid(n);
@@ -121,11 +135,11 @@ pub fn predict_cutespmm(p: &MatrixProfile, n: usize, m: &Machine) -> Prediction 
     // TCU compute: full zero-filled brick MMAs. Double-buffered shared
     // staging keeps the MMA pipe ~60% fed (the practical ceiling of
     // register-sourced m16n8k4 issue).
-    let executed = 2.0 * s.num_bricks as f64 * (BRICK_M * BRICK_K) as f64 * nf;
+    let executed = 2.0 * s.num_bricks as f64 * geo.bits() as f64 * nf;
     let t_compute = executed / (m.tcu_tf32_tflops * 1e12 * 0.6);
 
     // Shared-memory transactions (Eqs 1-3 via the synergy model), 128 B each.
-    let oi = synergy::model(s, n);
+    let oi = synergy::model_with_geometry(s, n, TN, geo);
     let t_shmem = (oi.shmem_trans_a + oi.shmem_trans_b) * 128.0 / m.shmem_bw();
 
     // DRAM: packed A once; B gathered per block (TK coalesced row loads —
@@ -291,7 +305,7 @@ pub fn predict_dense(p: &MatrixProfile, n: usize, m: &Machine) -> Prediction {
 /// Dispatch one algorithm.
 pub fn predict(algo: Algo, p: &MatrixProfile, n: usize, m: &Machine) -> Prediction {
     match algo {
-        Algo::Hrpb => predict_cutespmm(p, n, m),
+        Algo::Hrpb => predict_cutespmm_geo(p, n, m, p.geometry),
         Algo::TcGnn => predict_tcgnn(p, n, m),
         Algo::Csr => predict_csr(p, n, m),
         Algo::Coo => predict_coo(p, n, m),

@@ -4,7 +4,7 @@
 use crate::formats::Coo;
 use crate::hrpb::{self, HrpbStats};
 use crate::loadbalance;
-use crate::params::{TK, TM};
+use crate::params::{BrickGeometry, TK, TM};
 use crate::spmm::tcgnn::TcGnnEngine;
 use crate::synergy::Synergy;
 
@@ -16,6 +16,10 @@ pub struct MatrixProfile {
     pub nnz: usize,
     /// HRPB stats at the paper's TM=16, TK=16.
     pub hrpb: HrpbStats,
+    /// Brick geometry the profiled HRPB was built with — `hrpb` brick counts
+    /// (and hence α and the zero-fill volume) are only meaningful at this
+    /// shape, so the cost models must price against it.
+    pub geometry: BrickGeometry,
     /// TC-GNN SGT 16×8 block count (its zero-fill denominator).
     pub tcgnn_blocks: usize,
     /// Row-length distribution: mean, coefficient of variation, max.
@@ -68,6 +72,7 @@ impl MatrixProfile {
             cols: coo.cols,
             nnz: coo.nnz(),
             hrpb: stats,
+            geometry: hrpb_mat.geometry,
             tcgnn_blocks,
             row_mean,
             row_cv,
@@ -105,6 +110,7 @@ impl MatrixProfile {
             cols,
             nnz,
             hrpb: stats,
+            geometry: hrpb_mat.geometry,
             tcgnn_blocks: 0,
             row_mean: if rows > 0 { nnz as f64 / rows as f64 } else { 0.0 },
             row_cv: 0.0,

@@ -9,7 +9,7 @@
 
 use crate::formats::{Coo, Csr};
 use crate::hrpb::{pack, Block, Hrpb};
-use crate::params::{BRICK_K, BRICK_M, TK, TM};
+use crate::params::{BrickGeometry, TK, TM};
 use crate::util::bits::{ceil_div, pattern_set};
 
 /// Build with the paper's default tile sizes (TM=16, TK=16).
@@ -22,10 +22,16 @@ pub fn build_from_coo(coo: &Coo) -> Hrpb {
     build(&Csr::from_coo(coo))
 }
 
-/// Build with explicit tile sizes (`tm`, `tk` must be brick multiples).
+/// Build with explicit tile sizes and the default brick geometry.
 /// Used by the §4 TM/TK ablation.
 pub fn build_with(csr: &Csr, tm: usize, tk: usize) -> Hrpb {
-    assert_tiles(tm, tk);
+    build_with_geometry(csr, BrickGeometry::DEFAULT, tm, tk)
+}
+
+/// Build with explicit tile sizes *and* brick geometry (`tm`, `tk` must be
+/// brick multiples of the geometry).
+pub fn build_with_geometry(csr: &Csr, geo: BrickGeometry, tm: usize, tk: usize) -> Hrpb {
+    assert_tiles(geo, tm, tk);
     let num_panels = ceil_div(csr.rows.max(1), tm);
     let mut blocks: Vec<Block> = Vec::new();
     let mut blocked_row_ptr: Vec<u32> = Vec::with_capacity(num_panels + 1);
@@ -35,24 +41,35 @@ pub fn build_with(csr: &Csr, tm: usize, tk: usize) -> Hrpb {
     let mut entries: Vec<(u32, u8, f32)> = Vec::new(); // (col, row-in-panel, val)
 
     for p in 0..num_panels {
-        build_panel(csr, tm, tk, p, &mut entries, &mut blocks);
+        build_panel(csr, geo, tm, tk, p, &mut entries, &mut blocks);
         blocked_row_ptr.push(blocks.len() as u32);
     }
-    finish(csr, tm, tk, blocks, blocked_row_ptr)
+    finish(csr, geo, tm, tk, blocks, blocked_row_ptr)
 }
 
-/// Parallel variant of [`build_with`]: row panels are independent, so
-/// contiguous panel ranges build on scoped worker threads and the per-panel
-/// block lists are stitched back in panel order. The result is
+/// Parallel variant of [`build_with`] (default geometry).
+pub fn build_with_parallel(csr: &Csr, tm: usize, tk: usize, threads: usize) -> Hrpb {
+    build_with_geometry_parallel(csr, BrickGeometry::DEFAULT, tm, tk, threads)
+}
+
+/// Parallel variant of [`build_with_geometry`]: row panels are independent,
+/// so contiguous panel ranges build on scoped worker threads and the
+/// per-panel block lists are stitched back in panel order. The result is
 /// **byte-identical** to the serial build — both paths run the same
 /// per-panel construction ([`build_panel`]) and the same deterministic
 /// packing pass.
-pub fn build_with_parallel(csr: &Csr, tm: usize, tk: usize, threads: usize) -> Hrpb {
-    assert_tiles(tm, tk);
+pub fn build_with_geometry_parallel(
+    csr: &Csr,
+    geo: BrickGeometry,
+    tm: usize,
+    tk: usize,
+    threads: usize,
+) -> Hrpb {
+    assert_tiles(geo, tm, tk);
     let num_panels = ceil_div(csr.rows.max(1), tm);
     let threads = threads.clamp(1, num_panels);
     if threads <= 1 {
-        return build_with(csr, tm, tk);
+        return build_with_geometry(csr, geo, tm, tk);
     }
     let chunk = ceil_div(num_panels, threads);
     let parts: Vec<(Vec<Block>, Vec<u32>)> = std::thread::scope(|s| {
@@ -66,7 +83,7 @@ pub fn build_with_parallel(csr: &Csr, tm: usize, tk: usize, threads: usize) -> H
                     let mut counts: Vec<u32> = Vec::with_capacity(p1 - p0);
                     for p in p0..p1 {
                         let before = blocks.len();
-                        build_panel(csr, tm, tk, p, &mut entries, &mut blocks);
+                        build_panel(csr, geo, tm, tk, p, &mut entries, &mut blocks);
                         counts.push((blocks.len() - before) as u32);
                     }
                     (blocks, counts)
@@ -89,7 +106,7 @@ pub fn build_with_parallel(csr: &Csr, tm: usize, tk: usize, threads: usize) -> H
         }
         blocks.extend(part_blocks);
     }
-    finish(csr, tm, tk, blocks, blocked_row_ptr)
+    finish(csr, geo, tm, tk, blocks, blocked_row_ptr)
 }
 
 /// Parallel build from COO with the paper's default tiles, sized for this
@@ -99,12 +116,14 @@ pub fn build_from_coo_parallel(coo: &Coo) -> Hrpb {
     build_with_parallel(&Csr::from_coo(coo), TM, TK, threads)
 }
 
-fn assert_tiles(tm: usize, tk: usize) {
-    assert!(tm % BRICK_M == 0 && tm > 0, "TM must be a positive multiple of {BRICK_M}");
+fn assert_tiles(geo: BrickGeometry, tm: usize, tk: usize) {
+    let (bm, bk) = (geo.brick_m, geo.brick_k);
+    assert!(bm >= 1 && bk >= 1 && geo.bits() <= 64, "brick pattern must fit a u64 word: {geo}");
+    assert!(tm % bm == 0 && tm > 0, "TM must be a positive multiple of {bm}");
     // row-in-panel offsets are stored as u8 throughout the builder and the
     // packed stream; a larger TM would silently truncate rows
     assert!(tm <= 256, "TM must be <= 256 (row-in-panel offsets are u8), got {tm}");
-    assert!(tk % BRICK_K == 0 && tk > 0, "TK must be a positive multiple of {BRICK_K}");
+    assert!(tk % bk == 0 && tk > 0, "TK must be a positive multiple of {bk}");
 }
 
 /// Build the blocks of row panel `p`, appending to `blocks`. `entries` is
@@ -112,6 +131,7 @@ fn assert_tiles(tm: usize, tk: usize) {
 /// this is the unit both the serial and the parallel builder share.
 fn build_panel(
     csr: &Csr,
+    geo: BrickGeometry,
     tm: usize,
     tk: usize,
     p: usize,
@@ -153,17 +173,25 @@ fn build_panel(
         let block_entries = &entries[block_start..j];
         i = j;
 
-        blocks.push(build_block(block_entries, &active_cols, tm, tk));
+        blocks.push(build_block(block_entries, &active_cols, geo, tm, tk));
     }
 }
 
 /// Shared tail of both builders: wrap the blocks and run the packing pass.
-fn finish(csr: &Csr, tm: usize, tk: usize, blocks: Vec<Block>, blocked_row_ptr: Vec<u32>) -> Hrpb {
+fn finish(
+    csr: &Csr,
+    geo: BrickGeometry,
+    tm: usize,
+    tk: usize,
+    blocks: Vec<Block>,
+    blocked_row_ptr: Vec<u32>,
+) -> Hrpb {
     let mut hrpb = Hrpb {
         rows: csr.rows,
         cols: csr.cols,
         tm,
         tk,
+        geometry: geo,
         nnz: csr.nnz(),
         blocks,
         blocked_row_ptr,
@@ -178,9 +206,15 @@ fn finish(csr: &Csr, tm: usize, tk: usize, blocks: Vec<Block>, blocked_row_ptr: 
 
 /// Build one structured block from its (col, row, val) entries (col-major
 /// sorted) and the compacted active-column list.
-fn build_block(entries: &[(u32, u8, f32)], active_cols: &[u32], tm: usize, tk: usize) -> Block {
-    let brick_cols = tk / BRICK_K;
-    let bricks_per_col = tm / BRICK_M;
+fn build_block(
+    entries: &[(u32, u8, f32)],
+    active_cols: &[u32],
+    geo: BrickGeometry,
+    tm: usize,
+    tk: usize,
+) -> Block {
+    let brick_cols = tk / geo.brick_k;
+    let bricks_per_col = tm / geo.brick_m;
 
     // dense per-block brick grid of patterns; small (brick_cols x
     // bricks_per_col <= 8x2 for the evaluated sizes)
@@ -191,12 +225,13 @@ fn build_block(entries: &[(u32, u8, f32)], active_cols: &[u32], tm: usize, tk: u
 
     for &(c, r, _) in entries {
         let slot = col_slot(c);
-        let bc = slot / BRICK_K;
-        let br = r as usize / BRICK_M;
+        let bc = slot / geo.brick_k;
+        let br = r as usize / geo.brick_m;
         patterns[bc * bricks_per_col + br] = pattern_set(
+            geo,
             patterns[bc * bricks_per_col + br],
-            r as usize % BRICK_M,
-            slot % BRICK_K,
+            r as usize % geo.brick_m,
+            slot % geo.brick_k,
         );
     }
 
@@ -237,10 +272,10 @@ fn build_block(entries: &[(u32, u8, f32)], active_cols: &[u32], tm: usize, tk: u
     }
     for &(c, r, v) in entries {
         let slot = col_slot(c);
-        let bc = slot / BRICK_K;
-        let br = r as usize / BRICK_M;
+        let bc = slot / geo.brick_k;
+        let br = r as usize / geo.brick_m;
         let bi = brick_index[bc * bricks_per_col + br];
-        let bit = crate::util::bits::brick_bit(r as usize % BRICK_M, slot % BRICK_K);
+        let bit = crate::util::bits::brick_bit(geo, r as usize % geo.brick_m, slot % geo.brick_k);
         let idx = brick_value_base[bi] + crate::util::bits::prefix_count(out_patterns[bi], bit);
         values[idx] = v;
     }
@@ -366,7 +401,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "TM must be <= 256")]
     fn tm_above_256_is_rejected_not_truncated() {
-        // 512 is a BRICK_M multiple, so before the guard it sailed past the
+        // 512 is a brick_m multiple, so before the guard it sailed past the
         // assert and silently truncated `(r - r0) as u8` for rows >= 256
         let coo = Coo::from_triplets(512, 16, &[(0, 0, 1.0), (300, 1, 2.0)]);
         let _ = build_with(&Csr::from_coo(&coo), 512, 16);
@@ -428,6 +463,26 @@ mod tests {
         let hrpb = build_from_coo_parallel(&coo);
         hrpb.validate().unwrap();
         assert_eq!(decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()), 0.0);
+    }
+
+    #[test]
+    fn catalog_geometries_build_roundtrip_and_parallel_matches() {
+        let mut rng = Rng::new(77);
+        let coo = Coo::random(100, 120, 0.08, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        for geo in BrickGeometry::CATALOG {
+            let hrpb = build_with_geometry(&csr, geo, TM, TK);
+            hrpb.validate().unwrap();
+            assert_eq!(hrpb.geometry, geo);
+            assert_eq!(
+                decode::to_dense(&hrpb).max_abs_diff(&coo.to_dense()),
+                0.0,
+                "{geo}: decode roundtrip"
+            );
+            let parallel = build_with_geometry_parallel(&csr, geo, TM, TK, 3);
+            assert_eq!(hrpb.packed, parallel.packed, "{geo}: parallel byte-identity");
+            assert_eq!(hrpb.blocks, parallel.blocks, "{geo}");
+        }
     }
 
     #[test]

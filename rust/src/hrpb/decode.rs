@@ -8,7 +8,6 @@
 
 use crate::formats::{Coo, Dense};
 use crate::hrpb::Hrpb;
-use crate::params::{BRICK_K, BRICK_M};
 use crate::util::bits::pattern_iter;
 
 /// Reconstruct the dense matrix (oracle use; asserts a sane size).
@@ -22,21 +21,22 @@ pub fn to_dense(hrpb: &Hrpb) -> Dense {
 /// in **original** row order regardless of how the HRPB was packed.
 pub fn to_coo(hrpb: &Hrpb) -> Coo {
     let scatter = hrpb.perm.as_deref();
+    let geo = hrpb.geometry;
     let mut coo = Coo::new(hrpb.rows, hrpb.cols);
     for p in 0..hrpb.num_panels() {
         let r0 = p * hrpb.tm;
         for block in hrpb.panel_blocks(p) {
-            let brick_cols = hrpb.tk / BRICK_K;
+            let brick_cols = hrpb.tk / geo.brick_k;
             let mut vi = 0usize;
             for bc in 0..brick_cols {
                 let (s, e) = (block.col_ptr[bc] as usize, block.col_ptr[bc + 1] as usize);
                 for j in s..e {
                     let br = block.rows[j] as usize;
-                    for (r, c, idx) in pattern_iter(block.patterns[j]) {
-                        let structural = r0 + br * BRICK_M + r;
+                    for (r, c, idx) in pattern_iter(geo, block.patterns[j]) {
+                        let structural = r0 + br * geo.brick_m + r;
                         let row = scatter
                             .map_or(structural, |pm| pm.new_to_old[structural] as usize);
-                        let slot = bc * BRICK_K + c;
+                        let slot = bc * geo.brick_k + c;
                         let col = block.active_cols[slot] as usize;
                         coo.push(row, col, block.values[vi + idx]);
                     }
@@ -91,15 +91,16 @@ pub fn to_feed(hrpb: &Hrpb) -> DenseBrickFeed {
             panel_ids[b] = p as i32;
             let block = &hrpb.blocks[b];
             let out = &mut blocks[b * tm * tk..(b + 1) * tm * tk];
-            let brick_cols = tk / BRICK_K;
+            let geo = hrpb.geometry;
+            let brick_cols = tk / geo.brick_k;
             let mut vi = 0usize;
             for bc in 0..brick_cols {
                 let (s, e) = (block.col_ptr[bc] as usize, block.col_ptr[bc + 1] as usize);
                 for j in s..e {
                     let br = block.rows[j] as usize;
-                    for (r, c, idx) in pattern_iter(block.patterns[j]) {
-                        let row = br * BRICK_M + r;
-                        let slot = bc * BRICK_K + c;
+                    for (r, c, idx) in pattern_iter(geo, block.patterns[j]) {
+                        let row = br * geo.brick_m + r;
+                        let slot = bc * geo.brick_k + c;
                         out[row * tk + slot] = block.values[vi + idx];
                     }
                     vi += block.patterns[j].count_ones() as usize;

@@ -4,7 +4,9 @@
 //! A matrix is cut into row panels of height `TM`. Inside each panel, the
 //! *active* columns (those with at least one nonzero) are compacted to the
 //! left and grouped into `(TM, TK)` blocks; each block subdivides into
-//! `(BRICK_M, BRICK_K)` bricks whose nonzero layout is a 64-bit pattern.
+//! `(brick_m, brick_k)` bricks — the instance's
+//! [`BrickGeometry`](crate::params::BrickGeometry), 16×4 by default — whose
+//! nonzero layout is a 64-bit pattern.
 //! Nonzero values are stored per block in brick-CSC order (brick columns
 //! left-to-right, bricks top-to-bottom within a column, values row-major
 //! within a brick).
@@ -23,29 +25,33 @@ pub mod serialize;
 pub mod stats;
 pub mod store;
 
-pub use builder::{build, build_from_coo, build_from_coo_parallel, build_with_parallel};
+pub use builder::{
+    build, build_from_coo, build_from_coo_parallel, build_with_geometry,
+    build_with_geometry_parallel, build_with_parallel,
+};
 pub use serialize::Artifact;
 pub use stats::HrpbStats;
 pub use store::{ArtifactStore, StoreStats};
 
-use crate::params::{BRICK_K, BRICK_M};
+use crate::params::BrickGeometry;
 
 /// One `(TM, TK)` block in structured form (paper Fig. 4).
 ///
 /// Active bricks are kept in brick-CSC order. `col_ptr[c]..col_ptr[c+1]`
 /// indexes the active bricks of brick-column `c`; `rows[j]` is the brick-row
-/// of active brick `j`; `patterns[j]` its 64-bit nonzero mask; `values`
-/// concatenates every active brick's nonzeros (row-major within a brick).
+/// of active brick `j`; `patterns[j]` its nonzero mask (low `geo.bits()`
+/// bits of a u64 word); `values` concatenates every active brick's nonzeros
+/// (row-major within a brick).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Block {
     /// Original column ids of this block's slots (compaction map); length
     /// `<= TK`, unpadded.
     pub active_cols: Vec<u32>,
-    /// `TK/BRICK_K + 1` entries.
+    /// `TK/brick_k + 1` entries.
     pub col_ptr: Vec<u16>,
-    /// Brick-row index of each active brick (`< TM/BRICK_M`).
+    /// Brick-row index of each active brick (`< TM/brick_m`).
     pub rows: Vec<u8>,
-    /// 64-bit nonzero pattern of each active brick.
+    /// Nonzero pattern word of each active brick.
     pub patterns: Vec<u64>,
     /// Nonzero values in brick-CSC, row-major-within-brick order.
     pub values: Vec<f32>,
@@ -63,9 +69,9 @@ impl Block {
     }
 
     /// Check structural invariants (property tests).
-    pub fn validate(&self, tm: usize, tk: usize) -> Result<(), String> {
-        let bricks_per_col = tm / BRICK_M;
-        let brick_cols = tk / BRICK_K;
+    pub fn validate(&self, geo: BrickGeometry, tm: usize, tk: usize) -> Result<(), String> {
+        let bricks_per_col = tm / geo.brick_m;
+        let brick_cols = tk / geo.brick_k;
         if self.col_ptr.len() != brick_cols + 1 {
             return Err("col_ptr length".into());
         }
@@ -113,6 +119,9 @@ pub struct Hrpb {
     /// Tile parameters this instance was built with.
     pub tm: usize,
     pub tk: usize,
+    /// Brick geometry this instance was built with (pattern word layout,
+    /// brick grid shape, packed-stream framing all depend on it).
+    pub geometry: BrickGeometry,
     /// Total stored nonzeros.
     pub nnz: usize,
     /// Structured blocks, panel-major (kept for verification & decoding).
@@ -174,7 +183,8 @@ impl Hrpb {
         }
         let mut nnz = 0usize;
         for (i, blk) in self.blocks.iter().enumerate() {
-            blk.validate(self.tm, self.tk).map_err(|e| format!("block {i}: {e}"))?;
+            blk.validate(self.geometry, self.tm, self.tk)
+                .map_err(|e| format!("block {i}: {e}"))?;
             for &c in &blk.active_cols {
                 if c as usize >= self.cols {
                     return Err(format!("block {i}: column {c} out of range"));

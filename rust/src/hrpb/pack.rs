@@ -21,13 +21,13 @@
 //! "metadata").
 
 use crate::hrpb::{Block, Hrpb};
-use crate::params::BRICK_K;
+use crate::params::BrickGeometry;
 use crate::util::bits::round_up;
 use std::borrow::Cow;
 
-/// Byte size of one packed block for the given tile shape.
-pub fn packed_size(block: &Block, tk: usize) -> usize {
-    let brick_cols = tk / BRICK_K;
+/// Byte size of one packed block for the given geometry and tile shape.
+pub fn packed_size(block: &Block, geo: BrickGeometry, tk: usize) -> usize {
+    let brick_cols = tk / geo.brick_k;
     let nb = block.num_bricks();
     let mut off = (brick_cols + 1) * 2; // col_ptr u16
     off += nb; // rows u8
@@ -41,7 +41,8 @@ pub fn packed_size(block: &Block, tk: usize) -> usize {
 /// fill the matrix-level `active_cols` array (TK-padded per block).
 pub fn pack(hrpb: &mut Hrpb) {
     let tk = hrpb.tk;
-    let total: usize = hrpb.blocks.iter().map(|b| packed_size(b, tk)).sum();
+    let geo = hrpb.geometry;
+    let total: usize = hrpb.blocks.iter().map(|b| packed_size(b, geo, tk)).sum();
     let mut packed = Vec::with_capacity(total);
     let mut size_ptr = Vec::with_capacity(hrpb.blocks.len() + 1);
     let mut active_cols = Vec::with_capacity(hrpb.blocks.len() * tk);
@@ -70,7 +71,7 @@ pub fn pack(hrpb: &mut Hrpb) {
         while packed.len() % 8 != 0 {
             packed.push(0);
         }
-        debug_assert_eq!(packed.len() - start, packed_size(block, tk));
+        debug_assert_eq!(packed.len() - start, packed_size(block, geo, tk));
         size_ptr.push(packed.len() as u64);
 
         // TK-padded active columns; padding repeats the last real column so
@@ -109,7 +110,7 @@ pub struct PackedBlockView<'a> {
 /// cast — behavior matches this documented contract in both cases.
 pub fn view(hrpb: &Hrpb, b: usize) -> PackedBlockView<'_> {
     let tk = hrpb.tk;
-    let brick_cols = tk / BRICK_K;
+    let brick_cols = tk / hrpb.geometry.brick_k;
     let bytes = &hrpb.packed[hrpb.size_ptr[b] as usize..hrpb.size_ptr[b + 1] as usize];
 
     let cp_len = brick_cols + 1;
@@ -209,7 +210,18 @@ mod tests {
         let hrpb = build_from_coo(&coo);
         for (b, block) in hrpb.blocks.iter().enumerate() {
             let span = (hrpb.size_ptr[b + 1] - hrpb.size_ptr[b]) as usize;
-            assert_eq!(span, packed_size(block, hrpb.tk));
+            assert_eq!(span, packed_size(block, hrpb.geometry, hrpb.tk));
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_across_the_catalog() {
+        let mut rng = Rng::new(10);
+        let coo = Coo::random(96, 128, 0.07, &mut rng);
+        let csr = crate::formats::Csr::from_coo(&coo);
+        for geo in BrickGeometry::CATALOG {
+            let hrpb = crate::hrpb::build_with_geometry(&csr, geo, 16, 16);
+            validate_packed(&hrpb).unwrap_or_else(|e| panic!("{geo}: {e}"));
         }
     }
 

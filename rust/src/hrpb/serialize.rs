@@ -24,16 +24,17 @@
 //!   rebuild (see the store's corruption-tolerant load).
 //! * **Versioned.** `VERSION` gates the layout. v3 adds the optional
 //!   build-time row permutation ([`crate::reorder`], flag bit 2) and the
-//!   plan's reorder-gains tail; v2 artifacts (no permutation, no reorder
-//!   fields) still load — decode accepts both, so a deploy does not
-//!   invalidate a warm artifact directory. Anything older or newer is a
-//!   typed `Err` and the store rebuilds.
+//!   plan's reorder-gains tail; v4 adds the brick geometry (a section after
+//!   the stats block plus a plan tail). v2/v3 artifacts (no geometry
+//!   fields) still load as the default geometry — decode accepts all three,
+//!   so a deploy does not invalidate a warm artifact directory. Anything
+//!   older or newer is a typed `Err` and the store rebuilds.
 //!
 //! [`Block`]: crate::hrpb::Block
 
 use crate::gpumodel::Bound;
 use crate::hrpb::{Block, Hrpb, HrpbStats};
-use crate::params::{BRICK_K, BRICK_M};
+use crate::params::BrickGeometry;
 use crate::planner::{Plan, RankedChoice};
 use crate::spmm::Algo;
 use crate::synergy::Synergy;
@@ -45,10 +46,12 @@ pub const MAGIC: &[u8; 8] = b"CTSPHRPB";
 /// Layout version; bump on any format change.
 /// v2: plans carry the execution runtime's column-slab width.
 /// v3: optional row permutation section + plan reorder-gains tail.
-pub const VERSION: u32 = 3;
+/// v4: brick geometry (wire id after the stats section + plan tail).
+pub const VERSION: u32 = 4;
 
 /// Oldest version [`decode`] still accepts (v2 = v3 minus the permutation
-/// section and the plan's reorder tail).
+/// section and the plan's reorder tail; v3 = v4 minus the geometry fields,
+/// decoded as [`BrickGeometry::DEFAULT`]).
 pub const MIN_VERSION: u32 = 2;
 
 const FLAG_HAS_PLAN: u32 = 1;
@@ -213,6 +216,11 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
     put_u64(&mut out, stats.meta_bytes as u64);
     put_f64(&mut out, stats.fill_ratio);
 
+    // v4: the brick geometry this HRPB was built with (wire id). A v3 file
+    // is this file minus these 4 bytes (and minus the plan's geometry
+    // tail); decode defaults both to BrickGeometry::DEFAULT below v4.
+    put_u32(&mut out, hrpb.geometry.id());
+
     if let Some(plan) = plan {
         put_str(&mut out, plan.engine.name());
         put_u64(&mut out, plan.width as u64);
@@ -231,8 +239,9 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
             put_f64(&mut out, c.predicted_s);
             out.push(bound_index(c.bound));
         }
-        // v3 tail: the reorder decision + gains. Appended LAST so a v2
-        // file is byte-identical to a v3 file truncated before this tail.
+        // v3 tail: the reorder decision + gains. Appended before the v4
+        // tail so a v2 file is byte-identical to a v3 file truncated
+        // before this tail.
         match plan.reorder {
             Some(g) => {
                 out.push(1);
@@ -243,6 +252,9 @@ pub fn encode(hrpb: &Hrpb, stats: &HrpbStats, digest: u64, plan: Option<&Plan>) 
             }
             None => out.push(0),
         }
+        // v4 tail: the plan's geometry knob. Appended LAST, following the
+        // same append-only precedent.
+        put_u32(&mut out, plan.geometry.id());
     }
 
     let ck = file_checksum(&out);
@@ -358,10 +370,10 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
     let active_cols_len = r.usize64()?;
     let packed_len = r.usize64()?;
 
-    if tm == 0 || tm % BRICK_M != 0 || tm > 256 {
+    if tm == 0 || tm > 256 {
         return Err(format!("artifact TM {tm} invalid"));
     }
-    if tk == 0 || tk % BRICK_K != 0 {
+    if tk == 0 {
         return Err(format!("artifact TK {tk} invalid"));
     }
     // checked arithmetic: crafted headers (rows near usize::MAX) must Err,
@@ -429,6 +441,20 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
         fill_ratio: r.f64()?,
     };
 
+    // v4: the build geometry; earlier versions predate the catalog and are
+    // by definition the default shape
+    let geometry = if version >= 4 {
+        BrickGeometry::from_id(r.u32()?).ok_or("artifact geometry id invalid")?
+    } else {
+        BrickGeometry::DEFAULT
+    };
+    if tm % geometry.brick_m != 0 {
+        return Err(format!("artifact TM {tm} not a multiple of brick_m {}", geometry.brick_m));
+    }
+    if tk % geometry.brick_k != 0 {
+        return Err(format!("artifact TK {tk} not a multiple of brick_k {}", geometry.brick_k));
+    }
+
     let plan =
         if flags & FLAG_HAS_PLAN != 0 { Some(decode_plan(&mut r, version)?) } else { None };
 
@@ -436,7 +462,7 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
     // near-memcpy inverse of `pack::pack` (no sorting, no compaction);
     // blocks are independent, so large artifacts reconstruct in parallel
     // just like the builder builds panels in parallel
-    let blocks = reconstruct_blocks(&packed, &size_ptr, &active_cols, tm, tk)?;
+    let blocks = reconstruct_blocks(&packed, &size_ptr, &active_cols, geometry, tm, tk)?;
     let total_nnz: usize = blocks.iter().map(|b| b.nnz()).sum();
     if total_nnz != nnz {
         return Err(format!("artifact nnz mismatch: blocks {total_nnz} vs header {nnz}"));
@@ -447,6 +473,7 @@ pub fn decode(bytes: &[u8]) -> Result<Artifact, String> {
         cols,
         tm,
         tk,
+        geometry,
         nnz,
         blocks,
         blocked_row_ptr,
@@ -464,6 +491,7 @@ fn reconstruct_blocks(
     packed: &[u8],
     size_ptr: &[u64],
     active_cols: &[u32],
+    geo: BrickGeometry,
     tm: usize,
     tk: usize,
 ) -> Result<Vec<Block>, String> {
@@ -472,7 +500,7 @@ fn reconstruct_blocks(
         let mut out = Vec::with_capacity(b1 - b0);
         for b in b0..b1 {
             let span = &packed[size_ptr[b] as usize..size_ptr[b + 1] as usize];
-            let block = decode_block(span, &active_cols[b * tk..(b + 1) * tk], tm, tk)
+            let block = decode_block(span, &active_cols[b * tk..(b + 1) * tk], geo, tm, tk)
                 .map_err(|e| format!("artifact block {b}: {e}"))?;
             out.push(block);
         }
@@ -512,9 +540,15 @@ fn reconstruct_blocks(
 /// block's TK-padded active-column slice; padding repeats the last real
 /// column while real columns are strictly increasing, so the first
 /// non-increase marks the padding boundary.
-fn decode_block(span: &[u8], padded_cols: &[u32], tm: usize, tk: usize) -> Result<Block, String> {
-    let brick_cols = tk / BRICK_K;
-    let bricks_per_col = tm / BRICK_M;
+fn decode_block(
+    span: &[u8],
+    padded_cols: &[u32],
+    geo: BrickGeometry,
+    tm: usize,
+    tk: usize,
+) -> Result<Block, String> {
+    let brick_cols = tk / geo.brick_k;
+    let bricks_per_col = tm / geo.brick_m;
     let mut r = Reader { bytes: span, pos: 0 };
     let col_ptr: Vec<u16> = read_u16s(&mut r, brick_cols + 1)?;
     let num_bricks = col_ptr[brick_cols] as usize;
@@ -590,12 +624,19 @@ fn decode_plan(r: &mut Reader, version: u32) -> Result<Plan, String> {
     } else {
         None
     };
+    // v4 tail: the plan's geometry knob (pre-catalog plans are default)
+    let geometry = if version >= 4 {
+        BrickGeometry::from_id(r.u32()?).ok_or("artifact plan geometry id invalid")?
+    } else {
+        BrickGeometry::DEFAULT
+    };
     Ok(Plan {
         engine,
         width,
         predicted_s,
         predicted_s_per_col,
         slab_width,
+        geometry,
         alpha,
         synergy,
         ranked,
@@ -721,8 +762,7 @@ mod tests {
     }
 
     /// Patch an encoded artifact's version field and repair the checksum —
-    /// used to reconstruct genuine v2 files from v3 encodes (the v2 layout
-    /// is the v3 layout minus the permutation section and plan tail).
+    /// used to reconstruct genuine v2/v3 files from v4 encodes.
     fn as_version(mut bytes: Vec<u8>, version: u32) -> Vec<u8> {
         bytes[8..12].copy_from_slice(&version.to_le_bytes());
         let ck = file_checksum(&bytes);
@@ -730,16 +770,47 @@ mod tests {
         bytes
     }
 
+    /// Byte offset of the v4 geometry section — right after the stats
+    /// block (11 fixed 8-byte fields).
+    fn geometry_section_off(hrpb: &Hrpb) -> usize {
+        let mut off = HEADER_LEN + hrpb.blocked_row_ptr.len() * 4;
+        off = round_up(off, 8);
+        off += hrpb.size_ptr.len() * 8 + hrpb.active_cols.len() * 4;
+        off = round_up(off, 8);
+        off += hrpb.packed.len();
+        off = round_up(off, 8);
+        if hrpb.perm.is_some() {
+            off += hrpb.rows * 4;
+            off = round_up(off, 8);
+        }
+        off + 11 * 8
+    }
+
+    /// Reconstruct a genuine v3 file from a v4 encode: drop the 4-byte
+    /// geometry section and (when a plan is present) the 4-byte plan
+    /// geometry tail, then patch version + checksum.
+    fn strip_to_v3(bytes: &[u8], hrpb: &Hrpb, has_plan: bool) -> Vec<u8> {
+        let off = geometry_section_off(hrpb);
+        let mut out = bytes.to_vec();
+        out.drain(off..off + 4);
+        if has_plan {
+            out.truncate(out.len() - 4);
+        }
+        as_version(out, 3)
+    }
+
     #[test]
     fn v2_planless_artifacts_still_load() {
         let coo = Coo::random(64, 80, 0.1, &mut Rng::new(36));
         let (hrpb, s, digest, _) = artifact_for(&coo, false);
-        let v2 = as_version(encode(&hrpb, &s, digest, None), 2);
+        let v3 = strip_to_v3(&encode(&hrpb, &s, digest, None), &hrpb, false);
+        let v2 = as_version(v3, 2);
         let art = decode(&v2).expect("v2 artifact must load");
         assert_hrpb_eq(&art.hrpb, &hrpb);
         assert!(art.hrpb.perm.is_none());
         assert!(art.plan.is_none());
         assert_eq!(art.stats, s);
+        assert_eq!(art.hrpb.geometry, BrickGeometry::DEFAULT);
     }
 
     #[test]
@@ -747,7 +818,7 @@ mod tests {
         let coo = Coo::random(72, 72, 0.12, &mut Rng::new(37));
         let (hrpb, s, digest, plan) = artifact_for(&coo, true);
         assert!(plan.as_ref().unwrap().reorder.is_none(), "fixture premise");
-        let v3 = encode(&hrpb, &s, digest, plan.as_ref());
+        let v3 = strip_to_v3(&encode(&hrpb, &s, digest, plan.as_ref()), &hrpb, true);
         // the v3 reorder tail of a reorder-less plan is exactly one byte;
         // dropping it reconstructs the v2 byte layout
         let v2 = as_version(v3[..v3.len() - 1].to_vec(), 2);
@@ -758,6 +829,61 @@ mod tests {
         assert_eq!(got.engine, want.engine);
         assert_eq!(got.slab_width, want.slab_width);
         assert!(got.reorder.is_none(), "v2 plans have no reorder decision");
+        assert_eq!(got.geometry, BrickGeometry::DEFAULT);
+    }
+
+    #[test]
+    fn v3_artifacts_load_as_the_default_geometry_bit_identically() {
+        let coo = Coo::random(128, 160, 0.07, &mut Rng::new(44));
+        let (hrpb, s, digest, plan) = artifact_for(&coo, true);
+        let v4 = encode(&hrpb, &s, digest, plan.as_ref());
+        let v3 = strip_to_v3(&v4, &hrpb, true);
+        let art = decode(&v3).expect("v3 artifact must load");
+        assert_eq!(art.hrpb.geometry, BrickGeometry::DEFAULT);
+        assert_eq!(art.plan.as_ref().unwrap().geometry, BrickGeometry::DEFAULT);
+        assert_hrpb_eq(&art.hrpb, &hrpb);
+        assert_eq!(art.stats, s);
+        // the loaded HRPB serves bit-identically to the freshly built one
+        let b = crate::formats::Dense::random(coo.cols, 24, &mut Rng::new(45));
+        let fresh = crate::spmm::hrpb::HrpbEngine::prepare(&coo).spmm(&b);
+        let loaded = crate::spmm::hrpb::HrpbEngine::from_hrpb(art.hrpb).spmm(&b);
+        assert_eq!(loaded.max_abs_diff(&fresh), 0.0, "v3 load must serve bit-identically");
+    }
+
+    #[test]
+    fn v4_roundtrips_every_catalog_geometry() {
+        let coo = Coo::random(96, 128, 0.08, &mut Rng::new(46));
+        let csr = crate::formats::Csr::from_coo(&coo);
+        for geo in BrickGeometry::CATALOG {
+            let hrpb = crate::hrpb::build_with_geometry(&csr, geo, 16, 16);
+            let s = stats::compute(&hrpb);
+            let d = content_digest(&coo);
+            let bytes = encode(&hrpb, &s, d, None);
+            let art = decode(&bytes).unwrap_or_else(|e| panic!("{geo}: {e}"));
+            assert_eq!(art.hrpb.geometry, geo);
+            assert_hrpb_eq(&art.hrpb, &hrpb);
+            art.hrpb.validate().unwrap();
+            assert_eq!(
+                hrpb_decode::to_dense(&art.hrpb).max_abs_diff(&coo.to_dense()),
+                0.0,
+                "{geo}"
+            );
+            assert_eq!(encode(&art.hrpb, &art.stats, art.digest, None), bytes, "{geo}");
+        }
+    }
+
+    #[test]
+    fn invalid_geometry_id_is_rejected() {
+        let coo = Coo::random(32, 32, 0.2, &mut Rng::new(47));
+        let (hrpb, s, digest, _) = artifact_for(&coo, false);
+        let mut bytes = encode(&hrpb, &s, digest, None);
+        let off = geometry_section_off(&hrpb);
+        // 16x8: 128 pattern bits, structurally impossible
+        bytes[off..off + 4].copy_from_slice(&(16u32 | 8 << 8).to_le_bytes());
+        let ck = file_checksum(&bytes);
+        bytes[16..24].copy_from_slice(&ck.to_le_bytes());
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.contains("geometry"), "{e}");
     }
 
     #[test]

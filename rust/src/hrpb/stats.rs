@@ -3,7 +3,6 @@
 //! brick-column reuse `β`, active brick/block counts, storage footprint.
 
 use crate::hrpb::Hrpb;
-use crate::params::{BRICK_K, BRICK_M};
 
 /// Structural statistics of a built HRPB instance.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -16,17 +15,18 @@ pub struct HrpbStats {
     pub active_panels: usize,
     /// `(TM, TK)` blocks.
     pub num_blocks: usize,
-    /// Active `(BRICK_M, BRICK_K)` bricks.
+    /// Active `(brick_m, brick_k)` bricks at the instance's geometry.
     pub num_bricks: usize,
     /// Occupied brick columns summed over blocks (a brick column is one of
-    /// the `TK/BRICK_K` column groups of a block; occupied if it holds at
+    /// the `TK/brick_k` column groups of a block; occupied if it holds at
     /// least one active brick).
     pub num_brick_cols: usize,
     /// The paper's α: average nonzero density of *active* bricks,
-    /// `nnz / (num_bricks * BRICK_M * BRICK_K)` ∈ [1/(BRICK_M·BRICK_K), 1].
+    /// `nnz / (num_bricks * bits)` ∈ [1/bits, 1] where `bits` is the
+    /// geometry's `brick_m·brick_k`.
     pub alpha: f64,
     /// The paper's β (Eq. 5): average active bricks per occupied brick
-    /// column, `num_bricks / num_brick_cols` ∈ [1, TM/BRICK_M].
+    /// column, `num_bricks / num_brick_cols` ∈ [1, TM/brick_m].
     pub beta: f64,
     /// Bytes of the packed stream (values + metadata, the DRAM traffic for A).
     pub packed_bytes: usize,
@@ -98,7 +98,7 @@ pub fn compute_parallel(hrpb: &Hrpb) -> HrpbStats {
 
 /// Brick / occupied-brick-column counts of blocks `[b0, b1)`.
 fn scan_blocks(hrpb: &Hrpb, b0: usize, b1: usize) -> (usize, usize) {
-    let brick_cols_per_block = hrpb.tk / BRICK_K;
+    let brick_cols_per_block = hrpb.tk / hrpb.geometry.brick_k;
     let mut num_bricks = 0usize;
     let mut num_brick_cols = 0usize;
     for block in &hrpb.blocks[b0..b1] {
@@ -117,7 +117,7 @@ fn finish(hrpb: &Hrpb, num_bricks: usize, num_brick_cols: usize) -> HrpbStats {
     let active_panels = (0..hrpb.num_panels())
         .filter(|&p| hrpb.blocked_row_ptr[p + 1] > hrpb.blocked_row_ptr[p])
         .count();
-    let brick_slots = (num_bricks * BRICK_M * BRICK_K) as f64;
+    let brick_slots = (num_bricks * hrpb.geometry.bits()) as f64;
     let alpha = if num_bricks == 0 { 0.0 } else { hrpb.nnz as f64 / brick_slots };
     let beta = if num_brick_cols == 0 { 0.0 } else { num_bricks as f64 / num_brick_cols as f64 };
     HrpbStats {
@@ -142,7 +142,7 @@ mod tests {
     use super::*;
     use crate::formats::Coo;
     use crate::hrpb::build_from_coo;
-    use crate::params::{BRICK_K, BRICK_M};
+    use crate::params::BrickGeometry;
     use crate::util::rng::Rng;
 
     #[test]
@@ -150,7 +150,7 @@ mod tests {
         let coo = Coo::from_triplets(16, 16, &[(3, 2, 1.0)]);
         let s = compute(&build_from_coo(&coo));
         assert_eq!(s.num_bricks, 1);
-        assert!((s.alpha - 1.0 / (BRICK_M * BRICK_K) as f64).abs() < 1e-12);
+        assert!((s.alpha - 1.0 / BrickGeometry::DEFAULT.bits() as f64).abs() < 1e-12);
         assert_eq!(s.beta, 1.0);
     }
 
@@ -178,7 +178,7 @@ mod tests {
                 continue;
             }
             let s = compute(&build_from_coo(&coo));
-            let lo = 1.0 / (BRICK_M * BRICK_K) as f64;
+            let lo = 1.0 / BrickGeometry::DEFAULT.bits() as f64;
             assert!(s.alpha >= lo - 1e-12 && s.alpha <= 1.0, "alpha {}", s.alpha);
             assert!(s.beta >= 1.0 - 1e-12, "beta {}", s.beta);
         }

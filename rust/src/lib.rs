@@ -76,23 +76,186 @@ pub mod synergy;
 pub mod trace;
 pub mod util;
 
-/// Paper-fixed tile constants (§3.1, §4): row-panel height `TM`, block width
-/// `TK`, WMMA brick shape `(BRICK_M, BRICK_K, BRICK_N)` and warp-coarsened
-/// output width `TN`.
+/// Paper-fixed tile constants (§3.1, §4) and the brick-geometry catalog.
+///
+/// The raw `BRICK_*` constants survive only as the catalog's default entry
+/// ([`BrickGeometry::DEFAULT`]); every consumer outside this module goes
+/// through a [`BrickGeometry`] value instead of the constants.
 pub mod params {
     /// Row-panel height (paper evaluates TM = 16 = brick_m).
     pub const TM: usize = 16;
     /// Block width along K (paper: empirically 16).
     pub const TK: usize = 16;
-    /// WMMA A-fragment rows (Ampere TF32 m16n8k4).
+    /// WMMA A-fragment rows (Ampere TF32 m16n8k4) — default geometry only.
     pub const BRICK_M: usize = 16;
-    /// WMMA A-fragment cols / B-fragment rows.
+    /// WMMA A-fragment cols / B-fragment rows — default geometry only.
     pub const BRICK_K: usize = 4;
     /// WMMA B-fragment cols.
     pub const BRICK_N: usize = 8;
     /// Warp-coarsened output width (paper §4 chooses 32 to balance A/B
     /// shared-memory traffic).
     pub const TN: usize = 32;
-    /// Bits in a brick nonzero pattern (BRICK_M * BRICK_K).
+    /// Bits in a brick nonzero pattern (BRICK_M * BRICK_K) — default
+    /// geometry only.
     pub const BRICK_BITS: usize = BRICK_M * BRICK_K;
+
+    /// One WMMA brick shape the HRPB format, pricer, kernel and planner can
+    /// all be instantiated over.
+    ///
+    /// `transposed_b` marks the FlashSparse-style swapped-operand variant
+    /// (PAPERS.md, arXiv 2412.11007): operand roles swap so the sparse
+    /// fragment is consumed at `brick_m × 1` granularity, which minimizes
+    /// redundant zero-fill on unstructured matrices. On this CPU re-host it
+    /// changes the format granularity and the cost model, not the kernel
+    /// semantics (bricks stay row-major with `brick_k = 1`).
+    ///
+    /// Invariant: `brick_m * brick_k <= 64` — a brick's nonzero pattern must
+    /// fit one `u64` word (this is why 16×8 is not in the catalog).
+    #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+    pub struct BrickGeometry {
+        /// Brick rows (A-fragment rows). Must divide `TM`.
+        pub brick_m: usize,
+        /// Brick cols (A-fragment cols / B-fragment rows). Must divide `TK`.
+        pub brick_k: usize,
+        /// FlashSparse-style swapped-operand variant.
+        pub transposed_b: bool,
+    }
+
+    impl BrickGeometry {
+        /// The paper's fixed shape — the catalog's default entry, and what
+        /// every pre-catalog artifact (format v2/v3) decodes as.
+        pub const DEFAULT: BrickGeometry =
+            BrickGeometry { brick_m: BRICK_M, brick_k: BRICK_K, transposed_b: false };
+
+        /// The fixed candidate catalog the pricer prices and the planner
+        /// selects from. 16×8 is excluded: 128 pattern bits don't fit the
+        /// u64 pattern word.
+        pub const CATALOG: [BrickGeometry; 4] = [
+            BrickGeometry::DEFAULT,
+            BrickGeometry { brick_m: 8, brick_k: 8, transposed_b: false },
+            BrickGeometry { brick_m: 8, brick_k: 4, transposed_b: false },
+            BrickGeometry { brick_m: 8, brick_k: 1, transposed_b: true },
+        ];
+
+        /// Pattern bits per brick (`brick_m * brick_k`).
+        #[inline]
+        pub const fn bits(self) -> usize {
+            self.brick_m * self.brick_k
+        }
+
+        /// Is this the catalog's default entry?
+        #[inline]
+        pub fn is_default(self) -> bool {
+            self == BrickGeometry::DEFAULT
+        }
+
+        /// Position in [`Self::CATALOG`], if this geometry is catalogued.
+        pub fn catalog_index(self) -> Option<usize> {
+            BrickGeometry::CATALOG.iter().position(|&g| g == self)
+        }
+
+        /// Stable wire id (independent of catalog order) for artifact v4 and
+        /// calibration JSON: `brick_m | brick_k << 8 | transposed << 16`.
+        pub fn id(self) -> u32 {
+            debug_assert!(self.brick_m <= 255 && self.brick_k <= 255);
+            self.brick_m as u32 | (self.brick_k as u32) << 8 | (self.transposed_b as u32) << 16
+        }
+
+        /// Decode a wire id; rejects shapes that violate the invariants.
+        pub fn from_id(id: u32) -> Option<BrickGeometry> {
+            let g = BrickGeometry {
+                brick_m: (id & 0xFF) as usize,
+                brick_k: (id >> 8 & 0xFF) as usize,
+                transposed_b: id >> 16 & 1 == 1,
+            };
+            let known = id >> 17 == 0;
+            let valid = g.brick_m >= 1 && g.brick_k >= 1 && g.bits() <= 64;
+            (known && valid).then_some(g)
+        }
+
+        /// Human/CLI name: `"16x4"`, `"8x1t"` (trailing `t` = transposed).
+        pub fn name(self) -> String {
+            let t = if self.transposed_b { "t" } else { "" };
+            format!("{}x{}{}", self.brick_m, self.brick_k, t)
+        }
+
+        /// Parse [`Self::name`] output (used by `plan --geometry` and JSON).
+        pub fn parse(s: &str) -> Option<BrickGeometry> {
+            let (body, transposed_b) = match s.strip_suffix('t') {
+                Some(b) => (b, true),
+                None => (s, false),
+            };
+            let (m, k) = body.split_once('x')?;
+            let g = BrickGeometry {
+                brick_m: m.parse().ok()?,
+                brick_k: k.parse().ok()?,
+                transposed_b,
+            };
+            (g.brick_m >= 1 && g.brick_k >= 1 && g.bits() <= 64).then_some(g)
+        }
+    }
+
+    impl Default for BrickGeometry {
+        fn default() -> BrickGeometry {
+            BrickGeometry::DEFAULT
+        }
+    }
+
+    impl std::fmt::Display for BrickGeometry {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "{}", self.name())
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn catalog_entries_are_valid_and_distinct() {
+            for g in BrickGeometry::CATALOG {
+                assert!(g.bits() <= 64, "{g}: pattern must fit u64");
+                assert_eq!(TM % g.brick_m, 0, "{g}: brick_m must divide TM");
+                assert_eq!(TK % g.brick_k, 0, "{g}: brick_k must divide TK");
+            }
+            assert_eq!(BrickGeometry::CATALOG[0], BrickGeometry::DEFAULT);
+            for (i, a) in BrickGeometry::CATALOG.iter().enumerate() {
+                for b in &BrickGeometry::CATALOG[i + 1..] {
+                    assert_ne!(a, b);
+                }
+            }
+        }
+
+        #[test]
+        fn id_roundtrips_and_rejects_garbage() {
+            for g in BrickGeometry::CATALOG {
+                assert_eq!(BrickGeometry::from_id(g.id()), Some(g));
+            }
+            assert_eq!(BrickGeometry::from_id(0), None, "0x0 bricks are invalid");
+            assert_eq!(BrickGeometry::from_id(16 | 8 << 8), None, "16x8 exceeds 64 bits");
+            assert_eq!(BrickGeometry::from_id(1 << 20), None, "unknown flag bits");
+        }
+
+        #[test]
+        fn name_parse_roundtrips() {
+            for g in BrickGeometry::CATALOG {
+                assert_eq!(BrickGeometry::parse(&g.name()), Some(g));
+            }
+            assert_eq!(BrickGeometry::parse("16x4").unwrap(), BrickGeometry::DEFAULT);
+            assert!(BrickGeometry::parse("16x8").is_none());
+            assert!(BrickGeometry::parse("x4").is_none());
+            assert!(BrickGeometry::parse("banana").is_none());
+        }
+
+        #[test]
+        fn default_matches_the_legacy_constants() {
+            let d = BrickGeometry::DEFAULT;
+            assert_eq!(d.brick_m, BRICK_M);
+            assert_eq!(d.brick_k, BRICK_K);
+            assert_eq!(d.bits(), BRICK_BITS);
+            assert!(!d.transposed_b);
+            assert!(d.is_default());
+            assert_eq!(d.catalog_index(), Some(0));
+        }
+    }
 }

@@ -27,7 +27,8 @@
 //!                                           # report between two snapshots
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|exec|reorder|trace|all> [--quick] [--out-dir DIR]
+//!                      qos|exec|reorder|trace|geometry|all>
+//!                      [--quick] [--out-dir DIR]
 //!                                           # exec: pool + column-slab
 //!                                           # runtime A/B, emits
 //!                                           # results/BENCH_PR4.json
@@ -37,9 +38,13 @@
 //!                                           # trace: observability overhead
 //!                                           # off/sampled/full, emits
 //!                                           # results/BENCH_PR6.json
+//!                                           # geometry: planner-picked brick
+//!                                           # shape vs fixed 16x4, emits
+//!                                           # results/BENCH_PR8.json
 //!                                           # prep/qos/auto/exec/reorder/
-//!                                           # trace also append a schema-v1
-//!                                           # entry to results/history/
+//!                                           # trace/geometry also append a
+//!                                           # schema-v1 entry to
+//!                                           # results/history/
 //! cutespmm experiment diff [--against ID|FILE] [--slip PCT] [--json]
 //!                          [--inject-slip [PCT]]
 //!                                           # compare the latest history
@@ -349,20 +354,36 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
                         // never pin the arrival order for later warm starts
                         let t_reorder = std::time::Instant::now();
                         let proposal = cutespmm::reorder::propose(&csr, TM, TK);
+                        // ... and the same pre-build geometry pricing: the
+                        // catalog is priced under the row order about to be
+                        // built, and the winner is built exactly once
                         let (hrpb, gains) = if planner.gate_reorder(&proposal) {
                             let gains =
                                 proposal.gains(t_reorder.elapsed().as_secs_f64());
-                            let hrpb = cutespmm::reorder::build_reordered(
+                            let priced = cutespmm::reorder::price_catalog(
+                                &csr,
+                                Some(&proposal.perm),
+                                TM,
+                                TK,
+                            );
+                            let geo = planner.choose_geometry(&priced);
+                            let hrpb = cutespmm::reorder::build_reordered_geo(
                                 &csr,
                                 proposal.perm,
+                                geo,
                                 TM,
                                 TK,
                                 threads,
                             );
                             (hrpb, Some(gains))
                         } else {
+                            let priced =
+                                cutespmm::reorder::price_catalog(&csr, None, TM, TK);
+                            let geo = planner.choose_geometry(&priced);
                             (
-                                cutespmm::hrpb::build_with_parallel(&csr, TM, TK, threads),
+                                cutespmm::hrpb::build_with_geometry_parallel(
+                                    &csr, geo, TM, TK, threads,
+                                ),
                                 None,
                             )
                         };
@@ -406,10 +427,11 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
         t_plan * 1e3
     );
     println!(
-        "alpha={:.4} synergy={} OI_shmem={:.1} (512a) machine={} width={n}",
+        "alpha={:.4} synergy={} OI_shmem={:.1} (512a) geometry={} machine={} width={n}",
         plan.alpha,
         plan.synergy.name(),
         512.0 * plan.alpha,
+        plan.geometry,
         planner.machine().name,
     );
     let calibrated = planner.calibration().calibrated;
@@ -904,10 +926,11 @@ fn cmd_selfcheck(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// The six suites the perf observatory tracks: they run through
+/// The seven suites the perf observatory tracks: they run through
 /// [`harness::run_suite`] (same reports, same `BENCH_*.json` artifacts)
 /// and additionally append to `results/history/`.
-const HARNESS_SUITES: [&str; 6] = ["prep", "auto", "qos", "exec", "reorder", "trace"];
+const HARNESS_SUITES: [&str; 7] =
+    ["prep", "auto", "qos", "exec", "reorder", "trace", "geometry"];
 
 fn cmd_experiment(args: &Args) -> Result<(), String> {
     // --out-dir relocates every CSV/JSON artifact, including the history
@@ -999,7 +1022,7 @@ fn cmd_experiment_diff(args: &Args) -> Result<(), String> {
     let slip_override = args.get("slip").and_then(|v| v.parse::<f64>().ok());
     let current_id = history::latest().ok_or(
         "no history entries yet; run `cutespmm experiment all --quick` (or any of \
-         prep/auto/qos/exec/reorder/trace) first",
+         prep/auto/qos/exec/reorder/trace/geometry) first",
     )?;
     let current = history::load(&current_id)?;
     let (base, cur) = if args.has("inject-slip") {

@@ -14,6 +14,7 @@
 use crate::formats::{Coo, Dense};
 use crate::gen::{Family, MatrixSpec};
 use crate::gpumodel::{algos, Machine, MatrixProfile};
+use crate::params::BrickGeometry;
 use crate::spmm::{Algo, SpmmEngine};
 use crate::util::json::{self, Json};
 use crate::util::stats::geomean;
@@ -36,6 +37,13 @@ pub struct Calibration {
     /// (`0` = unswept: the engine's cache model chooses per call). Recorded
     /// into every [`crate::planner::Plan`] this calibration produces.
     pub slab_width: usize,
+    /// Measured per-catalog-geometry runtime ratio against the default
+    /// brick shape on the FEM-regime sample
+    /// (`measured(geometry) / measured(16x4)`; `1.0` = unswept/identity),
+    /// indexed by catalog position ([`BrickGeometry::CATALOG`]). Recorded so
+    /// the geometry experiment and `plan --json` consumers can sanity-check
+    /// the exact pricer's predicted savings against host timings.
+    pub geometry_scale: [f64; BrickGeometry::CATALOG.len()],
 }
 
 impl Default for Calibration {
@@ -53,6 +61,7 @@ impl Calibration {
             width: 0,
             machine: String::new(),
             slab_width: 0,
+            geometry_scale: [1.0; BrickGeometry::CATALOG.len()],
         }
     }
 
@@ -65,11 +74,18 @@ impl Calibration {
             .into_iter()
             .map(|a| (a.name(), Json::num(self.scale[a.index()])))
             .collect();
+        let names: Vec<String> = BrickGeometry::CATALOG.iter().map(|g| g.name()).collect();
+        let geos: Vec<(&str, Json)> = names
+            .iter()
+            .zip(self.geometry_scale)
+            .map(|(n, s)| (n.as_str(), Json::num(s)))
+            .collect();
         Json::obj(vec![
             ("machine", Json::str(self.machine.clone())),
             ("width", Json::num(self.width as f64)),
             ("calibrated", Json::Bool(self.calibrated)),
             ("slab_width", Json::num(self.slab_width as f64)),
+            ("geometry_scale", Json::obj(geos)),
             ("scale", Json::obj(scales)),
         ])
     }
@@ -84,6 +100,18 @@ impl Calibration {
         let calibrated = matches!(j.get("calibrated"), Some(Json::Bool(true)));
         // profiles written before the exec runtime lack the field: 0 = auto
         let slab_width = j.get("slab_width").and_then(|w| w.as_usize()).unwrap_or(0);
+        // profiles written before the geometry catalog lack this one too:
+        // identity ratios (unswept)
+        let mut geometry_scale = [1.0; BrickGeometry::CATALOG.len()];
+        if let Some(gs) = j.get("geometry_scale") {
+            for (i, g) in BrickGeometry::CATALOG.iter().enumerate() {
+                if let Some(v) = gs.get(&g.name()).and_then(|v| v.as_f64()) {
+                    if v.is_finite() && v > 0.0 {
+                        geometry_scale[i] = v;
+                    }
+                }
+            }
+        }
         let scales = j.get("scale").ok_or("calibration: missing scale")?;
         let mut scale = [1.0; Algo::COUNT];
         for a in Algo::all() {
@@ -93,7 +121,7 @@ impl Calibration {
                 }
             }
         }
-        Ok(Calibration { scale, calibrated, width, machine, slab_width })
+        Ok(Calibration { scale, calibrated, width, machine, slab_width, geometry_scale })
     }
 
     pub fn save(&self, path: &Path) -> Result<(), String> {
@@ -161,11 +189,33 @@ fn sweep_slab_width(coo: &Coo, width: usize) -> usize {
     best.1
 }
 
+/// Sweep the brick-geometry catalog on one sample matrix at `width`: build
+/// an HRPB engine per catalog entry and time `spmm_into` with a reused
+/// buffer, returning each entry's runtime ratio against the default shape
+/// (entry 0, always `1.0`). The pricer predicts geometry wins from brick
+/// counts; this records how those predictions land in host seconds.
+fn sweep_geometry(coo: &Coo, width: usize) -> [f64; BrickGeometry::CATALOG.len()] {
+    use crate::spmm::hrpb::{ExecOpts, HrpbEngine};
+    let b = Dense::from_vec(coo.cols, width, vec![0.5; coo.cols * width]);
+    let mut out = Dense::zeros(coo.rows, width);
+    let mut times = [0.0f64; BrickGeometry::CATALOG.len()];
+    for (t, &geo) in times.iter_mut().zip(&BrickGeometry::CATALOG) {
+        let engine = HrpbEngine::prepare_with_geometry(coo, geo);
+        let meas = measure(1, 3, || {
+            engine.spmm_into_opts(&b, &mut out, ExecOpts { pooled: true, slab_width: 0 });
+        });
+        *t = meas.median_s;
+    }
+    let base = times[0].max(1e-12);
+    times.map(|t| (t / base).max(1e-12))
+}
+
 /// Time `candidates` on sampled matrices at `width` and derive per-engine
 /// corrections against `machine`'s model. `rows` sizes the samples (the CLI
 /// uses ~16k; tests shrink it). When the HRPB engine is among the
 /// candidates, the pass also sweeps its column-slab widths ([`SLAB_SWEEP`])
-/// and records the host's fastest setting.
+/// and the brick-geometry catalog ([`BrickGeometry::CATALOG`]), recording
+/// the host's fastest slab setting and per-geometry runtime ratios.
 pub fn microbenchmark(
     machine: &Machine,
     width: usize,
@@ -174,6 +224,7 @@ pub fn microbenchmark(
 ) -> Calibration {
     let mut ratios: Vec<Vec<f64>> = vec![Vec::new(); Algo::COUNT];
     let mut slab_width = 0usize;
+    let mut geometry_scale = [1.0; BrickGeometry::CATALOG.len()];
     let mut slab_swept = false;
     for spec in sample_specs(rows.max(256)) {
         let coo: Coo = spec.generate();
@@ -200,6 +251,7 @@ pub fn microbenchmark(
         // the HRPB engine actually serves
         if !slab_swept && candidates.contains(&Algo::Hrpb) {
             slab_width = sweep_slab_width(&coo, width);
+            geometry_scale = sweep_geometry(&coo, width);
             slab_swept = true;
         }
     }
@@ -216,6 +268,7 @@ pub fn microbenchmark(
         width,
         machine: machine.name.to_string(),
         slab_width,
+        geometry_scale,
     }
 }
 
@@ -241,11 +294,14 @@ mod tests {
         c.width = 64;
         c.machine = "A100".to_string();
         c.slab_width = 128;
+        c.geometry_scale[2] = 0.75;
         let back = Calibration::from_json(&c.to_json()).unwrap();
         assert!(back.calibrated);
         assert_eq!(back.width, 64);
         assert_eq!(back.machine, "A100");
         assert_eq!(back.slab_width, 128);
+        assert_eq!(back.geometry_scale[2], 0.75);
+        assert_eq!(back.geometry_scale[0], 1.0);
         assert_eq!(back.scale_for(Algo::Hrpb), 123.5);
         assert_eq!(back.scale_for(Algo::Csr), 0.25);
         assert_eq!(back.scale_for(Algo::Coo), 1.0);
@@ -279,8 +335,14 @@ mod tests {
         c.machine = "A100".into();
         let Json::Obj(mut m) = c.to_json() else { panic!("object") };
         m.remove("slab_width");
+        m.remove("geometry_scale");
         let back = Calibration::from_json(&Json::Obj(m)).unwrap();
         assert_eq!(back.slab_width, 0, "missing field defaults to auto");
+        assert_eq!(
+            back.geometry_scale,
+            [1.0; BrickGeometry::CATALOG.len()],
+            "missing geometry sweep defaults to identity ratios"
+        );
     }
 
     #[test]
@@ -294,9 +356,14 @@ mod tests {
         assert_eq!(c.scale_for(Algo::Dense), 1.0);
         // the sweep ran and picked a setting from the candidate set
         assert!(SLAB_SWEEP.contains(&c.slab_width), "slab {}", c.slab_width);
+        // the geometry sweep ran: ratios are positive and anchored at the
+        // default shape
+        assert_eq!(c.geometry_scale[0], 1.0, "default shape is the baseline");
+        assert!(c.geometry_scale.iter().all(|&s| s > 0.0));
 
         // without the HRPB candidate there is nothing to sweep
         let no_hrpb = microbenchmark(&Machine::a100(), 16, 256, &[Algo::Csr]);
         assert_eq!(no_hrpb.slab_width, 0);
+        assert_eq!(no_hrpb.geometry_scale, [1.0; BrickGeometry::CATALOG.len()]);
     }
 }

@@ -35,6 +35,7 @@ pub use feedback::{DriftSnapshot, FeedbackTracker};
 use crate::formats::Coo;
 use crate::gpumodel::{algos, Bound, Machine, MatrixProfile};
 use crate::hrpb::Hrpb;
+use crate::params::BrickGeometry;
 use crate::spmm::Algo;
 use crate::synergy::Synergy;
 use std::sync::{Arc, RwLock};
@@ -83,6 +84,12 @@ pub struct Plan {
     /// fastest on this host. The registry installs it on the engine at
     /// registration time; artifacts round-trip it.
     pub slab_width: usize,
+    /// Brick geometry the HRPB was (or is to be) built with
+    /// ([`crate::params::BrickGeometry`]): the registry prices the whole
+    /// catalog from CSR before building and installs the winner here, so
+    /// `alpha`, `synergy` and the ranked HRPB row all describe the structure
+    /// at *this* shape. Artifacts round-trip it (format v4).
+    pub geometry: BrickGeometry,
     /// Row-reorder knob ([`crate::reorder`]): `Some` when the
     /// similarity-clustered permutation is active for this matrix, carrying
     /// the α/β before/after and the one-time cost. When set, `alpha` and
@@ -112,6 +119,7 @@ impl Plan {
             ("predicted_s", Json::num(self.predicted_s)),
             ("predicted_s_per_col", Json::num(self.predicted_s_per_col)),
             ("slab_width", Json::num(self.slab_width as f64)),
+            ("geometry", Json::str(self.geometry.name())),
             ("reorder", Json::Bool(self.reorder.is_some())),
             (
                 "reorder_gains",
@@ -175,6 +183,16 @@ pub struct PlannerConfig {
     /// Matrices below this row count never reorder — the permutation would
     /// span too few panels for the α estimate (or the win) to matter.
     pub reorder_min_rows: usize,
+    /// Master switch for adaptive brick-geometry selection; `false` always
+    /// builds at [`BrickGeometry::DEFAULT`].
+    pub geometry_enabled: bool,
+    /// Geometry activation threshold: a non-default catalog entry is chosen
+    /// only when the exact pre-build pricer predicts it cuts the brick-MMA
+    /// work (`num_bricks × bits`) by at least this factor versus the
+    /// default. At 1.0 the chooser would flap on noise-level ties; the
+    /// default demands a real predicted win before deviating from the
+    /// paper's 16×4 shape.
+    pub geometry_min_gain: f64,
 }
 
 impl Default for PlannerConfig {
@@ -187,6 +205,8 @@ impl Default for PlannerConfig {
             reorder_enabled: true,
             reorder_min_gain: 1.10,
             reorder_min_rows: 256,
+            geometry_enabled: true,
+            geometry_min_gain: 1.05,
         }
     }
 }
@@ -288,7 +308,18 @@ pub struct Planner {
     calibration: RwLock<Calibration>,
     cache: PlanCache,
     feedback: FeedbackTracker,
+    /// Per-catalog-entry drift strikes for the geometry feedback loop
+    /// (indexed by [`BrickGeometry::catalog_index`]); an entry at or above
+    /// [`GEOMETRY_DEMOTE_STRIKES`] is demoted and the chooser skips it.
+    geometry_strikes: RwLock<[u8; BrickGeometry::CATALOG.len()]>,
 }
+
+/// Observed/predicted latency ratio that counts as a geometry drift strike.
+const GEOMETRY_DRIFT_RATIO: f64 = 1.5;
+
+/// Consecutive-ish drift strikes (healthy observations decay one) that
+/// demote a catalog geometry from future plans.
+const GEOMETRY_DEMOTE_STRIKES: u8 = 3;
 
 impl Planner {
     pub fn new(machine: Machine) -> Planner {
@@ -301,6 +332,7 @@ impl Planner {
             calibration: RwLock::new(Calibration::identity()),
             cache: PlanCache::new(),
             feedback: FeedbackTracker::default(),
+            geometry_strikes: RwLock::new([0; BrickGeometry::CATALOG.len()]),
         }
     }
 
@@ -389,7 +421,9 @@ impl Planner {
     /// against the structure that was not built.
     pub fn plan_assembled(&self, fp: u64, profile: &MatrixProfile) -> Arc<Plan> {
         if let Some(plan) = self.cache.get(fp, self.config.width) {
-            if plan.reorder.is_some() == profile.reorder.is_some() {
+            if plan.reorder.is_some() == profile.reorder.is_some()
+                && plan.geometry == profile.geometry
+            {
                 return plan;
             }
         }
@@ -416,6 +450,82 @@ impl Planner {
             && proposal.after.num_bricks < proposal.before.num_bricks
             && proposal.after.alpha >= proposal.before.alpha * c.reorder_min_gain
             && Synergy::from_alpha(proposal.after.alpha) != Synergy::Low
+    }
+
+    /// The brick-geometry chooser — pure over the exact pre-build pricer's
+    /// per-geometry panel stats ([`crate::reorder::stats::price_catalog`]),
+    /// so the registry can decide the shape *before* building anything.
+    /// Picks the catalog entry with the least predicted brick-MMA work
+    /// (`num_bricks × bits`, the kernel's executed-FLOP volume), but only
+    /// deviates from [`BrickGeometry::DEFAULT`] when the predicted saving
+    /// clears [`PlannerConfig::geometry_min_gain`] — it never activates a
+    /// non-default shape the pricer predicts no gain for. Demoted
+    /// geometries (see [`Planner::observe_geometry`]) are skipped.
+    pub fn choose_geometry(
+        &self,
+        priced: &[(BrickGeometry, crate::reorder::PanelStats)],
+    ) -> BrickGeometry {
+        let default_slots = priced
+            .iter()
+            .find(|(g, _)| g.is_default())
+            .map(|(g, s)| s.brick_slots(*g))
+            .unwrap_or(0);
+        if !self.config.geometry_enabled || default_slots == 0 {
+            return BrickGeometry::DEFAULT;
+        }
+        let mut best = BrickGeometry::DEFAULT;
+        let mut best_slots = default_slots;
+        for &(g, ref s) in priced {
+            if g.is_default() || self.geometry_demoted(g) {
+                continue;
+            }
+            let slots = s.brick_slots(g);
+            if slots < best_slots
+                && default_slots as f64 >= slots as f64 * self.config.geometry_min_gain
+            {
+                best = g;
+                best_slots = slots;
+            }
+        }
+        best
+    }
+
+    /// Is this catalog geometry currently demoted by the feedback loop?
+    /// The default shape is never demoted — it is the fallback.
+    pub fn geometry_demoted(&self, geo: BrickGeometry) -> bool {
+        match geo.catalog_index() {
+            Some(i) if !geo.is_default() => {
+                self.geometry_strikes.read().unwrap()[i] >= GEOMETRY_DEMOTE_STRIKES
+            }
+            _ => false,
+        }
+    }
+
+    /// Report an observed batch latency for a matrix served at a non-default
+    /// geometry. Mirrors [`Planner::observe`]: armed only once a real
+    /// calibration is installed. A mispredicted geometry (observed drifting
+    /// past [`GEOMETRY_DRIFT_RATIO`]× predicted) accumulates strikes and is
+    /// demoted from future [`Planner::choose_geometry`] calls; cached plans
+    /// are invalidated so affected matrices re-plan at the default shape.
+    /// Healthy observations decay one strike.
+    pub fn observe_geometry(&self, geo: BrickGeometry, predicted_s: f64, observed_s: f64) {
+        if !self.calibration.read().unwrap().calibrated {
+            return;
+        }
+        let Some(i) = geo.catalog_index() else { return };
+        if geo.is_default() {
+            return;
+        }
+        let mut strikes = self.geometry_strikes.write().unwrap();
+        if observed_s > predicted_s * GEOMETRY_DRIFT_RATIO {
+            strikes[i] = strikes[i].saturating_add(1);
+            if strikes[i] == GEOMETRY_DEMOTE_STRIKES {
+                drop(strikes);
+                self.cache.invalidate();
+            }
+        } else {
+            strikes[i] = strikes[i].saturating_sub(1);
+        }
     }
 
     /// Rank + choose from a precomputed profile (no caching).
@@ -463,6 +573,7 @@ impl Planner {
             predicted_s,
             predicted_s_per_col: predicted_s / n.max(1) as f64,
             slab_width,
+            geometry: profile.geometry,
             reorder: profile.reorder,
             alpha,
             synergy,
@@ -626,6 +737,10 @@ mod tests {
         assert_eq!(doc.get("synergy").unwrap().as_str(), Some(plan.synergy.name()));
         assert_eq!(doc.get("width").unwrap().as_usize(), Some(plan.width));
         assert_eq!(doc.get("slab_width").unwrap().as_usize(), Some(plan.slab_width));
+        assert_eq!(
+            doc.get("geometry").unwrap().as_str(),
+            Some(plan.geometry.name().as_str())
+        );
         let ranked = doc.get("ranked").unwrap().as_arr().unwrap();
         assert_eq!(ranked.len(), plan.ranked.len());
         let chosen = ranked
@@ -754,6 +869,116 @@ mod tests {
         let g = doc.get("reorder_gains").unwrap();
         assert_eq!(g.get("alpha_before").unwrap().as_f64(), Some(0.04));
         assert_eq!(g.get("alpha_after").unwrap().as_f64(), Some(0.31));
+    }
+
+    /// Synthetic per-geometry panel stats with a given brick count — the
+    /// chooser only reads `brick_slots`, which is `num_bricks × bits`.
+    fn priced_stats(bricks: usize) -> crate::reorder::PanelStats {
+        crate::reorder::PanelStats {
+            nnz: 1000,
+            num_blocks: bricks.div_ceil(4).max(1),
+            num_bricks: bricks,
+            num_brick_cols: bricks,
+            alpha: 0.2,
+            beta: 1.0,
+        }
+    }
+
+    /// The geometry acceptance property: the chooser NEVER activates a
+    /// non-default shape the pricer predicts no (or sub-threshold) gain for.
+    #[test]
+    fn geometry_chooser_never_activates_without_predicted_gain() {
+        let planner = Planner::new(Machine::a100());
+        let g88 = BrickGeometry::CATALOG[1];
+        let g84 = BrickGeometry::CATALOG[2];
+        let g81t = BrickGeometry::CATALOG[3];
+        // default: 100 bricks × 64 bits = 6400 slots; 8x4 at 100 bricks is
+        // 3200 slots (2x predicted win) -> activates; the rest predict more
+        // work and must not be picked.
+        let priced = vec![
+            (BrickGeometry::DEFAULT, priced_stats(100)),
+            (g88, priced_stats(110)),
+            (g84, priced_stats(100)),
+            (g81t, priced_stats(900)),
+        ];
+        assert_eq!(planner.choose_geometry(&priced), g84);
+        // an exact tie predicts no gain: stay on the default shape
+        let tie = vec![(BrickGeometry::DEFAULT, priced_stats(100)), (g88, priced_stats(100))];
+        assert_eq!(planner.choose_geometry(&tie), BrickGeometry::DEFAULT);
+        // a real but sub-threshold saving (6240 vs 6400 slots, 1.026x) must
+        // not clear the 1.05x activation gate either
+        let slight = vec![(BrickGeometry::DEFAULT, priced_stats(100)), (g84, priced_stats(195))];
+        assert_eq!(planner.choose_geometry(&slight), BrickGeometry::DEFAULT);
+        // master switch off
+        let off = Planner::with_config(PlannerConfig {
+            geometry_enabled: false,
+            ..Default::default()
+        });
+        assert_eq!(off.choose_geometry(&priced), BrickGeometry::DEFAULT);
+        // degenerate tables fall back to the default shape
+        assert_eq!(planner.choose_geometry(&[]), BrickGeometry::DEFAULT);
+    }
+
+    #[test]
+    fn geometry_demotion_falls_back_to_the_default_shape() {
+        let planner = Planner::new(Machine::a100());
+        let mut cal = Calibration::identity();
+        cal.calibrated = true;
+        cal.machine = "A100".to_string();
+        planner.set_calibration(cal);
+
+        let g84 = BrickGeometry::CATALOG[2];
+        let priced = vec![(BrickGeometry::DEFAULT, priced_stats(100)), (g84, priced_stats(100))];
+        assert_eq!(planner.choose_geometry(&priced), g84);
+
+        let gen_before = planner.cache().generation();
+        for _ in 0..3 {
+            planner.observe_geometry(g84, 1e-3, 1e-2); // 10x drift
+        }
+        assert!(planner.geometry_demoted(g84));
+        assert!(planner.cache().generation() > gen_before, "demotion must invalidate plans");
+        assert_eq!(
+            planner.choose_geometry(&priced),
+            BrickGeometry::DEFAULT,
+            "a demoted geometry must lose future plans"
+        );
+        // the default shape is the fallback and never demotes
+        for _ in 0..5 {
+            planner.observe_geometry(BrickGeometry::DEFAULT, 1e-3, 1e-2);
+        }
+        assert!(!planner.geometry_demoted(BrickGeometry::DEFAULT));
+    }
+
+    #[test]
+    fn observe_geometry_is_inert_without_calibration() {
+        let planner = Planner::new(Machine::a100());
+        let g = BrickGeometry::CATALOG[1];
+        for _ in 0..10 {
+            planner.observe_geometry(g, 1e-6, 1.0);
+        }
+        assert!(!planner.geometry_demoted(g));
+    }
+
+    /// The cache-coherence rule extends to geometry: a memoized default-shape
+    /// plan must not be served for a profile rebuilt at another geometry.
+    #[test]
+    fn plan_assembled_recomputes_on_geometry_mismatch() {
+        let planner = Planner::new(Machine::a100());
+        let coo = full_brick_matrix(48);
+        let fp = fingerprint(&coo);
+        let stale = planner.plan(&coo);
+        assert!(stale.geometry.is_default());
+
+        let mut profile = MatrixProfile::compute(&coo);
+        profile.geometry = BrickGeometry::CATALOG[2];
+        let fresh = planner.plan_assembled(fp, &profile);
+        assert_eq!(
+            fresh.geometry,
+            BrickGeometry::CATALOG[2],
+            "stale default-shape plan must be replaced"
+        );
+        let again = planner.plan_assembled(fp, &profile);
+        assert!(Arc::ptr_eq(&fresh, &again), "matching geometry hits the cache");
     }
 
     #[test]

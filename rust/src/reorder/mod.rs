@@ -36,7 +36,7 @@ pub mod stats;
 
 pub use cluster::pack;
 pub use signature::{row_signatures, Signature, SIG_HASHES};
-pub use stats::{panel_stats, PanelStats};
+pub use stats::{panel_stats, panel_stats_geo, price_catalog, PanelStats};
 
 use crate::formats::{Coo, Csr};
 use crate::util::rng::Rng;
@@ -145,7 +145,7 @@ pub struct Gains {
     pub alpha_before: f64,
     /// Brick density after similarity-clustered packing.
     pub alpha_after: f64,
-    /// Brick-column reuse before (1.0 identically at TM = BRICK_M).
+    /// Brick-column reuse before (1.0 identically at TM = brick_m).
     pub beta_before: f64,
     /// Brick-column reuse after.
     pub beta_after: f64,
@@ -215,8 +215,22 @@ pub fn build_reordered(
     tk: usize,
     threads: usize,
 ) -> crate::hrpb::Hrpb {
+    build_reordered_geo(csr, perm, crate::params::BrickGeometry::DEFAULT, tm, tk, threads)
+}
+
+/// [`build_reordered`] at an explicit brick geometry — the registry's path
+/// when the geometry chooser and the reorder gate both activate.
+pub fn build_reordered_geo(
+    csr: &Csr,
+    perm: RowPermutation,
+    geo: crate::params::BrickGeometry,
+    tm: usize,
+    tk: usize,
+    threads: usize,
+) -> crate::hrpb::Hrpb {
     let permuted = perm.apply_csr(csr);
-    let mut hrpb = crate::hrpb::builder::build_with_parallel(&permuted, tm, tk, threads);
+    let mut hrpb =
+        crate::hrpb::builder::build_with_geometry_parallel(&permuted, geo, tm, tk, threads);
     hrpb.perm = Some(std::sync::Arc::new(perm));
     hrpb
 }

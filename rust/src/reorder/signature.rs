@@ -2,9 +2,12 @@
 //! clustering pass.
 //!
 //! Two rows share a brick only when their nonzeros fall into the same
-//! 4-wide column block after panel compaction, so the natural similarity
-//! measure is the Jaccard overlap of their *column-block* supports
-//! (`col / BRICK_K`). A minhash signature estimates that overlap in O(1)
+//! brick-width column block after panel compaction, so the natural
+//! similarity measure is the Jaccard overlap of their *column-block*
+//! supports (`col / brick_k`, at the default geometry's width — the
+//! clustering is a similarity ordering, not a per-geometry exact count, so
+//! one block width serves the whole catalog). A minhash signature
+//! estimates that overlap in O(1)
 //! per pair: component `i` is the minimum of hash `h_i` over the row's
 //! block ids, and `P[sig_a[i] == sig_b[i]] = J(a, b)` — so the fraction of
 //! agreeing components estimates the Jaccard similarity, and sorting rows
@@ -12,7 +15,7 @@
 //! high-overlap rows next to each other.
 
 use crate::formats::Csr;
-use crate::params::BRICK_K;
+use crate::params::BrickGeometry;
 
 /// Signature width. 8 components estimate Jaccard at ±1/8 granularity —
 /// enough to separate "same support" from "disjoint support", which is
@@ -56,7 +59,7 @@ pub fn row_signature(cols: &[u32]) -> Signature {
     let mut sig = [u32::MAX; SIG_HASHES];
     let mut last_block = u32::MAX;
     for &c in cols {
-        let block = c / BRICK_K as u32;
+        let block = c / BrickGeometry::DEFAULT.brick_k as u32;
         if block == last_block {
             continue; // cols are sorted: consecutive duplicates collapse
         }

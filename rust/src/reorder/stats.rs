@@ -1,52 +1,75 @@
-//! Exact post-permutation HRPB brick statistics, computed from the CSR and
-//! a candidate permutation without building the HRPB.
+//! Exact pre-build HRPB brick statistics, computed from the CSR and a
+//! candidate row order / brick geometry without building the HRPB.
 //!
 //! The builder compacts each panel's active columns to the left, so the
-//! panel's brick columns are exactly the 4-wide groups of the sorted
+//! panel's brick columns are exactly the `brick_k`-wide groups of the sorted
 //! column union, and every such group holds at least one nonzero. That
 //! makes the brick counts a pure function of per-panel column unions: no
-//! pattern encoding or value packing is needed to price a permutation.
-//! [`panel_stats`] is equivalence-tested against
-//! [`crate::hrpb::stats::compute`] on built instances — it is *exact*, not
-//! an approximation, which is what lets the planner gate activation on
-//! predicted α without ever paying for a speculative build.
+//! pattern encoding or value packing is needed to price a permutation — or
+//! a candidate [`BrickGeometry`]. [`panel_stats_geo`] is equivalence-tested
+//! against [`crate::hrpb::stats::compute`] on built instances for every
+//! catalog geometry — it is *exact*, not an approximation, which is what
+//! lets the planner gate reorder activation AND pick the brick geometry
+//! from the CSR without ever paying for a speculative build.
 
 use crate::formats::Csr;
-use crate::params::{BRICK_K, BRICK_M};
+use crate::params::BrickGeometry;
 use crate::reorder::RowPermutation;
 use crate::util::bits::ceil_div;
 
 /// Brick statistics of an HRPB that *would be built* from a given row
-/// order (field meanings match [`crate::hrpb::HrpbStats`]).
+/// order and geometry (field meanings match [`crate::hrpb::HrpbStats`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PanelStats {
     pub nnz: usize,
     pub num_blocks: usize,
     pub num_bricks: usize,
     pub num_brick_cols: usize,
-    /// Brick density `nnz / (num_bricks · BRICK_M · BRICK_K)`.
+    /// Brick density `nnz / (num_bricks · brick_m · brick_k)`.
     pub alpha: f64,
     /// Active bricks per occupied brick column (1.0 identically when
-    /// TM = BRICK_M).
+    /// TM = brick_m).
     pub beta: f64,
 }
 
+impl PanelStats {
+    /// The MMA-slot work proxy the geometry chooser minimizes: total
+    /// pattern slots fed to the (modeled) tensor units, `num_bricks ·
+    /// brick_m · brick_k`. Equal nnz across geometries, so minimizing
+    /// slots maximizes α.
+    pub fn brick_slots(&self, geo: BrickGeometry) -> usize {
+        self.num_bricks * geo.bits()
+    }
+}
+
 /// Compute the brick statistics of building `csr` at `(tm, tk)` under
-/// `perm` (`None` = arrival order).
+/// `perm` (`None` = arrival order) with the default geometry.
 pub fn panel_stats(
     csr: &Csr,
     perm: Option<&RowPermutation>,
     tm: usize,
     tk: usize,
 ) -> PanelStats {
-    assert!(tm % BRICK_M == 0 && tm > 0 && tm <= 256, "invalid TM {tm}");
-    assert!(tk % BRICK_K == 0 && tk > 0, "invalid TK {tk}");
+    panel_stats_geo(csr, perm, BrickGeometry::DEFAULT, tm, tk)
+}
+
+/// Compute the brick statistics of building `csr` at `(tm, tk)` under
+/// `perm` with brick geometry `geo`.
+pub fn panel_stats_geo(
+    csr: &Csr,
+    perm: Option<&RowPermutation>,
+    geo: BrickGeometry,
+    tm: usize,
+    tk: usize,
+) -> PanelStats {
+    assert!(tm % geo.brick_m == 0 && tm > 0 && tm <= 256, "invalid TM {tm}");
+    assert!(tk % geo.brick_k == 0 && tk > 0, "invalid TK {tk}");
     if let Some(p) = perm {
         assert_eq!(p.len(), csr.rows, "permutation rows != matrix rows");
     }
     let rows = csr.rows;
     let num_panels = ceil_div(rows.max(1), tm);
-    let bricks_per_col = tm / BRICK_M;
+    let bricks_per_col = tm / geo.brick_m;
     let mut nnz = 0usize;
     let mut num_blocks = 0usize;
     let mut num_bricks = 0usize;
@@ -70,27 +93,27 @@ pub fn panel_stats(
         union.dedup();
         let l = union.len();
         num_blocks += ceil_div(l, tk);
-        // compaction packs active columns left, so every 4-wide group of
-        // the union is an occupied brick column
-        num_brick_cols += ceil_div(l, BRICK_K);
+        // compaction packs active columns left, so every brick_k-wide group
+        // of the union is an occupied brick column
+        num_brick_cols += ceil_div(l, geo.brick_k);
         if bricks_per_col == 1 {
-            // TM = BRICK_M: one brick row per panel — every occupied brick
+            // TM = brick_m: one brick row per panel — every occupied brick
             // column holds exactly one brick
-            num_bricks += ceil_div(l, BRICK_K);
+            num_bricks += ceil_div(l, geo.brick_k);
         } else {
-            // taller panels: a brick is active iff its 16-row group touches
-            // its brick column; map each row's columns to compacted slots
-            // and count distinct (group, slot/4) pairs per group
+            // taller panels: a brick is active iff its brick_m-row group
+            // touches its brick column; map each row's columns to compacted
+            // slots and count distinct (group, slot/brick_k) pairs per group
             for g in 0..bricks_per_col {
                 group.clear();
-                let g0 = r0 + g * BRICK_M;
-                let g1 = (g0 + BRICK_M).min(r1);
+                let g0 = r0 + g * geo.brick_m;
+                let g1 = (g0 + geo.brick_m).min(r1);
                 for n in g0..g1 {
                     let old = perm.map_or(n, |pm| pm.new_to_old[n] as usize);
                     for &c in &csr.col_idx[csr.row_range(old)] {
                         let slot =
                             union.binary_search(&c).expect("column is in the panel union");
-                        group.push(slot / BRICK_K);
+                        group.push(slot / geo.brick_k);
                     }
                 }
                 group.sort_unstable();
@@ -99,7 +122,7 @@ pub fn panel_stats(
             }
         }
     }
-    let brick_slots = (num_bricks * BRICK_M * BRICK_K) as f64;
+    let brick_slots = (num_bricks * geo.bits()) as f64;
     let alpha = if num_bricks == 0 { 0.0 } else { nnz as f64 / brick_slots };
     let beta = if num_brick_cols == 0 {
         0.0
@@ -107,6 +130,23 @@ pub fn panel_stats(
         num_bricks as f64 / num_brick_cols as f64
     };
     PanelStats { nnz, num_blocks, num_bricks, num_brick_cols, alpha, beta }
+}
+
+/// Price every catalog geometry from the CSR under `perm` (`None` = arrival
+/// order) — one exact [`PanelStats`] per [`BrickGeometry::CATALOG`] entry,
+/// in catalog order. This is what the planner's geometry chooser ranks: the
+/// registry prices under the row order it is about to build, and no build
+/// happens until the winner is known.
+pub fn price_catalog(
+    csr: &Csr,
+    perm: Option<&RowPermutation>,
+    tm: usize,
+    tk: usize,
+) -> Vec<(BrickGeometry, PanelStats)> {
+    BrickGeometry::CATALOG
+        .iter()
+        .map(|&geo| (geo, panel_stats_geo(csr, perm, geo, tm, tk)))
+        .collect()
 }
 
 #[cfg(test)]
@@ -117,19 +157,29 @@ mod tests {
     use crate::util::proptest::{check, SparseGen};
     use crate::util::rng::Rng;
 
-    fn assert_matches_built(csr: &Csr, perm: Option<&RowPermutation>, tm: usize, tk: usize) {
-        let predicted = panel_stats(csr, perm, tm, tk);
+    fn assert_matches_built_geo(
+        csr: &Csr,
+        perm: Option<&RowPermutation>,
+        geo: BrickGeometry,
+        tm: usize,
+        tk: usize,
+    ) {
+        let predicted = panel_stats_geo(csr, perm, geo, tm, tk);
         let built = match perm {
-            Some(p) => builder::build_with(&p.apply_csr(csr), tm, tk),
-            None => builder::build_with(csr, tm, tk),
+            Some(p) => builder::build_with_geometry(&p.apply_csr(csr), geo, tm, tk),
+            None => builder::build_with_geometry(csr, geo, tm, tk),
         };
         let s = hstats::compute_serial(&built);
         assert_eq!(predicted.nnz, s.nnz);
-        assert_eq!(predicted.num_blocks, s.num_blocks, "blocks at tm={tm} tk={tk}");
-        assert_eq!(predicted.num_bricks, s.num_bricks, "bricks at tm={tm} tk={tk}");
-        assert_eq!(predicted.num_brick_cols, s.num_brick_cols, "brick cols");
+        assert_eq!(predicted.num_blocks, s.num_blocks, "blocks at {geo} tm={tm} tk={tk}");
+        assert_eq!(predicted.num_bricks, s.num_bricks, "bricks at {geo} tm={tm} tk={tk}");
+        assert_eq!(predicted.num_brick_cols, s.num_brick_cols, "brick cols at {geo}");
         assert!((predicted.alpha - s.alpha).abs() < 1e-12);
         assert!((predicted.beta - s.beta).abs() < 1e-12);
+    }
+
+    fn assert_matches_built(csr: &Csr, perm: Option<&RowPermutation>, tm: usize, tk: usize) {
+        assert_matches_built_geo(csr, perm, BrickGeometry::DEFAULT, tm, tk);
     }
 
     #[test]
@@ -160,6 +210,51 @@ mod tests {
         let perm = RowPermutation::random(96, &mut rng);
         assert_matches_built(&csr, Some(&perm), 16, 16);
         assert_matches_built(&csr, Some(&perm), 32, 16);
+    }
+
+    #[test]
+    fn exact_for_every_catalog_geometry() {
+        let mut rng = Rng::new(63);
+        for density in [0.02, 0.08, 0.2] {
+            let coo = Coo::random(160, 140, density, &mut rng);
+            let csr = Csr::from_coo(&coo);
+            for geo in BrickGeometry::CATALOG {
+                assert_matches_built_geo(&csr, None, geo, 16, 16);
+                assert_matches_built_geo(&csr, None, geo, 32, 16);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_for_catalog_geometries_under_a_permutation() {
+        let mut rng = Rng::new(64);
+        let coo = Coo::random(128, 96, 0.1, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let perm = RowPermutation::random(128, &mut rng);
+        for geo in BrickGeometry::CATALOG {
+            assert_matches_built_geo(&csr, Some(&perm), geo, 16, 16);
+        }
+    }
+
+    #[test]
+    fn price_catalog_covers_the_catalog_and_agrees_with_direct_pricing() {
+        let mut rng = Rng::new(65);
+        let coo = Coo::random(96, 128, 0.07, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let priced = price_catalog(&csr, None, 16, 16);
+        assert_eq!(priced.len(), BrickGeometry::CATALOG.len());
+        for (i, (geo, s)) in priced.iter().enumerate() {
+            assert_eq!(*geo, BrickGeometry::CATALOG[i]);
+            assert_eq!(*s, panel_stats_geo(&csr, None, *geo, 16, 16));
+            assert_eq!(s.brick_slots(*geo), s.num_bricks * geo.bits());
+            // all geometries price the same matrix: identical nnz
+            assert_eq!(s.nnz, priced[0].1.nnz);
+        }
+        // pricing under a permutation matches per-geometry direct pricing
+        let perm = RowPermutation::random(96, &mut rng);
+        for (geo, s) in price_catalog(&csr, Some(&perm), 16, 16) {
+            assert_eq!(s, panel_stats_geo(&csr, Some(&perm), geo, 16, 16));
+        }
     }
 
     #[test]

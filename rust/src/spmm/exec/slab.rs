@@ -9,7 +9,7 @@
 //! C tile stays L1-hot across *all* blocks of a work unit while the packed
 //! A-side stream and B row slabs stream through.
 
-use crate::params::{BRICK_K, TM};
+use crate::params::{BrickGeometry, TM};
 use crate::spmm::exec::microkernel::LANES;
 
 /// L1 data budget the slab model targets (bytes): half of a typical 32 KiB
@@ -26,15 +26,17 @@ pub const MAX_SLAB: usize = 512;
 
 /// Choose a slab width for dense width `n` from the cache model: the
 /// resident working set per slab pass is the `TM`-row C tile plus the
-/// `BRICK_K` B rows of the brick column in flight (and one brick column of
-/// lookahead), all `f32`. Result is `LANES`-aligned, clamped to
-/// `[MIN_SLAB, MAX_SLAB]`, and collapses to a single slab when `n` already
-/// fits.
+/// brick-column B rows in flight (and one brick column of lookahead), all
+/// `f32`. Sized for the default geometry — the catalog's brick_k range
+/// (1-8) moves the resident set by at most a few rows out of ~24, within
+/// the model's own slack, so one width serves all geometries. Result is
+/// `LANES`-aligned, clamped to `[MIN_SLAB, MAX_SLAB]`, and collapses to a
+/// single slab when `n` already fits.
 pub fn choose(n: usize) -> usize {
     if n == 0 {
         return LANES;
     }
-    let resident_rows = TM + 2 * BRICK_K;
+    let resident_rows = TM + 2 * BrickGeometry::DEFAULT.brick_k;
     let budget_cols = L1_TARGET_BYTES / (4 * resident_rows);
     let ts = (budget_cols / LANES * LANES).clamp(MIN_SLAB, MAX_SLAB);
     if ts >= n {

@@ -21,13 +21,20 @@
 //!   analogue of the atomic consolidation §5 prices in.
 //!
 //! The scalar FMA here skips the zero-fill the real TCU would execute;
-//! [`SpmmEngine::executed_flops`] reports the TCU count (bricks × 64 × N)
-//! so the cost models and benches can charge it.
+//! [`SpmmEngine::executed_flops`] reports the TCU count (bricks ×
+//! pattern-bits × N) so the cost models and benches can charge it.
+//!
+//! The kernel is instantiated per [`BrickGeometry`]: the brick-row mask
+//! width, the B-row fragment count and the FMA chaining all follow the
+//! HRPB's geometry. The default 16×4 shape takes exactly the pre-catalog
+//! path (one 1-4-term micro-kernel per brick row); wider bricks (8×8)
+//! chain a 4-term pass with a 1-4-term remainder — bit-identical under the
+//! micro-kernels' strict left-fold contract.
 
 use crate::formats::{Coo, Dense};
 use crate::hrpb::{self, pack, Hrpb};
 use crate::loadbalance::{self, Device, Schedule, WorkUnit};
-use crate::params::{BRICK_K, BRICK_M};
+use crate::params::BrickGeometry;
 use crate::spmm::exec::{self, microkernel, slab, SendPtr};
 use crate::spmm::SpmmEngine;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -52,6 +59,10 @@ impl Default for ExecOpts {
     }
 }
 
+/// Widest brick column the kernel's fixed fragment arrays accommodate
+/// (the catalog maximum; see [`BrickGeometry::CATALOG`]).
+const MAX_BK: usize = 8;
+
 pub struct HrpbEngine {
     /// Shared with the registry entry under serving — the engine never
     /// mutates the HRPB, so preparation avoids a deep clone of the whole
@@ -72,6 +83,13 @@ impl HrpbEngine {
     pub fn prepare(coo: &Coo) -> Self {
         let hrpb = hrpb::build_from_coo(coo);
         Self::from_hrpb(hrpb)
+    }
+
+    /// Prepare with an explicit brick geometry at the default tiles.
+    pub fn prepare_with_geometry(coo: &Coo, geo: BrickGeometry) -> Self {
+        use crate::params::{TK, TM};
+        let csr = crate::formats::Csr::from_coo(coo);
+        Self::from_hrpb(hrpb::build_with_geometry(&csr, geo, TM, TK))
     }
 
     /// Wrap an already-built HRPB (preprocessing measured separately).
@@ -108,6 +126,13 @@ impl HrpbEngine {
         stats: hrpb::HrpbStats,
     ) -> Self {
         debug_assert!(schedule.validate(&hrpb).is_ok());
+        // run_unit's fragment arrays are sized for the catalog's widest
+        // brick; every catalog entry satisfies this
+        assert!(
+            hrpb.geometry.brick_k <= MAX_BK,
+            "engine supports brick_k <= {MAX_BK}, got {}",
+            hrpb.geometry
+        );
         // Natural (panel) order: §5's observation — consecutive panels share
         // active columns, so processing them in order keeps B rows hot in
         // cache; the work-stealing dispatch already absorbs imbalance the
@@ -264,7 +289,12 @@ impl HrpbEngine {
         ts: usize,
     ) {
         let tk = self.hrpb.tk;
-        let brick_cols = tk / BRICK_K;
+        let geo = self.hrpb.geometry;
+        let (bm, bk) = (geo.brick_m, geo.brick_k);
+        // per-brick-row nonzero mask: the low bk bits of the pattern shifted
+        // to the row (bk <= 8 < 64, so the shift never overflows)
+        let row_mask = (1u64 << bk) - 1;
+        let brick_cols = tk / bk;
         let panel_base = self.hrpb.blocked_row_ptr[unit.panel as usize] as usize;
         let blocks = (panel_base + unit.start as usize)..(panel_base + unit.end as usize);
         // unit-granularity profiling span (the GPU analogue: one thread
@@ -291,21 +321,24 @@ impl HrpbEngine {
                     if s == e {
                         continue;
                     }
-                    // b_frag: the 4 B-row *slab slices* of this brick
+                    // b_frag: the brick_k B-row *slab slices* of this brick
                     // column, hoisted once per slab (lines 26-28)
-                    let brows: [&[f32]; BRICK_K] = std::array::from_fn(|c| {
-                        &b.row(active[bc * BRICK_K + c] as usize)[s0..s1]
-                    });
+                    let empty: &[f32] = &[];
+                    let mut brows = [empty; MAX_BK];
+                    for (c, brow) in brows.iter_mut().enumerate().take(bk) {
+                        *brow = &b.row(active[bc * bk + c] as usize)[s0..s1];
+                    }
                     for j in s..e {
-                        let br = blk.rows[j] as usize * BRICK_M;
+                        let br = blk.rows[j] as usize * bm;
                         let pattern = blk.patterns[j];
-                        // walk brick rows; each row's nibble of the pattern
-                        // is its nonzero mask (row-major bit order, Fig 3b)
+                        // walk brick rows; each row's bk-wide window of the
+                        // pattern is its nonzero mask (row-major bit order,
+                        // Fig 3b — a nibble at the default geometry)
                         let mut rest = pattern;
                         while rest != 0 {
-                            let r = rest.trailing_zeros() as usize / BRICK_K;
-                            let row_bits = (pattern >> (r * BRICK_K)) & 0xF;
-                            rest &= !(0xFu64 << (r * BRICK_K));
+                            let r = rest.trailing_zeros() as usize / bk;
+                            let row_bits = (pattern >> (r * bk)) & row_mask;
+                            rest &= !(row_mask << (r * bk));
                             // SAFETY: the caller owns local row `br + r`
                             // exclusively (see the method contract), and
                             // distinct local rows never alias.
@@ -313,11 +346,11 @@ impl HrpbEngine {
                                 std::slice::from_raw_parts_mut(row_ptr(br + r).add(s0), s1 - s0)
                             };
                             // the MMA (line 41), zero-skipped on CPU. The
-                            // brick row's 1-4 products fuse into ONE pass
-                            // over the C slab — the CPU analogue of the
-                            // MMA's 4-deep contraction.
-                            let mut av = [0f32; BRICK_K];
-                            let mut bs: [&[f32]; BRICK_K] = [brows[0]; BRICK_K];
+                            // brick row's 1-brick_k products fuse into 1-2
+                            // passes over the C slab — the CPU analogue of
+                            // the MMA's brick_k-deep contraction.
+                            let mut av = [0f32; MAX_BK];
+                            let mut bs = [empty; MAX_BK];
                             let mut cnt = 0usize;
                             let mut bits = row_bits;
                             while bits != 0 {
@@ -328,15 +361,36 @@ impl HrpbEngine {
                                 vi += 1;
                                 cnt += 1;
                             }
-                            match cnt {
-                                1 => microkernel::fma1(crow, av[0], bs[0]),
-                                2 => microkernel::fma2(crow, [av[0], av[1]], [bs[0], bs[1]]),
+                            // >4 terms (8-wide bricks) chain a full 4-term
+                            // pass with a 1-4-term remainder; the strict
+                            // left-fold micro-kernel contract makes the
+                            // split bit-identical to one 5-8-term fold
+                            let mut lo = 0usize;
+                            if cnt > 4 {
+                                microkernel::fma4(
+                                    &mut *crow,
+                                    [av[0], av[1], av[2], av[3]],
+                                    [bs[0], bs[1], bs[2], bs[3]],
+                                );
+                                lo = 4;
+                            }
+                            match cnt - lo {
+                                1 => microkernel::fma1(crow, av[lo], bs[lo]),
+                                2 => microkernel::fma2(
+                                    crow,
+                                    [av[lo], av[lo + 1]],
+                                    [bs[lo], bs[lo + 1]],
+                                ),
                                 3 => microkernel::fma3(
                                     crow,
-                                    [av[0], av[1], av[2]],
-                                    [bs[0], bs[1], bs[2]],
+                                    [av[lo], av[lo + 1], av[lo + 2]],
+                                    [bs[lo], bs[lo + 1], bs[lo + 2]],
                                 ),
-                                _ => microkernel::fma4(crow, av, bs),
+                                _ => microkernel::fma4(
+                                    crow,
+                                    [av[lo], av[lo + 1], av[lo + 2], av[lo + 3]],
+                                    [bs[lo], bs[lo + 1], bs[lo + 2], bs[lo + 3]],
+                                ),
                             }
                         }
                     }
@@ -382,8 +436,9 @@ impl SpmmEngine for HrpbEngine {
     }
 
     fn executed_flops(&self, n: usize) -> f64 {
-        // each active brick costs a full dense 16x4 x 4xN MMA pass
-        2.0 * (self.stats.num_bricks * BRICK_M * BRICK_K * n) as f64
+        // each active brick costs a full dense brick_m×brick_k x brick_k×N
+        // MMA pass — bits() slots per brick regardless of fill
+        2.0 * (self.stats.num_bricks * self.hrpb.geometry.bits() * n) as f64
     }
 
     fn shape(&self) -> (usize, usize) {
@@ -604,6 +659,79 @@ mod tests {
         let b = Dense::random(440, 24, &mut rng);
         let want = coo.to_dense().matmul(&b);
         assert!(split.spmm(&b).rel_fro_error(&want) < 1e-5);
+    }
+
+    /// The tentpole geometry contract: every catalog geometry serves
+    /// BIT-identically to the default-geometry engine. Per C row the
+    /// product stream is the panel's columns in compacted order whatever
+    /// the brick shape, and the micro-kernels fold strictly left-to-right
+    /// (chained for 8-wide bricks), so regrouped brick boundaries are
+    /// numerically invisible. Covers ragged panels (rows % 16 != 0), the
+    /// transposed 8x1 variant, and NaN-dirty `spmm_into` buffers.
+    #[test]
+    fn catalog_geometries_are_bit_identical_to_the_default_engine() {
+        let mut rng = Rng::new(200);
+        let coo = crate::formats::Coo::random(203, 157, 0.08, &mut rng);
+        let b = Dense::random(157, 33, &mut rng);
+        let oracle = coo.to_dense().matmul(&b);
+        let want = HrpbEngine::prepare(&coo).spmm(&b);
+        assert!(want.rel_fro_error(&oracle) < 1e-5);
+        for geo in BrickGeometry::CATALOG {
+            let e = HrpbEngine::prepare_with_geometry(&coo, geo);
+            assert_eq!(e.hrpb().geometry, geo);
+            assert_eq!(e.spmm(&b).max_abs_diff(&want), 0.0, "{geo}: spmm");
+            let mut dirty = Dense::from_vec(203, 33, vec![f32::NAN; 203 * 33]);
+            e.spmm_into(&b, &mut dirty);
+            assert_eq!(dirty.max_abs_diff(&want), 0.0, "{geo}: spmm_into");
+            assert!(e.executed_flops(33) >= e.flops(33), "{geo}: zero-fill charge");
+        }
+    }
+
+    #[test]
+    fn prop_catalog_geometries_match_the_csr_oracle_bit_identically() {
+        let g = SparseGen { max_m: 70, max_k: 90, max_density: 0.2 };
+        check("catalog geometries bit-identical", 12, &g, |case| {
+            let coo = crate::formats::Coo::from_triplets(case.m, case.k, &case.triplets);
+            let b = Dense::random(case.k, 9, &mut Rng::new(case.m as u64 * 7 + 3));
+            let want = Algo::Csr.prepare(&coo).spmm(&b);
+            let base = HrpbEngine::prepare(&coo).spmm(&b);
+            base.rel_fro_error(&want) < 1e-5
+                && BrickGeometry::CATALOG.iter().all(|&geo| {
+                    let e = HrpbEngine::prepare_with_geometry(&coo, geo);
+                    let mut dirty =
+                        Dense::from_vec(case.m, 9, vec![f32::NAN; case.m * 9]);
+                    e.spmm_into(&b, &mut dirty);
+                    e.spmm(&b).max_abs_diff(&base) == 0.0
+                        && dirty.max_abs_diff(&base) == 0.0
+                })
+        });
+    }
+
+    /// Split (atomic) schedules stay correct for every geometry — the
+    /// partial-tile merge epilogue is geometry-agnostic.
+    #[test]
+    fn split_schedules_match_unsplit_for_every_geometry() {
+        let mut rng = Rng::new(201);
+        let mut t = Vec::new();
+        for c in 0..220usize {
+            t.push((c % 16, c * 2, rng.nz_value()));
+        }
+        for r in 16..128 {
+            t.push((r, (r * 7) % 440, rng.nz_value()));
+        }
+        let coo = crate::formats::Coo::from_triplets(128, 440, &t);
+        let csr = crate::formats::Csr::from_coo(&coo);
+        let b = Dense::random(440, 24, &mut rng);
+        let want = coo.to_dense().matmul(&b);
+        for geo in BrickGeometry::CATALOG {
+            use crate::params::{TK, TM};
+            let h = crate::hrpb::build_with_geometry(&csr, geo, TM, TK);
+            let split = HrpbEngine::with_schedule(h.clone(), loadbalance::schedule_avg_split(&h));
+            assert!(split.schedule().atomic_units > 0, "{geo}: test needs real splitting");
+            let none = HrpbEngine::with_schedule(h.clone(), loadbalance::schedule_none(&h));
+            assert!(split.spmm(&b).rel_fro_error(&want) < 1e-5, "{geo}: split vs oracle");
+            assert!(none.spmm(&b).rel_fro_error(&want) < 1e-5, "{geo}: unsplit vs oracle");
+        }
     }
 
     /// The pool-reuse property: many threads issuing many calls against

@@ -7,7 +7,7 @@
 //! whether cuTeSpMM beats the best scalar-core SpMM.
 
 use crate::hrpb::HrpbStats;
-use crate::params::{BRICK_K, BRICK_M, TN};
+use crate::params::{BrickGeometry, TN};
 
 /// The paper's Table 1 synergy classes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -90,6 +90,23 @@ pub fn model(stats: &HrpbStats, n: usize) -> OiModel {
 
 /// Build the model with an explicit TN (the §4 TN sweep / ablation).
 pub fn model_with(stats: &HrpbStats, n: usize, tn: usize) -> OiModel {
+    model_with_geometry(stats, n, tn, BrickGeometry::DEFAULT)
+}
+
+/// Build the model for an explicit brick geometry: the per-brick slot count
+/// (Eq. 1's value words) and the brick height (Eq. 2's row amortization)
+/// both follow the geometry, so the same α prices differently under
+/// different brick shapes — exactly what the planner's geometry chooser
+/// compares. The transposed variant swaps which operand streams through
+/// shared memory; on the traffic ledger that swaps nothing (A's masks and
+/// values still stream, B rows are still amortized over `brick_m · β`), so
+/// it shares the formula.
+pub fn model_with_geometry(
+    stats: &HrpbStats,
+    n: usize,
+    tn: usize,
+    geo: BrickGeometry,
+) -> OiModel {
     let nnz = stats.nnz as f64;
     let (alpha, beta) = (stats.alpha, stats.beta.max(1.0));
     let nf = n as f64;
@@ -104,15 +121,16 @@ pub fn model_with(stats: &HrpbStats, n: usize, tn: usize) -> OiModel {
             synergy: Synergy::Low,
         };
     }
-    let brick = (BRICK_M * BRICK_K) as f64;
-    // Eq. 1: per brick, each lane reads the 8-byte mask (2 transactions) plus
-    // the warp collectively reads the ⌈α·64/32⌉ value words; one pass per TN
-    // slice of N.
+    let brick = geo.bits() as f64;
+    // Eq. 1: per brick, each lane reads the 8-byte mask (2 transactions)
+    // plus the warp collectively reads the ⌈α·bits/32⌉ value words; one
+    // pass per TN slice of N.
     let bricks = nnz / (alpha * brick);
     let per_brick = ((alpha * brick) / 32.0).ceil() + 2.0;
     let shmem_trans_a = per_brick * (nf / tn as f64).max(1.0) * bricks;
-    // Eq. 2 with Eq. 5's β reuse: one N-wide row load per brick column.
-    let shmem_trans_b = nf * nnz / (32.0 * alpha * BRICK_M as f64 * beta);
+    // Eq. 2 with Eq. 5's β reuse: one N-wide row load per brick column,
+    // amortized over the brick_m rows it feeds.
+    let shmem_trans_b = nf * nnz / (32.0 * alpha * geo.brick_m as f64 * beta);
     let flops = 2.0 * nnz * nf;
     OiModel {
         alpha,
@@ -248,6 +266,37 @@ mod tests {
         let m = model_with(&s, 512, 32);
         let ratio = m.shmem_trans_a / m.shmem_trans_b;
         assert!(ratio > 0.5 && ratio < 4.0, "A/B traffic ratio {ratio}");
+    }
+
+    #[test]
+    fn geometry_parameterization_prices_the_brick_shape() {
+        let mut rng = Rng::new(32);
+        let coo = Coo::random(128, 128, 0.08, &mut rng);
+        let s = stats::compute(&build_from_coo(&coo));
+        // default geometry reproduces the unparameterized model exactly
+        let base = model_with(&s, 128, TN);
+        let geo = model_with_geometry(&s, 128, TN, BrickGeometry::DEFAULT);
+        assert_eq!(base.oi_shmem, geo.oi_shmem);
+        assert_eq!(base.shmem_trans_a, geo.shmem_trans_a);
+        // shorter bricks (8x8, same 64 slots) halve the B-row amortization
+        // height: B traffic doubles, OI drops at identical stats
+        let short = model_with_geometry(
+            &s,
+            128,
+            TN,
+            BrickGeometry { brick_m: 8, brick_k: 8, transposed_b: false },
+        );
+        assert!(short.shmem_trans_b > base.shmem_trans_b);
+        assert!(short.oi_shmem < base.oi_shmem);
+        // the 8-slot transposed brick pays more mask overhead per value:
+        // A traffic rises
+        let thin = model_with_geometry(
+            &s,
+            128,
+            TN,
+            BrickGeometry { brick_m: 8, brick_k: 1, transposed_b: true },
+        );
+        assert!(thin.shmem_trans_a > base.shmem_trans_a);
     }
 
     #[test]

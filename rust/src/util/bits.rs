@@ -1,15 +1,19 @@
 //! Brick-pattern bit manipulation — the scalar-core half of the paper's
 //! Algorithm 1 (lines 33-39): each thread finds its nonzero via a prefix
-//! popcount over the brick's 64-bit pattern.
+//! popcount over the brick's pattern word.
+//!
+//! Every layout-dependent helper takes the [`BrickGeometry`] whose pattern
+//! it manipulates; a brick's pattern occupies the low `geo.bits()` bits of
+//! one `u64` word (row-major, the paper's Fig. 3(b) encoding generalized
+//! over the catalog).
 
-use crate::params::{BRICK_K, BRICK_M};
+use crate::params::BrickGeometry;
 
-/// Bit index of element `(row, col)` inside a brick pattern (row-major, the
-/// paper's Fig. 3(b) encoding).
+/// Bit index of element `(row, col)` inside a brick pattern (row-major).
 #[inline]
-pub fn brick_bit(row: usize, col: usize) -> u32 {
-    debug_assert!(row < BRICK_M && col < BRICK_K);
-    (row * BRICK_K + col) as u32
+pub fn brick_bit(geo: BrickGeometry, row: usize, col: usize) -> u32 {
+    debug_assert!(row < geo.brick_m && col < geo.brick_k);
+    (row * geo.brick_k + col) as u32
 }
 
 /// Number of nonzeros encoded by a pattern.
@@ -29,18 +33,21 @@ pub fn prefix_count(pattern: u64, bit: u32) -> usize {
 
 /// Is element `(row, col)` present?
 #[inline]
-pub fn pattern_has(pattern: u64, row: usize, col: usize) -> bool {
-    pattern >> brick_bit(row, col) & 1 == 1
+pub fn pattern_has(geo: BrickGeometry, pattern: u64, row: usize, col: usize) -> bool {
+    pattern >> brick_bit(geo, row, col) & 1 == 1
 }
 
 /// Set element `(row, col)`.
 #[inline]
-pub fn pattern_set(pattern: u64, row: usize, col: usize) -> u64 {
-    pattern | 1u64 << brick_bit(row, col)
+pub fn pattern_set(geo: BrickGeometry, pattern: u64, row: usize, col: usize) -> u64 {
+    pattern | 1u64 << brick_bit(geo, row, col)
 }
 
 /// Iterate `(row, col, value_index)` of every nonzero in pattern order.
-pub fn pattern_iter(pattern: u64) -> impl Iterator<Item = (usize, usize, usize)> {
+pub fn pattern_iter(
+    geo: BrickGeometry,
+    pattern: u64,
+) -> impl Iterator<Item = (usize, usize, usize)> {
     let mut bits = pattern;
     let mut idx = 0usize;
     std::iter::from_fn(move || {
@@ -49,7 +56,7 @@ pub fn pattern_iter(pattern: u64) -> impl Iterator<Item = (usize, usize, usize)>
         }
         let bit = bits.trailing_zeros() as usize;
         bits &= bits - 1;
-        let out = (bit / BRICK_K, bit % BRICK_K, idx);
+        let out = (bit / geo.brick_k, bit % geo.brick_k, idx);
         idx += 1;
         Some(out)
     })
@@ -71,12 +78,29 @@ pub fn round_up(a: usize, b: usize) -> usize {
 mod tests {
     use super::*;
 
+    const G: BrickGeometry = BrickGeometry::DEFAULT;
+
     #[test]
     fn bit_layout_is_row_major() {
-        assert_eq!(brick_bit(0, 0), 0);
-        assert_eq!(brick_bit(0, 3), 3);
-        assert_eq!(brick_bit(1, 0), 4);
-        assert_eq!(brick_bit(15, 3), 63);
+        assert_eq!(brick_bit(G, 0, 0), 0);
+        assert_eq!(brick_bit(G, 0, 3), 3);
+        assert_eq!(brick_bit(G, 1, 0), 4);
+        assert_eq!(brick_bit(G, 15, 3), 63);
+    }
+
+    #[test]
+    fn bit_layout_follows_the_geometry() {
+        for geo in BrickGeometry::CATALOG {
+            assert_eq!(brick_bit(geo, 0, 0), 0);
+            assert_eq!(
+                brick_bit(geo, geo.brick_m - 1, geo.brick_k - 1) as usize,
+                geo.bits() - 1,
+                "{geo}: last element lands on the last pattern bit"
+            );
+            if geo.brick_m > 1 {
+                assert_eq!(brick_bit(geo, 1, 0) as usize, geo.brick_k);
+            }
+        }
     }
 
     #[test]
@@ -91,29 +115,50 @@ mod tests {
     #[test]
     fn set_then_has() {
         let mut p = 0u64;
-        p = pattern_set(p, 3, 2);
-        p = pattern_set(p, 15, 3);
-        assert!(pattern_has(p, 3, 2));
-        assert!(pattern_has(p, 15, 3));
-        assert!(!pattern_has(p, 0, 0));
+        p = pattern_set(G, p, 3, 2);
+        p = pattern_set(G, p, 15, 3);
+        assert!(pattern_has(G, p, 3, 2));
+        assert!(pattern_has(G, p, 15, 3));
+        assert!(!pattern_has(G, p, 0, 0));
         assert_eq!(pattern_nnz(p), 2);
     }
 
     #[test]
     fn iter_yields_in_pattern_order_with_indices() {
         let mut p = 0u64;
-        p = pattern_set(p, 0, 1); // bit 1
-        p = pattern_set(p, 2, 0); // bit 8
-        p = pattern_set(p, 2, 3); // bit 11
-        let got: Vec<_> = pattern_iter(p).collect();
+        p = pattern_set(G, p, 0, 1); // bit 1
+        p = pattern_set(G, p, 2, 0); // bit 8
+        p = pattern_set(G, p, 2, 3); // bit 11
+        let got: Vec<_> = pattern_iter(G, p).collect();
         assert_eq!(got, vec![(0, 1, 0), (2, 0, 1), (2, 3, 2)]);
     }
 
     #[test]
     fn iter_full_pattern() {
-        let got: Vec<_> = pattern_iter(u64::MAX).collect();
+        let got: Vec<_> = pattern_iter(G, u64::MAX).collect();
         assert_eq!(got.len(), 64);
         assert_eq!(got[63], (15, 3, 63));
+    }
+
+    #[test]
+    fn set_iter_roundtrips_across_the_catalog() {
+        for geo in BrickGeometry::CATALOG {
+            let mut p = 0u64;
+            let mut want = Vec::new();
+            // a deterministic scatter of elements valid for this geometry
+            for i in 0..geo.bits() {
+                if i % 3 == 0 {
+                    let (r, c) = (i / geo.brick_k, i % geo.brick_k);
+                    p = pattern_set(geo, p, r, c);
+                    want.push((r, c));
+                }
+            }
+            let got: Vec<_> = pattern_iter(geo, p).map(|(r, c, _)| (r, c)).collect();
+            assert_eq!(got, want, "{geo}");
+            for &(r, c) in &want {
+                assert!(pattern_has(geo, p, r, c), "{geo} ({r},{c})");
+            }
+        }
     }
 
     #[test]
