@@ -8,7 +8,7 @@
 //! out-of-band table), per-cell timings, and the suite's
 //! [`crate::coordinator::metrics::MetricsSnapshot`] JSON.
 //!
-//! Pre-harness `BENCH_PR4/5/6/8.json` records load through
+//! Pre-harness `BENCH_PR4/5/6/8/9.json` records load through
 //! [`suite_from_legacy`], so `experiment diff` can baseline against
 //! history written before the observatory existed.
 
@@ -309,9 +309,9 @@ pub fn parse_results(text: &str) -> Result<ResultsFile, String> {
 
 /// Forward-compat loader for the pre-harness perf-trajectory records:
 /// `BENCH_PR4.json` (exec), `BENCH_PR5.json` (reorder), `BENCH_PR6.json`
-/// (trace overhead), `BENCH_PR8.json` (geometry). Maps each onto the same
-/// suite/headline/cell shapes the harness emits, so old records diff
-/// against new runs.
+/// (trace overhead), `BENCH_PR8.json` (geometry), `BENCH_PR9.json`
+/// (chaos). Maps each onto the same suite/headline/cell shapes the
+/// harness emits, so old records diff against new runs.
 pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
     let bench = doc.get("bench")?.as_str()?;
     let cases = doc.get("cases").and_then(|c| c.as_arr()).unwrap_or(&[]);
@@ -418,6 +418,39 @@ pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
                     key: s(c, "mode"),
                     time_s: f(c, "wall_s"),
                     value: f(c, "req_per_s"),
+                })
+                .collect(),
+            metrics: Json::Null,
+        }),
+        "chaos" => Some(SuiteResult {
+            suite: "chaos".to_string(),
+            title: "fault injection".to_string(),
+            wall_s: 0.0,
+            spec: Json::Null,
+            headlines: vec![
+                Headline {
+                    key: "recovery_gap_pct".to_string(),
+                    value: f(doc, "recovery_gap_pct"),
+                    unit: "%".to_string(),
+                    direction: Direction::LowerIsBetter,
+                    slip: Slip::AbsolutePoints(5.0),
+                    floor: doc.get("acceptance_recovery_gap_pct").and_then(|v| v.as_f64()),
+                },
+                Headline {
+                    key: "lost_responses".to_string(),
+                    value: f(doc, "lost_responses"),
+                    unit: String::new(),
+                    direction: Direction::LowerIsBetter,
+                    slip: Slip::AbsolutePoints(0.5),
+                    floor: Some(0.5),
+                },
+            ],
+            cells: cases
+                .iter()
+                .map(|c| CellResult {
+                    key: s(c, "mode"),
+                    time_s: f(c, "wall_s"),
+                    value: f(c, "recovered_rps"),
                 })
                 .collect(),
             metrics: Json::Null,
@@ -588,6 +621,30 @@ mod tests {
         assert_eq!(suite.headlines[1].floor, Some(5.0));
         assert_eq!(suite.cells[1].key, "full");
         assert_eq!(suite.cells[1].value, 369.0);
+    }
+
+    #[test]
+    fn legacy_bench_pr9_loads_as_a_chaos_suite() {
+        let text = r#"{"bench": "chaos", "pr": 9,
+            "recovery_gap_pct": 3.2, "acceptance_recovery_gap_pct": 10.0,
+            "lost_responses": 0, "isolation_violations": 0,
+            "cases": [{"mode": "baseline", "wall_s": 0.4, "recovered_rps": 512.0},
+                      {"mode": "kernel_panic", "wall_s": 0.45, "recovered_rps": 495.0}]}"#;
+        let run = parse_results(text).expect("legacy PR9 record must load");
+        assert_eq!(run.run_id, "legacy-chaos");
+        let suite = run.suite("chaos").unwrap();
+        assert_eq!(suite.headlines.len(), 2);
+        assert_eq!(suite.headlines[0].key, "recovery_gap_pct");
+        assert_eq!(suite.headlines[0].value, 3.2);
+        assert_eq!(suite.headlines[0].floor, Some(10.0));
+        assert_eq!(suite.headlines[0].direction, Direction::LowerIsBetter);
+        assert_eq!(suite.headlines[0].slip, Slip::AbsolutePoints(5.0));
+        assert_eq!(suite.headlines[1].key, "lost_responses");
+        assert_eq!(suite.headlines[1].value, 0.0);
+        assert_eq!(suite.headlines[1].floor, Some(0.5));
+        assert_eq!(suite.cells[1].key, "kernel_panic");
+        assert_eq!(suite.cells[1].time_s, 0.45);
+        assert_eq!(suite.cells[1].value, 495.0);
     }
 
     #[test]

@@ -52,7 +52,7 @@ impl SuiteSpec {
 }
 
 /// Every suite the harness can run, in `experiment all` execution order.
-pub static SUITES: [SuiteSpec; 7] = [
+pub static SUITES: [SuiteSpec; 8] = [
     SuiteSpec {
         name: "exec",
         title: "zero-allocation blocked runtime vs spawn-per-call",
@@ -97,6 +97,22 @@ pub static SUITES: [SuiteSpec; 7] = [
         widths: &[16],
         reps_full: 768,
         reps_quick: 192,
+    },
+    SuiteSpec {
+        name: "chaos",
+        title: "fault injection: containment, breakers, quarantine, recovery",
+        engines: &[
+            "baseline",
+            "kernel_panic",
+            "fallback_panic",
+            "artifact_io",
+            "checksum_flip",
+            "slow_exec",
+        ],
+        families: &["chaos-banded"],
+        widths: &[16],
+        reps_full: 384,
+        reps_quick: 160,
     },
     SuiteSpec {
         name: "prep",

@@ -41,6 +41,7 @@ pub fn run_suite(name: &str, quick: bool, records: Option<&[Record]>) -> Result<
         "geometry" => Ok(run_geometry(spec, quick)),
         "qos" => Ok(run_qos(spec, quick)),
         "trace" => Ok(run_trace(spec, quick)),
+        "chaos" => Ok(run_chaos(spec, quick)),
         "prep" => Ok(run_prep(spec, quick)),
         "auto" => {
             let records = records.ok_or("the auto suite needs corpus records")?;
@@ -312,6 +313,56 @@ fn run_trace(spec: &SuiteSpec, quick: bool) -> SuiteRun {
             key: o.mode.to_string(),
             time_s: o.wall_s,
             value: o.req_per_s,
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, false),
+        report,
+    }
+}
+
+fn run_chaos(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let outcomes = experiments::chaos_outcomes(quick);
+    let report = experiments::chaos_report(&outcomes);
+    // Same formulas as chaos_report: the kernel-panic mode's post-fault
+    // clean-matrix throughput gap vs the baseline mode, and the total
+    // no-lost-response count across every mode.
+    let baseline_rps = outcomes
+        .iter()
+        .find(|o| o.mode == "baseline")
+        .map(|o| o.recovered_rps)
+        .unwrap_or(f64::NAN);
+    let recovery_gap_pct = outcomes
+        .iter()
+        .find(|o| o.mode == "kernel_panic")
+        .map(|o| 100.0 * (baseline_rps - o.recovered_rps) / baseline_rps.max(1e-9))
+        .unwrap_or(f64::NAN);
+    let lost: u64 = outcomes.iter().map(|o| o.lost as u64).sum();
+    let headlines = vec![
+        Headline {
+            key: "recovery_gap_pct".to_string(),
+            value: recovery_gap_pct,
+            unit: "%".to_string(),
+            direction: Direction::LowerIsBetter,
+            slip: Slip::AbsolutePoints(5.0),
+            floor: Some(10.0),
+        },
+        Headline {
+            key: "lost_responses".to_string(),
+            value: lost as f64,
+            unit: "".to_string(),
+            direction: Direction::LowerIsBetter,
+            slip: Slip::AbsolutePoints(0.5),
+            floor: Some(0.5),
+        },
+    ];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: o.mode.to_string(),
+            time_s: o.wall_s,
+            value: o.recovered_rps,
         })
         .collect();
     SuiteRun {

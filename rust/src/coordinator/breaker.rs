@@ -1,0 +1,313 @@
+//! Per-matrix circuit breaker — contain faults, degrade, probe, recover.
+//!
+//! The breaker sits between the batcher and the engines: every batch asks
+//! it for a route before dispatch and reports the outcome after. The
+//! state machine is the classic three-state breaker plus a terminal
+//! quarantine for matrices that fault even on the scalar fallback:
+//!
+//! ```text
+//!             K consecutive faults                probe succeeds
+//!   Closed ─────────────────────────▶ Open ──▶ HalfOpen ──▶ Closed
+//!     ▲                                ▲           │
+//!     └── any primary success          └───────────┘ probe faults
+//!         resets the count
+//!   Open: requests serve on the CSR fallback; every PROBE_INTERVAL-th
+//!         batch is routed back to the primary engine as a probe.
+//!   Open + K consecutive fallback faults ──▶ Quarantined (terminal:
+//!         requests get a typed rejection until re-registration).
+//! ```
+//!
+//! All transitions happen under one small mutex per matrix — the lock is
+//! taken twice per *batch*, not per request, so the cost is noise next to
+//! an SpMM dispatch.
+
+use std::sync::Mutex;
+
+/// K — consecutive faults that open the breaker (and, on the fallback
+/// path, quarantine the matrix).
+pub const FAULT_THRESHOLD: u32 = 3;
+
+/// While open, every n-th batch is routed to the primary engine as a
+/// half-open probe.
+pub const PROBE_INTERVAL: u64 = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests serve on the primary (planned) engine.
+    Closed,
+    /// Tripped: requests serve on the scalar CSR fallback.
+    Open,
+    /// A probe is in flight on the primary engine; everything else still
+    /// serves on the fallback.
+    HalfOpen,
+    /// Faulted even on the fallback — terminal until re-registration.
+    Quarantined,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// Where the breaker routed a batch. The worker passes the same value
+/// back into [`Breaker::record_success`] / [`Breaker::record_fault`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Serve on the planned engine (breaker closed).
+    Primary,
+    /// Serve on the planned engine as a half-open probe.
+    Probe,
+    /// Serve on the scalar CSR fallback (breaker open).
+    Fallback,
+    /// Reject with a typed quarantine error.
+    Reject,
+}
+
+/// Counter snapshot for metrics and reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BreakerCounters {
+    pub opens: u64,
+    pub closes: u64,
+    pub probes: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    /// Consecutive primary-path faults (resets on any primary success).
+    primary_faults: u32,
+    /// Consecutive fallback faults while open (resets on fallback
+    /// success) — K of these quarantine the matrix.
+    fallback_faults: u32,
+    /// Batches routed since the breaker opened — drives probe cadence.
+    since_open: u64,
+    counters: BreakerCounters,
+}
+
+/// One matrix's breaker. Shared behind `Arc` from the registry entry.
+#[derive(Debug)]
+pub struct Breaker {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Breaker {
+    fn default() -> Breaker {
+        Breaker::new()
+    }
+}
+
+impl Breaker {
+    pub fn new() -> Breaker {
+        Breaker {
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                primary_faults: 0,
+                fallback_faults: 0,
+                since_open: 0,
+                counters: BreakerCounters::default(),
+            }),
+        }
+    }
+
+    /// Route the next batch. Open breakers emit a [`Route::Probe`] every
+    /// [`PROBE_INTERVAL`]-th batch and move to half-open until its
+    /// outcome is reported.
+    pub fn route(&self) -> Route {
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        match g.state {
+            BreakerState::Closed => Route::Primary,
+            BreakerState::Quarantined => Route::Reject,
+            BreakerState::HalfOpen => Route::Fallback,
+            BreakerState::Open => {
+                g.since_open += 1;
+                if g.since_open % PROBE_INTERVAL == 0 {
+                    g.state = BreakerState::HalfOpen;
+                    g.counters.probes += 1;
+                    Route::Probe
+                } else {
+                    Route::Fallback
+                }
+            }
+        }
+    }
+
+    /// Report a batch served without fault on `route`.
+    pub fn record_success(&self, route: Route) {
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        match route {
+            Route::Primary => g.primary_faults = 0,
+            Route::Probe => {
+                // the primary engine is healthy again
+                g.state = BreakerState::Closed;
+                g.counters.closes += 1;
+                g.primary_faults = 0;
+                g.fallback_faults = 0;
+                g.since_open = 0;
+            }
+            Route::Fallback => g.fallback_faults = 0,
+            Route::Reject => {}
+        }
+    }
+
+    /// Report a contained fault on `route`. Returns the new state when
+    /// this fault flipped the breaker (opened or quarantined), `None`
+    /// otherwise — the caller mirrors transitions into metrics.
+    pub fn record_fault(&self, route: Route) -> Option<BreakerState> {
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        match route {
+            Route::Primary => {
+                g.primary_faults += 1;
+                if g.state == BreakerState::Closed && g.primary_faults >= FAULT_THRESHOLD {
+                    g.state = BreakerState::Open;
+                    g.counters.opens += 1;
+                    g.since_open = 0;
+                    g.fallback_faults = 0;
+                    return Some(BreakerState::Open);
+                }
+                None
+            }
+            Route::Probe => {
+                // the probe failed: back to open, next probe in a full interval
+                g.state = BreakerState::Open;
+                g.since_open = 0;
+                None
+            }
+            Route::Fallback => {
+                g.fallback_faults += 1;
+                if g.fallback_faults >= FAULT_THRESHOLD {
+                    g.state = BreakerState::Quarantined;
+                    return Some(BreakerState::Quarantined);
+                }
+                None
+            }
+            Route::Reject => None,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).state
+    }
+
+    pub fn counters(&self) -> BreakerCounters {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fault_k_times(b: &Breaker, route: Route) -> Option<BreakerState> {
+        let mut last = None;
+        for _ in 0..FAULT_THRESHOLD {
+            last = b.record_fault(route);
+        }
+        last
+    }
+
+    #[test]
+    fn k_consecutive_faults_open_the_breaker() {
+        let b = Breaker::new();
+        assert_eq!(b.route(), Route::Primary);
+        for i in 0..FAULT_THRESHOLD - 1 {
+            assert_eq!(b.record_fault(Route::Primary), None, "fault {i} must not trip");
+            assert_eq!(b.state(), BreakerState::Closed);
+        }
+        assert_eq!(b.record_fault(Route::Primary), Some(BreakerState::Open));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.counters().opens, 1);
+        assert_eq!(b.route(), Route::Fallback);
+    }
+
+    #[test]
+    fn a_success_resets_the_consecutive_count() {
+        let b = Breaker::new();
+        for _ in 0..FAULT_THRESHOLD - 1 {
+            b.record_fault(Route::Primary);
+        }
+        b.record_success(Route::Primary);
+        for _ in 0..FAULT_THRESHOLD - 1 {
+            assert_eq!(b.record_fault(Route::Primary), None);
+        }
+        assert_eq!(b.state(), BreakerState::Closed, "non-consecutive faults must not trip");
+    }
+
+    #[test]
+    fn probe_cadence_and_a_successful_probe_closes() {
+        let b = Breaker::new();
+        fault_k_times(&b, Route::Primary);
+        let mut probe_at = None;
+        for i in 1..=PROBE_INTERVAL {
+            match b.route() {
+                Route::Fallback => {}
+                Route::Probe => {
+                    probe_at = Some(i);
+                    break;
+                }
+                r => panic!("unexpected route {r:?}"),
+            }
+        }
+        assert_eq!(probe_at, Some(PROBE_INTERVAL), "probe on the interval-th batch");
+        // while the probe is in flight, other batches stay on the fallback
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.route(), Route::Fallback);
+        b.record_success(Route::Probe);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.counters().closes, 1);
+        assert_eq!(b.counters().probes, 1);
+        assert_eq!(b.route(), Route::Primary);
+    }
+
+    #[test]
+    fn a_faulting_probe_reopens_for_a_full_interval() {
+        let b = Breaker::new();
+        fault_k_times(&b, Route::Primary);
+        for _ in 0..PROBE_INTERVAL - 1 {
+            assert_eq!(b.route(), Route::Fallback);
+        }
+        assert_eq!(b.route(), Route::Probe);
+        b.record_fault(Route::Probe);
+        assert_eq!(b.state(), BreakerState::Open);
+        // the next probe is a full interval away again
+        for _ in 0..PROBE_INTERVAL - 1 {
+            assert_eq!(b.route(), Route::Fallback);
+        }
+        assert_eq!(b.route(), Route::Probe);
+    }
+
+    #[test]
+    fn fallback_faults_quarantine_and_rejections_are_sticky() {
+        let b = Breaker::new();
+        fault_k_times(&b, Route::Primary);
+        // fallback successes keep it serving
+        b.record_success(Route::Fallback);
+        for _ in 0..FAULT_THRESHOLD - 1 {
+            assert_eq!(b.record_fault(Route::Fallback), None);
+        }
+        // a success resets the fallback count too
+        b.record_success(Route::Fallback);
+        assert_eq!(fault_k_times(&b, Route::Fallback), Some(BreakerState::Quarantined));
+        assert_eq!(b.state(), BreakerState::Quarantined);
+        for _ in 0..4 {
+            assert_eq!(b.route(), Route::Reject, "quarantine is terminal");
+        }
+        // reporting against a rejected route is a no-op
+        b.record_success(Route::Reject);
+        b.record_fault(Route::Reject);
+        assert_eq!(b.state(), BreakerState::Quarantined);
+    }
+
+    #[test]
+    fn state_names_are_stable() {
+        assert_eq!(BreakerState::Closed.name(), "closed");
+        assert_eq!(BreakerState::Open.name(), "open");
+        assert_eq!(BreakerState::HalfOpen.name(), "half-open");
+        assert_eq!(BreakerState::Quarantined.name(), "quarantined");
+    }
+}

@@ -1,0 +1,148 @@
+//! Typed serving errors — every way a request can fail, as data.
+//!
+//! PR 9 replaces the serving path's `Result<Response, String>` with this
+//! taxonomy so callers can *dispatch* on what went wrong instead of
+//! pattern-matching prose: a shed request should be retried later with
+//! backoff, an engine fault is transient and isolated to one matrix, a
+//! quarantine is sticky until the operator intervenes, and a shutdown
+//! means stop submitting. The `Display` impls keep the exact message
+//! shapes the pre-typed path printed (`"rejected (...)"`,
+//! `"B rows N != matrix cols M"`, `"coordinator stopped"`), so logs and
+//! the CLI read the same while programs finally get structure.
+
+use super::registry::MatrixId;
+use crate::qos::Rejected;
+use std::fmt;
+
+/// Why a serving request failed. Carried on every reply channel in place
+/// of the old stringly-typed error.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// The QoS admission layer shed the request — the typed
+    /// [`Rejected`] says why (full / overload / deadline / shutdown) and
+    /// what the estimated wait was.
+    Shed(Rejected),
+    /// The legacy bounded ingress channel is full (`try_submit`
+    /// backpressure, no QoS layer configured).
+    Busy,
+    /// An engine/kernel panic was contained at the dispatch boundary.
+    /// Only this request's batch failed; the serving loop survived.
+    EngineFault { matrix: String, engine: &'static str, detail: String },
+    /// The matrix faulted even on the scalar CSR fallback and its breaker
+    /// is quarantined — requests are rejected until re-registration.
+    Quarantined { matrix: String },
+    /// The submitted id was never registered.
+    UnknownMatrix(MatrixId),
+    /// The dense operand's shape does not match the registered matrix.
+    ShapeMismatch { got: usize, want: usize },
+    /// The coordinator stopped (shutdown raced the submission, or the
+    /// response channel was dropped).
+    Shutdown,
+    /// API misuse that used to kill the process (e.g. `submit_qos`
+    /// without `Config::qos`).
+    Misconfigured(&'static str),
+}
+
+impl ServeError {
+    /// Stable snake_case discriminant name — what metrics and the CLI's
+    /// per-kind error counts key on.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Shed(_) => "shed",
+            ServeError::Busy => "busy",
+            ServeError::EngineFault { .. } => "engine_fault",
+            ServeError::Quarantined { .. } => "quarantined",
+            ServeError::UnknownMatrix(_) => "unknown_matrix",
+            ServeError::ShapeMismatch { .. } => "shape_mismatch",
+            ServeError::Shutdown => "shutdown",
+            ServeError::Misconfigured(_) => "misconfigured",
+        }
+    }
+
+    /// Is this a contained engine fault? (The chaos suite's isolation
+    /// assertions key on this.)
+    pub fn is_fault(&self) -> bool {
+        matches!(self, ServeError::EngineFault { .. })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // keeps the "rejected (...)" prefix the qos tests and CLI
+            // output have relied on since PR 5
+            ServeError::Shed(r) => write!(f, "{r}"),
+            ServeError::Busy => write!(f, "busy (ingress channel full)"),
+            ServeError::EngineFault { matrix, engine, detail } => {
+                write!(f, "engine fault ({engine}) serving {matrix}: {detail}")
+            }
+            ServeError::Quarantined { matrix } => {
+                write!(f, "matrix {matrix} is quarantined (faulted on the fallback engine)")
+            }
+            ServeError::UnknownMatrix(id) => write!(f, "unknown matrix {id:?}"),
+            ServeError::ShapeMismatch { got, want } => {
+                write!(f, "B rows {got} != matrix cols {want}")
+            }
+            ServeError::Shutdown => write!(f, "coordinator stopped"),
+            ServeError::Misconfigured(msg) => write!(f, "misconfigured: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::{Priority, RejectReason};
+    use std::time::Duration;
+
+    #[test]
+    fn shed_display_keeps_the_rejected_prefix() {
+        let e = ServeError::Shed(Rejected {
+            reason: RejectReason::QueueFull,
+            est_wait: Duration::from_millis(3),
+            priority: Priority::Normal,
+        });
+        let s = e.to_string();
+        assert!(s.starts_with("rejected"), "{s}");
+        assert_eq!(e.kind(), "shed");
+    }
+
+    #[test]
+    fn kinds_are_stable_and_distinct() {
+        let errs = [
+            ServeError::Busy,
+            ServeError::EngineFault {
+                matrix: "m".into(),
+                engine: "cutespmm",
+                detail: "boom".into(),
+            },
+            ServeError::Quarantined { matrix: "m".into() },
+            ServeError::UnknownMatrix(MatrixId(7)),
+            ServeError::ShapeMismatch { got: 3, want: 4 },
+            ServeError::Shutdown,
+            ServeError::Misconfigured("needs qos"),
+        ];
+        let kinds: Vec<&str> = errs.iter().map(|e| e.kind()).collect();
+        let mut dedup = kinds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), kinds.len(), "kinds must be distinct: {kinds:?}");
+        for e in &errs {
+            assert!(!e.to_string().is_empty());
+        }
+        assert!(errs[1].is_fault());
+        assert!(!errs[0].is_fault());
+    }
+
+    #[test]
+    fn legacy_message_shapes_survive_the_typing() {
+        assert_eq!(ServeError::Shutdown.to_string(), "coordinator stopped");
+        assert_eq!(
+            ServeError::ShapeMismatch { got: 8, want: 16 }.to_string(),
+            "B rows 8 != matrix cols 16"
+        );
+        assert!(ServeError::UnknownMatrix(MatrixId(3)).to_string().contains("unknown matrix"));
+    }
+}

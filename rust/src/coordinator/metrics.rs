@@ -304,6 +304,35 @@ pub struct Metrics {
     /// visibility is what makes silent span loss observable.
     pub trace_spans_recorded: AtomicU64,
     pub trace_spans_dropped: AtomicU64,
+    /// Fault-containment counters: engine/kernel panics contained at the
+    /// dispatch boundary ([`crate::coordinator::ServeError::EngineFault`]
+    /// replies), requests served on the CSR fallback while a breaker was
+    /// open, and requests rejected because a matrix is quarantined. All
+    /// zero until something faults.
+    pub engine_faults: AtomicU64,
+    pub fallback_requests: AtomicU64,
+    pub quarantined_rejects: AtomicU64,
+    /// Aggregate breaker transition counters mirrored from the registry
+    /// entries after each non-primary batch (absolute snapshot — the
+    /// per-matrix [`super::breaker::Breaker`]s own the counts).
+    breaker_opens: AtomicU64,
+    breaker_closes: AtomicU64,
+    breaker_probes: AtomicU64,
+    /// Faults fired by the deterministic injection facility
+    /// ([`crate::fault`]), mirrored absolute; nonzero only under a chaos
+    /// session.
+    injected_faults: AtomicU64,
+    /// Non-closed per-matrix breaker states mirrored from the registry;
+    /// empty (and silent in the report) while every breaker is closed.
+    breakers: Mutex<Vec<BreakerEntry>>,
+}
+
+/// One non-closed breaker in a [`MetricsSnapshot`]: which matrix and the
+/// state name from [`crate::coordinator::BreakerState::name`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BreakerEntry {
+    pub matrix: String,
+    pub state: &'static str,
 }
 
 /// Predicted-cost seconds → the µs unit the downstream gauge accumulates.
@@ -416,6 +445,22 @@ impl Metrics {
         self.trace_spans_dropped.store(dropped, Ordering::Relaxed);
     }
 
+    /// Mirror the registry's breaker view: non-closed per-matrix states
+    /// plus the aggregate transition counters (absolute snapshot — the
+    /// breakers own the counts, the report only displays them).
+    pub fn sync_breakers(&self, snap: Vec<BreakerEntry>, totals: super::breaker::BreakerCounters) {
+        self.breaker_opens.store(totals.opens, Ordering::Relaxed);
+        self.breaker_closes.store(totals.closes, Ordering::Relaxed);
+        self.breaker_probes.store(totals.probes, Ordering::Relaxed);
+        *self.breakers.lock().unwrap_or_else(|p| p.into_inner()) = snap;
+    }
+
+    /// Mirror the fault-injection facility's session-lifetime fire count
+    /// ([`crate::fault::fired_total`]).
+    pub fn sync_injected(&self, n: u64) {
+        self.injected_faults.store(n, Ordering::Relaxed);
+    }
+
     /// Requests served by `algo`'s lane (test + report convenience).
     pub fn engine_requests(&self, algo: Algo) -> u64 {
         self.engines[algo.index()].requests.load(Ordering::Relaxed)
@@ -499,6 +544,16 @@ impl Metrics {
             qos_downstream_cost_s: self.qos_downstream_cost_s(),
             trace_spans_recorded: self.trace_spans_recorded.load(Ordering::Relaxed),
             trace_spans_dropped: self.trace_spans_dropped.load(Ordering::Relaxed),
+            faults: FaultsSnapshot {
+                engine_faults: self.engine_faults.load(Ordering::Relaxed),
+                fallback_requests: self.fallback_requests.load(Ordering::Relaxed),
+                quarantined: self.quarantined_rejects.load(Ordering::Relaxed),
+                opens: self.breaker_opens.load(Ordering::Relaxed),
+                closes: self.breaker_closes.load(Ordering::Relaxed),
+                probes: self.breaker_probes.load(Ordering::Relaxed),
+                injected: self.injected_faults.load(Ordering::Relaxed),
+            },
+            breakers: self.breakers.lock().unwrap_or_else(|p| p.into_inner()).clone(),
         }
     }
 
@@ -519,6 +574,34 @@ pub struct QosLaneSnapshot {
     /// scrapers should not need the enum to see a zero.
     pub shed: Vec<(&'static str, u64)>,
     pub queue_wait: HistogramSnapshot,
+}
+
+/// Fault-containment counters in a [`MetricsSnapshot`]: contained panics,
+/// fallback serves, quarantine rejections, breaker transitions, and
+/// injected (chaos) faults.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultsSnapshot {
+    pub engine_faults: u64,
+    pub fallback_requests: u64,
+    pub quarantined: u64,
+    pub opens: u64,
+    pub closes: u64,
+    pub probes: u64,
+    pub injected: u64,
+}
+
+impl FaultsSnapshot {
+    /// Did anything fault-related happen? Gates the report section.
+    pub fn any(&self) -> bool {
+        self.engine_faults
+            + self.fallback_requests
+            + self.quarantined
+            + self.opens
+            + self.closes
+            + self.probes
+            + self.injected
+            > 0
+    }
 }
 
 /// Structured point-in-time export of every serving metric — the
@@ -553,6 +636,12 @@ pub struct MetricsSnapshot {
     /// ring overflow); both zero until a trace session records.
     pub trace_spans_recorded: u64,
     pub trace_spans_dropped: u64,
+    /// Fault-containment counters; all zero (and the report section
+    /// silent) until a fault occurs.
+    pub faults: FaultsSnapshot,
+    /// Non-closed per-matrix breaker states; empty while every breaker is
+    /// closed.
+    pub breakers: Vec<BreakerEntry>,
 }
 
 impl MetricsSnapshot {
@@ -638,6 +727,27 @@ impl MetricsSnapshot {
                     ("spans_recorded", Json::num(self.trace_spans_recorded as f64)),
                     ("spans_dropped", Json::num(self.trace_spans_dropped as f64)),
                 ]),
+            ),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("engine_faults", Json::num(self.faults.engine_faults as f64)),
+                    ("fallback_requests", Json::num(self.faults.fallback_requests as f64)),
+                    ("quarantined", Json::num(self.faults.quarantined as f64)),
+                    ("breaker_opens", Json::num(self.faults.opens as f64)),
+                    ("breaker_closes", Json::num(self.faults.closes as f64)),
+                    ("breaker_probes", Json::num(self.faults.probes as f64)),
+                    ("injected", Json::num(self.faults.injected as f64)),
+                ]),
+            ),
+            (
+                "breakers",
+                Json::arr(self.breakers.iter().map(|b| {
+                    Json::obj(vec![
+                        ("matrix", Json::str(b.matrix.as_str())),
+                        ("state", Json::str(b.state)),
+                    ])
+                })),
             ),
         ])
     }
@@ -726,6 +836,30 @@ impl MetricsSnapshot {
                 " trace=[spans={} dropped={}]",
                 self.trace_spans_recorded, self.trace_spans_dropped
             ));
+        }
+        if self.faults.any() {
+            let fs = &self.faults;
+            out.push_str(&format!(
+                " faults=[engine={} fallback={} quarantined={} opens={} closes={} probes={} \
+                 injected={}]",
+                fs.engine_faults,
+                fs.fallback_requests,
+                fs.quarantined,
+                fs.opens,
+                fs.closes,
+                fs.probes,
+                fs.injected,
+            ));
+        }
+        if !self.breakers.is_empty() {
+            out.push_str(" breakers=[");
+            for (i, b) in self.breakers.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(&format!("{}:{}", b.matrix, b.state));
+            }
+            out.push(']');
         }
         out
     }
@@ -1055,6 +1189,70 @@ mod tests {
         // absolute mirror: a later snapshot replaces, not accumulates
         m.sync_trace(240, 7);
         assert!(m.report().contains("trace=[spans=240 dropped=7]"), "{}", m.report());
+    }
+
+    #[test]
+    fn fault_counters_report_when_active_and_stay_silent_otherwise() {
+        let m = Metrics::default();
+        let r = m.report();
+        assert!(!r.contains("faults=["), "{r}");
+        assert!(!r.contains("breakers=["), "{r}");
+        assert!(!m.snapshot().faults.any());
+
+        m.engine_faults.fetch_add(3, Ordering::Relaxed);
+        m.fallback_requests.fetch_add(5, Ordering::Relaxed);
+        m.quarantined_rejects.fetch_add(1, Ordering::Relaxed);
+        m.sync_breakers(
+            vec![
+                BreakerEntry { matrix: "victim".into(), state: "open" },
+                BreakerEntry { matrix: "cursed".into(), state: "quarantined" },
+            ],
+            super::super::breaker::BreakerCounters { opens: 2, closes: 1, probes: 4 },
+        );
+        m.sync_injected(9);
+
+        let s = m.snapshot();
+        assert_eq!(
+            s.faults,
+            FaultsSnapshot {
+                engine_faults: 3,
+                fallback_requests: 5,
+                quarantined: 1,
+                opens: 2,
+                closes: 1,
+                probes: 4,
+                injected: 9,
+            }
+        );
+        assert_eq!(s.breakers.len(), 2);
+        let r = m.report();
+        assert_eq!(r, s.render());
+        assert!(
+            r.contains(
+                "faults=[engine=3 fallback=5 quarantined=1 opens=2 closes=1 probes=4 injected=9]"
+            ),
+            "{r}"
+        );
+        assert!(r.contains("breakers=[victim:open cursed:quarantined]"), "{r}");
+
+        // the JSON export carries the same counters for scrapers
+        let doc = crate::util::json::parse(&s.to_json().to_string()).unwrap();
+        let faults = doc.get("faults").unwrap();
+        assert_eq!(faults.get("engine_faults").unwrap().as_usize(), Some(3));
+        assert_eq!(faults.get("fallback_requests").unwrap().as_usize(), Some(5));
+        assert_eq!(faults.get("breaker_opens").unwrap().as_usize(), Some(2));
+        assert_eq!(faults.get("injected").unwrap().as_usize(), Some(9));
+        let breakers = doc.get("breakers").unwrap().as_arr().unwrap();
+        assert_eq!(breakers.len(), 2);
+        assert_eq!(breakers[0].get("matrix").unwrap().as_str(), Some("victim"));
+        assert_eq!(breakers[0].get("state").unwrap().as_str(), Some("open"));
+
+        // absolute mirrors: a later sync replaces, not accumulates
+        m.sync_breakers(Vec::new(), super::super::breaker::BreakerCounters::default());
+        m.sync_injected(0);
+        let r = m.report();
+        assert!(!r.contains("breakers=["), "{r}");
+        assert!(r.contains("faults=[engine=3"), "contained-fault counters persist: {r}");
     }
 
     #[test]

@@ -23,15 +23,30 @@
 //! admission layer: a bounded dual-priority queue whose admission rule sheds
 //! load by planner-predicted cost and deadline feasibility, drained into the
 //! batcher in priority order.
+//!
+//! Every reply channel carries a typed [`ServeError`] (PR 9): callers
+//! dispatch on shed vs engine fault vs quarantine vs shutdown instead of
+//! parsing strings. Engine panics are contained at the dispatch boundary
+//! inside [`execute_job`] — a `catch_unwind` converts them into
+//! `ServeError::EngineFault` for that batch only, RAII leases return the
+//! arena buffers on the unwind path, and the per-matrix circuit breaker
+//! ([`breaker`]) degrades the matrix to the scalar CSR fallback (and, if
+//! that faults too, quarantines it) while everything else keeps serving.
 
 pub mod batcher;
+pub mod breaker;
+mod error;
 pub mod metrics;
 pub mod registry;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use breaker::{Breaker, BreakerState};
+pub use error::ServeError;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{Entry, MatrixId, Registry};
 
+use self::breaker::Route;
+use crate::fault;
 use crate::formats::Dense;
 use crate::planner::Planner;
 use crate::qos::{self, AdmissionQueue, Priority, QosConfig, RejectReason, Rejected, Ticket};
@@ -41,6 +56,7 @@ use crate::spmm::{Algo, SpmmEngine};
 use crate::synergy::Synergy;
 use crate::trace::{self, SpanArgs, TraceConfig};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -151,7 +167,7 @@ struct Request {
     /// When the request entered the batcher; set by the router only for
     /// traced requests, backs the `batch` span.
     batched_at: Option<Instant>,
-    reply: Sender<Result<Response, String>>,
+    reply: Sender<Result<Response, ServeError>>,
 }
 
 struct Job {
@@ -342,29 +358,29 @@ impl Coordinator {
     /// legacy channel ingress this blocks only if the bounded queue is full
     /// (backpressure); under QoS a shed request surfaces as a typed error
     /// on the reply channel.
-    pub fn submit(&self, matrix: MatrixId, b: Dense) -> Receiver<Result<Response, String>> {
+    pub fn submit(&self, matrix: MatrixId, b: Dense) -> Receiver<Result<Response, ServeError>> {
         self.submit_with(matrix, b, Priority::Normal, None)
     }
 
     /// Submit with a QoS priority and optional deadline. Without
     /// `Config::qos` the priority and deadline are ignored (legacy channel
-    /// semantics); with it, admission rejections arrive as typed messages
-    /// on the reply channel (see [`Coordinator::submit_qos`] for the
-    /// `Result`-shaped variant).
+    /// semantics); with it, admission rejections arrive as typed
+    /// [`ServeError`]s on the reply channel (see
+    /// [`Coordinator::submit_qos`] for the `Result`-shaped variant).
     pub fn submit_with(
         &self,
         matrix: MatrixId,
         b: Dense,
         priority: Priority,
         deadline: Option<Duration>,
-    ) -> Receiver<Result<Response, String>> {
+    ) -> Receiver<Result<Response, ServeError>> {
         match &self.ingress {
             IngressPath::Channel(_) => self.submit_channel(matrix, b),
             IngressPath::Qos(_) => match self.submit_qos(matrix, b, priority, deadline) {
                 Ok(rx) => rx,
-                Err((rejected, _b)) => {
+                Err((err, _b)) => {
                     let (reply, rx) = channel();
-                    let _ = reply.send(Err(rejected.to_string()));
+                    let _ = reply.send(Err(err));
                     rx
                 }
             },
@@ -372,25 +388,37 @@ impl Coordinator {
     }
 
     /// Typed QoS submit (requires `Config::qos`): the admission layer may
-    /// shed the request immediately — `Err` carries the [`Rejected`]
-    /// verdict (reason + estimated wait) and returns the B operand.
-    /// `deadline` overrides the configured default deadline.
-    ///
-    /// # Panics
-    /// Panics when the coordinator was started without `Config::qos`.
+    /// shed the request immediately — `Err` carries the typed verdict
+    /// ([`ServeError::Shed`] with reason + estimated wait,
+    /// [`ServeError::Quarantined`] for a breaker-quarantined matrix, or
+    /// [`ServeError::Misconfigured`] when QoS is not enabled) and returns
+    /// the B operand. `deadline` overrides the configured default deadline.
     pub fn submit_qos(
         &self,
         matrix: MatrixId,
         b: Dense,
         priority: Priority,
         deadline: Option<Duration>,
-    ) -> Result<Receiver<Result<Response, String>>, (Rejected, Dense)> {
+    ) -> Result<Receiver<Result<Response, ServeError>>, (ServeError, Dense)> {
         let IngressPath::Qos(queue) = &self.ingress else {
-            panic!("submit_qos requires Config::qos (the admission layer is not enabled)");
+            return Err((
+                ServeError::Misconfigured(
+                    "submit_qos requires Config::qos (the admission layer is not enabled)",
+                ),
+                b,
+            ));
         };
         // per-matrix cost lookup: planner-predicted seconds for this request
         let (cost_s, expensive) = match self.registry.get(matrix) {
             Some(entry) => {
+                // quarantined matrices are rejected at admission — no point
+                // queueing work the worker will refuse
+                if entry.breaker.state() == BreakerState::Quarantined {
+                    self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.quarantined_rejects.fetch_add(1, Ordering::Relaxed);
+                    return Err((ServeError::Quarantined { matrix: entry.name.clone() }, b));
+                }
                 (entry.cost_s_per_col * b.cols as f64, entry.synergy == Synergy::Low)
             }
             // unknown matrices carry zero cost; the worker fails them with
@@ -447,12 +475,16 @@ impl Coordinator {
                         SpanArgs::new().with("admitted", 0).with("lane", priority.index() as u64),
                     );
                 }
-                Err((rejected, req.b))
+                Err((ServeError::Shed(rejected), req.b))
             }
         }
     }
 
-    fn submit_channel(&self, matrix: MatrixId, b: Dense) -> Receiver<Result<Response, String>> {
+    fn submit_channel(
+        &self,
+        matrix: MatrixId,
+        b: Dense,
+    ) -> Receiver<Result<Response, ServeError>> {
         let IngressPath::Channel(tx) = &self.ingress else {
             unreachable!("submit_channel is only called on the channel path");
         };
@@ -473,10 +505,19 @@ impl Coordinator {
         };
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        let admitted = tx.send(Ingress::Req(req)).is_ok();
-        if !admitted {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-        }
+        let admitted = match tx.send(Ingress::Req(req)) {
+            Ok(()) => true,
+            // shutdown raced the submission: the router is gone, so answer
+            // the reply channel with the typed error instead of letting the
+            // caller's recv() see a silently dropped sender
+            Err(std::sync::mpsc::SendError(Ingress::Req(r))) => {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = r.reply.send(Err(ServeError::Shutdown));
+                false
+            }
+            Err(_) => unreachable!("send returns the Ingress::Req it was given"),
+        };
         if traced {
             trace::record(
                 trace::Kind::Request,
@@ -489,19 +530,20 @@ impl Coordinator {
         rx
     }
 
-    /// Non-blocking submit: `Err` returns the operand when the ingress
-    /// queue is full (or, under QoS, when admission sheds the request).
+    /// Non-blocking submit: `Err` carries the typed verdict
+    /// ([`ServeError::Busy`] when the legacy ingress channel is full,
+    /// [`ServeError::Shed`] when QoS admission sheds,
+    /// [`ServeError::Shutdown`] when the coordinator stopped) and returns
+    /// the operand.
     pub fn try_submit(
         &self,
         matrix: MatrixId,
         b: Dense,
-    ) -> Result<Receiver<Result<Response, String>>, Dense> {
+    ) -> Result<Receiver<Result<Response, ServeError>>, (ServeError, Dense)> {
         let tx = match &self.ingress {
             IngressPath::Channel(tx) => tx,
             IngressPath::Qos(_) => {
-                return self
-                    .submit_qos(matrix, b, Priority::Normal, None)
-                    .map_err(|(_rejected, b)| b);
+                return self.submit_qos(matrix, b, Priority::Normal, None);
             }
         };
         let (reply, rx) = channel();
@@ -529,9 +571,14 @@ impl Coordinator {
             }
             Err(std::sync::mpsc::TrySendError::Full(Ingress::Req(r))) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(r.b)
+                Err((ServeError::Busy, r.b))
             }
-            Err(_) => panic!("coordinator stopped"),
+            // shutdown raced the submission — a typed error, not a panic
+            Err(std::sync::mpsc::TrySendError::Disconnected(Ingress::Req(r))) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err((ServeError::Shutdown, r.b))
+            }
+            Err(_) => unreachable!("try_send returns the Ingress::Req it was given"),
         };
         if traced {
             trace::record(
@@ -545,11 +592,11 @@ impl Coordinator {
         outcome
     }
 
-    /// Convenience: submit and wait.
-    pub fn call(&self, matrix: MatrixId, b: Dense) -> Result<Response, String> {
-        self.submit(matrix, b)
-            .recv()
-            .map_err(|_| "coordinator dropped request".to_string())?
+    /// Convenience: submit and wait. A dropped reply channel (shutdown
+    /// racing the request) is a typed [`ServeError::Shutdown`], not a
+    /// panic.
+    pub fn call(&self, matrix: MatrixId, b: Dense) -> Result<Response, ServeError> {
+        self.submit(matrix, b).recv().map_err(|_| ServeError::Shutdown)?
     }
 
     /// Graceful shutdown. Legacy ingress: drain in-flight work, join
@@ -656,7 +703,7 @@ fn reject_shutdown(metrics: &Metrics, req: Request) {
         est_wait: Duration::ZERO,
         priority: req.priority,
     };
-    let _ = req.reply.send(Err(rejected.to_string()));
+    let _ = req.reply.send(Err(ServeError::Shed(rejected)));
 }
 
 fn router_loop(
@@ -781,6 +828,93 @@ fn worker_loop(
     }
 }
 
+/// RAII lease on an arena buffer: the buffer returns to the arena on every
+/// exit path out of [`execute_job`] — including the path where a contained
+/// engine panic abandons the batch mid-flight — so a faulting engine can
+/// never leak the fused-B/C buffers out of the steady-state pool.
+struct ArenaLease<'a> {
+    arena: &'a OutputArena,
+    buf: Option<Dense>,
+}
+
+impl<'a> ArenaLease<'a> {
+    fn acquire(arena: &'a OutputArena, rows: usize, cols: usize) -> ArenaLease<'a> {
+        ArenaLease { arena, buf: Some(arena.acquire(rows, cols)) }
+    }
+
+    /// Wrap an externally produced buffer (e.g. the PJRT boundary's owned
+    /// output) so it joins the pool on release like an arena-born one.
+    fn adopt(arena: &'a OutputArena, buf: Dense) -> ArenaLease<'a> {
+        ArenaLease { arena, buf: Some(buf) }
+    }
+
+    fn get(&self) -> &Dense {
+        self.buf.as_ref().expect("lease holds a buffer")
+    }
+
+    fn get_mut(&mut self) -> &mut Dense {
+        self.buf.as_mut().expect("lease holds a buffer")
+    }
+}
+
+impl Drop for ArenaLease<'_> {
+    fn drop(&mut self) {
+        if let Some(b) = self.buf.take() {
+            self.arena.release(b);
+        }
+    }
+}
+
+/// Extract a readable message from a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// One engine dispatch behind the panic-containment boundary: the fault
+/// injection points fire first (so chaos runs exercise the *real*
+/// containment path), then the engine writes into the leased output. A
+/// panic anywhere inside becomes an `Err` with the payload's message —
+/// the worker thread never unwinds.
+fn contained_spmm(
+    key: &str,
+    engine: &dyn SpmmEngine,
+    fused: &Dense,
+    out: &mut Dense,
+) -> Result<(), String> {
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        fault::slow_exec(key);
+        fault::kernel_panic(key);
+        engine.spmm_into(fused, out);
+    }));
+    r.map_err(panic_message)
+}
+
+/// Mirror per-matrix breaker states, the aggregate breaker counters, and
+/// the fault-injection fired total into the metrics registry (the
+/// `faults=[...]` / `breakers=[...]` report sections).
+fn mirror_breakers(registry: &Registry, metrics: &Metrics) {
+    let mut snap = Vec::new();
+    let mut totals = breaker::BreakerCounters::default();
+    for e in registry.entries() {
+        let c = e.breaker.counters();
+        totals.opens += c.opens;
+        totals.closes += c.closes;
+        totals.probes += c.probes;
+        let state = e.breaker.state();
+        if state != BreakerState::Closed {
+            snap.push(metrics::BreakerEntry { matrix: e.name.clone(), state: state.name() });
+        }
+    }
+    metrics.sync_breakers(snap, totals);
+    metrics.sync_injected(fault::fired_total());
+}
+
 fn execute_job(
     job: Job,
     registry: &Registry,
@@ -796,159 +930,262 @@ fn execute_job(
             metrics.failures.fetch_add(1, Ordering::Relaxed);
             metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
             metrics.sub_qos_downstream(req.cost_s);
-            let _ = req.reply.send(Err(format!("unknown matrix {:?}", job.matrix)));
+            let _ = req.reply.send(Err(ServeError::UnknownMatrix(job.matrix)));
         }
         return;
     };
+
+    // quarantined matrices are rejected as a batch before any work (a
+    // plain state read — routing side effects stay per-executed-batch)
+    if entry.breaker.state() == BreakerState::Quarantined {
+        for req in job.reqs {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            metrics.quarantined_rejects.fetch_add(1, Ordering::Relaxed);
+            metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            metrics.sub_qos_downstream(req.cost_s);
+            let _ =
+                req.reply.send(Err(ServeError::Quarantined { matrix: entry.name.clone() }));
+        }
+        mirror_breakers(registry, metrics);
+        return;
+    }
 
     // shape check before fusing
     let bad: Vec<bool> = job.reqs.iter().map(|r| r.b.rows != entry.cols).collect();
     let good_cols: usize =
         job.reqs.iter().zip(&bad).filter(|(_, &b)| !b).map(|(r, _)| r.b.cols).sum();
 
+    // breaker routing: consulted once per batch that actually executes
+    // (all-bad-shape batches must not consume a half-open probe slot)
+    let route = if good_cols > 0 { entry.breaker.route() } else { Route::Primary };
+
     // fuse B operands column-wise into an arena buffer (steady state: a
     // reused allocation, zeroed in place)
-    let mut fused = arena.acquire(entry.cols, good_cols.max(1));
-    let mut col = 0usize;
-    for (req, &is_bad) in job.reqs.iter().zip(&bad) {
-        if is_bad {
-            continue;
+    let mut fused = ArenaLease::acquire(arena, entry.cols, good_cols.max(1));
+    {
+        let f = fused.get_mut();
+        let mut col = 0usize;
+        for (req, &is_bad) in job.reqs.iter().zip(&bad) {
+            if is_bad {
+                continue;
+            }
+            for r in 0..entry.cols {
+                f.data[r * f.cols + col..r * f.cols + col + req.b.cols]
+                    .copy_from_slice(&req.b.row(r)[..req.b.cols]);
+            }
+            col += req.b.cols;
         }
-        for r in 0..entry.cols {
-            fused.data[r * fused.cols + col..r * fused.cols + col + req.b.cols]
-                .copy_from_slice(&req.b.row(r)[..req.b.cols]);
-        }
-        col += req.b.cols;
     }
 
+    // the planner's corrected estimate for this batch — only a planned
+    // engine on its planned route carries one (the CSR fallback is priced
+    // by observation, not by the faulted plan)
+    let predicted_s = match (engine, route) {
+        (EnginePolicy::Auto, Route::Primary | Route::Probe) => entry
+            .plan
+            .as_ref()
+            .map(|p| p.predicted_s_per_col * good_cols as f64)
+            .unwrap_or(0.0),
+        _ => 0.0,
+    };
+
     // execute (one launch per batch) with `spmm_into` writing into an arena
-    // buffer — the native paths allocate nothing in steady state; `lane`
-    // tags the routing metrics and `predicted_s` is the planner's corrected
-    // estimate for this batch (0.0 when the route is unplanned).
+    // lease — the native paths allocate nothing in steady state; `lane`
+    // tags the routing metrics. Engine panics are contained inside
+    // `contained_spmm`: an `Err` fails only this batch, typed.
     let t0 = Instant::now();
-    let (c, engine_name, lane, predicted_s): (Dense, &'static str, Option<usize>, f64) =
-        if good_cols == 0 {
-            (Dense::zeros(entry.rows, 0), "none", None, 0.0)
-        } else {
-            // fixed policies only see unplanned entries, which always carry
-            // the HRPB engine (see `Entry::engine`)
-            let native =
-                || entry.engine.as_ref().expect("fixed-policy entry carries the HRPB engine");
-            let native_into = |out: &mut Dense| native().spmm_into(&fused, out);
-            match engine {
-                EnginePolicy::PreferPjrt => {
-                    // the fused operand is cloned for the PJRT boundary only
-                    // when a handle actually exists; the handle-less
-                    // fallback goes straight to native with no copy
-                    let via_pjrt = match pjrt {
-                        Some(h) => h.spmm(entry.hrpb.clone(), fused.clone()).ok(),
-                        None => None,
-                    };
-                    match via_pjrt {
-                        Some(c) => (c, "pjrt", Some(PJRT_LANE), 0.0),
-                        None => {
-                            let mut c = arena.acquire(entry.rows, good_cols);
-                            native_into(&mut c);
-                            (c, "cutespmm-native", Some(Algo::Hrpb.index()), 0.0)
+    type ExecOk<'a> = (ArenaLease<'a>, &'static str, Option<usize>);
+    let exec_outcome: Result<ExecOk<'_>, (&'static str, String)> = if good_cols == 0 {
+        Ok((ArenaLease::adopt(arena, Dense::zeros(entry.rows, 0)), "none", None))
+    } else if route == Route::Fallback {
+        // breaker open: serve on the scalar CSR fallback engine
+        let key = format!("{}@{}", entry.fallback.name(), entry.name);
+        let mut c = ArenaLease::acquire(arena, entry.rows, good_cols);
+        let r = contained_spmm(&key, entry.fallback.as_ref(), fused.get(), c.get_mut());
+        match r {
+            Ok(()) => Ok((c, entry.fallback.name(), Some(Algo::Csr.index()))),
+            Err(detail) => Err((entry.fallback.name(), detail)),
+        }
+    } else {
+        // Route::Primary / Route::Probe — the policy's planned engine.
+        // Fixed policies only see unplanned entries, which always carry
+        // the HRPB engine (see `Entry::engine`).
+        match engine {
+            EnginePolicy::PreferPjrt => {
+                // the fused operand is cloned for the PJRT boundary only
+                // when a handle actually exists; the handle-less fallback
+                // goes straight to native with no copy
+                let via_pjrt = match pjrt {
+                    Some(h) => h.spmm(entry.hrpb.clone(), fused.get().clone()).ok(),
+                    None => None,
+                };
+                match via_pjrt {
+                    Some(c) => Ok((ArenaLease::adopt(arena, c), "pjrt", Some(PJRT_LANE))),
+                    None => {
+                        let native = entry
+                            .engine
+                            .as_ref()
+                            .expect("fixed-policy entry carries the HRPB engine");
+                        let key = format!("{}@{}", native.name(), entry.name);
+                        let mut c = ArenaLease::acquire(arena, entry.rows, good_cols);
+                        let r =
+                            contained_spmm(&key, native.as_ref(), fused.get(), c.get_mut());
+                        match r {
+                            Ok(()) => Ok((c, "cutespmm-native", Some(Algo::Hrpb.index()))),
+                            Err(detail) => Err(("cutespmm-native", detail)),
                         }
                     }
                 }
-                EnginePolicy::Native => {
-                    let mut c = arena.acquire(entry.rows, good_cols);
-                    native_into(&mut c);
-                    (c, "cutespmm-native", Some(Algo::Hrpb.index()), 0.0)
-                }
-                EnginePolicy::Auto => {
-                    let predicted = entry
-                        .plan
-                        .as_ref()
-                        .map(|p| p.predicted_s_per_col * good_cols as f64)
-                        .unwrap_or(0.0);
-                    let lane = entry
-                        .plan
-                        .as_ref()
-                        .map(|p| p.engine.index())
-                        .unwrap_or(Algo::Hrpb.index());
-                    let mut c = arena.acquire(entry.rows, good_cols);
-                    entry.exec.spmm_into(&fused, &mut c);
-                    (c, entry.exec.name(), Some(lane), predicted)
+            }
+            EnginePolicy::Native => {
+                let native = entry
+                    .engine
+                    .as_ref()
+                    .expect("fixed-policy entry carries the HRPB engine");
+                let key = format!("{}@{}", native.name(), entry.name);
+                let mut c = ArenaLease::acquire(arena, entry.rows, good_cols);
+                let r = contained_spmm(&key, native.as_ref(), fused.get(), c.get_mut());
+                match r {
+                    Ok(()) => Ok((c, "cutespmm-native", Some(Algo::Hrpb.index()))),
+                    Err(detail) => Err(("cutespmm-native", detail)),
                 }
             }
-        };
+            EnginePolicy::Auto => {
+                let lane =
+                    entry.plan.as_ref().map(|p| p.engine.index()).unwrap_or(Algo::Hrpb.index());
+                let key = format!("{}@{}", entry.exec.name(), entry.name);
+                let mut c = ArenaLease::acquire(arena, entry.rows, good_cols);
+                let r = contained_spmm(&key, entry.exec.as_ref(), fused.get(), c.get_mut());
+                match r {
+                    Ok(()) => Ok((c, entry.exec.name(), Some(lane))),
+                    Err(detail) => Err((entry.exec.name(), detail)),
+                }
+            }
+        }
+    };
     let exec_elapsed = t0.elapsed();
     metrics.exec_latency.record(exec_elapsed);
-    // the exec span shares t0 with `exec_latency` / `record_route`, so the
-    // trace experiment can reconcile summed exec spans against the
-    // engine-lane observed_us counters by construction
-    if job.reqs.iter().any(|r| r.traced) {
-        let token = job.reqs.first().map(|r| r.token).unwrap_or(trace::NO_TOKEN);
-        trace::record(
-            trace::Kind::Request,
-            "exec",
-            t0,
-            token,
-            SpanArgs::engine(engine_name)
-                .with("reqs", batch_size as u64)
-                .with("cols", good_cols as u64),
-        );
-    }
-    if let Some(lane) = lane {
-        let good_reqs = bad.iter().filter(|&&b| !b).count() as u64;
-        metrics.record_route(lane, good_reqs, exec_elapsed, predicted_s);
-        // close the loop: observed batch latency feeds engine demotion
-        if let (Some(planner), Some(plan)) = (planner, entry.plan.as_ref()) {
-            if predicted_s > 0.0 {
-                planner.observe(plan.engine, predicted_s, exec_elapsed.as_secs_f64());
+
+    match exec_outcome {
+        Ok((c, engine_name, lane)) => {
+            if good_cols > 0 {
+                entry.breaker.record_success(route);
+            }
+            // the exec span shares t0 with `exec_latency` / `record_route`,
+            // so the trace experiment can reconcile summed exec spans
+            // against the engine-lane observed_us counters by construction
+            if job.reqs.iter().any(|r| r.traced) {
+                let token = job.reqs.first().map(|r| r.token).unwrap_or(trace::NO_TOKEN);
+                trace::record(
+                    trace::Kind::Request,
+                    "exec",
+                    t0,
+                    token,
+                    SpanArgs::engine(engine_name)
+                        .with("reqs", batch_size as u64)
+                        .with("cols", good_cols as u64),
+                );
+            }
+            if let Some(lane) = lane {
+                let good_reqs = bad.iter().filter(|&&b| !b).count() as u64;
+                metrics.record_route(lane, good_reqs, exec_elapsed, predicted_s);
+                if route == Route::Fallback {
+                    metrics.fallback_requests.fetch_add(good_reqs, Ordering::Relaxed);
+                }
+                // close the loop: observed batch latency feeds engine demotion
+                if let (Some(planner), Some(plan)) = (planner, entry.plan.as_ref()) {
+                    if predicted_s > 0.0 {
+                        planner.observe(plan.engine, predicted_s, exec_elapsed.as_secs_f64());
+                    }
+                }
+            }
+
+            // split C back per request and reply
+            let mut col = 0usize;
+            for (req, is_bad) in job.reqs.into_iter().zip(bad) {
+                metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                metrics.sub_qos_downstream(req.cost_s);
+                if is_bad {
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Err(ServeError::ShapeMismatch {
+                        got: req.b.rows,
+                        want: entry.cols,
+                    }));
+                    continue;
+                }
+                let t_scatter =
+                    if req.traced { Some((Instant::now(), req.b.cols)) } else { None };
+                let mut out = Dense::zeros(entry.rows, req.b.cols);
+                let cv = c.get();
+                for r in 0..entry.rows {
+                    out.row_mut(r).copy_from_slice(&cv.row(r)[col..col + req.b.cols]);
+                }
+                col += req.b.cols;
+                let latency = req.submitted.elapsed();
+                metrics.request_latency.record(latency);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                metrics.add_flops(2.0 * entry.nnz as f64 * req.b.cols as f64);
+                let token = req.token;
+                let _ = req.reply.send(Ok(Response {
+                    c: out,
+                    engine: engine_name,
+                    latency,
+                    batch_size,
+                }));
+                if let Some((t, cols)) = t_scatter {
+                    // split-C copy + reply epilogue per request
+                    trace::record(
+                        trace::Kind::Request,
+                        "scatter",
+                        t,
+                        token,
+                        SpanArgs::new().with("cols", cols as u64),
+                    );
+                }
+            }
+            // per-request outputs are copied out above; the lease drop
+            // returns the C buffer to the arena for the next batch
+            drop(c);
+            if route != Route::Primary {
+                mirror_breakers(registry, metrics);
             }
         }
-    }
-
-    // split C back per request and reply
-    let mut col = 0usize;
-    for (req, is_bad) in job.reqs.into_iter().zip(bad) {
-        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-        metrics.sub_qos_downstream(req.cost_s);
-        if is_bad {
-            metrics.failures.fetch_add(1, Ordering::Relaxed);
-            let _ = req.reply.send(Err(format!(
-                "B rows {} != matrix cols {}",
-                req.b.rows, entry.cols
-            )));
-            continue;
-        }
-        let t_scatter = if req.traced { Some((Instant::now(), req.b.cols)) } else { None };
-        let mut out = Dense::zeros(entry.rows, req.b.cols);
-        for r in 0..entry.rows {
-            out.row_mut(r)
-                .copy_from_slice(&c.row(r)[col..col + req.b.cols]);
-        }
-        col += req.b.cols;
-        let latency = req.submitted.elapsed();
-        metrics.request_latency.record(latency);
-        metrics.responses.fetch_add(1, Ordering::Relaxed);
-        metrics.add_flops(2.0 * entry.nnz as f64 * req.b.cols as f64);
-        let token = req.token;
-        let _ = req.reply.send(Ok(Response {
-            c: out,
-            engine: engine_name,
-            latency,
-            batch_size,
-        }));
-        if let Some((t, cols)) = t_scatter {
-            // split-C copy + reply epilogue per request
-            trace::record(
-                trace::Kind::Request,
-                "scatter",
-                t,
-                token,
-                SpanArgs::new().with("cols", cols as u64),
-            );
+        Err((engine_name, detail)) => {
+            // contained engine fault: only this batch's requests fail, the
+            // worker thread survives, and the breaker/planner learn from it
+            if matches!(route, Route::Primary | Route::Probe) {
+                // re-price through the feedback machinery: a faulting
+                // engine is effectively unusable, so feed the demotion
+                // tracker a massive overshoot against its prediction
+                if let (Some(planner), Some(plan)) = (planner, entry.plan.as_ref()) {
+                    if predicted_s > 0.0 {
+                        planner.observe(plan.engine, predicted_s, predicted_s * 100.0);
+                    }
+                }
+            }
+            entry.breaker.record_fault(route);
+            for (req, is_bad) in job.reqs.into_iter().zip(bad) {
+                metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                metrics.sub_qos_downstream(req.cost_s);
+                metrics.failures.fetch_add(1, Ordering::Relaxed);
+                if is_bad {
+                    let _ = req.reply.send(Err(ServeError::ShapeMismatch {
+                        got: req.b.rows,
+                        want: entry.cols,
+                    }));
+                    continue;
+                }
+                metrics.engine_faults.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Err(ServeError::EngineFault {
+                    matrix: entry.name.clone(),
+                    engine: engine_name,
+                    detail: detail.clone(),
+                }));
+            }
+            mirror_breakers(registry, metrics);
         }
     }
-    // per-request outputs are copied out above; the batch buffers go back
-    // to the arena for the next batch
-    arena.release(fused);
-    arena.release(c);
+    drop(fused);
     metrics.sync_arena(arena.hits(), arena.misses());
     if trace::enabled() {
         let totals = trace::ring_totals();
@@ -1052,8 +1289,9 @@ mod tests {
     fn wrong_shape_is_rejected_not_crashed() {
         let (coord, id, _) = small_coordinator(EnginePolicy::Native);
         let b = Dense::zeros(127, 8); // matrix has 128 cols
-        let err = coord.call(id, b);
-        assert!(err.is_err());
+        let err = coord.call(id, b).unwrap_err();
+        assert!(matches!(err, ServeError::ShapeMismatch { got: 127, want: 128 }), "{err:?}");
+        assert_eq!(err.to_string(), "B rows 127 != matrix cols 128");
         // a good request still works afterwards
         let b = Dense::random(128, 8, &mut Rng::new(403));
         assert!(coord.call(id, b).is_ok());
@@ -1063,8 +1301,8 @@ mod tests {
     #[test]
     fn unknown_matrix_fails_cleanly() {
         let (coord, _, _) = small_coordinator(EnginePolicy::Native);
-        let err = coord.call(MatrixId(999), Dense::zeros(8, 8));
-        assert!(err.is_err());
+        let err = coord.call(MatrixId(999), Dense::zeros(8, 8)).unwrap_err();
+        assert!(matches!(err, ServeError::UnknownMatrix(MatrixId(999))), "{err:?}");
         coord.shutdown();
     }
 
@@ -1224,9 +1462,13 @@ mod tests {
             let b = Dense::random(1024, 8, &mut Rng::new(600 + i));
             match coord.submit_qos(id, b, Priority::Normal, None) {
                 Ok(rx) => accepted.push(rx),
-                Err((rejected, returned_b)) => {
+                Err((err, returned_b)) => {
+                    let ServeError::Shed(rejected) = &err else {
+                        panic!("expected a typed shed, got {err:?}");
+                    };
                     assert_eq!(rejected.reason, RejectReason::QueueFull);
-                    assert!(rejected.to_string().starts_with("rejected"));
+                    assert_eq!(err.kind(), "shed");
+                    assert!(err.to_string().starts_with("rejected"));
                     assert_eq!(returned_b.rows, 1024, "shed returns the operand");
                     shed += 1;
                 }
@@ -1275,7 +1517,8 @@ mod tests {
             match rx.recv().unwrap() {
                 Ok(_) => ok += 1,
                 Err(e) => {
-                    assert!(e.starts_with("rejected"), "{e}");
+                    assert_eq!(e.kind(), "shed");
+                    assert!(e.to_string().starts_with("rejected"), "{e}");
                     rejected += 1;
                 }
             }
@@ -1356,5 +1599,168 @@ mod tests {
             }
         });
         assert_eq!(coord.metrics().responses.load(Ordering::Relaxed), 40);
+    }
+
+    /// Satellite: a shutdown racing a submission surfaces as a typed
+    /// `ServeError::Shutdown` on every submit shape — never a panic.
+    #[test]
+    fn submits_after_shutdown_return_the_typed_error_not_a_panic() {
+        let (mut coord, id, _) = small_coordinator(EnginePolicy::Native);
+        coord.shutdown_inner();
+        let err = coord.call(id, Dense::zeros(128, 4)).unwrap_err();
+        assert!(matches!(err, ServeError::Shutdown), "{err:?}");
+        assert_eq!(err.to_string(), "coordinator stopped");
+        match coord.try_submit(id, Dense::zeros(128, 4)) {
+            Err((ServeError::Shutdown, b)) => assert_eq!(b.rows, 128, "operand comes back"),
+            other => panic!("expected a typed shutdown, got {other:?}"),
+        }
+    }
+
+    /// Satellite: `submit_qos` without `Config::qos` is a typed
+    /// `Misconfigured`, and the coordinator survives the misuse.
+    #[test]
+    fn submit_qos_without_qos_config_is_misconfigured_not_fatal() {
+        let (coord, id, _) = small_coordinator(EnginePolicy::Native);
+        let b = Dense::random(128, 8, &mut Rng::new(900));
+        match coord.submit_qos(id, b, Priority::High, None) {
+            Err((e, returned)) => {
+                assert!(matches!(e, ServeError::Misconfigured(_)), "{e:?}");
+                assert_eq!(e.kind(), "misconfigured");
+                assert_eq!(returned.rows, 128, "the operand comes back");
+            }
+            Ok(_) => panic!("must not admit without Config::qos"),
+        }
+        // ... and the properly configured path still admits (the other
+        // half of "test both paths" rides the qos tests above)
+        let b = Dense::random(128, 8, &mut Rng::new(901));
+        assert!(coord.call(id, b).is_ok(), "the coordinator survives the misuse");
+        coord.shutdown();
+    }
+
+    /// RAII disarm for fault-injection tests: the global plan must clear
+    /// even when an assertion unwinds mid-test.
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            fault::disable();
+        }
+    }
+
+    fn one_req_batches() -> BatchPolicy {
+        BatchPolicy { max_batch_cols: 8, max_batch_reqs: 1, max_delay: Duration::from_millis(0) }
+    }
+
+    /// Acceptance: an injected kernel panic on one matrix fails only that
+    /// matrix's requests with a typed `EngineFault`, flips its breaker to
+    /// the CSR fallback within K faults, and never touches the clean
+    /// matrix or the worker pool.
+    #[test]
+    fn injected_kernel_panics_are_contained_and_flip_the_breaker() {
+        let _s = fault::session_guard();
+        let _d = Disarm;
+        let coord = Coordinator::start(
+            Config {
+                workers: 2,
+                engine: EnginePolicy::Native,
+                batch: one_req_batches(),
+                ..Default::default()
+            },
+            None,
+        );
+        let victim = Coo::random(96, 128, 0.05, &mut Rng::new(430));
+        let clean = Coo::random(96, 128, 0.05, &mut Rng::new(431));
+        let vid = coord.register("victim", &victim);
+        let cid = coord.register("clean", &clean);
+        let clean_dense = clean.to_dense();
+        // engine-qualified target: only the primary engine's dispatches
+        // for the victim fault — the CSR fallback path stays healthy
+        fault::install(&fault::FaultPlan::parse("kernel_panic@cutespmm@victim", 5).unwrap());
+
+        for i in 0..breaker::FAULT_THRESHOLD as u64 {
+            let b = Dense::random(128, 8, &mut Rng::new(910 + i));
+            match coord.call(vid, b) {
+                Err(ServeError::EngineFault { matrix, engine, detail }) => {
+                    assert_eq!(matrix, "victim");
+                    assert_eq!(engine, "cutespmm-native");
+                    assert!(detail.contains("injected kernel fault"), "{detail}");
+                }
+                other => panic!("expected exactly one contained fault, got {other:?}"),
+            }
+            // the clean matrix keeps serving correct results in between
+            let b = Dense::random(128, 8, &mut Rng::new(920 + i));
+            let want = clean_dense.matmul(&b);
+            let resp = coord.call(cid, b).expect("clean matrix must be isolated");
+            assert!(resp.c.rel_fro_error(&want) < 1e-5);
+        }
+        let entry = coord.registry().get(vid).unwrap();
+        assert_eq!(entry.breaker.state(), BreakerState::Open, "K faults must open the breaker");
+
+        // open breaker: the victim reroutes to the CSR fallback and serves
+        // correct results again while the fault is still armed
+        let b = Dense::random(128, 8, &mut Rng::new(930));
+        let want = victim.to_dense().matmul(&b);
+        let resp = coord.call(vid, b).expect("fallback must serve under an open breaker");
+        assert_eq!(resp.engine, "csr");
+        assert!(resp.c.rel_fro_error(&want) < 1e-5);
+
+        fault::disable();
+        let snap = coord.metrics().snapshot();
+        assert!(snap.faults.engine_faults >= breaker::FAULT_THRESHOLD as u64);
+        assert!(snap.faults.opens >= 1, "the open transition lands in metrics");
+        assert!(snap.faults.fallback_requests >= 1);
+        assert!(snap.faults.injected >= breaker::FAULT_THRESHOLD as u64);
+        let report = coord.metrics().report();
+        assert!(report.contains("faults=["), "{report}");
+        assert!(report.contains("breakers=[victim:open"), "{report}");
+        coord.shutdown();
+    }
+
+    /// A matrix that faults even on the CSR fallback is quarantined with a
+    /// typed rejection; the pool survives and other matrices still serve.
+    #[test]
+    fn faults_on_the_fallback_quarantine_the_matrix() {
+        let _s = fault::session_guard();
+        let _d = Disarm;
+        let coord = Coordinator::start(
+            Config {
+                workers: 1,
+                engine: EnginePolicy::Native,
+                batch: one_req_batches(),
+                ..Default::default()
+            },
+            None,
+        );
+        let victim = Coo::random(64, 64, 0.1, &mut Rng::new(440));
+        let clean = Coo::random(64, 64, 0.1, &mut Rng::new(441));
+        let vid = coord.register("victim", &victim);
+        let cid = coord.register("clean", &clean);
+        // matrix-wide target: the panic follows the victim onto the
+        // fallback engine too (key "csr@victim" also matches)
+        fault::install(&fault::FaultPlan::parse("kernel_panic@victim", 6).unwrap());
+
+        // K primary faults open the breaker, then K fallback faults
+        // quarantine — every one of them a typed EngineFault
+        for i in 0..(2 * breaker::FAULT_THRESHOLD) as u64 {
+            let err = coord.call(vid, Dense::random(64, 8, &mut Rng::new(950 + i))).unwrap_err();
+            assert!(err.is_fault(), "fault {i}: {err:?}");
+        }
+        let entry = coord.registry().get(vid).unwrap();
+        assert_eq!(entry.breaker.state(), BreakerState::Quarantined);
+
+        // quarantine is a typed, sticky rejection — no engine dispatch
+        let err = coord.call(vid, Dense::random(64, 8, &mut Rng::new(960))).unwrap_err();
+        assert!(matches!(err, ServeError::Quarantined { .. }), "{err:?}");
+        assert!(err.to_string().contains("quarantined"));
+
+        // the worker survived 2K contained panics; clean traffic still flows
+        fault::disable();
+        let b = Dense::random(64, 8, &mut Rng::new(961));
+        let want = clean.to_dense().matmul(&b);
+        let resp = coord.call(cid, b).expect("pool must survive contained faults");
+        assert!(resp.c.rel_fro_error(&want) < 1e-5);
+        let snap = coord.metrics().snapshot();
+        assert!(snap.faults.quarantined >= 1);
+        assert!(coord.metrics().report().contains("breakers=[victim:quarantined"));
+        coord.shutdown();
     }
 }

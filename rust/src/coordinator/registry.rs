@@ -16,6 +16,7 @@
 //!   start skips the whole HRPB build and planning pass) and persists the
 //!   artifact after a cold build.
 
+use super::breaker::Breaker;
 use crate::formats::Coo;
 use crate::hrpb::{self, ArtifactStore, Hrpb, HrpbStats};
 use crate::planner::{fingerprint, Plan, Planner};
@@ -64,6 +65,14 @@ pub struct Entry {
     /// Engine that executes batches under `EnginePolicy::Auto`: the planned
     /// engine, or the HRPB engine when registration was unplanned.
     pub exec: Arc<dyn SpmmEngine>,
+    /// Scalar CSR engine the circuit breaker degrades to when the primary
+    /// engine faults (reused directly when the plan already routed to CSR
+    /// — re-preparing it would double the memory for nothing).
+    pub fallback: Arc<dyn SpmmEngine>,
+    /// Per-matrix circuit breaker ([`super::breaker`]): K consecutive
+    /// contained faults reroute this matrix to `fallback`; faults on the
+    /// fallback too quarantine it with a typed rejection.
+    pub breaker: Arc<Breaker>,
 }
 
 /// A per-name registration reservation: the winner builds, losers wait on
@@ -343,6 +352,14 @@ impl Registry {
             .is_some()
             .then(|| reorder_gains.or_else(|| plan.as_ref().and_then(|p| p.reorder)))
             .flatten();
+        // the breaker's degraded path: always the scalar CSR engine, built
+        // eagerly (a CSR build is cheap next to HRPB) so a fault can
+        // degrade without a registration-sized pause on the serving path
+        let fallback: Arc<dyn SpmmEngine> = if exec.name() == Algo::Csr.name() {
+            exec.clone()
+        } else {
+            Arc::from(Algo::Csr.prepare(coo))
+        };
         let id = MatrixId(self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
         let entry = Arc::new(Entry {
             id,
@@ -359,6 +376,8 @@ impl Registry {
             plan,
             cost_s_per_col,
             exec,
+            fallback,
+            breaker: Arc::new(Breaker::new()),
         });
         self.entries.write().unwrap().insert(id, entry);
         self.by_name.write().unwrap().insert(name.to_string(), id);
@@ -430,6 +449,34 @@ mod tests {
         assert!(e.plan.is_none());
         assert!(e.engine.is_some());
         assert_eq!(e.exec.name(), "cutespmm");
+    }
+
+    #[test]
+    fn every_entry_carries_a_csr_fallback_and_a_closed_breaker() {
+        use crate::formats::Dense;
+        let reg = Registry::new();
+        let coo = Coo::random(64, 64, 0.1, &mut Rng::new(4));
+        let e = reg.get(reg.register("m", &coo)).unwrap();
+        assert_eq!(e.fallback.name(), "csr");
+        assert_eq!(e.fallback.shape(), (64, 64));
+        assert_eq!(e.breaker.state(), super::super::BreakerState::Closed);
+        // the fallback computes the same product as the primary engine
+        let b = Dense::random(64, 8, &mut Rng::new(5));
+        let want = coo.to_dense().matmul(&b);
+        assert!(e.fallback.spmm(&b).rel_fro_error(&want) < 1e-5);
+
+        // a plan that already routed to CSR reuses the exec engine
+        // instead of preparing a second copy
+        let planner = Planner::new(crate::gpumodel::Machine::a100());
+        let lone: Vec<(usize, usize, f32)> = (0..64).map(|p| (p * 16, p * 16, 1.0)).collect();
+        let low = Coo::from_triplets(1024, 1024, &lone);
+        let e2 = reg.get(reg.register_planned("low", &low, &planner)).unwrap();
+        if e2.exec.name() == "csr" {
+            assert!(
+                Arc::ptr_eq(&e2.exec, &e2.fallback),
+                "CSR-routed entries must share one engine"
+            );
+        }
     }
 
     #[test]

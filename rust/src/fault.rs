@@ -1,0 +1,453 @@
+//! Deterministic fault injection — seeded, named injection points that are
+//! zero-cost when disabled.
+//!
+//! Chaos testing a serving system only works when the faults are
+//! reproducible: a flaky injector makes every red run a debugging session
+//! about the injector. This module follows the [`crate::trace`] gate
+//! discipline — one relaxed atomic load per call site while disabled, a
+//! process-global installed plan while enabled — and derives every firing
+//! decision from a seed and a per-arm hit ordinal, never from a clock or a
+//! global RNG, so the same [`FaultPlan`] against the same workload fires
+//! the same faults in the same places every run.
+//!
+//! Call sites pass a *key* describing where they are (the serving path
+//! uses engine-qualified matrix names, `"<engine>@<matrix>"`; the artifact
+//! store uses the artifact path). An arm's optional target is a substring
+//! match on that key, so a plan can aim at one matrix on one engine
+//! (`kernel_panic@cutespmm@victim`), a matrix on any engine
+//! (`kernel_panic@@victim`), or everything (`kernel_panic`).
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Named injection points the serving path exposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Point {
+    /// Panic inside the engine-dispatch boundary (contained by the
+    /// coordinator's `catch_unwind` into a typed `EngineFault`).
+    KernelPanic,
+    /// Transient IO error on an artifact-store read or write (absorbed by
+    /// the store's bounded retry).
+    ArtifactIo,
+    /// Flip one byte of an artifact's bytes in flight (caught by decode
+    /// validation and invalidated, never served).
+    ChecksumFlip,
+    /// Stall the engine execution for a bounded interval (throughput dip,
+    /// no error).
+    SlowExec,
+}
+
+impl Point {
+    pub const COUNT: usize = 4;
+
+    pub fn index(self) -> usize {
+        match self {
+            Point::KernelPanic => 0,
+            Point::ArtifactIo => 1,
+            Point::ChecksumFlip => 2,
+            Point::SlowExec => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Point::KernelPanic => "kernel_panic",
+            Point::ArtifactIo => "artifact_io",
+            Point::ChecksumFlip => "checksum_flip",
+            Point::SlowExec => "slow_exec",
+        }
+    }
+
+    pub fn all() -> [Point; Point::COUNT] {
+        [Point::KernelPanic, Point::ArtifactIo, Point::ChecksumFlip, Point::SlowExec]
+    }
+
+    pub fn parse(s: &str) -> Option<Point> {
+        Point::all().into_iter().find(|p| p.name() == s)
+    }
+}
+
+/// How an armed injection point decides whether a given hit fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arm {
+    /// Fire on a deterministic `rate` fraction of hits: a seeded hash of
+    /// the hit ordinal, so the pattern is reproducible, not random.
+    Rate(f64),
+    /// Fire on exactly the n-th matching hit (1-based), once.
+    Nth(u64),
+}
+
+/// One armed injection point of a [`FaultPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Injection {
+    pub point: Point,
+    /// Substring the call site's key must contain; `None` matches every
+    /// key at this point.
+    pub target: Option<String>,
+    pub arm: Arm,
+}
+
+/// A parsed, seeded fault plan — inert data until [`install`]ed.
+///
+/// Spec grammar (the `--fault-plan` flag): semicolon-separated arms, each
+/// `point[@target][:rate=R|:nth=N]`. The arm clause defaults to
+/// `rate=1.0` (fire on every matching hit). Parsing is all-or-nothing: a
+/// bad arm rejects the whole spec and nothing is armed.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub injections: Vec<Injection>,
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut injections = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            injections.push(parse_injection(part)?);
+        }
+        if injections.is_empty() {
+            return Err(
+                "empty fault plan: expected point[@target][:rate=R|:nth=N][;...]".to_string()
+            );
+        }
+        Ok(FaultPlan { seed, injections })
+    }
+}
+
+fn parse_injection(part: &str) -> Result<Injection, String> {
+    let (head, arm) = match part.split_once(':') {
+        Some((h, clause)) => (h, parse_arm(part, clause)?),
+        None => (part, Arm::Rate(1.0)),
+    };
+    let (point_s, target) = match head.split_once('@') {
+        Some((p, t)) if !t.is_empty() => (p, Some(t.to_string())),
+        Some(_) => return Err(format!("empty @target in '{part}'")),
+        None => (head, None),
+    };
+    let point = Point::parse(point_s).ok_or_else(|| {
+        let known: Vec<&str> = Point::all().iter().map(|p| p.name()).collect();
+        format!("unknown injection point '{point_s}' in '{part}' (known: {})", known.join(", "))
+    })?;
+    Ok(Injection { point, target, arm })
+}
+
+fn parse_arm(part: &str, clause: &str) -> Result<Arm, String> {
+    let (k, v) = clause
+        .split_once('=')
+        .ok_or_else(|| format!("bad arm clause '{clause}' in '{part}': expected rate=R or nth=N"))?;
+    match k {
+        "rate" => {
+            let r: f64 =
+                v.parse().map_err(|_| format!("bad rate '{v}' in '{part}': not a number"))?;
+            if !(0.0..=1.0).contains(&r) {
+                return Err(format!("rate {r} in '{part}' outside [0, 1]"));
+            }
+            Ok(Arm::Rate(r))
+        }
+        "nth" => {
+            let n: u64 =
+                v.parse().map_err(|_| format!("bad nth '{v}' in '{part}': not an integer"))?;
+            if n == 0 {
+                return Err(format!("nth=0 in '{part}': hit ordinals are 1-based"));
+            }
+            Ok(Arm::Nth(n))
+        }
+        other => Err(format!("unknown arm '{other}' in '{part}' (expected rate or nth)")),
+    }
+}
+
+/// One relaxed load — the entire cost of every injection point while no
+/// plan is installed.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<ArmedPlan>> = Mutex::new(None);
+static FIRED: [AtomicU64; Point::COUNT] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static SESSION: Mutex<()> = Mutex::new(());
+
+struct ArmedState {
+    inj: Injection,
+    hits: u64,
+}
+
+struct ArmedPlan {
+    seed: u64,
+    arms: Vec<ArmedState>,
+}
+
+/// Is any fault plan armed? One relaxed load; every injection helper
+/// checks this before touching the plan lock.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm `plan`. The gate goes down before the plan swap and up after it,
+/// so no call site ever observes a half-installed plan. Fired counters
+/// and per-arm hit ordinals reset.
+pub fn install(plan: &FaultPlan) {
+    ENABLED.store(false, Ordering::SeqCst);
+    {
+        let mut g = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        *g = Some(ArmedPlan {
+            seed: plan.seed,
+            arms: plan
+                .injections
+                .iter()
+                .map(|inj| ArmedState { inj: inj.clone(), hits: 0 })
+                .collect(),
+        });
+    }
+    for c in &FIRED {
+        c.store(0, Ordering::SeqCst);
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm everything (the "fault clears" transition in chaos runs).
+/// Fired counters survive until the next [`install`] so callers can still
+/// read how many faults the cleared plan fired.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+/// Faults fired at `point` since the last [`install`].
+pub fn fired(point: Point) -> u64 {
+    FIRED[point.index()].load(Ordering::Relaxed)
+}
+
+/// Total faults fired since the last [`install`].
+pub fn fired_total() -> u64 {
+    FIRED.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Injection state is process-global: anything that installs a plan
+/// (tests, the chaos driver, the CLI) holds this guard for the session so
+/// concurrent users serialize instead of trampling each other's plans.
+pub fn session_guard() -> MutexGuard<'static, ()> {
+    SESSION.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// splitmix64 finalizer mapping (seed, point, hit ordinal) to [0, 1) —
+/// the same determinism discipline as the trace sampler.
+fn unit_hash(seed: u64, point: Point, hit: u64) -> f64 {
+    let mut z = seed
+        .wrapping_add(hit.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(point.index() as u64);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Should a hit at `point` with this `key` fire? Counts the hit against
+/// every matching arm; any matching arm firing fires the point.
+fn should_fire(point: Point, key: &str) -> bool {
+    if !enabled() {
+        return false;
+    }
+    let mut g = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(plan) = g.as_mut() else { return false };
+    let seed = plan.seed;
+    let mut fire = false;
+    for arm in plan.arms.iter_mut() {
+        if arm.inj.point != point {
+            continue;
+        }
+        if let Some(t) = &arm.inj.target {
+            if !key.contains(t.as_str()) {
+                continue;
+            }
+        }
+        arm.hits += 1;
+        fire |= match arm.inj.arm {
+            Arm::Nth(n) => arm.hits == n,
+            Arm::Rate(r) => unit_hash(seed, point, arm.hits) < r,
+        };
+    }
+    if fire {
+        FIRED[point.index()].fetch_add(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+/// How long [`slow_exec`] stalls when it fires — bounded by construction.
+pub const STALL: Duration = Duration::from_millis(2);
+
+/// Kernel-panic injection point: panics when armed for this key. Sited
+/// inside the coordinator's `catch_unwind` boundary, so firing exercises
+/// the real containment path, not a simulation of it.
+#[inline]
+pub fn kernel_panic(key: &str) {
+    if enabled() && should_fire(Point::KernelPanic, key) {
+        panic!("injected kernel fault at {key}");
+    }
+}
+
+/// Slow-exec stall: sleeps [`STALL`] when armed for this key.
+#[inline]
+pub fn slow_exec(key: &str) {
+    if enabled() && should_fire(Point::SlowExec, key) {
+        std::thread::sleep(STALL);
+    }
+}
+
+/// Artifact-IO injection point: a synthetic transient error when armed,
+/// `None` otherwise. The store's retry loop treats the returned error
+/// exactly like a real one.
+#[inline]
+pub fn artifact_io(key: &str) -> Option<io::Error> {
+    if enabled() && should_fire(Point::ArtifactIo, key) {
+        Some(io::Error::other(format!("injected artifact IO fault at {key}")))
+    } else {
+        None
+    }
+}
+
+/// Checksum-flip injection point: corrupts one byte in flight when armed,
+/// so decode-side validation must catch it.
+#[inline]
+pub fn checksum_flip(key: &str, bytes: &mut [u8]) {
+    if enabled() && should_fire(Point::ChecksumFlip, key) && !bytes.is_empty() {
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RAII: tests that arm the global plan must leave it disarmed even
+    /// when an assertion unwinds mid-test.
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            disable();
+        }
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let p = FaultPlan::parse("kernel_panic", 1).unwrap();
+        assert_eq!(p.injections.len(), 1);
+        assert_eq!(p.injections[0].point, Point::KernelPanic);
+        assert_eq!(p.injections[0].target, None);
+        assert_eq!(p.injections[0].arm, Arm::Rate(1.0));
+
+        let p = FaultPlan::parse("artifact_io@hrpb-:nth=2; slow_exec:rate=0.25", 7).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.injections.len(), 2);
+        assert_eq!(p.injections[0].point, Point::ArtifactIo);
+        assert_eq!(p.injections[0].target.as_deref(), Some("hrpb-"));
+        assert_eq!(p.injections[0].arm, Arm::Nth(2));
+        assert_eq!(p.injections[1].arm, Arm::Rate(0.25));
+
+        // a target may itself contain '@' (engine-qualified keys)
+        let p = FaultPlan::parse("kernel_panic@csr@victim", 1).unwrap();
+        assert_eq!(p.injections[0].target.as_deref(), Some("csr@victim"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs_without_arming_anything() {
+        for bad in [
+            "",
+            " ; ",
+            "mystery_point",
+            "kernel_panic:rate=2.0",
+            "kernel_panic:rate=x",
+            "kernel_panic:nth=0",
+            "kernel_panic:nth=1.5",
+            "kernel_panic:every=3",
+            "kernel_panic:rate",
+            "kernel_panic@",
+        ] {
+            let err = FaultPlan::parse(bad, 1);
+            assert!(err.is_err(), "'{bad}' must be rejected, got {err:?}");
+        }
+        // parsing never touches the global gate — no partial arming
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn disabled_points_are_inert() {
+        let _s = session_guard();
+        disable();
+        assert!(!enabled());
+        kernel_panic("any"); // must not panic
+        slow_exec("any");
+        assert!(artifact_io("any").is_none());
+        let mut bytes = [1u8, 2, 3];
+        checksum_flip("any", &mut bytes);
+        assert_eq!(bytes, [1, 2, 3]);
+    }
+
+    #[test]
+    fn nth_arming_fires_exactly_once_on_the_named_hit() {
+        let _s = session_guard();
+        let _d = Disarm;
+        install(&FaultPlan::parse("artifact_io:nth=3", 9).unwrap());
+        assert!(artifact_io("k").is_none());
+        assert!(artifact_io("k").is_none());
+        assert!(artifact_io("k").is_some(), "third hit fires");
+        assert!(artifact_io("k").is_none(), "nth fires once, not from the nth on");
+        assert_eq!(fired(Point::ArtifactIo), 1);
+        assert_eq!(fired_total(), 1);
+    }
+
+    #[test]
+    fn targets_filter_by_substring_and_rates_are_deterministic() {
+        let _s = session_guard();
+        let _d = Disarm;
+        install(&FaultPlan::parse("checksum_flip@victim:rate=1.0", 3).unwrap());
+        let mut hit = [0u8; 4];
+        let mut missed = [0u8; 4];
+        checksum_flip("hrpb@victim", &mut hit);
+        checksum_flip("hrpb@clean", &mut missed);
+        assert_ne!(hit, [0u8; 4], "targeted key must be corrupted");
+        assert_eq!(missed, [0u8; 4], "untargeted key must pass through");
+
+        // rate=0 never fires; the same seed reproduces the same pattern
+        install(&FaultPlan::parse("artifact_io:rate=0.0", 3).unwrap());
+        for _ in 0..64 {
+            assert!(artifact_io("k").is_none());
+        }
+        let pattern = |seed: u64| -> Vec<bool> {
+            install(&FaultPlan::parse("artifact_io:rate=0.5", seed).unwrap());
+            (0..64).map(|_| artifact_io("k").is_some()).collect()
+        };
+        let a = pattern(11);
+        let b = pattern(11);
+        assert_eq!(a, b, "same seed, same firing pattern");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "rate=0.5 mixes hits and misses");
+    }
+
+    #[test]
+    fn install_resets_fired_counters_and_disable_clears_the_gate() {
+        let _s = session_guard();
+        let _d = Disarm;
+        install(&FaultPlan::parse("artifact_io:nth=1", 1).unwrap());
+        assert!(artifact_io("k").is_some());
+        assert_eq!(fired_total(), 1);
+        disable();
+        assert!(!enabled());
+        // counters survive the clear (chaos reads them post-phase) ...
+        assert_eq!(fired_total(), 1);
+        // ... and reset on the next install
+        install(&FaultPlan::parse("artifact_io:nth=1", 1).unwrap());
+        assert_eq!(fired_total(), 0);
+    }
+
+    #[test]
+    fn point_names_round_trip() {
+        let mut seen = [false; Point::COUNT];
+        for p in Point::all() {
+            seen[p.index()] = true;
+            assert_eq!(Point::parse(p.name()), Some(p));
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(Point::parse("nope"), None);
+    }
+}

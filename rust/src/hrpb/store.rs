@@ -13,12 +13,79 @@
 //! The hit / miss / invalidated counters are mirrored into the coordinator
 //! metrics report (`artifacts=[...]`), so a restarted node's cold-start
 //! behavior is observable.
+//!
+//! Every filesystem touch goes through [`with_retry`]: a transient read or
+//! write error is retried up to [`IO_ATTEMPTS`] times with bounded,
+//! deterministically-jittered backoff, so a flaky disk or NFS blip
+//! warm-starts on the retry instead of silently falling back to a cold
+//! build. `NotFound` is never retried (an absent artifact is an ordinary
+//! miss, not a fault). The retry loop doubles as the chaos harness's
+//! artifact injection point: [`crate::fault::artifact_io`] can substitute
+//! an injected error for the real operation, and
+//! [`crate::fault::checksum_flip`] can corrupt loaded bytes in flight —
+//! both keyed by the artifact path.
 
 use crate::hrpb::serialize::{self, Artifact};
 use crate::hrpb::{Hrpb, HrpbStats};
 use crate::planner::Plan;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Attempts per filesystem operation (1 initial + retries).
+pub const IO_ATTEMPTS: u32 = 3;
+
+/// Backoff before retry r is `IO_BACKOFF_BASE_US << (r-1)` plus a
+/// deterministic sub-base jitter, so total added latency is bounded
+/// (< `(2^retries + 1) * base` µs) and reproducible in tests.
+pub const IO_BACKOFF_BASE_US: u64 = 200;
+
+/// Deterministic backoff with jitter: FNV-1a over the operation key mixed
+/// with the attempt number — no clocks, no global RNG, same delays on
+/// every run.
+fn backoff_us(key: &str, attempt: u32) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h = (h ^ attempt as u64).wrapping_mul(0x100000001b3);
+    (IO_BACKOFF_BASE_US << (attempt - 1)) + h % IO_BACKOFF_BASE_US
+}
+
+/// Run `op`, retrying transient errors with bounded backoff. `NotFound`
+/// returns immediately (a miss is not a fault). The fault-injection check
+/// runs once per attempt *in place of* the operation, so an injected
+/// `nth=1` error consumes attempt 1 and the real operation succeeds on
+/// attempt 2 — exactly the transient-blip shape the retry exists for.
+fn with_retry<T>(
+    what: &str,
+    path: &Path,
+    mut op: impl FnMut() -> std::io::Result<T>,
+) -> std::io::Result<T> {
+    let key = path.display().to_string();
+    let mut attempt = 1;
+    loop {
+        let result = match crate::fault::artifact_io(&key) {
+            Some(injected) => Err(injected),
+            None => op(),
+        };
+        match result {
+            Ok(v) => return Ok(v),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Err(e),
+            Err(e) if attempt < IO_ATTEMPTS => {
+                let sleep_us = backoff_us(&key, attempt);
+                eprintln!(
+                    "warning: artifact {what} {} failed (attempt {attempt}/{IO_ATTEMPTS}), \
+                     retrying in {sleep_us}us: {e}",
+                    path.display()
+                );
+                std::thread::sleep(Duration::from_micros(sleep_us));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
 
 /// Snapshot of the store's counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -78,7 +145,7 @@ impl ArtifactStore {
     /// an ordinary cold start on every restart.
     pub fn load(&self, fingerprint: u64) -> Option<Artifact> {
         let path = self.path_for(fingerprint);
-        let bytes = match std::fs::read(&path) {
+        let mut bytes = match with_retry("read", &path, || std::fs::read(&path)) {
             Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -90,6 +157,7 @@ impl ArtifactStore {
                 return None;
             }
         };
+        crate::fault::checksum_flip(&path.display().to_string(), &mut bytes);
         match serialize::decode(&bytes) {
             Ok(a) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -149,8 +217,9 @@ impl ArtifactStore {
             .dir
             .join(format!(".tmp-{fingerprint:016x}-{}-{seq}", std::process::id()));
         let path = self.path_for(fingerprint);
-        std::fs::write(&tmp, &bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, &path).map_err(|e| {
+        with_retry("write", &tmp, || std::fs::write(&tmp, &bytes))
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        with_retry("rename", &path, || std::fs::rename(&tmp, &path)).map_err(|e| {
             let _ = std::fs::remove_file(&tmp);
             format!("rename {} -> {}: {e}", tmp.display(), path.display())
         })
@@ -310,6 +379,82 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
         assert!(store.load(fp).is_none());
         assert_eq!(store.stats().invalidated, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        for attempt in 1..IO_ATTEMPTS {
+            let a = backoff_us("hrpb-cafe.bin", attempt);
+            assert_eq!(a, backoff_us("hrpb-cafe.bin", attempt), "same inputs, same delay");
+            let floor = IO_BACKOFF_BASE_US << (attempt - 1);
+            assert!((floor..floor + IO_BACKOFF_BASE_US).contains(&a), "attempt {attempt}: {a}");
+        }
+        // jitter actually varies with the key
+        assert_ne!(backoff_us("hrpb-cafe.bin", 1), backoff_us("hrpb-beef.bin", 1));
+    }
+
+    #[test]
+    fn injected_transient_read_error_still_warm_starts() {
+        let _g = crate::fault::session_guard();
+        let store = tmp_store("retry");
+        let coo = Coo::random(64, 64, 0.1, &mut Rng::new(45));
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        let d = content_digest(&coo);
+        store.save(fp, &h, &s, d, None).unwrap();
+        // the first touch of the artifact path errors; the retry reads it
+        let plan = crate::fault::FaultPlan::parse("artifact_io@hrpb-:nth=1", 7).unwrap();
+        crate::fault::install(&plan);
+        let got = store.load_matching(fp, coo.rows, coo.cols, coo.nnz(), d);
+        crate::fault::disable();
+        assert!(got.is_some(), "a transient IO error must warm-start via the retry");
+        assert_eq!(store.stats(), StoreStats { hits: 1, misses: 0, invalidated: 0 });
+        assert_eq!(crate::fault::fired(crate::fault::Point::ArtifactIo), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn persistent_read_errors_exhaust_retries_and_invalidate() {
+        let _g = crate::fault::session_guard();
+        let store = tmp_store("persistent");
+        let coo = Coo::random(48, 48, 0.15, &mut Rng::new(46));
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        let d = content_digest(&coo);
+        store.save(fp, &h, &s, d, None).unwrap();
+        let plan = crate::fault::FaultPlan::parse("artifact_io@hrpb-:rate=1", 7).unwrap();
+        crate::fault::install(&plan);
+        let got = store.load(fp);
+        let fired = crate::fault::fired(crate::fault::Point::ArtifactIo);
+        crate::fault::disable();
+        assert!(got.is_none());
+        assert_eq!(fired, IO_ATTEMPTS as u64, "every attempt consumed by the injected fault");
+        assert_eq!(store.stats().invalidated, 1, "unreadable is loud, not a silent miss");
+        // once the fault clears, a rebuild + save recovers
+        store.save(fp, &h, &s, d, None).unwrap();
+        assert!(store.load_matching(fp, coo.rows, coo.cols, coo.nnz(), d).is_some());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn injected_checksum_flip_invalidates_instead_of_crashing() {
+        let _g = crate::fault::session_guard();
+        let store = tmp_store("flip");
+        let coo = Coo::random(64, 64, 0.12, &mut Rng::new(47));
+        let fp = fingerprint(&coo);
+        let (h, s) = build(&coo);
+        let d = content_digest(&coo);
+        store.save(fp, &h, &s, d, None).unwrap();
+        let plan = crate::fault::FaultPlan::parse("checksum_flip@hrpb-:nth=1", 7).unwrap();
+        crate::fault::install(&plan);
+        let got = store.load(fp);
+        crate::fault::disable();
+        assert!(got.is_none(), "a corrupted read must invalidate, not serve garbage");
+        assert_eq!(store.stats().invalidated, 1);
+        // the bad file was removed; rebuild + save recovers cleanly
+        store.save(fp, &h, &s, d, None).unwrap();
+        assert!(store.load(fp).is_some());
         let _ = std::fs::remove_dir_all(store.dir());
     }
 }

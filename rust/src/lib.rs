@@ -54,7 +54,14 @@
 //!   `Config::trace`, `serve --trace-out` and `experiment trace`.
 //! * [`coordinator`] — the L3 serving layer: matrix registry, router,
 //!   dynamic batcher, worker pool, metrics (with a structured
-//!   `MetricsSnapshot` JSON export behind `cutespmm metrics`).
+//!   `MetricsSnapshot` JSON export behind `cutespmm metrics`), plus the
+//!   PR 9 fault-tolerance layer: a typed `ServeError` taxonomy on every
+//!   reply channel, panic containment at the engine-dispatch boundary,
+//!   and per-matrix circuit breakers with CSR fallback and quarantine.
+//! * [`fault`] — deterministic, seeded fault injection (kernel panic,
+//!   artifact IO error, checksum flip, slow-exec stall), zero-cost when
+//!   disabled. Surfaces as `--fault-plan` on `serve`/`experiment` and
+//!   drives `experiment chaos`.
 //! * [`bench`] — the experiment harness behind `benches/` and the CLI,
 //!   including the perf observatory (`bench::harness`): declarative suite
 //!   specs, a versioned results history under `results/history/`, and the
@@ -62,6 +69,7 @@
 
 pub mod bench;
 pub mod coordinator;
+pub mod fault;
 pub mod formats;
 pub mod gen;
 pub mod gpumodel;

@@ -20,6 +20,10 @@
 //!               [--trace-sample RATE] [--trace-ring N] [--no-trace-kernel]
 //!               [--metrics-out m.json]      # structured MetricsSnapshot
 //!               [--metrics-every N]         # rewrite every N responses
+//!               [--fault-plan SPEC]         # arm deterministic fault
+//!               [--chaos-seed N]            # injection for this run
+//!                                           # (spec: point[@target]
+//!                                           #  [:rate=R|:nth=N][;...])
 //! cutespmm metrics [--from m.json] [--json]  # validate + summarize a
 //!                                            # snapshot dump
 //! cutespmm metrics --diff a.json b.json [--json]
@@ -27,8 +31,9 @@
 //!                                           # report between two snapshots
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|exec|reorder|trace|geometry|all>
+//!                      qos|exec|reorder|trace|geometry|chaos|all>
 //!                      [--quick] [--out-dir DIR]
+//!                      [--fault-plan SPEC] [--chaos-seed N]
 //!                                           # exec: pool + column-slab
 //!                                           # runtime A/B, emits
 //!                                           # results/BENCH_PR4.json
@@ -41,9 +46,13 @@
 //!                                           # geometry: planner-picked brick
 //!                                           # shape vs fixed 16x4, emits
 //!                                           # results/BENCH_PR8.json
+//!                                           # chaos: fault injection —
+//!                                           # containment, breakers,
+//!                                           # quarantine, recovery, emits
+//!                                           # results/BENCH_PR9.json
 //!                                           # prep/qos/auto/exec/reorder/
-//!                                           # trace/geometry also append a
-//!                                           # schema-v1 entry to
+//!                                           # trace/geometry/chaos also
+//!                                           # append a schema-v1 entry to
 //!                                           # results/history/
 //! cutespmm experiment diff [--against ID|FILE] [--slip PCT] [--json]
 //!                          [--inject-slip [PCT]]
@@ -505,11 +514,36 @@ fn cmd_spmm(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse `--fault-plan <spec>` (+ optional `--chaos-seed <n>`) into a
+/// validated [`cutespmm::fault::FaultPlan`] without arming anything.
+/// Parsing is all-or-nothing: a bad spec (or a seed without a plan)
+/// returns `Err` — and hence a nonzero exit — before any injection point
+/// is armed, so a typo can never leave a partial plan installed.
+fn fault_plan_from_args(args: &Args) -> Result<Option<cutespmm::fault::FaultPlan>, String> {
+    let Some(spec) = args.get("fault-plan") else {
+        if args.get("chaos-seed").is_some() {
+            return Err("--chaos-seed requires --fault-plan <spec>".into());
+        }
+        return Ok(None);
+    };
+    let seed = match args.get("chaos-seed") {
+        Some(v) => v.parse::<u64>().map_err(|_| format!("--chaos-seed '{v}' is not a u64"))?,
+        None => 0xC4A0,
+    };
+    let plan = cutespmm::fault::FaultPlan::parse(spec, seed)
+        .map_err(|e| format!("--fault-plan '{spec}': {e}"))?;
+    Ok(Some(plan))
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let (name, coo) = load_matrix(args)?;
     let n = args.usize_or("n", 32);
     let requests = args.usize_or("requests", 200);
     let workers = args.usize_or("workers", 4);
+    // --fault-plan: validated up front so a bad spec exits before any
+    // service (coordinator, PJRT) is started; armed just before the
+    // coordinator so registration-time artifact IO is covered too
+    let fault_plan = fault_plan_from_args(args)?;
 
     // --engine {native,pjrt,auto}; the legacy --pjrt flag implies pjrt
     let engine = match args.get("engine") {
@@ -558,6 +592,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // scrape endpoint), and always once more at the end of the run
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let metrics_every = args.usize_or("metrics-every", 0);
+    if let Some(plan) = &fault_plan {
+        cutespmm::fault::install(plan);
+        println!("fault injection armed: {} arm(s), seed {}", plan.injections.len(), plan.seed);
+    }
     let coord = Coordinator::start_with_planner(
         Config {
             workers,
@@ -626,9 +664,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("cannot write {}: {e}", path.display()))
     };
     let mut ok = 0usize;
+    // per-kind tally of typed errors: a faulting run still answers every
+    // request, so the breakdown (engine_fault=.. quarantined=..) is the
+    // operator-visible evidence of containment
+    let mut error_kinds: Vec<(&'static str, usize)> = Vec::new();
     for rx in rxs {
-        if rx.recv().map_err(|e| e.to_string())?.is_ok() {
-            ok += 1;
+        match rx.recv().map_err(|e| e.to_string())? {
+            Ok(_) => ok += 1,
+            Err(e) => match error_kinds.iter_mut().find(|(k, _)| *k == e.kind()) {
+                Some((_, count)) => *count += 1,
+                None => error_kinds.push((e.kind(), 1)),
+            },
         }
         if metrics_every > 0 && ok > 0 && ok % metrics_every == 0 {
             if let Some(path) = &metrics_out {
@@ -643,6 +689,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         wall,
         ok as f64 / wall
     );
+    if !error_kinds.is_empty() {
+        let parts: Vec<String> =
+            error_kinds.iter().map(|(kind, count)| format!("{kind}={count}")).collect();
+        println!("errors: {}", parts.join(" "));
+    }
+    if fault_plan.is_some() {
+        println!("injected faults fired: {}", cutespmm::fault::fired_total());
+    }
     println!("{}", coord.metrics().report());
     if let Some(path) = &metrics_out {
         dump_metrics(path)?;
@@ -664,6 +718,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     if let Some(svc) = pjrt_svc {
         svc.shutdown();
+    }
+    if fault_plan.is_some() {
+        cutespmm::fault::disable();
     }
     Ok(())
 }
@@ -926,11 +983,11 @@ fn cmd_selfcheck(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// The seven suites the perf observatory tracks: they run through
+/// The eight suites the perf observatory tracks: they run through
 /// [`harness::run_suite`] (same reports, same `BENCH_*.json` artifacts)
 /// and additionally append to `results/history/`.
-const HARNESS_SUITES: [&str; 7] =
-    ["prep", "auto", "qos", "exec", "reorder", "trace", "geometry"];
+const HARNESS_SUITES: [&str; 8] =
+    ["prep", "auto", "qos", "exec", "reorder", "trace", "geometry", "chaos"];
 
 fn cmd_experiment(args: &Args) -> Result<(), String> {
     // --out-dir relocates every CSV/JSON artifact, including the history
@@ -944,6 +1001,14 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     }
     if which == "accept" {
         return cmd_experiment_accept(args);
+    }
+    // --fault-plan arms injection across the whole run. The chaos suite
+    // installs its own per-mode plans (and disables on exit) regardless, so
+    // a CLI-armed plan is for stressing the *other* drivers under faults.
+    let fault_plan = fault_plan_from_args(args)?;
+    if let Some(plan) = &fault_plan {
+        cutespmm::fault::install(plan);
+        eprintln!("fault injection armed: {} arm(s), seed {}", plan.injections.len(), plan.seed);
     }
     let quick = args.has("quick");
     let needs_corpus =
@@ -1008,6 +1073,9 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             Err(e) => eprintln!("warning: could not record history entry: {e}"),
         }
     }
+    if fault_plan.is_some() {
+        cutespmm::fault::disable();
+    }
     Ok(())
 }
 
@@ -1022,7 +1090,7 @@ fn cmd_experiment_diff(args: &Args) -> Result<(), String> {
     let slip_override = args.get("slip").and_then(|v| v.parse::<f64>().ok());
     let current_id = history::latest().ok_or(
         "no history entries yet; run `cutespmm experiment all --quick` (or any of \
-         prep/auto/qos/exec/reorder/trace/geometry) first",
+         prep/auto/qos/exec/reorder/trace/geometry/chaos) first",
     )?;
     let current = history::load(&current_id)?;
     let (base, cur) = if args.has("inject-slip") {
@@ -1094,6 +1162,9 @@ fn usage() -> &'static str {
      `experiment diff [--against ID|FILE] [--slip PCT] [--inject-slip [PCT]] [--json]` \
      gates on headline regressions, `experiment accept [run-id]` pins the baseline, \
      `metrics --diff a.json b.json` compares two snapshot dumps\n\
+     fault tolerance: `experiment chaos --quick` runs the deterministic fault-injection \
+     harness (containment, breakers, quarantine, recovery), and `serve`/`experiment` \
+     accept `--fault-plan \"point[@target][:rate=R|:nth=N][;...]\" [--chaos-seed N]`\n\
      see the module docs at the top of rust/src/main.rs for flag details"
 }
 
@@ -1124,5 +1195,58 @@ fn main() -> ExitCode {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(argv: &[&str]) -> Args {
+        Args::parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn fault_plan_flag_parses_spec_and_seed() {
+        let a = args(&["serve", "--fault-plan", "kernel_panic@cora:nth=1", "--chaos-seed", "7"]);
+        let plan = fault_plan_from_args(&a).unwrap().expect("plan must parse");
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.injections.len(), 1);
+        assert_eq!(plan.injections[0].target.as_deref(), Some("cora"));
+    }
+
+    #[test]
+    fn fault_plan_seed_defaults_when_not_given() {
+        let a = args(&["serve", "--fault-plan", "slow_exec:rate=0.5"]);
+        let plan = fault_plan_from_args(&a).unwrap().expect("plan must parse");
+        assert_eq!(plan.seed, 0xC4A0);
+    }
+
+    #[test]
+    fn absent_fault_plan_is_none() {
+        assert!(fault_plan_from_args(&args(&["serve"])).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_fault_plan_is_rejected_whole_with_nothing_armed() {
+        // one good arm + one bad arm: the whole spec must be rejected and
+        // nothing armed — no partial plans
+        let a = args(&["serve", "--fault-plan", "kernel_panic;bogus_point:rate=1"]);
+        let err = fault_plan_from_args(&a).unwrap_err();
+        assert!(err.contains("bogus_point"), "{err}");
+        assert!(!cutespmm::fault::enabled(), "a rejected spec must not arm anything");
+    }
+
+    #[test]
+    fn chaos_seed_without_a_plan_is_an_error() {
+        let err = fault_plan_from_args(&args(&["serve", "--chaos-seed", "9"])).unwrap_err();
+        assert!(err.contains("--fault-plan"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_chaos_seed_is_rejected() {
+        let a = args(&["serve", "--fault-plan", "kernel_panic", "--chaos-seed", "seven"]);
+        let err = fault_plan_from_args(&a).unwrap_err();
+        assert!(err.contains("u64"), "{err}");
     }
 }

@@ -318,6 +318,85 @@ mod tests {
     }
 
     #[test]
+    fn every_part_panicking_raises_exactly_one_payload_and_runs_all_parts() {
+        // the panic slot keeps the *first* payload and drops the rest; the
+        // completion latch still counts every part, so the caller neither
+        // hangs nor double-panics
+        let pool = WorkerPool::with_threads(3);
+        let executed = Arc::new(AtomicUsize::new(0));
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let executed = executed.clone();
+            pool.run(16, &move |p| {
+                executed.fetch_add(1, Ordering::Relaxed);
+                panic!("part-{p} down");
+            });
+        }));
+        let payload = caught.expect_err("at least one panic must reach the caller");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.starts_with("part-") && msg.ends_with(" down"), "one original payload: {msg}");
+        assert_eq!(executed.load(Ordering::Relaxed), 16, "the job drains before re-raising");
+        // the slot was taken, not left poisoned: a clean job runs fine
+        let ok = AtomicUsize::new(0);
+        pool.run(16, &|p| {
+            ok.fetch_add(p + 1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 136, "sum 1..=16 on the reused pool");
+    }
+
+    #[test]
+    fn concurrent_jobs_with_panicking_parts_stay_isolated() {
+        // several callers share the pool while some of their jobs panic in
+        // multiple parts at once: each caller sees its *own* job's payload
+        // (or success), never a neighbor's, and the pool survives it all
+        let pool = Arc::new(WorkerPool::with_threads(4));
+        std::thread::scope(|s| {
+            for caller in 0..4 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for round in 0..10 {
+                        let poisoned = caller % 2 == 0;
+                        let tag = caller * 1000 + round;
+                        let ran = Arc::new(AtomicUsize::new(0));
+                        let caught = {
+                            let ran = ran.clone();
+                            catch_unwind(AssertUnwindSafe(|| {
+                                pool.run(8, &move |p| {
+                                    ran.fetch_add(1, Ordering::Relaxed);
+                                    if poisoned && p % 2 == 0 {
+                                        panic!("job-{tag}");
+                                    }
+                                });
+                            }))
+                        };
+                        assert_eq!(ran.load(Ordering::Relaxed), 8, "all parts ran");
+                        match caught {
+                            Ok(()) => assert!(!poisoned, "poisoned job must re-raise"),
+                            Err(payload) => {
+                                let msg = payload
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .unwrap_or_default();
+                                assert_eq!(
+                                    msg,
+                                    format!("job-{tag}"),
+                                    "payload crossed between concurrent jobs"
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.jobs_run(), 40);
+        // and the shared pool still computes correctly afterwards
+        let total = AtomicUsize::new(0);
+        pool.run(8, &|p| {
+            total.fetch_add(p + 1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 36);
+    }
+
+    #[test]
     fn drop_joins_worker_threads() {
         let pool = WorkerPool::with_threads(2);
         let hits = AtomicUsize::new(0);
