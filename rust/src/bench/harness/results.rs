@@ -310,8 +310,9 @@ pub fn parse_results(text: &str) -> Result<ResultsFile, String> {
 /// Forward-compat loader for the pre-harness perf-trajectory records:
 /// `BENCH_PR4.json` (exec), `BENCH_PR5.json` (reorder), `BENCH_PR6.json`
 /// (trace overhead), `BENCH_PR8.json` (geometry), `BENCH_PR9.json`
-/// (chaos). Maps each onto the same suite/headline/cell shapes the
-/// harness emits, so old records diff against new runs.
+/// (chaos), `BENCH_PR10.json` (load). Maps each onto the same
+/// suite/headline/cell shapes the harness emits, so old records diff
+/// against new runs.
 pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
     let bench = doc.get("bench")?.as_str()?;
     let cases = doc.get("cases").and_then(|c| c.as_arr()).unwrap_or(&[]);
@@ -451,6 +452,51 @@ pub fn suite_from_legacy(doc: &Json) -> Option<SuiteResult> {
                     key: s(c, "mode"),
                     time_s: f(c, "wall_s"),
                     value: f(c, "recovered_rps"),
+                })
+                .collect(),
+            metrics: Json::Null,
+        }),
+        "load" => Some(SuiteResult {
+            suite: "load".to_string(),
+            title: "closed-loop shard-router load".to_string(),
+            wall_s: 0.0,
+            spec: Json::Null,
+            headlines: vec![
+                Headline {
+                    key: "sustained_rps".to_string(),
+                    value: cases
+                        .iter()
+                        .find(|c| s(c, "mode") == "baseline")
+                        .map(|c| f(c, "sustained_rps"))
+                        .unwrap_or(0.0),
+                    unit: "req/s".to_string(),
+                    direction: Direction::HigherIsBetter,
+                    slip: Slip::RelativePct(10.0),
+                    floor: None,
+                },
+                Headline {
+                    key: "kill_gap_pct".to_string(),
+                    value: f(doc, "kill_gap_pct"),
+                    unit: "%".to_string(),
+                    direction: Direction::LowerIsBetter,
+                    slip: Slip::AbsolutePoints(5.0),
+                    floor: doc.get("acceptance_kill_gap_pct").and_then(|v| v.as_f64()),
+                },
+                Headline {
+                    key: "lost_or_duplicated".to_string(),
+                    value: f(doc, "lost_responses") + f(doc, "duplicate_deliveries"),
+                    unit: String::new(),
+                    direction: Direction::LowerIsBetter,
+                    slip: Slip::AbsolutePoints(0.5),
+                    floor: Some(0.5),
+                },
+            ],
+            cells: cases
+                .iter()
+                .map(|c| CellResult {
+                    key: s(c, "mode"),
+                    time_s: f(c, "wall_s"),
+                    value: f(c, "sustained_rps"),
                 })
                 .collect(),
             metrics: Json::Null,
@@ -645,6 +691,33 @@ mod tests {
         assert_eq!(suite.cells[1].key, "kernel_panic");
         assert_eq!(suite.cells[1].time_s, 0.45);
         assert_eq!(suite.cells[1].value, 495.0);
+    }
+
+    #[test]
+    fn legacy_bench_pr10_loads_as_a_load_suite() {
+        let text = r#"{"bench": "load", "pr": 10,
+            "kill_gap_pct": 4.1, "acceptance_kill_gap_pct": 10.0,
+            "lost_responses": 0, "duplicate_deliveries": 0,
+            "saturation_max_queue_depth": 64, "saturation_queue_capacity": 64,
+            "cases": [{"mode": "baseline", "wall_s": 0.8, "sustained_rps": 900.0},
+                      {"mode": "shard_kill", "wall_s": 0.9, "sustained_rps": 850.0}]}"#;
+        let run = parse_results(text).expect("legacy PR10 record must load");
+        assert_eq!(run.run_id, "legacy-load");
+        let suite = run.suite("load").unwrap();
+        assert_eq!(suite.headlines.len(), 3);
+        assert_eq!(suite.headlines[0].key, "sustained_rps");
+        assert_eq!(suite.headlines[0].value, 900.0);
+        assert_eq!(suite.headlines[0].direction, Direction::HigherIsBetter);
+        assert_eq!(suite.headlines[0].slip, Slip::RelativePct(10.0));
+        assert_eq!(suite.headlines[1].key, "kill_gap_pct");
+        assert_eq!(suite.headlines[1].value, 4.1);
+        assert_eq!(suite.headlines[1].floor, Some(10.0));
+        assert_eq!(suite.headlines[2].key, "lost_or_duplicated");
+        assert_eq!(suite.headlines[2].value, 0.0);
+        assert_eq!(suite.headlines[2].floor, Some(0.5));
+        assert_eq!(suite.cells[1].key, "shard_kill");
+        assert_eq!(suite.cells[1].time_s, 0.9);
+        assert_eq!(suite.cells[1].value, 850.0);
     }
 
     #[test]

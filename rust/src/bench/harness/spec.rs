@@ -52,7 +52,7 @@ impl SuiteSpec {
 }
 
 /// Every suite the harness can run, in `experiment all` execution order.
-pub static SUITES: [SuiteSpec; 8] = [
+pub static SUITES: [SuiteSpec; 9] = [
     SuiteSpec {
         name: "exec",
         title: "zero-allocation blocked runtime vs spawn-per-call",
@@ -113,6 +113,15 @@ pub static SUITES: [SuiteSpec; 8] = [
         widths: &[16],
         reps_full: 384,
         reps_quick: 160,
+    },
+    SuiteSpec {
+        name: "load",
+        title: "closed-loop load vs the shard router: throughput, tails, failover",
+        engines: &["baseline", "saturation", "shard_kill", "net_stall", "net_drop"],
+        families: &["shard-loop"],
+        widths: &[8],
+        reps_full: 6144,
+        reps_quick: 512,
     },
     SuiteSpec {
         name: "prep",

@@ -42,6 +42,7 @@ pub fn run_suite(name: &str, quick: bool, records: Option<&[Record]>) -> Result<
         "qos" => Ok(run_qos(spec, quick)),
         "trace" => Ok(run_trace(spec, quick)),
         "chaos" => Ok(run_chaos(spec, quick)),
+        "load" => Ok(run_load(spec, quick)),
         "prep" => Ok(run_prep(spec, quick)),
         "auto" => {
             let records = records.ok_or("the auto suite needs corpus records")?;
@@ -363,6 +364,69 @@ fn run_chaos(spec: &SuiteSpec, quick: bool) -> SuiteRun {
             key: o.mode.to_string(),
             time_s: o.wall_s,
             value: o.recovered_rps,
+        })
+        .collect();
+    SuiteRun {
+        result: make_result(spec, quick, t0.elapsed().as_secs_f64(), headlines, cells, false),
+        report,
+    }
+}
+
+fn run_load(spec: &SuiteSpec, quick: bool) -> SuiteRun {
+    let t0 = Instant::now();
+    let outcomes = experiments::load_outcomes(quick);
+    let report = experiments::load_report(&outcomes);
+    // Same formulas as load_report: baseline sustained throughput, the
+    // shard-kill mode's live-shard recovery gap vs the baseline mode, and
+    // the exactly-once violation count (lost + duplicated) over all modes.
+    let sustained_rps = outcomes
+        .iter()
+        .find(|o| o.mode == "baseline")
+        .map(|o| o.sustained_rps)
+        .unwrap_or(f64::NAN);
+    let baseline_rps = outcomes
+        .iter()
+        .find(|o| o.mode == "baseline")
+        .map(|o| o.recovered_rps)
+        .unwrap_or(f64::NAN);
+    let kill_gap_pct = outcomes
+        .iter()
+        .find(|o| o.mode == "shard_kill")
+        .map(|o| 100.0 * (baseline_rps - o.recovered_rps) / baseline_rps.max(1e-9))
+        .unwrap_or(f64::NAN);
+    let violations: u64 = outcomes.iter().map(|o| o.lost + o.duplicates).sum();
+    let headlines = vec![
+        Headline {
+            key: "sustained_rps".to_string(),
+            value: sustained_rps,
+            unit: "req/s".to_string(),
+            direction: Direction::HigherIsBetter,
+            slip: Slip::RelativePct(DEFAULT_SLIP_PCT),
+            floor: None,
+        },
+        Headline {
+            key: "kill_gap_pct".to_string(),
+            value: kill_gap_pct,
+            unit: "%".to_string(),
+            direction: Direction::LowerIsBetter,
+            slip: Slip::AbsolutePoints(5.0),
+            floor: Some(10.0),
+        },
+        Headline {
+            key: "lost_or_duplicated".to_string(),
+            value: violations as f64,
+            unit: "".to_string(),
+            direction: Direction::LowerIsBetter,
+            slip: Slip::AbsolutePoints(0.5),
+            floor: Some(0.5),
+        },
+    ];
+    let cells = outcomes
+        .iter()
+        .map(|o| CellResult {
+            key: o.mode.to_string(),
+            time_s: o.wall_s,
+            value: o.sustained_rps,
         })
         .collect();
     SuiteRun {

@@ -11,8 +11,10 @@
 //! the CLI read the same while programs finally get structure.
 
 use super::registry::MatrixId;
-use crate::qos::Rejected;
+use crate::qos::{Priority, RejectReason, Rejected};
+use crate::util::json::Json;
 use std::fmt;
+use std::time::Duration;
 
 /// Why a serving request failed. Carried on every reply channel in place
 /// of the old stringly-typed error.
@@ -41,6 +43,12 @@ pub enum ServeError {
     /// API misuse that used to kill the process (e.g. `submit_qos`
     /// without `Config::qos`).
     Misconfigured(&'static str),
+    /// A wire-protocol failure between the shard router and a shard: a
+    /// hostile or corrupt frame, an undecodable payload, or a lost /
+    /// timed-out connection. Transport-shaped — the shard router treats it
+    /// as retryable on a replica (same idempotent request id), unlike the
+    /// serving-semantics errors above.
+    Protocol { detail: String },
 }
 
 impl ServeError {
@@ -56,6 +64,26 @@ impl ServeError {
             ServeError::ShapeMismatch { .. } => "shape_mismatch",
             ServeError::Shutdown => "shutdown",
             ServeError::Misconfigured(_) => "misconfigured",
+            ServeError::Protocol { .. } => "protocol",
+        }
+    }
+
+    /// Stable numeric wire code — what the PR 10 binary protocol carries
+    /// in the response status field. Codes are append-only and PINNED
+    /// FOREVER (see `wire_codes_are_pinned_forever` below): a renumbering
+    /// would silently re-type every error a newer peer sends an older one.
+    /// 0 is reserved for "ok" on the wire and never a ServeError.
+    pub fn code(&self) -> u16 {
+        match self {
+            ServeError::Shed(_) => 1,
+            ServeError::Busy => 2,
+            ServeError::EngineFault { .. } => 3,
+            ServeError::Quarantined { .. } => 4,
+            ServeError::UnknownMatrix(_) => 5,
+            ServeError::ShapeMismatch { .. } => 6,
+            ServeError::Shutdown => 7,
+            ServeError::Misconfigured(_) => 8,
+            ServeError::Protocol { .. } => 9,
         }
     }
 
@@ -64,6 +92,94 @@ impl ServeError {
     pub fn is_fault(&self) -> bool {
         matches!(self, ServeError::EngineFault { .. })
     }
+
+    /// Is this a transport-shaped failure (lost/stalled connection, bad
+    /// frame) whose outcome on the shard is unknown? The shard router
+    /// retries these on a replica with the same idempotent request id;
+    /// serving-semantics errors are returned to the caller as-is.
+    pub fn is_transport(&self) -> bool {
+        matches!(self, ServeError::Protocol { .. })
+    }
+
+    /// Serialize for the wire: the stable code plus enough structure to
+    /// reconstruct the variant on the peer ([`ServeError::from_json`]).
+    /// `kind` and `message` ride along for logs and for peers that only
+    /// want to print.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::num(self.code() as f64)),
+            ("kind", Json::str(self.kind())),
+            ("message", Json::str(&self.to_string())),
+        ];
+        match self {
+            ServeError::Shed(r) => {
+                fields.push(("reason", Json::str(r.reason.name())));
+                fields.push(("est_wait_us", Json::num(r.est_wait.as_micros() as f64)));
+                fields.push(("priority", Json::str(r.priority.name())));
+            }
+            ServeError::EngineFault { matrix, engine, detail } => {
+                fields.push(("matrix", Json::str(matrix)));
+                fields.push(("engine", Json::str(engine)));
+                fields.push(("detail", Json::str(detail)));
+            }
+            ServeError::Quarantined { matrix } => fields.push(("matrix", Json::str(matrix))),
+            ServeError::UnknownMatrix(id) => fields.push(("matrix_id", Json::num(id.0 as f64))),
+            ServeError::ShapeMismatch { got, want } => {
+                fields.push(("got", Json::num(*got as f64)));
+                fields.push(("want", Json::num(*want as f64)));
+            }
+            ServeError::Protocol { detail } => fields.push(("detail", Json::str(detail))),
+            ServeError::Busy | ServeError::Shutdown | ServeError::Misconfigured(_) => {}
+        }
+        Json::obj(fields)
+    }
+
+    /// Reconstruct from [`ServeError::to_json`] output. Dispatches on the
+    /// stable code, never on message prose. `None` for unknown codes or a
+    /// malformed document (a future-peer error decodes as `None`, and the
+    /// wire layer degrades it to a typed `Protocol` error — never a panic).
+    pub fn from_json(j: &Json) -> Option<ServeError> {
+        let code = j.get("code")?.as_f64()? as u16;
+        let s = |key: &str| j.get(key).and_then(|v| v.as_str()).map(str::to_string);
+        Some(match code {
+            1 => {
+                let reason_name = s("reason")?;
+                let reason = RejectReason::all().into_iter().find(|r| r.name() == reason_name)?;
+                let priority = Priority::parse(&s("priority")?)?;
+                let est_wait =
+                    Duration::from_micros(j.get("est_wait_us")?.as_f64().filter(|v| *v >= 0.0)?
+                        as u64);
+                ServeError::Shed(Rejected { reason, est_wait, priority })
+            }
+            2 => ServeError::Busy,
+            3 => ServeError::EngineFault {
+                matrix: s("matrix")?,
+                engine: intern_engine(&s("engine")?),
+                detail: s("detail")?,
+            },
+            4 => ServeError::Quarantined { matrix: s("matrix")? },
+            5 => ServeError::UnknownMatrix(MatrixId(j.get("matrix_id")?.as_f64()? as u64)),
+            6 => ServeError::ShapeMismatch {
+                got: j.get("got")?.as_usize()?,
+                want: j.get("want")?.as_usize()?,
+            },
+            7 => ServeError::Shutdown,
+            // the &'static str payload cannot cross a process boundary;
+            // the message field preserves the prose for logs
+            8 => ServeError::Misconfigured("misconfigured on the remote peer (see message)"),
+            9 => ServeError::Protocol { detail: s("detail")? },
+            _ => return None,
+        })
+    }
+}
+
+/// Map a wire engine name back to the `&'static str` the enum carries.
+/// Unknown names (a newer peer's engine) degrade to a stable marker
+/// instead of failing the decode.
+fn intern_engine(name: &str) -> &'static str {
+    const KNOWN: [&str; 8] =
+        ["cutespmm-native", "cutespmm", "pjrt", "csr", "csr-fallback", "sputnik", "tcgnn", "dense"];
+    KNOWN.iter().find(|k| **k == name).copied().unwrap_or("remote-engine")
 }
 
 impl fmt::Display for ServeError {
@@ -85,6 +201,7 @@ impl fmt::Display for ServeError {
             }
             ServeError::Shutdown => write!(f, "coordinator stopped"),
             ServeError::Misconfigured(msg) => write!(f, "misconfigured: {msg}"),
+            ServeError::Protocol { detail } => write!(f, "protocol error: {detail}"),
         }
     }
 }
@@ -123,6 +240,7 @@ mod tests {
             ServeError::ShapeMismatch { got: 3, want: 4 },
             ServeError::Shutdown,
             ServeError::Misconfigured("needs qos"),
+            ServeError::Protocol { detail: "bad frame".into() },
         ];
         let kinds: Vec<&str> = errs.iter().map(|e| e.kind()).collect();
         let mut dedup = kinds.clone();
@@ -134,6 +252,119 @@ mod tests {
         }
         assert!(errs[1].is_fault());
         assert!(!errs[0].is_fault());
+    }
+
+    /// Every variant's wire code, pinned forever. A new variant APPENDS a
+    /// code; changing any tabulated pair here is a wire-compatibility
+    /// break with every peer ever shipped, so this test must never be
+    /// "fixed" to accommodate a renumbering.
+    #[test]
+    fn wire_codes_are_pinned_forever() {
+        let pinned: [(ServeError, u16, &str); 9] = [
+            (
+                ServeError::Shed(Rejected {
+                    reason: RejectReason::QueueFull,
+                    est_wait: Duration::ZERO,
+                    priority: Priority::Normal,
+                }),
+                1,
+                "shed",
+            ),
+            (ServeError::Busy, 2, "busy"),
+            (
+                ServeError::EngineFault {
+                    matrix: "m".into(),
+                    engine: "cutespmm",
+                    detail: "d".into(),
+                },
+                3,
+                "engine_fault",
+            ),
+            (ServeError::Quarantined { matrix: "m".into() }, 4, "quarantined"),
+            (ServeError::UnknownMatrix(MatrixId(1)), 5, "unknown_matrix"),
+            (ServeError::ShapeMismatch { got: 1, want: 2 }, 6, "shape_mismatch"),
+            (ServeError::Shutdown, 7, "shutdown"),
+            (ServeError::Misconfigured("x"), 8, "misconfigured"),
+            (ServeError::Protocol { detail: "d".into() }, 9, "protocol"),
+        ];
+        for (err, code, kind) in &pinned {
+            assert_eq!(err.code(), *code, "code for {kind} is pinned");
+            assert_eq!(err.kind(), *kind);
+        }
+        // codes are dense, distinct, and 0 stays reserved for "ok"
+        let codes: Vec<u16> = pinned.iter().map(|(e, _, _)| e.code()).collect();
+        assert_eq!(codes, (1..=9).collect::<Vec<u16>>());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_code_kind_and_structure() {
+        let errs = [
+            ServeError::Shed(Rejected {
+                reason: RejectReason::DeadlineUnmeetable,
+                est_wait: Duration::from_micros(1234),
+                priority: Priority::High,
+            }),
+            ServeError::Busy,
+            ServeError::EngineFault {
+                matrix: "victim".into(),
+                engine: "cutespmm",
+                detail: "injected kernel fault".into(),
+            },
+            ServeError::Quarantined { matrix: "victim".into() },
+            ServeError::UnknownMatrix(MatrixId(42)),
+            ServeError::ShapeMismatch { got: 8, want: 16 },
+            ServeError::Shutdown,
+            ServeError::Protocol { detail: "bad checksum".into() },
+        ];
+        for e in &errs {
+            // through text, as the wire does it
+            let text = e.to_json().to_string();
+            let back = ServeError::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap_or_else(|| panic!("{} must decode", e.kind()));
+            assert_eq!(back.code(), e.code());
+            assert_eq!(back.kind(), e.kind());
+            // non-Misconfigured variants reconstruct their Display too
+            assert_eq!(back.to_string(), e.to_string());
+        }
+        // Misconfigured round-trips code/kind; the &'static str payload is
+        // summarized (it cannot cross a process boundary)
+        let m = ServeError::Misconfigured("needs qos");
+        let back =
+            ServeError::from_json(&crate::util::json::parse(&m.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.code(), 8);
+        assert_eq!(back.kind(), "misconfigured");
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_codes_and_garbage_without_panicking() {
+        use crate::util::json::{parse, Json};
+        assert!(ServeError::from_json(&Json::obj(vec![("code", Json::num(999.0))])).is_none());
+        assert!(ServeError::from_json(&Json::obj(vec![])).is_none());
+        assert!(ServeError::from_json(&parse("{\"code\": 3}").unwrap()).is_none(), "missing fields");
+        assert!(ServeError::from_json(&Json::str("nope")).is_none());
+        // an unknown engine name degrades to a marker, not a failure
+        let j = parse(
+            "{\"code\": 3, \"matrix\": \"m\", \"engine\": \"quantum\", \"detail\": \"d\"}",
+        )
+        .unwrap();
+        match ServeError::from_json(&j) {
+            Some(ServeError::EngineFault { engine, .. }) => assert_eq!(engine, "remote-engine"),
+            other => panic!("expected an EngineFault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn transport_errors_are_the_only_retryable_class() {
+        assert!(ServeError::Protocol { detail: "x".into() }.is_transport());
+        assert!(!ServeError::Shutdown.is_transport());
+        assert!(!ServeError::Busy.is_transport());
+        assert!(!ServeError::EngineFault {
+            matrix: "m".into(),
+            engine: "csr",
+            detail: "d".into()
+        }
+        .is_transport());
     }
 
     #[test]

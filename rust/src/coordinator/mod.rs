@@ -198,8 +198,11 @@ pub struct Coordinator {
     arena: Arc<OutputArena>,
     ingress: IngressPath,
     next_token: AtomicU64,
-    router: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Join handles live behind mutexes so [`Coordinator::drain`] works by
+    /// shared reference — the network server holds the coordinator in an
+    /// `Arc` and must still be able to run the QoS shutdown path.
+    router: Mutex<Option<std::thread::JoinHandle<()>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -306,8 +309,8 @@ impl Coordinator {
             arena,
             ingress,
             next_token: AtomicU64::new(0),
-            router: Some(router),
-            workers,
+            router: Mutex::new(Some(router)),
+            workers: Mutex::new(workers),
         }
     }
 
@@ -603,25 +606,35 @@ impl Coordinator {
     /// threads. QoS ingress: close admission, fail everything still queued
     /// (and still grouped in the batcher) with typed `shutdown` rejections,
     /// finish jobs already dispatched to workers, join threads.
-    pub fn shutdown(mut self) {
-        self.shutdown_inner();
+    pub fn shutdown(self) {
+        self.drain();
     }
 
-    fn shutdown_inner(&mut self) {
+    /// [`Coordinator::shutdown`] by shared reference — the same QoS
+    /// shutdown path, callable through an `Arc` (the network server and
+    /// the shard router's graceful drain both hold shared coordinators).
+    /// Idempotent: a second drain (or the eventual `Drop`) is a no-op.
+    pub fn drain(&self) {
         match &self.ingress {
             IngressPath::Channel(tx) => {
+                // second drain: the router already exited, the send fails
+                // harmlessly on the disconnected channel
                 let _ = tx.send(Ingress::Shutdown);
             }
             IngressPath::Qos(queue) => {
+                // AdmissionQueue::close is idempotent: a second close
+                // returns an empty drain
                 for (_ticket, req) in queue.close() {
                     reject_shutdown(&self.metrics, req);
                 }
             }
         }
-        if let Some(r) = self.router.take() {
+        if let Some(r) = self.router.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = r.join();
         }
-        for w in self.workers.drain(..) {
+        let handles: Vec<_> =
+            self.workers.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
+        for w in handles {
             let _ = w.join();
         }
     }
@@ -629,9 +642,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        if self.router.is_some() {
-            self.shutdown_inner();
-        }
+        self.drain();
     }
 }
 
@@ -1605,8 +1616,8 @@ mod tests {
     /// `ServeError::Shutdown` on every submit shape — never a panic.
     #[test]
     fn submits_after_shutdown_return_the_typed_error_not_a_panic() {
-        let (mut coord, id, _) = small_coordinator(EnginePolicy::Native);
-        coord.shutdown_inner();
+        let (coord, id, _) = small_coordinator(EnginePolicy::Native);
+        coord.drain();
         let err = coord.call(id, Dense::zeros(128, 4)).unwrap_err();
         assert!(matches!(err, ServeError::Shutdown), "{err:?}");
         assert_eq!(err.to_string(), "coordinator stopped");
@@ -1614,6 +1625,21 @@ mod tests {
             Err((ServeError::Shutdown, b)) => assert_eq!(b.rows, 128, "operand comes back"),
             other => panic!("expected a typed shutdown, got {other:?}"),
         }
+    }
+
+    /// PR 10: `drain` works by shared reference (the network server holds
+    /// the coordinator in an `Arc`) and is idempotent — a second drain and
+    /// the eventual `Drop` are no-ops, not double-joins.
+    #[test]
+    fn drain_works_through_an_arc_and_is_idempotent() {
+        let (coord, id, _) = small_coordinator(EnginePolicy::Native);
+        let coord = Arc::new(coord);
+        let b = Dense::random(128, 4, &mut Rng::new(407));
+        assert!(coord.call(id, b).is_ok());
+        coord.drain();
+        coord.drain();
+        let err = coord.call(id, Dense::zeros(128, 4)).unwrap_err();
+        assert!(matches!(err, ServeError::Shutdown), "{err:?}");
     }
 
     /// Satellite: `submit_qos` without `Config::qos` is a typed

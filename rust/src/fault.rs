@@ -37,10 +37,16 @@ pub enum Point {
     /// Stall the engine execution for a bounded interval (throughput dip,
     /// no error).
     SlowExec,
+    /// Drop a network response in flight (the server never writes the
+    /// frame; the shard router's idempotent retry must recover it).
+    NetDrop,
+    /// Stall a network write for a bounded interval (slow-peer pressure on
+    /// the connection's in-flight window and deadlines).
+    NetStall,
 }
 
 impl Point {
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 6;
 
     pub fn index(self) -> usize {
         match self {
@@ -48,6 +54,8 @@ impl Point {
             Point::ArtifactIo => 1,
             Point::ChecksumFlip => 2,
             Point::SlowExec => 3,
+            Point::NetDrop => 4,
+            Point::NetStall => 5,
         }
     }
 
@@ -57,11 +65,20 @@ impl Point {
             Point::ArtifactIo => "artifact_io",
             Point::ChecksumFlip => "checksum_flip",
             Point::SlowExec => "slow_exec",
+            Point::NetDrop => "net_drop",
+            Point::NetStall => "net_stall",
         }
     }
 
     pub fn all() -> [Point; Point::COUNT] {
-        [Point::KernelPanic, Point::ArtifactIo, Point::ChecksumFlip, Point::SlowExec]
+        [
+            Point::KernelPanic,
+            Point::ArtifactIo,
+            Point::ChecksumFlip,
+            Point::SlowExec,
+            Point::NetDrop,
+            Point::NetStall,
+        ]
     }
 
     pub fn parse(s: &str) -> Option<Point> {
@@ -162,8 +179,14 @@ fn parse_arm(part: &str, clause: &str) -> Result<Arm, String> {
 /// plan is installed.
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static PLAN: Mutex<Option<ArmedPlan>> = Mutex::new(None);
-static FIRED: [AtomicU64; Point::COUNT] =
-    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+static FIRED: [AtomicU64; Point::COUNT] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
 static SESSION: Mutex<()> = Mutex::new(());
 
 struct ArmedState {
@@ -316,6 +339,24 @@ pub fn checksum_flip(key: &str, bytes: &mut [u8]) {
     }
 }
 
+/// Net-drop injection point: `true` when a network response should be
+/// dropped in flight. Pure decision — the siting (skipping the frame
+/// write) lives in [`crate::net::server`], so firing exercises the shard
+/// router's real timeout-and-retry path, not a simulation of it.
+#[inline]
+pub fn net_drop(key: &str) -> bool {
+    enabled() && should_fire(Point::NetDrop, key)
+}
+
+/// Net-stall injection point: sleeps [`STALL`] before a network write when
+/// armed for this key (slow-peer pressure, no error).
+#[inline]
+pub fn net_stall(key: &str) {
+    if enabled() && should_fire(Point::NetStall, key) {
+        std::thread::sleep(STALL);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +389,26 @@ mod tests {
         // a target may itself contain '@' (engine-qualified keys)
         let p = FaultPlan::parse("kernel_panic@csr@victim", 1).unwrap();
         assert_eq!(p.injections[0].target.as_deref(), Some("csr@victim"));
+
+        // PR 10 network points ride the same grammar: targets are shard
+        // names, arms are unchanged
+        let p = FaultPlan::parse("net_drop@shard-0:rate=0.05; net_stall@shard-1:nth=3", 5).unwrap();
+        assert_eq!(p.injections.len(), 2);
+        assert_eq!(p.injections[0].point, Point::NetDrop);
+        assert_eq!(p.injections[0].target.as_deref(), Some("shard-0"));
+        assert_eq!(p.injections[0].arm, Arm::Rate(0.05));
+        assert_eq!(p.injections[1].point, Point::NetStall);
+        assert_eq!(p.injections[1].arm, Arm::Nth(3));
+    }
+
+    #[test]
+    fn net_point_parse_stays_all_or_nothing() {
+        // one bad arm in a spec that also names the new points rejects the
+        // whole plan — nothing is armed
+        for bad in ["net_drop:rate=2.0", "net_stall:nth=0; kernel_panic", "net_drop@"] {
+            assert!(FaultPlan::parse(bad, 1).is_err(), "'{bad}' must be rejected");
+        }
+        assert!(!enabled());
     }
 
     #[test]
@@ -382,6 +443,25 @@ mod tests {
         let mut bytes = [1u8, 2, 3];
         checksum_flip("any", &mut bytes);
         assert_eq!(bytes, [1, 2, 3]);
+        assert!(!net_drop("any"));
+        net_stall("any"); // must not stall
+    }
+
+    #[test]
+    fn net_points_fire_and_count_like_the_rest() {
+        let _s = session_guard();
+        let _d = Disarm;
+        install(&FaultPlan::parse("net_drop@shard-0:nth=2", 3).unwrap());
+        assert!(!net_drop("net@shard-0"));
+        assert!(net_drop("net@shard-0"), "second targeted hit fires");
+        assert!(!net_drop("net@shard-1"), "untargeted shard never fires");
+        assert_eq!(fired(Point::NetDrop), 1);
+
+        install(&FaultPlan::parse("net_stall:nth=1", 3).unwrap());
+        let t0 = std::time::Instant::now();
+        net_stall("net@shard-0");
+        assert!(t0.elapsed() >= STALL, "armed net_stall must stall at least STALL");
+        assert_eq!(fired(Point::NetStall), 1);
     }
 
     #[test]

@@ -59,9 +59,20 @@
 //!   reply channel, panic containment at the engine-dispatch boundary,
 //!   and per-matrix circuit breakers with CSR fallback and quarantine.
 //! * [`fault`] — deterministic, seeded fault injection (kernel panic,
-//!   artifact IO error, checksum flip, slow-exec stall), zero-cost when
-//!   disabled. Surfaces as `--fault-plan` on `serve`/`experiment` and
-//!   drives `experiment chaos`.
+//!   artifact IO error, checksum flip, slow-exec stall, network response
+//!   drop/stall), zero-cost when disabled. Surfaces as `--fault-plan` on
+//!   `serve`/`experiment` and drives `experiment chaos` / `experiment load`.
+//! * [`net`] — the network serving layer: a length-prefixed binary wire
+//!   protocol (versioned, checksummed frames; hostile bytes are typed
+//!   errors, never panics), a TCP server per coordinator with bounded
+//!   per-connection in-flight windows and read/write deadlines, and a
+//!   multiplexed client whose dead-connection semantics (fail pending
+//!   exactly once, suppress late duplicates) the shard router builds on.
+//! * [`shard`] — a consistent-hash router over N served coordinators:
+//!   fingerprint-placed replication, breaker-probed shard health,
+//!   idempotent request ids with replica failover (zero lost, zero
+//!   duplicated), abrupt kill for chaos and ordered graceful drain
+//!   through the QoS shutdown path. Surfaces as `experiment load`.
 //! * [`bench`] — the experiment harness behind `benches/` and the CLI,
 //!   including the perf observatory (`bench::harness`): declarative suite
 //!   specs, a versioned results history under `results/history/`, and the
@@ -75,10 +86,12 @@ pub mod gen;
 pub mod gpumodel;
 pub mod hrpb;
 pub mod loadbalance;
+pub mod net;
 pub mod planner;
 pub mod qos;
 pub mod reorder;
 pub mod runtime;
+pub mod shard;
 pub mod spmm;
 pub mod synergy;
 pub mod trace;

@@ -31,7 +31,7 @@
 //!                                           # report between two snapshots
 //! cutespmm experiment <fig2|fig7|fig9|fig10|table1|table2|table3|table4|
 //!                      preproc|prep|ablation-tiles|ablation-balance|auto|
-//!                      qos|exec|reorder|trace|geometry|chaos|all>
+//!                      qos|exec|reorder|trace|geometry|chaos|load|all>
 //!                      [--quick] [--out-dir DIR]
 //!                      [--fault-plan SPEC] [--chaos-seed N]
 //!                                           # exec: pool + column-slab
@@ -50,8 +50,12 @@
 //!                                           # containment, breakers,
 //!                                           # quarantine, recovery, emits
 //!                                           # results/BENCH_PR9.json
+//!                                           # load: closed-loop clients vs
+//!                                           # the shard router — RPS, tail
+//!                                           # latency, shard-kill failover,
+//!                                           # emits results/BENCH_PR10.json
 //!                                           # prep/qos/auto/exec/reorder/
-//!                                           # trace/geometry/chaos also
+//!                                           # trace/geometry/chaos/load also
 //!                                           # append a schema-v1 entry to
 //!                                           # results/history/
 //! cutespmm experiment diff [--against ID|FILE] [--slip PCT] [--json]
@@ -983,11 +987,11 @@ fn cmd_selfcheck(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// The eight suites the perf observatory tracks: they run through
+/// The nine suites the perf observatory tracks: they run through
 /// [`harness::run_suite`] (same reports, same `BENCH_*.json` artifacts)
 /// and additionally append to `results/history/`.
-const HARNESS_SUITES: [&str; 8] =
-    ["prep", "auto", "qos", "exec", "reorder", "trace", "geometry", "chaos"];
+const HARNESS_SUITES: [&str; 9] =
+    ["prep", "auto", "qos", "exec", "reorder", "trace", "geometry", "chaos", "load"];
 
 fn cmd_experiment(args: &Args) -> Result<(), String> {
     // --out-dir relocates every CSV/JSON artifact, including the history
@@ -1090,7 +1094,7 @@ fn cmd_experiment_diff(args: &Args) -> Result<(), String> {
     let slip_override = args.get("slip").and_then(|v| v.parse::<f64>().ok());
     let current_id = history::latest().ok_or(
         "no history entries yet; run `cutespmm experiment all --quick` (or any of \
-         prep/auto/qos/exec/reorder/trace/geometry/chaos) first",
+         prep/auto/qos/exec/reorder/trace/geometry/chaos/load) first",
     )?;
     let current = history::load(&current_id)?;
     let (base, cur) = if args.has("inject-slip") {
@@ -1165,6 +1169,9 @@ fn usage() -> &'static str {
      fault tolerance: `experiment chaos --quick` runs the deterministic fault-injection \
      harness (containment, breakers, quarantine, recovery), and `serve`/`experiment` \
      accept `--fault-plan \"point[@target][:rate=R|:nth=N][;...]\" [--chaos-seed N]`\n\
+     network serving: `experiment load --quick` drives concurrent closed-loop clients \
+     over the sharded wire protocol (sustained RPS, p50/p99/p99.9, bounded queues, \
+     shard-kill failover with zero lost/duplicated, net_stall/net_drop faults)\n\
      see the module docs at the top of rust/src/main.rs for flag details"
 }
 

@@ -1,0 +1,34 @@
+//! Network serving layer: a length-prefixed binary wire protocol in front
+//! of the [`crate::coordinator`].
+//!
+//! Layers, bottom up:
+//!
+//! - [`frame`] — versioned, checksummed, length-prefixed frames with a
+//!   hard size cap. Hostile bytes are typed [`frame::FrameError`]s, and
+//!   every *recoverable* error leaves the stream aligned on the next
+//!   frame (the proptests in `frame::tests` pin this).
+//! - [`wire`] — request/response payload encoding (matrix name + dense B
+//!   operand in; result C or a [`crate::coordinator::ServeError`] with
+//!   its stable numeric code out).
+//! - [`server`] — a TCP listener per coordinator: per-connection
+//!   reader/writer pairs with a bounded in-flight window (backpressure,
+//!   never an unbounded queue), read/write deadlines, `net_drop` /
+//!   `net_stall` chaos hooks, and both graceful ([`server::Server::drain`])
+//!   and abrupt ([`server::Server::kill`]) shutdown.
+//! - [`client`] — a multiplexed connection: many in-flight requests share
+//!   one stream, correlated by caller-owned request ids; a dead
+//!   connection fails every pending request with a typed transport error
+//!   and suppresses late duplicate responses.
+//!
+//! The [`crate::shard`] router composes N of these into a
+//! consistent-hashed, replicated service.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod wire;
+
+pub use client::{CallResult, Connection};
+pub use frame::{FrameError, FrameKind};
+pub use server::{NetCounters, Server, ServerConfig};
+pub use wire::{WireError, WireOk, WireRequest, WireResponse};

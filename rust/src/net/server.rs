@@ -1,0 +1,543 @@
+//! TCP front-end for one [`Coordinator`]: per-connection handlers with a
+//! bounded in-flight window and read/write deadlines.
+//!
+//! Robustness contract (the SNIPPETS.md #1 failure catalog, inverted):
+//!
+//! - **Bounded everything.** Each connection's in-flight window is a
+//!   `sync_channel(window)` between its reader and writer half — when the
+//!   window is full the reader stops pulling frames, which backs pressure
+//!   up the TCP receive buffer to the client. No unbounded queue exists on
+//!   the request path.
+//! - **Hostile bytes are typed errors.** A recoverable frame error
+//!   (checksum flip, future version, oversized, unknown kind) produces a
+//!   `ServeError::Protocol` *response* and the connection keeps serving;
+//!   an unsyncable or dead stream (bad magic, truncation, IO) closes only
+//!   that connection. Nothing panics the process.
+//! - **Deadlines.** Idle connections are polled with a non-consuming
+//!   `peek` under the read timeout (so the reader notices a stop request);
+//!   a peer that stalls *mid-frame* past the read deadline is
+//!   disconnected, and slow readers are bounded by the write deadline.
+//! - **Two shutdown shapes.** [`Server::drain`] funnels through the
+//!   coordinator's QoS shutdown path — every admitted request completes or
+//!   is typed-rejected, and every produced response is written before the
+//!   listener closes. [`Server::kill`] is the chaos path: sockets are cut
+//!   first so unwritten responses are genuinely lost, which is what the
+//!   shard router's failover has to survive.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::frame::{self, FrameKind};
+use super::wire::{self, WireOk, WireResponse};
+use crate::coordinator::{Coordinator, Response, ServeError};
+use crate::fault;
+use crate::qos::Priority;
+
+/// Per-server tuning. `name` keys the `net_drop@name` / `net_stall@name`
+/// fault points, so chaos specs can target one shard.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Fault-injection key; shards use "shard-N".
+    pub name: String,
+    /// Max responses in flight per connection before the reader stops
+    /// pulling frames (TCP backpressure).
+    pub window: usize,
+    /// Idle-poll tick *and* mid-frame stall bound for the reader half.
+    pub read_timeout: Duration,
+    /// Bound on a blocked write to a slow or dead peer.
+    pub write_timeout: Duration,
+    /// Deadline applied to requests that arrive with `deadline_us == 0`.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            name: "server".into(),
+            window: 64,
+            read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(2),
+            default_deadline: None,
+        }
+    }
+}
+
+/// Wire-visible counters (drained by the load experiment's report).
+#[derive(Default)]
+pub struct NetCounters {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub protocol_errors: AtomicU64,
+    /// Responses deliberately not written by the `net_drop` fault point.
+    pub dropped_writes: AtomicU64,
+}
+
+/// One writer-queue item. FIFO through the window: pongs and protocol
+/// errors share the response path, so a saturated window honestly shows
+/// up in probe latency.
+enum ConnItem {
+    /// An admitted request: id + the coordinator's reply channel.
+    Done(u64, Receiver<Result<Response, ServeError>>),
+    /// An immediately-known response (protocol error, unknown matrix...).
+    Reply(WireResponse),
+    Pong(Vec<u8>),
+}
+
+/// A listening server bound to one coordinator.
+pub struct Server {
+    coord: Arc<Coordinator>,
+    cfg: ServerConfig,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    /// Dup handles of every live connection socket, for abrupt kill.
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind a loopback listener on an ephemeral port and start accepting.
+    pub fn start(coord: Arc<Coordinator>, cfg: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(NetCounters::default());
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let threads = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let coord = Arc::clone(&coord);
+            let cfg = cfg.clone();
+            let stop = Arc::clone(&stop);
+            let counters = Arc::clone(&counters);
+            let conns = Arc::clone(&conns);
+            let threads = Arc::clone(&threads);
+            std::thread::spawn(move || {
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = incoming else { continue };
+                    counters.connections.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(dup) = stream.try_clone() {
+                        conns.lock().unwrap_or_else(|p| p.into_inner()).push(dup);
+                    }
+                    let handles = spawn_connection(
+                        stream,
+                        Arc::clone(&coord),
+                        cfg.clone(),
+                        Arc::clone(&stop),
+                        Arc::clone(&counters),
+                    );
+                    threads.lock().unwrap_or_else(|p| p.into_inner()).extend(handles);
+                }
+            })
+        };
+        Ok(Server { coord, cfg, addr, stop, counters, conns, threads, accept: Some(accept) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coord
+    }
+
+    pub fn counters(&self) -> &NetCounters {
+        &self.counters
+    }
+
+    /// Fault-injection key for this server's network points.
+    pub fn fault_key(&self) -> String {
+        format!("net@{}", self.cfg.name)
+    }
+
+    /// Stop accepting and join the accept thread + all connection threads.
+    /// Readers notice `stop` within one read-timeout tick; writers flush
+    /// whatever their reader enqueued before exiting.
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<_> =
+            self.threads.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        self.conns.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    /// Graceful drain: complete or typed-reject everything in flight via
+    /// the coordinator's QoS shutdown path, write every produced response,
+    /// then close the listener. Zero accepted-then-unanswered requests.
+    pub fn drain(mut self) {
+        // 1. all admitted work resolves (responses or typed shutdown
+        //    rejections land on the per-request reply channels)
+        self.coord.drain();
+        // 2. readers exit on the next idle tick; writers drain their
+        //    windows — every resolved response crosses the wire
+        self.stop_and_join();
+        // Server drops here, closing the listener last.
+    }
+
+    /// Abrupt chaos kill: cut every connection socket *first*, so
+    /// responses that were computed but not yet written are genuinely
+    /// lost, then reap threads. This is the failure the shard router's
+    /// idempotent failover must absorb.
+    pub fn kill(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for c in self.conns.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        self.stop_and_join();
+        // reap coordinator threads only after the sockets are dead —
+        // nothing it finishes now can reach a client
+        self.coord.drain();
+    }
+}
+
+/// Spawn the reader + writer halves for one accepted connection.
+fn spawn_connection(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let write_half = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return Vec::new(),
+    };
+    let _ = write_half.set_write_timeout(Some(cfg.write_timeout));
+    let (tx, rx) = sync_channel::<ConnItem>(cfg.window.max(1));
+    let fault_key = format!("net@{}", cfg.name);
+    let reader = {
+        let counters = Arc::clone(&counters);
+        std::thread::spawn(move || reader_loop(stream, coord, cfg, stop, counters, tx))
+    };
+    let writer = std::thread::spawn(move || writer_loop(write_half, rx, counters, fault_key));
+    vec![reader, writer]
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    coord: Arc<Coordinator>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    tx: SyncSender<ConnItem>,
+) {
+    let mut probe = [0u8; 1];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // non-consuming idle poll: a timeout here means "no frame yet",
+        // with the stream still aligned on a frame boundary
+        match stream.peek(&mut probe) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+        // a frame has started: from here the read deadline bounds a
+        // mid-frame stall (frame::decode surfaces it as a fatal Io error)
+        match frame::decode(&mut stream) {
+            Ok((FrameKind::Ping, payload)) => {
+                if tx.send(ConnItem::Pong(payload)).is_err() {
+                    break;
+                }
+            }
+            Ok((FrameKind::Request, payload)) => {
+                counters.requests.fetch_add(1, Ordering::Relaxed);
+                let item = handle_request(&coord, &cfg, &counters, &payload);
+                if tx.send(item).is_err() {
+                    break;
+                }
+            }
+            // a client has no business sending Response/Pong frames; a
+            // typed complaint keeps the connection diagnosable
+            Ok((kind, _)) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let err = ServeError::Protocol {
+                    detail: format!("unexpected {kind:?} frame from client"),
+                };
+                let reply = WireResponse { request_id: 0, body: Err(err) };
+                if tx.send(ConnItem::Reply(reply)).is_err() {
+                    break;
+                }
+            }
+            Err(e) if e.recoverable() => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let err = ServeError::Protocol { detail: e.to_string() };
+                let reply = WireResponse { request_id: 0, body: Err(err) };
+                if tx.send(ConnItem::Reply(reply)).is_err() {
+                    break;
+                }
+            }
+            // Closed / Truncated / BadMagic / Io: the stream is
+            // unsyncable or dead — close this connection only
+            Err(_) => break,
+        }
+    }
+    // dropping tx lets the writer flush the remaining window, then exit
+}
+
+/// Decode one request payload and route it into the coordinator. Always
+/// returns an item — hostile payloads become typed protocol errors.
+fn handle_request(
+    coord: &Arc<Coordinator>,
+    cfg: &ServerConfig,
+    counters: &Arc<NetCounters>,
+    payload: &[u8],
+) -> ConnItem {
+    let req = match wire::decode_request(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            // best-effort id echo so the client can fail the right call:
+            // the id is the first 8 bytes and most wire errors are
+            // downstream of it
+            let id = payload
+                .get(..8)
+                .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                .unwrap_or(0);
+            let err = ServeError::Protocol { detail: format!("bad request payload: {e}") };
+            return ConnItem::Reply(WireResponse { request_id: id, body: Err(err) });
+        }
+    };
+    let Some(entry) = coord.registry().by_name(&req.matrix) else {
+        // name-keyed miss: the numeric-id space has no entry to point at,
+        // so the sentinel id marks "unknown by name"
+        let err = ServeError::UnknownMatrix(crate::coordinator::MatrixId(u64::MAX));
+        return ConnItem::Reply(WireResponse { request_id: req.request_id, body: Err(err) });
+    };
+    let deadline = if req.deadline_us == 0 {
+        cfg.default_deadline
+    } else {
+        Some(Duration::from_micros(req.deadline_us))
+    };
+    // submit_with folds admission rejections into the reply channel, so
+    // the writer half sees exactly one resolution per admitted request
+    let rx = coord.submit_with(entry.id, req.b, req.priority, deadline);
+    ConnItem::Done(req.request_id, rx)
+}
+
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<ConnItem>,
+    counters: Arc<NetCounters>,
+    fault_key: String,
+) {
+    for item in rx {
+        let (kind, payload) = match item {
+            ConnItem::Pong(body) => (FrameKind::Pong, body),
+            ConnItem::Reply(resp) => (FrameKind::Response, wire::encode_response(&resp)),
+            ConnItem::Done(id, reply) => {
+                let body = match reply.recv() {
+                    Ok(Ok(resp)) => {
+                        Ok(WireOk { engine: resp.engine.to_string(), c: resp.c })
+                    }
+                    Ok(Err(e)) => Err(e),
+                    // reply sender dropped without a verdict: shutdown
+                    // raced the request
+                    Err(_) => Err(ServeError::Shutdown),
+                };
+                let resp = WireResponse { request_id: id, body };
+                (FrameKind::Response, wire::encode_response(&resp))
+            }
+        };
+        // chaos hooks: a stalled or dropped *response* — exactly the
+        // partition shapes the shard router must absorb
+        fault::net_stall(&fault_key);
+        if kind == FrameKind::Response && fault::net_drop(&fault_key) {
+            counters.dropped_writes.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        if frame::write_frame(&mut stream, kind, &payload).is_err() {
+            // dead peer: stop writing; the reader half notices on its
+            // next peek and winds the connection down
+            break;
+        }
+        if kind == FrameKind::Response {
+            counters.responses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Config;
+    use crate::formats::{Coo, Dense};
+    use crate::net::wire::WireRequest;
+    use crate::qos::QosConfig;
+    use crate::util::rng::Rng;
+
+    fn qos_config() -> Config {
+        Config {
+            workers: 2,
+            qos: Some(QosConfig {
+                queue_capacity: 64,
+                watermark_s: 0.0,
+                default_deadline: None,
+            }),
+            ..Default::default()
+        }
+    }
+
+    fn served_server() -> (Server, String) {
+        let coord = Arc::new(Coordinator::start(qos_config(), None));
+        let coo = Coo::random(64, 96, 0.05, &mut Rng::new(7));
+        coord.register("m0", &coo);
+        let cfg = ServerConfig { name: "test".into(), ..Default::default() };
+        (Server::start(coord, cfg).expect("bind loopback"), "m0".into())
+    }
+
+    fn send_request(stream: &mut TcpStream, id: u64, matrix: &str, b: Dense) {
+        let req = WireRequest {
+            request_id: id,
+            priority: Priority::Normal,
+            deadline_us: 0,
+            matrix: matrix.into(),
+            b,
+        };
+        frame::write_frame(stream, FrameKind::Request, &wire::encode_request(&req)).unwrap();
+    }
+
+    fn read_response(stream: &mut TcpStream) -> WireResponse {
+        let (kind, payload) = frame::decode(stream).expect("response frame");
+        assert_eq!(kind, FrameKind::Response);
+        wire::decode_response(&payload).expect("decodable response")
+    }
+
+    #[test]
+    fn serves_requests_and_pings_over_tcp() {
+        let (server, matrix) = served_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // ping → pong with the payload echoed
+        frame::write_frame(&mut stream, FrameKind::Ping, b"probe-1").unwrap();
+        let (kind, body) = frame::decode(&mut stream).unwrap();
+        assert_eq!(kind, FrameKind::Pong);
+        assert_eq!(body, b"probe-1");
+        // request → computed response
+        let b = Dense::random(96, 8, &mut Rng::new(3));
+        send_request(&mut stream, 41, &matrix, b);
+        let resp = read_response(&mut stream);
+        assert_eq!(resp.request_id, 41);
+        let ok = resp.body.expect("served ok");
+        assert_eq!(ok.c.rows, 64);
+        assert_eq!(ok.c.cols, 8);
+        server.drain();
+    }
+
+    #[test]
+    fn hostile_frames_get_typed_errors_and_the_connection_survives() {
+        let (server, matrix) = served_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // a bit-flipped frame: typed protocol error back
+        let mut bad = frame::encode(FrameKind::Request, b"some payload");
+        let n = bad.len();
+        bad[n - 1] ^= 0x40;
+        stream.write_all(&bad).unwrap();
+        let resp = read_response(&mut stream);
+        let err = resp.body.expect_err("protocol error");
+        assert_eq!(err.kind(), "protocol");
+        assert!(err.is_transport());
+        // an unknown matrix: typed error with the request id echoed
+        send_request(&mut stream, 77, "no-such-matrix", Dense::zeros(96, 2));
+        let resp = read_response(&mut stream);
+        assert_eq!(resp.request_id, 77);
+        assert_eq!(resp.body.expect_err("unknown").kind(), "unknown_matrix");
+        // the same connection still serves real work
+        send_request(&mut stream, 78, &matrix, Dense::random(96, 4, &mut Rng::new(5)));
+        let resp = read_response(&mut stream);
+        assert_eq!(resp.request_id, 78);
+        assert!(resp.body.is_ok());
+        assert!(server.counters().protocol_errors.load(Ordering::Relaxed) >= 1);
+        server.drain();
+    }
+
+    #[test]
+    fn drain_answers_every_accepted_request_before_closing() {
+        let (server, matrix) = served_server();
+        let addr = server.addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        for id in 0..8u64 {
+            send_request(&mut stream, id, &matrix, Dense::random(96, 4, &mut Rng::new(id)));
+        }
+        // wait until the reader half has admitted all 8 into the
+        // coordinator (drain guarantees cover *accepted* work; bytes
+        // still in the kernel buffer are legitimately refused)
+        let coord = Arc::clone(server.coordinator());
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while coord.metrics().requests.load(Ordering::Relaxed) < 8 {
+            assert!(std::time::Instant::now() < deadline, "reader never admitted the batch");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        server.drain();
+        // every accepted request resolved — as a result or a typed
+        // shutdown rejection — and was written before the listener closed
+        let mut got = Vec::new();
+        for _ in 0..8 {
+            let resp = read_response(&mut stream);
+            match resp.body {
+                Ok(_) => got.push(resp.request_id),
+                Err(e) => {
+                    assert!(matches!(e.kind(), "shed" | "shutdown"), "unexpected {e}");
+                    got.push(resp.request_id);
+                }
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        // the port is closed afterwards
+        assert!(
+            TcpStream::connect(addr).is_err()
+                || frame::decode(&mut TcpStream::connect(addr).unwrap())
+                    .err()
+                    .map(|e| !e.recoverable())
+                    .unwrap_or(false)
+        );
+    }
+
+    #[test]
+    fn kill_cuts_connections_abruptly() {
+        let (server, _matrix) = served_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        frame::write_frame(&mut stream, FrameKind::Ping, b"pre-kill").unwrap();
+        let (kind, _) = frame::decode(&mut stream).unwrap();
+        assert_eq!(kind, FrameKind::Pong);
+        server.kill();
+        // the socket dies: subsequent reads surface a terminal error, not
+        // a hang (drain-style pleasantries are exactly what kill skips)
+        let err = loop {
+            match frame::decode(&mut stream) {
+                Ok(_) => continue, // a response already in flight
+                Err(e) => break e,
+            }
+        };
+        assert!(!err.recoverable(), "expected terminal error, got {err:?}");
+    }
+}

@@ -1,0 +1,350 @@
+//! Payload encoding for [`frame`](super::frame) frames: requests carry a
+//! matrix name + dense B operand, responses carry either a result C or a
+//! [`ServeError`] with its stable numeric wire code.
+//!
+//! Layouts (all integers little-endian):
+//!
+//! ```text
+//! Request payload
+//!   0       8   request id (u64) — idempotency key for replica failover
+//!   8       1   priority (0 = normal, 1 = high)
+//!   9       8   deadline in µs from receipt (u64, 0 = none)
+//!   17      2   matrix-name length (u16), then that many UTF-8 bytes
+//!   ..      4   B rows (u32)
+//!   ..      4   B cols (u32)
+//!   ..      4n  B data, row-major f32
+//!
+//! Response payload
+//!   0       8   request id (u64)
+//!   8       2   status (u16): 0 = ok, else ServeError::code()
+//!   ok body:    engine-name length (u16) + UTF-8, C rows (u32),
+//!               C cols (u32), C data row-major f32
+//!   err body:   ServeError::to_json() as UTF-8 JSON text
+//! ```
+//!
+//! Decoding is cursor-based and total: every malformed payload is a typed
+//! [`WireError`], which the server degrades to `ServeError::Protocol` —
+//! hostile bytes never panic the handler.
+
+use crate::coordinator::ServeError;
+use crate::formats::Dense;
+use crate::qos::Priority;
+use crate::util::json;
+
+/// A decoded request payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub request_id: u64,
+    pub priority: Priority,
+    /// Deadline budget in microseconds from receipt; 0 means "use the
+    /// server's default".
+    pub deadline_us: u64,
+    pub matrix: String,
+    pub b: Dense,
+}
+
+/// A decoded response payload.
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    pub request_id: u64,
+    pub body: Result<WireOk, ServeError>,
+}
+
+/// The success body of a response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireOk {
+    pub engine: String,
+    pub c: Dense,
+}
+
+/// Typed decode failures for payload bytes (frame-level integrity is
+/// already guaranteed by the checksum; these catch *structural* garbage).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireError {
+    /// Payload ended before a fixed-width field.
+    Short { field: &'static str, needed: usize, remaining: usize },
+    /// Priority byte outside {0, 1}.
+    BadPriority(u8),
+    /// A length-prefixed string was not valid UTF-8.
+    BadUtf8 { field: &'static str },
+    /// The f32 data section does not match rows × cols.
+    DataMismatch { rows: usize, cols: usize, floats: usize },
+    /// An error-status response whose JSON body did not parse back into a
+    /// known [`ServeError`] code.
+    BadErrorBody { status: u16 },
+    /// Rows × cols would overflow or exceeds the frame budget.
+    AbsurdShape { rows: usize, cols: usize },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Short { field, needed, remaining } => {
+                write!(f, "payload too short for {field}: needed {needed}, have {remaining}")
+            }
+            WireError::BadPriority(p) => write!(f, "invalid priority byte {p}"),
+            WireError::BadUtf8 { field } => write!(f, "{field} is not valid utf-8"),
+            WireError::DataMismatch { rows, cols, floats } => {
+                write!(f, "data section has {floats} floats for a {rows}x{cols} operand")
+            }
+            WireError::BadErrorBody { status } => {
+                write!(f, "undecodable error body for status code {status}")
+            }
+            WireError::AbsurdShape { rows, cols } => {
+                write!(f, "absurd operand shape {rows}x{cols}")
+            }
+        }
+    }
+}
+
+/// Reject shapes whose data section could not possibly fit in a frame —
+/// stops a hostile header from driving a huge allocation before the
+/// length check.
+const MAX_ELEMS: usize = super::frame::MAX_FRAME / 4;
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], WireError> {
+        let remaining = self.buf.len() - self.pos;
+        if remaining < n {
+            return Err(WireError::Short { field, needed: n, remaining });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, field: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    fn u16(&mut self, field: &'static str) -> Result<u16, WireError> {
+        let b = self.take(2, field)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, field: &'static str) -> Result<u32, WireError> {
+        let b = self.take(4, field)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, field: &'static str) -> Result<u64, WireError> {
+        let b = self.take(8, field)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn string(&mut self, field: &'static str) -> Result<String, WireError> {
+        let len = self.u16(field)? as usize;
+        let bytes = self.take(len, field)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8 { field })
+    }
+
+    fn dense(&mut self, field: &'static str) -> Result<Dense, WireError> {
+        let rows = self.u32(field)? as usize;
+        let cols = self.u32(field)? as usize;
+        let elems = rows.checked_mul(cols).filter(|&e| e <= MAX_ELEMS);
+        let Some(elems) = elems else {
+            return Err(WireError::AbsurdShape { rows, cols });
+        };
+        let remaining = (self.buf.len() - self.pos) / 4;
+        if remaining < elems {
+            return Err(WireError::DataMismatch { rows, cols, floats: remaining });
+        }
+        let raw = self.take(elems * 4, field)?;
+        let mut data = Vec::with_capacity(elems);
+        for chunk in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(Dense { rows, cols, data })
+    }
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    // names are short identifiers; a >64 KiB name is a caller bug
+    assert!(s.len() <= u16::MAX as usize, "wire string too long");
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_dense(out: &mut Vec<u8>, d: &Dense) {
+    out.extend_from_slice(&(d.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(d.cols as u32).to_le_bytes());
+    out.reserve(d.data.len() * 4);
+    for &v in &d.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + req.matrix.len() + req.b.data.len() * 4);
+    out.extend_from_slice(&req.request_id.to_le_bytes());
+    out.push(match req.priority {
+        Priority::Normal => 0,
+        Priority::High => 1,
+    });
+    out.extend_from_slice(&req.deadline_us.to_le_bytes());
+    put_string(&mut out, &req.matrix);
+    put_dense(&mut out, &req.b);
+    out
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<WireRequest, WireError> {
+    let mut c = Cursor::new(payload);
+    let request_id = c.u64("request_id")?;
+    let priority = match c.u8("priority")? {
+        0 => Priority::Normal,
+        1 => Priority::High,
+        p => return Err(WireError::BadPriority(p)),
+    };
+    let deadline_us = c.u64("deadline_us")?;
+    let matrix = c.string("matrix")?;
+    let b = c.dense("b")?;
+    Ok(WireRequest { request_id, priority, deadline_us, matrix, b })
+}
+
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&resp.request_id.to_le_bytes());
+    match &resp.body {
+        Ok(ok) => {
+            out.extend_from_slice(&0u16.to_le_bytes());
+            put_string(&mut out, &ok.engine);
+            put_dense(&mut out, &ok.c);
+        }
+        Err(e) => {
+            out.extend_from_slice(&e.code().to_le_bytes());
+            out.extend_from_slice(e.to_json().to_string().as_bytes());
+        }
+    }
+    out
+}
+
+pub fn decode_response(payload: &[u8]) -> Result<WireResponse, WireError> {
+    let mut c = Cursor::new(payload);
+    let request_id = c.u64("request_id")?;
+    let status = c.u16("status")?;
+    if status == 0 {
+        let engine = c.string("engine")?;
+        let c_mat = c.dense("c")?;
+        return Ok(WireResponse { request_id, body: Ok(WireOk { engine, c: c_mat }) });
+    }
+    let rest = &c.buf[c.pos..];
+    let text = std::str::from_utf8(rest).map_err(|_| WireError::BadUtf8 { field: "error" })?;
+    let err = json::parse(text)
+        .ok()
+        .as_ref()
+        .and_then(ServeError::from_json)
+        .ok_or(WireError::BadErrorBody { status })?;
+    Ok(WireResponse { request_id, body: Err(err) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::RejectReason;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn sample_request(id: u64) -> WireRequest {
+        let mut rng = Rng::new(id ^ 0xd00d);
+        let b = Dense::from_vec(4, 3, (0..12).map(|_| rng.f32()).collect());
+        WireRequest {
+            request_id: id,
+            priority: if id % 2 == 0 { Priority::Normal } else { Priority::High },
+            deadline_us: id * 1000,
+            matrix: format!("banded-{id}"),
+            b,
+        }
+    }
+
+    #[test]
+    fn requests_round_trip_bit_exactly() {
+        for id in 0..8 {
+            let req = sample_request(id);
+            let back = decode_request(&encode_request(&req)).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn ok_responses_round_trip() {
+        let c = Dense::from_vec(2, 2, vec![1.0, -2.5, f32::MIN_POSITIVE, 3.0e8]);
+        let resp = WireResponse {
+            request_id: 42,
+            body: Ok(WireOk { engine: "csr-fallback".into(), c: c.clone() }),
+        };
+        let back = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(back.request_id, 42);
+        let ok = back.body.unwrap();
+        assert_eq!(ok.engine, "csr-fallback");
+        assert_eq!(ok.c, c);
+    }
+
+    #[test]
+    fn error_responses_carry_the_typed_serve_error() {
+        let errs = [
+            ServeError::UnknownMatrix(crate::coordinator::MatrixId(99)),
+            ServeError::Quarantined { matrix: "poisoned".into() },
+            ServeError::Shed(crate::qos::Rejected {
+                reason: RejectReason::Overload,
+                est_wait: Duration::from_micros(1500),
+                priority: Priority::Normal,
+            }),
+            ServeError::Protocol { detail: "bad checksum".into() },
+        ];
+        for e in errs {
+            let resp = WireResponse { request_id: 7, body: Err(e.clone()) };
+            let back = decode_response(&encode_response(&resp)).unwrap();
+            assert_eq!(back.request_id, 7);
+            let back_err = back.body.unwrap_err();
+            assert_eq!(back_err.code(), e.code());
+            assert_eq!(back_err.kind(), e.kind());
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_yield_typed_wire_errors_not_panics() {
+        // short everywhere: every prefix of a valid request decodes to a
+        // typed error
+        let full = encode_request(&sample_request(3));
+        for cut in 0..full.len() {
+            assert!(decode_request(&full[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // bad priority byte
+        let mut bad = full.clone();
+        bad[8] = 9;
+        assert_eq!(decode_request(&bad).unwrap_err(), WireError::BadPriority(9));
+        // invalid utf-8 in the matrix name
+        let mut bad = full.clone();
+        bad[19] = 0xFF; // first name byte (8 id + 1 prio + 8 deadline + 2 len)
+        assert!(matches!(
+            decode_request(&bad).unwrap_err(),
+            WireError::BadUtf8 { field: "matrix" }
+        ));
+        // absurd shape: rows/cols whose product overflows
+        let mut req = sample_request(1);
+        req.b = Dense { rows: 0, cols: 0, data: Vec::new() };
+        let mut bytes = encode_request(&req);
+        let shape_at = bytes.len() - 8;
+        bytes[shape_at..shape_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        bytes[shape_at + 4..shape_at + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_request(&bytes).unwrap_err(), WireError::AbsurdShape { .. }));
+        // error response with garbage JSON body
+        let mut resp = Vec::new();
+        resp.extend_from_slice(&1u64.to_le_bytes());
+        resp.extend_from_slice(&5u16.to_le_bytes());
+        resp.extend_from_slice(b"not json at all {{{");
+        assert_eq!(
+            decode_response(&resp).unwrap_err(),
+            WireError::BadErrorBody { status: 5 }
+        );
+    }
+}

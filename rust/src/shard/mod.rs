@@ -1,0 +1,17 @@
+//! Shard layer: a consistent-hashed, replicated router over N
+//! network-served coordinator instances ([`crate::net`]).
+//!
+//! - [`ring`] — deterministic consistent-hash ring (vnodes, splitmix64):
+//!   matrices place by [`crate::planner::fingerprint`], and every router
+//!   agrees on the placement order.
+//! - [`router`] — the [`router::ShardRouter`]: replication-aware
+//!   registration, breaker-probed shard health, idempotent request ids
+//!   with replica failover (zero lost, zero duplicated), abrupt
+//!   [`router::ShardRouter::kill_shard`] for chaos and ordered
+//!   [`router::ShardRouter::drain_shard`] through the QoS shutdown path.
+
+pub mod ring;
+pub mod router;
+
+pub use ring::Ring;
+pub use router::{DrainReport, RouterCounters, RouterSnapshot, ShardConfig, ShardRouter};

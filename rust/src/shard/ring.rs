@@ -1,0 +1,128 @@
+//! Consistent-hash ring: maps matrix fingerprints to an ordered list of
+//! distinct shards (primary first, replicas after).
+//!
+//! Virtual nodes smooth the key distribution (each shard owns many small
+//! arcs instead of one big one), and consistent hashing keeps placements
+//! stable: a matrix's primary never changes because an unrelated shard
+//! was added — exactly the property that makes Acc-SpMM-style expensive
+//! preprocessing artifacts worth replicating instead of rebuilding.
+
+/// splitmix64 — the same mixer the fault layer and planner use for
+/// deterministic, well-distributed hashing.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// A fixed-membership consistent-hash ring over `shards` shards.
+pub struct Ring {
+    /// (position, shard) pairs sorted by position.
+    vnodes: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl Ring {
+    /// Build a ring with `vnodes_per_shard` virtual nodes per shard.
+    /// Positions are deterministic (pure function of shard index), so
+    /// every router instance agrees on placement.
+    pub fn new(shards: usize, vnodes_per_shard: usize) -> Ring {
+        assert!(shards > 0, "a ring needs at least one shard");
+        let per = vnodes_per_shard.max(1);
+        let mut vnodes = Vec::with_capacity(shards * per);
+        for s in 0..shards {
+            for v in 0..per {
+                let pos = splitmix64((s as u64) << 32 | v as u64);
+                vnodes.push((pos, s));
+            }
+        }
+        vnodes.sort_unstable();
+        Ring { vnodes, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The distinct shards owning `key`, in ring order: `[0]` is the
+    /// primary, `[1]` the first replica, and so on — every shard appears
+    /// exactly once.
+    pub fn order(&self, key: u64) -> Vec<usize> {
+        let pos = splitmix64(key);
+        let start = self.vnodes.partition_point(|&(p, _)| p < pos);
+        let mut out = Vec::with_capacity(self.shards);
+        let mut seen = vec![false; self.shards];
+        for i in 0..self.vnodes.len() {
+            let (_, s) = self.vnodes[(start + i) % self.vnodes.len()];
+            if !seen[s] {
+                seen[s] = true;
+                out.push(s);
+                if out.len() == self.shards {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The primary shard for `key`.
+    pub fn primary(&self, key: u64) -> usize {
+        self.order(key)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_lists_every_shard_exactly_once() {
+        let ring = Ring::new(5, 16);
+        for key in 0..200u64 {
+            let mut order = ring.order(key * 0x9e3779b97f4a7c15);
+            assert_eq!(order.len(), 5);
+            order.sort_unstable();
+            assert_eq!(order, vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = Ring::new(4, 32);
+        let b = Ring::new(4, 32);
+        for key in 0..100u64 {
+            assert_eq!(a.order(key), b.order(key));
+        }
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let ring = Ring::new(4, 32);
+        let mut counts = [0usize; 4];
+        for key in 0..4000u64 {
+            counts[ring.primary(splitmix64(key))] += 1;
+        }
+        // with 32 vnodes/shard the spread is rough but no shard should be
+        // starved or own a majority
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 400, "shard {s} starved: {c}/4000");
+            assert!(c < 2200, "shard {s} overloaded: {c}/4000");
+        }
+    }
+
+    #[test]
+    fn replica_differs_from_primary() {
+        let ring = Ring::new(3, 16);
+        for key in 0..100u64 {
+            let order = ring.order(key.wrapping_mul(0x2545F4914F6CDD1D));
+            assert_ne!(order[0], order[1]);
+        }
+    }
+
+    #[test]
+    fn single_shard_ring_degenerates_cleanly() {
+        let ring = Ring::new(1, 8);
+        assert_eq!(ring.order(42), vec![0]);
+    }
+}

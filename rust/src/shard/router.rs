@@ -1,0 +1,891 @@
+//! Shard router: N coordinator+server instances behind one submit API,
+//! with consistent-hash placement, replication, health-probed failover,
+//! and idempotent retries.
+//!
+//! The invariant everything here serves: **every submitted request
+//! resolves exactly once** — with a served result or a typed error —
+//! no matter which shard dies, stalls, or drops responses mid-flight.
+//!
+//! - Placement: matrices hash to shards by [`crate::planner::fingerprint`]
+//!   over the [`Ring`]; the first `replicas` live shards in ring order
+//!   each register (and preprocess) the matrix, so losing one shard never
+//!   forces an HRPB rebuild on the request path.
+//! - Health: a probe loop pings every shard through the PR 9 breaker
+//!   state machine (3 consecutive probe faults open the breaker; an open
+//!   breaker re-probes every [`PROBE_INTERVAL`]-th tick) — routing
+//!   prefers breaker-closed replicas but will use any live one.
+//! - Failover: request ids are allocated once and reused across retries
+//!   (the idempotency key). Transport-shaped failures and timed-out
+//!   requests redispatch to a replica under the *same* id; the first
+//!   completion wins and late arrivals are suppressed by the outstanding
+//!   table — zero lost, zero duplicated.
+//! - Drain: [`ShardRouter::drain_shard`] re-replicates the shard's
+//!   matrices, then funnels in-flight work through the coordinator's QoS
+//!   shutdown path, and only then closes the listener (the ordering test
+//!   below pins this).
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::ring::Ring;
+use crate::coordinator::breaker::Route;
+use crate::coordinator::{
+    BatchPolicy, Breaker, BreakerState, Config, Coordinator, MatrixId, ServeError,
+};
+use crate::formats::{Coo, Dense};
+use crate::net::client::{CallResult, Connection};
+use crate::net::server::{Server, ServerConfig};
+use crate::net::wire::WireRequest;
+use crate::planner;
+use crate::qos::{Priority, QosConfig, RejectReason};
+
+/// Router tuning.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    pub shards: usize,
+    /// Replication factor: how many shards register each matrix.
+    pub replicas: usize,
+    pub workers_per_shard: usize,
+    /// Per-shard QoS admission bound.
+    pub queue_capacity: usize,
+    /// Per-shard QoS overload watermark (0.0 disables).
+    pub watermark_s: f64,
+    /// Per-connection in-flight window on each shard server.
+    pub window: usize,
+    pub batch: BatchPolicy,
+    /// Unacked requests older than this are redispatched (recovers
+    /// dropped responses).
+    pub request_timeout: Duration,
+    pub probe_interval: Duration,
+    pub probe_timeout: Duration,
+    /// Total dispatch attempts per request before a typed failure.
+    pub max_attempts: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 2,
+            replicas: 2,
+            workers_per_shard: 2,
+            queue_capacity: 512,
+            watermark_s: 0.0,
+            window: 256,
+            batch: BatchPolicy::default(),
+            request_timeout: Duration::from_secs(2),
+            probe_interval: Duration::from_millis(25),
+            probe_timeout: Duration::from_millis(500),
+            max_attempts: 4,
+        }
+    }
+}
+
+/// Monotonic counters (read by the load experiment's invariant checks).
+#[derive(Default)]
+pub struct RouterCounters {
+    pub requests: AtomicU64,
+    /// Requests resolved with a served result.
+    pub acked: AtomicU64,
+    /// Requests resolved with a typed error.
+    pub errors: AtomicU64,
+    /// Redispatches triggered by a transport-shaped completion.
+    pub failovers: AtomicU64,
+    /// Redispatches triggered by the request-timeout reaper.
+    pub retries: AtomicU64,
+    /// Late completions for already-resolved ids — would-be duplicates.
+    pub duplicates_suppressed: AtomicU64,
+}
+
+/// Plain-number snapshot of [`RouterCounters`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterSnapshot {
+    pub requests: u64,
+    pub acked: u64,
+    pub errors: u64,
+    pub failovers: u64,
+    pub retries: u64,
+    pub duplicates_suppressed: u64,
+}
+
+impl RouterCounters {
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            acked: self.acked.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            duplicates_suppressed: self.duplicates_suppressed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What [`ShardRouter::drain_shard`] did, in order — the graceful-drain
+/// ordering contract as data.
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    /// Always `["mark-draining", "replicate-matrices", "qos-drain",
+    /// "listener-closed"]` on success.
+    pub steps: Vec<&'static str>,
+    /// Matrices re-registered on a new replica because this shard held
+    /// one of their copies.
+    pub reassigned: usize,
+}
+
+type Callback = Box<dyn FnOnce(CallResult) + Send>;
+
+struct Outstanding {
+    matrix: String,
+    b: Dense,
+    priority: Priority,
+    deadline_us: u64,
+    attempts: usize,
+    /// Shards already tried for this request (avoided on retry while an
+    /// untried live replica exists).
+    tried: Vec<usize>,
+    dispatched_at: Instant,
+    done: Callback,
+}
+
+struct Placement {
+    /// Ring-ordered shard indices holding this matrix.
+    targets: Vec<usize>,
+}
+
+struct Shard {
+    name: String,
+    addr: SocketAddr,
+    coord: Arc<Coordinator>,
+    conn: Connection,
+    breaker: Breaker,
+    alive: AtomicBool,
+    server: Mutex<Option<Server>>,
+}
+
+struct Inner {
+    cfg: ShardConfig,
+    ring: Ring,
+    shards: Vec<Shard>,
+    placements: Mutex<HashMap<String, Placement>>,
+    /// Source matrices, kept so a draining shard's copies can be
+    /// re-registered on a replacement replica.
+    sources: Mutex<HashMap<String, Coo>>,
+    outstanding: Mutex<HashMap<u64, Outstanding>>,
+    counters: RouterCounters,
+    next_id: AtomicU64,
+    closing: AtomicBool,
+    /// Completion-channel sender; `None` once shutdown has begun.
+    completion_tx: Mutex<Option<Sender<(u64, CallResult)>>>,
+}
+
+/// Is this error worth a replica retry? Transport failures (lost or
+/// hostile connection), coordinator shutdown, and shutdown-shaped QoS
+/// rejections all mean "this shard can no longer answer" rather than
+/// "this request is bad".
+fn retryable(e: &ServeError) -> bool {
+    e.is_transport()
+        || matches!(e, ServeError::Shutdown)
+        || matches!(e, ServeError::Shed(r) if r.reason == RejectReason::Shutdown)
+}
+
+/// The running router.
+pub struct ShardRouter {
+    inner: Arc<Inner>,
+    probe_stop: Arc<AtomicBool>,
+    probe: Mutex<Option<std::thread::JoinHandle<()>>>,
+    completion: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shut: AtomicBool,
+}
+
+impl ShardRouter {
+    /// Boot `cfg.shards` coordinator+server+connection trios (named
+    /// "shard-0".."shard-N" — the `net_drop@shard-i` fault keys) plus the
+    /// probe/reaper and completion threads.
+    pub fn start(cfg: ShardConfig) -> std::io::Result<ShardRouter> {
+        assert!(cfg.shards > 0, "need at least one shard");
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let name = format!("shard-{i}");
+            let coord = Arc::new(Coordinator::start(
+                Config {
+                    workers: cfg.workers_per_shard,
+                    batch: cfg.batch,
+                    qos: Some(QosConfig {
+                        queue_capacity: cfg.queue_capacity,
+                        watermark_s: cfg.watermark_s,
+                        default_deadline: None,
+                    }),
+                    ..Default::default()
+                },
+                None,
+            ));
+            let server = Server::start(
+                Arc::clone(&coord),
+                ServerConfig {
+                    name: name.clone(),
+                    window: cfg.window,
+                    ..Default::default()
+                },
+            )?;
+            let addr = server.addr();
+            let conn = Connection::connect(addr)?;
+            shards.push(Shard {
+                name,
+                addr,
+                coord,
+                conn,
+                breaker: Breaker::new(),
+                alive: AtomicBool::new(true),
+                server: Mutex::new(Some(server)),
+            });
+        }
+        let (tx, rx) = channel();
+        let ring = Ring::new(cfg.shards, 32);
+        let inner = Arc::new(Inner {
+            cfg,
+            ring,
+            shards,
+            placements: Mutex::new(HashMap::new()),
+            sources: Mutex::new(HashMap::new()),
+            outstanding: Mutex::new(HashMap::new()),
+            counters: RouterCounters::default(),
+            next_id: AtomicU64::new(1),
+            closing: AtomicBool::new(false),
+            completion_tx: Mutex::new(Some(tx)),
+        });
+        let completion = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || completion_loop(inner, rx))
+        };
+        let probe_stop = Arc::new(AtomicBool::new(false));
+        let probe = {
+            let inner = Arc::clone(&inner);
+            let stop = Arc::clone(&probe_stop);
+            std::thread::spawn(move || probe_loop(inner, stop))
+        };
+        Ok(ShardRouter {
+            inner,
+            probe_stop,
+            probe: Mutex::new(Some(probe)),
+            completion: Mutex::new(Some(completion)),
+            shut: AtomicBool::new(false),
+        })
+    }
+
+    pub fn counters(&self) -> &RouterCounters {
+        &self.inner.counters
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    pub fn shard_addr(&self, i: usize) -> SocketAddr {
+        self.inner.shards[i].addr
+    }
+
+    pub fn breaker_state(&self, i: usize) -> BreakerState {
+        self.inner.shards[i].breaker.state()
+    }
+
+    /// Deepest per-shard admission queue right now — the load
+    /// experiment's bounded-queue-depth invariant samples this.
+    pub fn max_queue_depth(&self) -> usize {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.coord.metrics().queue_depth.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Register a matrix on its `replicas` ring-placed shards (each
+    /// preprocesses its own copy). Returns the placement.
+    pub fn register(&self, name: &str, coo: &Coo) -> Vec<usize> {
+        let key = planner::fingerprint(coo);
+        let targets: Vec<usize> = self
+            .inner
+            .ring
+            .order(key)
+            .into_iter()
+            .filter(|&s| self.inner.shards[s].alive.load(Ordering::SeqCst))
+            .take(self.inner.cfg.replicas.max(1))
+            .collect();
+        assert!(!targets.is_empty(), "no live shard to place {name}");
+        for &t in &targets {
+            self.inner.shards[t].coord.register(name, coo);
+        }
+        self.inner
+            .sources
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(name.to_string(), coo.clone());
+        self.inner
+            .placements
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(name.to_string(), Placement { targets: targets.clone() });
+        targets
+    }
+
+    /// Current placement of a matrix (primary first).
+    pub fn placement(&self, name: &str) -> Option<Vec<usize>> {
+        self.inner
+            .placements
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(name)
+            .map(|p| p.targets.clone())
+    }
+
+    /// Submit a request; `done` resolves exactly once. Returns the
+    /// request id (the idempotency key reused across any failover).
+    pub fn submit(
+        &self,
+        matrix: &str,
+        b: Dense,
+        priority: Priority,
+        deadline_us: u64,
+        done: impl FnOnce(CallResult) + Send + 'static,
+    ) -> u64 {
+        let inner = &self.inner;
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        inner.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let target = {
+            let placements = inner.placements.lock().unwrap_or_else(|p| p.into_inner());
+            match placements.get(matrix) {
+                Some(p) => pick_target(inner, &p.targets, &[]),
+                None => {
+                    drop(placements);
+                    inner.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    done(Err(ServeError::UnknownMatrix(MatrixId(u64::MAX))));
+                    return id;
+                }
+            }
+        };
+        let Some(target) = target else {
+            inner.counters.errors.fetch_add(1, Ordering::Relaxed);
+            done(Err(ServeError::Protocol { detail: "no live replica".into() }));
+            return id;
+        };
+        let req = WireRequest {
+            request_id: id,
+            priority,
+            deadline_us,
+            matrix: matrix.to_string(),
+            b: b.clone(),
+        };
+        inner.outstanding.lock().unwrap_or_else(|p| p.into_inner()).insert(
+            id,
+            Outstanding {
+                matrix: matrix.to_string(),
+                b,
+                priority,
+                deadline_us,
+                attempts: 1,
+                tried: vec![target],
+                dispatched_at: Instant::now(),
+                done: Box::new(done),
+            },
+        );
+        dispatch(inner, target, &req);
+        id
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, matrix: &str, b: Dense, priority: Priority) -> CallResult {
+        let (tx, rx) = channel();
+        self.submit(matrix, b, priority, 0, move |r| {
+            let _ = tx.send(r);
+        });
+        rx.recv()
+            .unwrap_or_else(|_| Err(ServeError::Protocol { detail: "router gone".into() }))
+    }
+
+    /// Chaos: kill shard `i` abruptly — sockets cut first, so computed
+    /// but unwritten responses are genuinely lost. Its unacked requests
+    /// fail over to replicas under their original ids.
+    pub fn kill_shard(&self, i: usize) {
+        let shard = &self.inner.shards[i];
+        shard.alive.store(false, Ordering::SeqCst);
+        if let Some(server) = shard.server.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            server.kill();
+        }
+        // belt and braces: fail anything still pending on the connection
+        // (the reader usually beats us to it when the sockets die)
+        shard.conn.close();
+    }
+
+    /// Graceful drain of shard `i`: stop routing to it, re-replicate its
+    /// matrices, complete in-flight work through the QoS shutdown path,
+    /// then close the listener. The returned report records the order.
+    pub fn drain_shard(&self, i: usize) -> DrainReport {
+        let inner = &self.inner;
+        let shard = &inner.shards[i];
+        let mut steps = Vec::with_capacity(4);
+        // 1. no new dispatches pick this shard
+        shard.alive.store(false, Ordering::SeqCst);
+        steps.push("mark-draining");
+        // 2. every matrix with a copy here gets a replacement replica
+        //    *before* this shard stops serving — reads keep their
+        //    redundancy through the drain
+        let affected: Vec<(String, Vec<usize>)> = {
+            let placements = inner.placements.lock().unwrap_or_else(|p| p.into_inner());
+            placements
+                .iter()
+                .filter(|(_, p)| p.targets.contains(&i))
+                .map(|(n, p)| (n.clone(), p.targets.clone()))
+                .collect()
+        };
+        let mut reassigned = 0;
+        for (name, targets) in affected {
+            let coo = {
+                let sources = inner.sources.lock().unwrap_or_else(|p| p.into_inner());
+                sources.get(&name).cloned()
+            };
+            let Some(coo) = coo else { continue };
+            let key = planner::fingerprint(&coo);
+            let replacement = inner.ring.order(key).into_iter().find(|&s| {
+                s != i
+                    && !targets.contains(&s)
+                    && inner.shards[s].alive.load(Ordering::SeqCst)
+            });
+            let mut new_targets: Vec<usize> = targets.into_iter().filter(|&s| s != i).collect();
+            if let Some(r) = replacement {
+                // preprocess on the replacement before the placement flips
+                inner.shards[r].coord.register(&name, &coo);
+                new_targets.push(r);
+            }
+            if !new_targets.is_empty() {
+                inner
+                    .placements
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .insert(name, Placement { targets: new_targets });
+                reassigned += 1;
+            }
+        }
+        steps.push("replicate-matrices");
+        // 3. in-flight work on this shard completes (or is typed-rejected)
+        //    via the coordinator's QoS shutdown path, and every produced
+        //    response is written out
+        if let Some(server) = shard.server.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            server.drain();
+        }
+        steps.push("qos-drain");
+        // 4. only now is the listener gone (drain closed it on return)
+        steps.push("listener-closed");
+        DrainReport { steps, reassigned }
+    }
+
+    /// Stop everything: drain remaining shards, resolve any stragglers
+    /// with typed shutdown errors, and join the service threads.
+    pub fn shutdown(&self) {
+        if self.shut.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let inner = &self.inner;
+        inner.closing.store(true, Ordering::SeqCst);
+        self.probe_stop.store(true, Ordering::SeqCst);
+        if let Some(p) = self.probe.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            let _ = p.join();
+        }
+        for shard in &inner.shards {
+            shard.alive.store(false, Ordering::SeqCst);
+            if let Some(server) = shard.server.lock().unwrap_or_else(|p| p.into_inner()).take() {
+                server.drain();
+            }
+            shard.conn.close();
+        }
+        // anything still outstanding (e.g. responses dropped by chaos and
+        // not yet reaped) resolves now, exactly once, with a typed error
+        let stragglers: Vec<Outstanding> = {
+            let mut o = inner.outstanding.lock().unwrap_or_else(|p| p.into_inner());
+            o.drain().map(|(_, e)| e).collect()
+        };
+        for e in stragglers {
+            inner.counters.errors.fetch_add(1, Ordering::Relaxed);
+            (e.done)(Err(ServeError::Shutdown));
+        }
+        // closing the channel lets the completion thread drain and exit
+        drop(inner.completion_tx.lock().unwrap_or_else(|p| p.into_inner()).take());
+        if let Some(c) = self.completion.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            let _ = c.join();
+        }
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Choose a dispatch target from `targets`: prefer untried live shards
+/// with a closed breaker, then any untried live shard, then any live
+/// shard at all.
+fn pick_target(inner: &Inner, targets: &[usize], tried: &[usize]) -> Option<usize> {
+    let live = |&s: &usize| inner.shards[s].alive.load(Ordering::SeqCst);
+    let closed = |&s: &usize| inner.shards[s].breaker.state() == BreakerState::Closed;
+    targets
+        .iter()
+        .copied()
+        .find(|s| live(s) && closed(s) && !tried.contains(s))
+        .or_else(|| targets.iter().copied().find(|s| live(s) && !tried.contains(s)))
+        .or_else(|| targets.iter().copied().find(live))
+}
+
+/// Fire one request at a shard. Completions (including synchronous
+/// dead-connection failures) funnel into the completion channel under the
+/// request id.
+fn dispatch(inner: &Arc<Inner>, target: usize, req: &WireRequest) {
+    let tx = {
+        let guard = inner.completion_tx.lock().unwrap_or_else(|p| p.into_inner());
+        (*guard).clone()
+    };
+    let Some(tx) = tx else { return };
+    let id = req.request_id;
+    inner.shards[target].conn.submit_callback(req, move |result| {
+        let _ = tx.send((id, result));
+    });
+}
+
+/// Redispatch `id` to another replica (same id — idempotent), or resolve
+/// it with `err` when retries are exhausted / shutdown is in progress.
+fn retry_or_fail(inner: &Arc<Inner>, id: u64, err: ServeError, is_timeout: bool) {
+    let action = {
+        let mut outstanding = inner.outstanding.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(entry) = outstanding.get_mut(&id) else {
+            // already resolved: a late completion racing the reaper
+            inner.counters.duplicates_suppressed.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let closing = inner.closing.load(Ordering::SeqCst);
+        if closing || entry.attempts >= inner.cfg.max_attempts {
+            let entry = outstanding.remove(&id).expect("checked above");
+            Err((entry.done, err))
+        } else {
+            let target = {
+                let placements = inner.placements.lock().unwrap_or_else(|p| p.into_inner());
+                placements
+                    .get(&entry.matrix)
+                    .and_then(|p| pick_target(inner, &p.targets, &entry.tried))
+            };
+            match target {
+                Some(t) => {
+                    entry.attempts += 1;
+                    if !entry.tried.contains(&t) {
+                        entry.tried.push(t);
+                    }
+                    entry.dispatched_at = Instant::now();
+                    let counter = if is_timeout {
+                        &inner.counters.retries
+                    } else {
+                        &inner.counters.failovers
+                    };
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    Ok((
+                        t,
+                        WireRequest {
+                            request_id: id,
+                            priority: entry.priority,
+                            deadline_us: entry.deadline_us,
+                            matrix: entry.matrix.clone(),
+                            b: entry.b.clone(),
+                        },
+                    ))
+                }
+                None => {
+                    let entry = outstanding.remove(&id).expect("checked above");
+                    Err((entry.done, ServeError::Protocol { detail: "no live replica".into() }))
+                }
+            }
+        }
+    };
+    match action {
+        Ok((target, req)) => dispatch(inner, target, &req),
+        Err((done, err)) => {
+            inner.counters.errors.fetch_add(1, Ordering::Relaxed);
+            done(Err(err));
+        }
+    }
+}
+
+fn completion_loop(inner: Arc<Inner>, rx: Receiver<(u64, CallResult)>) {
+    while let Ok((id, result)) = rx.recv() {
+        match result {
+            Ok(ok) => {
+                let entry = inner
+                    .outstanding
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .remove(&id);
+                match entry {
+                    Some(e) => {
+                        inner.counters.acked.fetch_add(1, Ordering::Relaxed);
+                        (e.done)(Ok(ok));
+                    }
+                    // the retry already won: suppress the duplicate
+                    None => {
+                        inner.counters.duplicates_suppressed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if retryable(&e) => retry_or_fail(&inner, id, e, false),
+            Err(e) => {
+                // serving-semantics error (shed, shape, engine fault...):
+                // a replica would answer the same way — resolve it
+                let entry = inner
+                    .outstanding
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .remove(&id);
+                match entry {
+                    Some(en) => {
+                        inner.counters.errors.fetch_add(1, Ordering::Relaxed);
+                        (en.done)(Err(e));
+                    }
+                    None => {
+                        inner.counters.duplicates_suppressed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Health probes + request-timeout reaper, one tick per
+/// `cfg.probe_interval`.
+fn probe_loop(inner: Arc<Inner>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(inner.cfg.probe_interval);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        for shard in &inner.shards {
+            if !shard.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let route = shard.breaker.route();
+            if route == Route::Reject {
+                continue;
+            }
+            match shard.conn.ping(shard.name.as_bytes(), inner.cfg.probe_timeout) {
+                Ok(_) => shard.breaker.record_success(route),
+                Err(_) => {
+                    let _ = shard.breaker.record_fault(route);
+                }
+            }
+        }
+        // reap requests that have gone unacked past the timeout — this is
+        // what recovers a net_drop'd response: same id, next replica
+        let now = Instant::now();
+        let expired: Vec<u64> = {
+            let outstanding = inner.outstanding.lock().unwrap_or_else(|p| p.into_inner());
+            outstanding
+                .iter()
+                .filter(|(_, o)| now.duration_since(o.dispatched_at) > inner.cfg.request_timeout)
+                .map(|(&id, _)| id)
+                .collect()
+        };
+        for id in expired {
+            retry_or_fail(
+                &inner,
+                id,
+                ServeError::Protocol { detail: "request timed out awaiting a response".into() },
+                true,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame;
+    use crate::util::rng::Rng;
+    use std::net::TcpStream;
+
+    fn router(shards: usize) -> ShardRouter {
+        ShardRouter::start(ShardConfig {
+            shards,
+            request_timeout: Duration::from_millis(600),
+            probe_interval: Duration::from_millis(10),
+            ..Default::default()
+        })
+        .expect("router boots on loopback")
+    }
+
+    fn register_matrices(r: &ShardRouter, n: usize) -> Vec<String> {
+        let mut names = Vec::new();
+        for m in 0..n {
+            let coo = Coo::random(64, 96, 0.05, &mut Rng::new(1000 + m as u64));
+            let name = format!("m{m}");
+            let targets = r.register(&name, &coo);
+            assert_eq!(targets.len(), 2.min(r.shard_count()));
+            names.push(name);
+        }
+        names
+    }
+
+    fn b_operand(seed: u64, cols: usize) -> Dense {
+        Dense::random(96, cols, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn routes_requests_to_placed_shards_and_serves() {
+        let r = router(3);
+        let names = register_matrices(&r, 4);
+        for (i, name) in names.iter().enumerate() {
+            let ok = r.call(name, b_operand(i as u64, 4), Priority::Normal).expect("served");
+            assert_eq!(ok.c.rows, 64);
+            assert_eq!(ok.c.cols, 4);
+        }
+        let snap = r.counters().snapshot();
+        assert_eq!(snap.acked, 4);
+        assert_eq!(snap.errors, 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn unknown_matrix_resolves_with_a_typed_error() {
+        let r = router(2);
+        let err = r.call("never-registered", b_operand(1, 2), Priority::Normal).unwrap_err();
+        assert_eq!(err.kind(), "unknown_matrix");
+        r.shutdown();
+    }
+
+    #[test]
+    fn killed_shard_fails_over_zero_lost_zero_duplicated() {
+        let r = router(3);
+        let names = register_matrices(&r, 6);
+        // warm every placement
+        for name in &names {
+            r.call(name, b_operand(9, 2), Priority::Normal).expect("warm call");
+        }
+        // a wave of async requests across all matrices...
+        let (tx, rx) = channel();
+        let total = 60u64;
+        for i in 0..total {
+            let name = names[(i as usize) % names.len()].clone();
+            let tx = tx.clone();
+            r.submit(&name, b_operand(i, 4), Priority::Normal, 0, move |res| {
+                let _ = tx.send(res);
+            });
+        }
+        drop(tx);
+        // ...and a mid-flight kill of shard 0
+        r.kill_shard(0);
+        let mut acked = 0u64;
+        let mut typed_errors = 0u64;
+        for _ in 0..total {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("every request resolves") {
+                Ok(ok) => {
+                    assert_eq!(ok.c.rows, 64);
+                    acked += 1;
+                }
+                Err(e) => {
+                    // an exhausted-retry path is allowed, but it must be
+                    // typed — and with 2 replicas it should be rare
+                    let _ = e.kind();
+                    typed_errors += 1;
+                }
+            }
+        }
+        // zero lost: every one of the 60 resolved exactly once
+        assert_eq!(acked + typed_errors, total);
+        let warm = names.len() as u64;
+        let snap = r.counters().snapshot();
+        assert_eq!(snap.acked + snap.errors, snap.requests);
+        // zero duplicated to the caller: the outstanding table swallowed
+        // any late double-completion (warm calls were all acked)
+        assert_eq!(snap.acked, acked + warm);
+        // with every matrix replicated on a live shard, virtually
+        // everything should be served
+        assert!(
+            typed_errors <= total / 10,
+            "too many failover losses: {typed_errors}/{total} (counters: {snap:?})"
+        );
+        r.shutdown();
+    }
+
+    /// Satellite: the graceful-drain ordering contract.
+    #[test]
+    fn graceful_drain_replicates_then_qos_drains_then_closes_listener() {
+        let r = router(3);
+        let names = register_matrices(&r, 5);
+        // find a shard that is primary for at least one matrix
+        let victim = r.placement(&names[0]).unwrap()[0];
+        let victim_addr = r.shard_addr(victim);
+        // keep requests in flight while the drain happens
+        let (tx, rx) = channel();
+        let total = 30u64;
+        for i in 0..total {
+            let name = names[(i as usize) % names.len()].clone();
+            let tx = tx.clone();
+            r.submit(&name, b_operand(i, 4), Priority::Normal, 0, move |res| {
+                let _ = tx.send(res);
+            });
+        }
+        drop(tx);
+        let report = r.drain_shard(victim);
+        // the ordering contract, as recorded by the drain itself
+        assert_eq!(
+            report.steps,
+            vec!["mark-draining", "replicate-matrices", "qos-drain", "listener-closed"]
+        );
+        // every matrix that lived on the victim was handed to a replica
+        assert!(report.reassigned > 0, "victim held no matrices — test setup broken");
+        for name in &names {
+            let placement = r.placement(name).unwrap();
+            assert!(!placement.contains(&victim), "{name} still placed on the drained shard");
+            assert!(!placement.is_empty());
+        }
+        // in-flight work all resolved — served, or typed-rejected and
+        // failed over; nothing lost
+        let mut resolved = 0u64;
+        for _ in 0..total {
+            let res = rx.recv_timeout(Duration::from_secs(30)).expect("resolves through drain");
+            if let Err(e) = &res {
+                let _ = e.kind(); // typed, not a hang or a panic
+            }
+            resolved += 1;
+        }
+        assert_eq!(resolved, total);
+        // the listener is actually closed (step 4 was not a lie): a fresh
+        // connect must be refused or immediately dropped
+        match TcpStream::connect(victim_addr) {
+            Err(_) => {}
+            Ok(mut s) => {
+                let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+                let err = frame::decode(&mut s).expect_err("drained listener still serving");
+                assert!(!err.recoverable());
+            }
+        }
+        // and the drained shard's matrices still serve from replicas
+        for name in &names {
+            r.call(name, b_operand(77, 2), Priority::Normal).expect("replica serves post-drain");
+        }
+        r.shutdown();
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_reused_only_for_retries() {
+        let r = router(2);
+        register_matrices(&r, 1);
+        let mut ids = Vec::new();
+        for i in 0..20u64 {
+            let id = r.submit("m0", b_operand(i, 2), Priority::Normal, 0, |_| {});
+            ids.push(id);
+        }
+        let mut deduped = ids.clone();
+        deduped.sort_unstable();
+        deduped.dedup();
+        assert_eq!(deduped.len(), ids.len(), "request ids must be unique");
+        r.shutdown();
+    }
+}
